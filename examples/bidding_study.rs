@@ -1,0 +1,78 @@
+//! Bidding study: how the bid price and the spot-market regime shape cost.
+//!
+//! An ablation the paper motivates but does not plot: sweep the bid grid B
+//! under three market models (the §6.1 bounded-exponential market, a
+//! Markov calm/surge market, and a Google-style fixed-price market) and
+//! report the average unit cost and realized spot availability for each —
+//! showing why the bid must be *learned* (Table 6) rather than fixed.
+//!
+//! Run: `cargo run --release --example bidding_study -- [jobs]`
+
+use dagcloud::market::{PriceTrace, SpotModel};
+use dagcloud::policy::Policy;
+use dagcloud::sim::horizon::{HorizonRunner, StrategySpec};
+use dagcloud::workload::{transform, ChainJob, GeneratorConfig, JobStream};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_jobs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(800);
+    let seed = 77;
+
+    let mut stream = JobStream::new(GeneratorConfig::for_job_type(2), seed);
+    let jobs: Vec<ChainJob> = stream.take_jobs(n_jobs).iter().map(transform).collect();
+    let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+
+    let markets: Vec<(&str, SpotModel)> = vec![
+        ("bounded-exp (§6.1)", SpotModel::paper_default()),
+        (
+            "markov calm/surge",
+            SpotModel::Markov {
+                calm_mean: 0.13,
+                surge_mean: 0.7,
+                lo: 0.12,
+                hi: 1.0,
+                p_calm_to_surge: 0.02,
+                p_surge_to_calm: 0.1,
+            },
+        ),
+        (
+            "google fixed",
+            SpotModel::GoogleFixed {
+                price: 0.25,
+                availability: 0.7,
+            },
+        ),
+    ];
+    // Extended bid sweep (paper grid B plus the tails).
+    let bids = [0.12, 0.15, 0.18, 0.21, 0.24, 0.27, 0.3, 0.4, 0.6, 1.0];
+
+    println!("=== bidding study: {} jobs per cell ===", n_jobs);
+    for (name, model) in &markets {
+        let trace = PriceTrace::generate(model.clone(), horizon, seed + 9);
+        let runner = HorizonRunner::new(&trace, 0);
+        println!("\nmarket: {name}");
+        println!("  {:>6} {:>10} {:>12} {:>12}", "bid", "unit cost", "spot share", "avail");
+        let mut best = (f64::INFINITY, 0.0);
+        for &bid in &bids {
+            let rep = runner.run(
+                &jobs,
+                StrategySpec::Proposed(Policy::new(1.0 / 1.6, None, bid)),
+            );
+            let alpha = rep.average_unit_cost();
+            let spot_share = rep.ledger.work_spot / rep.ledger.total_work();
+            let avail = trace.availability(0.0, horizon - 1.0, bid);
+            println!(
+                "  {:>6.2} {:>10.4} {:>11.1}% {:>11.1}%",
+                bid,
+                alpha,
+                100.0 * spot_share,
+                100.0 * avail
+            );
+            if alpha < best.0 {
+                best = (alpha, bid);
+            }
+        }
+        println!("  -> best bid {:.2} at unit cost {:.4}", best.1, best.0);
+    }
+    println!("\nbidding_study OK");
+}

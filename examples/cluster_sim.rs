@@ -1,0 +1,119 @@
+//! End-to-end driver: the full system on a realistic workload.
+//!
+//! Generates a §6.1 tenant workload (Poisson arrivals, random DAGs,
+//! bounded-Pareto tasks), transforms every DAG to a chain, runs the TOLA
+//! online learner over the full 175-policy grid with a shared self-owned
+//! pool against a realized spot market — using the AOT-compiled PJRT
+//! kernel for the counterfactual sweeps when `artifacts/` exists — and
+//! reports cost, learning convergence, regret vs the Prop. B.1 bound, and
+//! throughput. This is the run recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example cluster_sim -- [jobs] [pool]`
+
+use dagcloud::coordinator::{tola_run, Evaluator};
+use dagcloud::learning::counterfactual::CfSpec;
+use dagcloud::market::PriceTrace;
+use dagcloud::policy::{policy_set_full, policy_set_spot_only};
+use dagcloud::runtime::ArtifactRuntime;
+use dagcloud::workload::{transform, ChainJob, GeneratorConfig, JobStream};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_jobs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let pool: u32 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(600);
+    let seed = 2021;
+
+    println!("=== cluster_sim: end-to-end TOLA learning run ===");
+    println!("jobs {n_jobs}, self-owned pool {pool}, seed {seed}\n");
+
+    // Workload: job type 2 (x0 = 2), the paper's Table-6 setting.
+    let t0 = std::time::Instant::now();
+    let mut stream = JobStream::new(GeneratorConfig::for_job_type(2), seed);
+    let dags = stream.take_jobs(n_jobs);
+    let jobs: Vec<ChainJob> = dags.iter().map(transform).collect();
+    let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+    let tasks: usize = dags.iter().map(|d| d.num_tasks()).sum();
+    println!(
+        "generated {} DAG jobs ({} tasks, horizon {:.0} time units) in {:.2}s",
+        n_jobs,
+        tasks,
+        horizon,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Market.
+    let trace = PriceTrace::generate(
+        dagcloud::market::SpotModel::paper_default(),
+        horizon,
+        seed + 1,
+    );
+    println!("spot market: {} slots of {:.4} time units", trace.num_slots(), trace.slot_len());
+
+    // Policy grid.
+    let specs: Vec<CfSpec> = if pool == 0 {
+        policy_set_spot_only().into_iter().map(CfSpec::Proposed).collect()
+    } else {
+        policy_set_full().into_iter().map(CfSpec::Proposed).collect()
+    };
+    println!("policy grid: {} policies", specs.len());
+
+    // Evaluator: PJRT kernel if artifacts exist.
+    let rt = ArtifactRuntime::load_default();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let evaluator = match &rt {
+        Ok(rt) => {
+            println!("counterfactual evaluator: PJRT kernel (artifacts/)");
+            Evaluator::Pjrt(rt)
+        }
+        Err(e) => {
+            println!("counterfactual evaluator: native ({threads} threads) — {e}");
+            Evaluator::Native { threads }
+        }
+    };
+
+    // Learn.
+    let t1 = std::time::Instant::now();
+    let rep = tola_run(&jobs, &specs, &trace, pool, 1.0, seed + 2, &evaluator);
+    let dt = t1.elapsed().as_secs_f64();
+
+    println!("\n--- results ---");
+    println!(
+        "processed {} jobs in {:.2}s ({:.0} jobs/s, {:.0} policy-evals/s)",
+        rep.jobs,
+        dt,
+        rep.jobs as f64 / dt,
+        (rep.jobs * specs.len()) as f64 / dt
+    );
+    println!("realized average unit cost ᾱ = {:.4} (all-on-demand would be 1.0)", rep.average_unit_cost);
+    if let CfSpec::Proposed(p) = specs[rep.best_policy] {
+        println!(
+            "learned best policy: β = {:.3}, β₀ = {}, b = {:.2} (weight {:.3})",
+            p.beta,
+            p.beta0.map(|x| format!("{x:.3}")).unwrap_or("-".into()),
+            p.bid,
+            rep.final_weights[rep.best_policy]
+        );
+    }
+    println!(
+        "average regret {:.4} ≤ Prop. B.1 bound {:.4}: {}",
+        rep.average_regret,
+        rep.regret_bound,
+        rep.average_regret <= rep.regret_bound
+    );
+    println!("self-owned pool utilization: {:.1}%", 100.0 * rep.pool_utilization);
+    println!(
+        "cost breakdown: self-owned {:.0} work (free), spot {:.0} work / {:.1} cost, on-demand {:.0} work / {:.1} cost",
+        rep.ledger.work_selfowned,
+        rep.ledger.work_spot,
+        rep.ledger.cost_spot,
+        rep.ledger.work_ondemand,
+        rep.ledger.cost_ondemand
+    );
+    println!(
+        "weight convergence (max weight over time): start {:.4} → end {:.4}",
+        rep.weight_trajectory.first().copied().unwrap_or(f64::NAN),
+        rep.weight_trajectory.last().copied().unwrap_or(f64::NAN)
+    );
+    assert!(rep.average_regret <= rep.regret_bound, "regret bound violated");
+    println!("\ncluster_sim OK");
+}

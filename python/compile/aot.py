@@ -1,0 +1,77 @@
+"""AOT lowering: JAX/Pallas model → HLO text artifacts for the Rust runtime.
+
+Run via `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits:
+    artifacts/policy_cost.hlo.txt  — the counterfactual policy-grid sweep
+    artifacts/tola_update.hlo.txt  — the TOLA weight update
+    artifacts/MANIFEST.json        — shapes + git-free content hashes
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` crate) rejects; the text
+parser reassigns ids and round-trips cleanly. Lowered with
+`return_tuple=True`, so the Rust side unwraps with `to_tuple4`/`to_tuple1`.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_policy_cost() -> str:
+    lowered = jax.jit(model.policy_cost).lower(*model.policy_cost_example_args())
+    return to_hlo_text(lowered)
+
+
+def lower_tola_update() -> str:
+    lowered = jax.jit(model.tola_update).lower(*model.tola_update_example_args())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "shapes": {"L_MAX": model.L_MAX, "S_MAX": model.S_MAX, "N_POL": model.N_POL},
+        "artifacts": {},
+    }
+    for name, fn in [
+        ("policy_cost", lower_policy_cost),
+        ("tola_update", lower_tola_update),
+    ]:
+        text = fn()
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][name] = {"bytes": len(text), "sha256_16": digest}
+        print(f"wrote {path}: {len(text)} chars, sha256[:16]={digest}")
+
+    with open(os.path.join(args.out, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'MANIFEST.json')}")
+
+
+if __name__ == "__main__":
+    main()

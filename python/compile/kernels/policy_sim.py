@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: spot-market resolution per unique bid.
+
+This is the compute hot-spot of the TOLA online learner: for one retired
+job, evaluate its cost under EVERY policy of the grid against the realized
+spot-price window.
+
+The L2 model (`compile.model`) is closed-form (see its docstring and
+EXPERIMENTS.md Perf section): the only O(N*S)-shaped work left is resolving
+the market -- which slots each *bid* wins, and the prefix sums of winning
+time and price-weighted winning time that every downstream per-task
+quantity telescopes through. Bids are shared across policies (the paper's
+grids have 5 distinct bids), so the kernel computes [NB, S] streams with
+NB = 8, not [N = 192, S].
+
+Semantics contract (must match `kernels/ref.py` and
+`rust/src/learning/counterfactual.rs`): a slot k < V = ceil(window/dt) is
+winning for bid b iff `price[k] <= b`; winning seconds count the full slot
+(the final-slot boundary correction happens per task in L2).
+
+TPU adaptation note: the kernel tiles slots across the grid, streaming the
+price trace HBM->VMEM once while all NB bid rows stay resident in VMEM
+(8*2048*4 B = 64 KiB per output) -- memory-bound on the single price
+stream, no MXU work. The row cumsums lower to XLA's log-depth scans. On CPU
+we must run with `interpret=True` (Mosaic custom-calls cannot execute on
+the CPU PJRT plugin); interpret mode lowers to plain HLO, which is exactly
+what the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _market_kernel(
+    prices_ref,  # f32[S]
+    bids_ref,  # f32[NB]
+    dt_ref,  # f32[1]
+    v_ref,  # i32[1] number of executable slots
+    cumwin_ref,  # out f32[NB, S+1] winning seconds in slots [0, k)
+    cumpw_ref,  # out f32[NB, S+1] price-weighted winning seconds
+):
+    prices = prices_ref[...]
+    bids = bids_ref[...]
+    dt = dt_ref[0]
+    v = v_ref[0]
+    s = prices.shape[0]
+    nb = bids.shape[0]
+    live = jnp.arange(s, dtype=jnp.int32) < v  # [S]
+    win = (prices[None, :] <= bids[:, None]) & live[None, :]  # [NB, S]
+    winsecs = jnp.where(win, dt, 0.0)
+    zero = jnp.zeros((nb, 1), dtype=jnp.float32)
+    cumwin_ref[...] = jnp.concatenate([zero, jnp.cumsum(winsecs, axis=1)], axis=1)
+    cumpw_ref[...] = jnp.concatenate(
+        [zero, jnp.cumsum(winsecs * prices[None, :], axis=1)], axis=1
+    )
+
+
+def spot_market_cumsums(prices, bid_values, dt, v_slots):
+    """Resolve the spot market once per unique bid (the L1 kernel).
+
+    Args: prices f32[S]; bid_values f32[NB]; dt f32[1]; v_slots i32[].
+    Returns: (cumwin f32[NB, S+1], cumpw f32[NB, S+1]).
+    """
+    nb = bid_values.shape[0]
+    s = prices.shape[0]
+    out_shape = [
+        jax.ShapeDtypeStruct((nb, s + 1), jnp.float32),
+        jax.ShapeDtypeStruct((nb, s + 1), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _market_kernel,
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(prices, bid_values, dt, jnp.reshape(v_slots, (1,)).astype(jnp.int32))
+
+
+def _tola_kernel(w_ref, c_ref, eta_ref, out_ref):
+    w = w_ref[...]
+    c = c_ref[...]
+    eta = eta_ref[0]
+    # Min-shift before exponentiation: no-op after normalization,
+    # numerically essential for large costs (mirrors learning/mod.rs).
+    shifted = c - jnp.min(c)
+    wn = w * jnp.exp(-eta * shifted)
+    out_ref[...] = wn / jnp.sum(wn)
+
+
+@jax.jit
+def tola_update(w, c, eta):
+    """TOLA exponentiated-weights update: normalize(w * exp(-eta (c - min c)))."""
+    return pl.pallas_call(
+        _tola_kernel,
+        out_shape=jax.ShapeDtypeStruct(w.shape, jnp.float32),
+        interpret=True,
+    )(w, c, eta)

@@ -1,0 +1,184 @@
+"""Pure-numpy oracle for the counterfactual policy-grid cost model.
+
+A direct, loopy transcription of the native Rust implementation
+(`rust/src/learning/counterfactual.rs::eval_spec`, proposed-policy path).
+The vectorized L2 model + L1 Pallas kernel must reproduce these numbers —
+pytest (`python/tests/test_kernel.py`) asserts it across hypothesis sweeps,
+and the Rust integration test `pjrt_cross.rs` closes the loop against the
+compiled artifact.
+
+Everything here is float64 numpy; the production paths are f32, so tests
+compare with a relative tolerance.
+"""
+
+import numpy as np
+
+EPS = 1e-6
+# Turning-point threshold, scale-aware: fire at a slot start when
+#   zt >= delta_eff * (deadline - slot_start) - FIRE_EPS * (1 + zt0),
+# where zt0 is the task's initial spot/OD workload. The threshold uses the
+# per-task CONSTANT zt0 (not the live zt) so the condition is affine in
+# cumulative losing time -- the closed form in compile.model exploits that.
+# Shared with the L2 model and rust/src/learning/counterfactual.rs so
+# f32/f64 borderline slots classify identically.
+FIRE_EPS = 1e-4
+# Slot-ownership sample point: 63/128 of the slot (see compile.model).
+OWNER_OFFSET = 0.4921875
+
+
+def f_selfowned(z, delta, hat_s, x):
+    """Eq. (11)."""
+    if x >= 1.0:
+        return 0.0
+    return max((z - delta * hat_s * x) / (hat_s * (1.0 - x)), 0.0)
+
+
+def dealloc_windows(e, order, window, beta):
+    """Algorithm 1 on pre-sorted order; leftover to the last task of the
+    order (matches rust `CounterfactualJob::windows`)."""
+    e = np.asarray(e, dtype=np.float64)
+    sizes = e.copy()
+    omega = max(window - float(e.sum()), 0.0)
+    for i in order:
+        need = e[i] * (1.0 - beta) / beta
+        grant = min(need, omega)
+        sizes[i] += grant
+        omega -= grant
+    if omega > 0.0 and len(order) > 0:
+        sizes[order[-1]] += omega
+    return sizes
+
+
+def eval_policy(
+    e,
+    delta,
+    z,
+    order,
+    window,
+    prices,
+    dt,
+    navail,
+    od_price,
+    beta,
+    beta0,
+    bid,
+    has_pool,
+):
+    """Cost of one job under one policy `{beta, beta0, bid}`.
+
+    beta0 <= 0 encodes "no beta0" (no self-owned machinery).
+    Returns (cost, spot_work, od_work, so_work).
+    """
+    e = np.asarray(e, dtype=np.float64)
+    delta = np.asarray(delta, dtype=np.float64)
+    z = np.asarray(z, dtype=np.float64)
+    prices = np.asarray(prices, dtype=np.float64)
+    navail = np.asarray(navail, dtype=np.float64)
+    l = len(e)
+
+    beta_alloc = beta0 if (has_pool and 0.0 < beta0 <= beta) else beta
+    sizes = dealloc_windows(e, order, window, beta_alloc)
+    deadlines = np.cumsum(sizes)
+
+    num_slots = min(int(np.ceil(window / dt)), len(prices))
+    num_slots = max(num_slots, 1)
+
+    # Self-owned grants + z-tilde initialization.
+    r = np.zeros(l)
+    ztilde = np.zeros(l)
+    so_work = 0.0
+    slot_cursor = 0
+    for i in range(l):
+        lo = 0.0 if i == 0 else deadlines[i - 1]
+        hi = deadlines[i]
+        nmin = np.inf
+        if has_pool and beta0 > 0.0:
+            while slot_cursor < num_slots:
+                mid = (slot_cursor + OWNER_OFFSET) * dt
+                if mid < lo:
+                    slot_cursor += 1
+                    continue
+                if mid >= hi:
+                    break
+                nmin = min(nmin, navail[slot_cursor])
+                slot_cursor += 1
+            if not np.isfinite(nmin):
+                nmin = 0.0
+            hat_s = max(hi - lo, 1e-12)
+            f = f_selfowned(z[i], delta[i], hat_s, beta0)
+            # Fractional grant: §4.2.1 ignores rounding in the analysis.
+            r[i] = max(min(f, nmin, delta[i]), 0.0)
+        hat_s = max(hi - lo, 1e-12)
+        covered = r[i] * hat_s
+        ztilde[i] = max(z[i] - covered, 0.0)
+        so_work += min(z[i], covered)
+
+    # Slot walk.
+    zt_init = ztilde.copy()
+    spot_cost = 0.0
+    spot_work = 0.0
+    od_work = 0.0
+    cur = 0
+    for k in range(num_slots):
+        t = k * dt
+        mid = t + OWNER_OFFSET * dt
+        while cur < l and mid >= deadlines[cur]:
+            if ztilde[cur] > 0.0:
+                od_work += ztilde[cur]
+                ztilde[cur] = 0.0
+            cur += 1
+        if cur >= l:
+            break
+        i = cur
+        if ztilde[i] <= 0.0:
+            continue
+        delta_eff = max(delta[i] - r[i], 0.0)
+        if delta_eff <= 0.0:
+            continue
+        slot_end = t + dt
+        deadline = deadlines[i]
+        # Turning point (Def. 3.1, strict flexibility) checked BEFORE any
+        # progress this slot, at the slot start.
+        time_left = deadline - t
+        if ztilde[i] >= delta_eff * time_left - FIRE_EPS * (1.0 + zt_init[i]):
+            od_work += ztilde[i]
+            ztilde[i] = 0.0
+            continue
+        price = prices[k]
+        if price <= bid:
+            room = delta_eff * max(min(slot_end, deadline) - t, 0.0)
+            dw = min(room, ztilde[i])
+            ztilde[i] -= dw
+            spot_work += dw
+            spot_cost += price * dw
+    for i in range(cur, l):
+        if ztilde[i] > 0.0:
+            od_work += ztilde[i]
+            ztilde[i] = 0.0
+
+    cost = spot_cost + od_price * od_work
+    return cost, spot_work, od_work, so_work
+
+
+def eval_grid(
+    e, delta, z, order, window, prices, dt, navail, od_price,
+    betas, beta0s, bids, has_pool,
+):
+    """Sweep the policy grid; returns arrays of shape [n_policies]."""
+    out = [
+        eval_policy(
+            e, delta, z, order, window, prices, dt, navail, od_price,
+            float(b), float(b0), float(bd), has_pool,
+        )
+        for b, b0, bd in zip(betas, beta0s, bids)
+    ]
+    cost, sw, ow, sow = map(np.asarray, zip(*out))
+    return cost, sw, ow, sow
+
+
+def tola_update(w, c, eta):
+    """Oracle for the TOLA weight update."""
+    w = np.asarray(w, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    wn = w * np.exp(-eta * (c - c.min()))
+    return wn / wn.sum()

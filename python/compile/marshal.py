@@ -1,0 +1,97 @@
+"""Padding helpers mirroring rust/src/runtime/batch.rs — used by tests to
+drive the L2 model with the exact tensors the Rust runtime sends."""
+
+import numpy as np
+
+from . import model
+
+PRICE_PAD = 1.0e9
+
+
+def dealloc_order(delta, l):
+    """Descending parallelism bound, ties by index — real tasks first,
+    unused indices appended (matches MarshalledJob)."""
+    real = sorted(range(l), key=lambda i: (-float(delta[i]), i))
+    rest = [i for i in range(model.L_MAX) if i >= l]
+    return np.asarray(real + rest, dtype=np.int32)
+
+
+def pad_job(e, delta, z, prices, navail, window, dt, od_price=1.0):
+    """Pad a raw job into the fixed AOT shapes. Returns a dict of arrays."""
+    l = len(e)
+    assert l <= model.L_MAX
+    assert len(prices) <= model.S_MAX
+    out = {
+        "e": np.zeros(model.L_MAX, np.float32),
+        "delta": np.ones(model.L_MAX, np.float32),
+        "z": np.zeros(model.L_MAX, np.float32),
+        "mask": np.zeros(model.L_MAX, np.float32),
+        "order": dealloc_order(delta, l),
+        "prices": np.full(model.S_MAX, PRICE_PAD, np.float32),
+        "navail": np.zeros(model.S_MAX, np.float32),
+        "window": np.float32(window),
+        "dt": np.float32(dt),
+        "od_price": np.float32(od_price),
+    }
+    out["e"][:l] = e
+    out["delta"][:l] = delta
+    out["z"][:l] = z
+    out["mask"][:l] = 1.0
+    p = np.asarray(prices, np.float64)
+    p = np.where(np.isfinite(p), p, PRICE_PAD)
+    out["prices"][: len(p)] = p.astype(np.float32)
+    out["navail"][: len(navail)] = np.asarray(navail, np.float32)
+    return out
+
+
+def pad_grid(betas, beta0s, bids, has_pool):
+    """Pad a policy grid to N_POL; bids deduplicate into
+    (bid_values[NB_MAX], bid_idx[N_POL]). beta0 = 0 encodes 'no beta0'."""
+    n = len(betas)
+    assert n <= model.N_POL
+    uniq = sorted(set(float(b) for b in bids))
+    assert len(uniq) <= model.NB_MAX, f"too many distinct bids: {len(uniq)}"
+    g = {
+        "pol_beta": np.ones(model.N_POL, np.float32),
+        "pol_beta0": np.zeros(model.N_POL, np.float32),
+        "bid_values": np.zeros(model.NB_MAX, np.float32),  # pad 0: wins nothing
+        "bid_idx": np.zeros(model.N_POL, np.int32),
+        "pol_mask": np.zeros(model.N_POL, np.float32),
+        "has_pool": np.float32(1.0 if has_pool else 0.0),
+    }
+    g["pol_beta"][:n] = betas
+    g["pol_beta0"][:n] = beta0s
+    g["bid_values"][: len(uniq)] = uniq
+    g["bid_idx"][:n] = [uniq.index(float(b)) for b in bids]
+    g["pol_mask"][:n] = 1.0
+    return g
+
+
+def run_model(job, grid):
+    """Invoke the L2 model on padded inputs; returns numpy arrays truncated
+    to the real policy count."""
+    n = int(grid["pol_mask"].sum())
+    cost, sw, ow, sow = model.policy_cost(
+        job["e"],
+        job["delta"],
+        job["z"],
+        job["mask"],
+        job["order"],
+        job["prices"],
+        job["navail"],
+        job["window"],
+        job["dt"],
+        grid["pol_beta"],
+        grid["pol_beta0"],
+        grid["bid_values"],
+        grid["bid_idx"],
+        grid["pol_mask"],
+        job["od_price"],
+        grid["has_pool"],
+    )
+    return (
+        np.asarray(cost)[:n],
+        np.asarray(sw)[:n],
+        np.asarray(ow)[:n],
+        np.asarray(sow)[:n],
+    )

@@ -1,0 +1,284 @@
+"""L2: the closed-form counterfactual policy-grid model (build-time JAX).
+
+Evaluates one retired job's cost under every policy `{β, β₀, b}` of the
+grid against the realized spot-price window — the TOLA hot path, AOT-lowered
+to HLO and executed from Rust via PJRT.
+
+## Closed form (see EXPERIMENTS.md §Perf for the derivation history)
+
+The naive formulation walks the S slots sequentially; on XLA CPU both a
+`fori_loop` walk (~36 ms) and an `[N, S]` segment-scatter formulation
+(~276 ms) are dominated by loop/scatter overhead. The production model is
+fully closed-form:
+
+1. Spot availability depends on the *bid only*, and the §6.1 grids contain
+   at most a handful of distinct bids — the L1 kernel
+   (`kernels/policy_sim.spot_market_cumsums`) resolves the market once per
+   unique bid: winning-time and price-volume prefix sums over the slots,
+   shape `[NB, S+1]` with `NB = 8 ≪ N`.
+2. Window geometry is uniform (slot k samples ownership at `(k+63/128)·dt`),
+   so each task's slot range `[k0, k1)` is elementwise arithmetic, not a
+   search.
+3. Def. 3.1's turning point becomes a *suffix* condition on cumulative
+   losing time (the affine identity `W(k) = (k−k0)·dt − lose(k)` turns
+   `z̃₀ − δeff·W(k) ≥ δeff·(ς − k·dt) − tol` into `lose(k) ≥ D` with a
+   per-task constant `D`), so the first firing slot is one `searchsorted`
+   per task into the bid's losing-time prefix row.
+4. Spot time used is `min(W(k_fire), W_end, z̃₀/δeff)`; its cost telescopes
+   through the price-volume prefix sums with a single boundary-slot
+   correction.
+
+Everything after the kernel is `[N, L]` gathers and elementwise ops.
+
+Fixed AOT shapes (DESIGN.md §6): L = 128 tasks, S = 2048 slots,
+N = 192 policies, NB = 8 unique bids.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import policy_sim
+
+# Fixed AOT shapes — keep in sync with
+# rust/src/learning/counterfactual.rs::{L_MAX, S_MAX, N_POL, NB_MAX}.
+L_MAX = 128
+S_MAX = 2048
+N_POL = 192
+NB_MAX = 8
+
+_BETA_FLOOR = 1e-3
+
+# Slot-ownership sample point (63/128): exact window boundaries of the
+# paper's rational grids (e.g. β = 1/1.3 on a 1/12 slot grid) land exactly
+# on slot midpoints, where f32 and f64 round differently; 63/128 is exactly
+# representable and collides with no small-denominator rational. Shared
+# with kernels/ref.py and rust/src/learning/counterfactual.rs.
+OWNER_OFFSET = 0.4921875
+
+# Turning-point tolerance (shared: ref.py FIRE_EPS, counterfactual.rs).
+FIRE_EPS = 1e-4
+
+
+def policy_cost(
+    e,  # f32[L] min execution times (pad 0)
+    delta,  # f32[L] parallelism bounds (pad 1)
+    z,  # f32[L] workloads (pad 0)
+    mask,  # f32[L] 1 for real tasks
+    order,  # i32[L] dealloc order, real tasks first (permutation of 0..L)
+    prices,  # f32[S] resampled spot prices (pad large)
+    navail,  # f32[S] per-slot self-owned availability
+    window,  # f32[] job window length D
+    dt,  # f32[] slot length
+    pol_beta,  # f32[N]
+    pol_beta0,  # f32[N] (0 = policy has no beta0)
+    bid_values,  # f32[NB] distinct bid prices (padded with 0: wins nothing)
+    bid_idx,  # i32[N] index of each policy's bid in bid_values
+    pol_mask,  # f32[N] 1 for real policies
+    od_price,  # f32[]
+    has_pool,  # f32[] 1.0 when a self-owned pool exists
+):
+    """Per-policy (cost, spot_work, od_work, so_work), each f32[N]."""
+    l_dim = e.shape[0]
+    s_dim = prices.shape[0]
+
+    # ---- Deadline allocation (Algorithm 1), vectorized over policies ----
+    use_beta0 = (has_pool > 0.0) & (pol_beta0 > 0.0) & (pol_beta0 <= pol_beta)
+    beta_alloc = jnp.clip(
+        jnp.where(use_beta0, pol_beta0, pol_beta), _BETA_FLOOR, 1.0
+    )  # [N]
+
+    e_ord = e[order]  # [L]
+    need = e_ord[None, :] * (1.0 - beta_alloc[:, None]) / beta_alloc[:, None]  # [N, L]
+    omega = jnp.maximum(window - jnp.sum(e * mask), 0.0)
+    cum_prev = jnp.cumsum(need, axis=1) - need
+    grant_ord = jnp.clip(omega - cum_prev, 0.0, need)  # [N, L]
+    leftover = omega - jnp.sum(grant_ord, axis=1)  # [N]
+    l_real = jnp.sum(mask).astype(jnp.int32)
+    last_pos = jnp.maximum(l_real - 1, 0)
+    onehot_last = (jnp.arange(l_dim) == last_pos).astype(jnp.float32)  # [L]
+    grant_ord = grant_ord + leftover[:, None] * onehot_last[None, :]
+    grants = jnp.zeros_like(grant_ord).at[:, order].set(grant_ord)
+    sizes = e[None, :] + grants  # [N, L]; pads have size 0
+    deadlines = jnp.cumsum(sizes, axis=1)  # [N, L]
+    lo = deadlines - sizes  # window starts
+
+    # ---- Task slot ranges (uniform grid ⇒ pure arithmetic) ----
+    # Slot k is owned by task i iff lo_i <= (k + OFF)·dt < ς_i, and only
+    # the first V = ceil(window/dt) slots execute.
+    v_slots = jnp.minimum(
+        jnp.ceil(window / dt).astype(jnp.int32), jnp.int32(s_dim)
+    )
+    def first_slot_at(t):  # first k with (k+OFF)·dt >= t
+        return jnp.clip(
+            jnp.ceil(t / dt - OWNER_OFFSET).astype(jnp.int32), 0, v_slots
+        )
+
+    k0 = first_slot_at(lo)  # [N, L]
+    k1 = first_slot_at(deadlines)  # [N, L] (exclusive)
+
+    # ---- Self-owned grants (Eq. 11/12) via a sparse range-min table ----
+    # navail is policy-independent; range-min over [k0, k1) uses a doubling
+    # min-table (11 levels over S) — gathers only, no scatters.
+    nmin = _range_min(navail, k0, k1)  # [N, L]; +inf for empty ranges
+    nmin = jnp.where(jnp.isfinite(nmin), nmin, 0.0)
+    hat_s = jnp.maximum(sizes, 1e-12)
+    f = jnp.maximum(
+        (z[None, :] - delta[None, :] * hat_s * pol_beta0[:, None])
+        / (hat_s * (1.0 - jnp.minimum(pol_beta0[:, None], 1.0 - 1e-6))),
+        0.0,
+    )
+    # Fractional grant (no floor): see ref.py / counterfactual.rs.
+    r = jnp.minimum(jnp.minimum(f, nmin), delta[None, :])
+    r = jnp.maximum(r, 0.0)
+    r = jnp.where((has_pool > 0.0) & (pol_beta0[:, None] > 0.0), r, 0.0)
+    r = r * mask[None, :]
+
+    covered = r * hat_s
+    zt0 = jnp.maximum(z[None, :] - covered, 0.0) * mask[None, :]  # [N, L]
+    so_work = jnp.sum(jnp.minimum(z[None, :], covered) * mask[None, :], axis=1)
+    delta_eff = jnp.maximum(delta[None, :] - r, 0.0)
+    safe_de = jnp.maximum(delta_eff, 1e-12)
+
+    # ---- L1 kernel: market resolution per unique bid ----
+    # cumwin[b, k] = winning seconds in slots [0, k); cumpw likewise price-
+    # weighted; both only over the V executable slots.
+    cumwin, cumpw = policy_sim.spot_market_cumsums(
+        prices, bid_values, jnp.reshape(dt, (1,)), v_slots
+    )  # [NB, S+1] each
+
+    # Per-policy rows (gather once: [N, S+1]).
+    cumwin_n = cumwin[bid_idx]  # [N, S+1]
+    cumpw_n = cumpw[bid_idx]
+    win_n = (cumwin_n[:, 1:] - cumwin_n[:, :-1]) > 0.0  # [N, S] win flags
+
+    def gat(tab, idx2):  # [N, S+1] gathered at [N, L] -> [N, L]
+        return jnp.take_along_axis(tab, idx2, axis=1)
+
+    w_at_k0 = gat(cumwin_n, k0)
+    w_at_k1 = gat(cumwin_n, k1)
+    w_full = w_at_k1 - w_at_k0  # full-slot winning time in the segment
+
+    # Final-slot partial correction: the last slot may extend past ς_i.
+    klast = jnp.maximum(k1 - 1, 0)
+    win_last = jnp.take_along_axis(win_n, jnp.minimum(klast, s_dim - 1), axis=1)
+    secs_last = jnp.clip(deadlines - klast.astype(jnp.float32) * dt, 0.0, dt)
+    miss = jnp.where((k1 > k0) & win_last, dt - secs_last, 0.0)
+    w_end = jnp.maximum(w_full - miss, 0.0)  # actually-available winning time
+
+    # ---- Turning point (suffix condition on losing time) ----
+    # lose(k) = (k − k0)·dt − W(k); fire at first k with lose(k) >= D,
+    # D = (ς − k0·dt) − (z̃₀ + tol)/δeff, tol = FIRE_EPS·(1 + z̃₀).
+    d_thresh = (deadlines - k0.astype(jnp.float32) * dt) - (
+        zt0 + FIRE_EPS * (1.0 + zt0)
+    ) / safe_de  # [N, L]
+    cumlose_n = (
+        jnp.arange(s_dim + 1, dtype=jnp.float32)[None, :] * dt - cumwin_n
+    )  # [N, S+1], nondecreasing
+    lose_at_k0 = gat(cumlose_n, k0)
+    target = lose_at_k0 + d_thresh
+    k_fire = jax.vmap(lambda row, t: jnp.searchsorted(row, t, side="left"))(
+        cumlose_n, target
+    ).astype(jnp.int32)
+    k_fire = jnp.clip(k_fire, k0, k1)
+    fires = k_fire < k1
+    w_fire = jnp.where(fires, gat(cumwin_n, k_fire) - w_at_k0, jnp.inf)
+
+    # ---- Spot time actually used & its telescoped cost ----
+    spot_time = jnp.minimum(jnp.minimum(w_fire, w_end), zt0 / safe_de)
+    spot_time = jnp.maximum(spot_time, 0.0)
+    spot_time = jnp.where((delta_eff > 0.0) & (mask[None, :] > 0.0), spot_time, 0.0)
+
+    # k_stop: first slot where cumulative winning time reaches spot_time.
+    target_w = w_at_k0 + spot_time
+    k_stop = jax.vmap(lambda row, t: jnp.searchsorted(row, t, side="left"))(
+        cumwin_n, target_w
+    ).astype(jnp.int32)
+    k_stop = jnp.clip(k_stop, k0, k1)
+    pw_span = gat(cumpw_n, k_stop) - gat(cumpw_n, k0)
+    overshoot = jnp.maximum(gat(cumwin_n, k_stop) - target_w, 0.0)
+    klast_stop = jnp.minimum(jnp.maximum(k_stop - 1, 0), s_dim - 1)
+    price_last = jnp.take_along_axis(
+        jnp.broadcast_to(prices[None, :], win_n.shape), klast_stop, axis=1
+    )
+    task_cost = delta_eff * jnp.maximum(pw_span - price_last * overshoot, 0.0)
+    task_work = delta_eff * spot_time
+
+    spot_work = jnp.sum(task_work * mask[None, :], axis=1)
+    spot_cost = jnp.sum(task_cost * mask[None, :], axis=1)
+    od_work = jnp.sum(
+        jnp.maximum(zt0 - task_work, 0.0) * mask[None, :], axis=1
+    )
+    cost = spot_cost + od_price * od_work
+
+    pm = pol_mask
+    return (cost * pm, spot_work * pm, od_work * pm, so_work * pm)
+
+
+def _range_min(values, k0, k1):
+    """Range minimum of `values[k0:k1]` for `[N, L]` index pairs via a
+    doubling sparse table (O(S log S) build, gathers only). Empty ranges
+    give +inf."""
+    s = values.shape[0]
+    levels = max(s.bit_length() - 1, 0)
+    tables = [values]
+    span = 1
+    for _ in range(levels):
+        cur = tables[-1]
+        shifted = jnp.concatenate(
+            [cur[span:], jnp.full((span,), jnp.inf, values.dtype)]
+        )
+        tables.append(jnp.minimum(cur, shifted))
+        span *= 2
+    table = jnp.stack(tables)  # [levels+1, S]
+
+    length = jnp.maximum(k1 - k0, 0)
+    # floor(log2(length)) with length 0 -> empty.
+    j = jnp.clip(
+        jnp.log2(jnp.maximum(length.astype(jnp.float32), 1.0)).astype(jnp.int32),
+        0,
+        levels,
+    )
+    pow_j = jnp.left_shift(jnp.int32(1), j)
+    a = jnp.clip(k0, 0, s - 1)
+    b = jnp.clip(k1 - pow_j, 0, s - 1)
+    left = table[j, a]
+    right = table[j, b]
+    out = jnp.minimum(left, right)
+    return jnp.where(length > 0, out, jnp.inf)
+
+
+def tola_update(w, c, eta):
+    """The TOLA weight update (L1 kernel wrapper), fixed shape [N_POL]."""
+    return (policy_sim.tola_update(w, c, jnp.reshape(eta, (1,))),)
+
+
+def policy_cost_example_args():
+    """ShapeDtypeStructs for AOT lowering."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((L_MAX,), f32),  # e
+        jax.ShapeDtypeStruct((L_MAX,), f32),  # delta
+        jax.ShapeDtypeStruct((L_MAX,), f32),  # z
+        jax.ShapeDtypeStruct((L_MAX,), f32),  # mask
+        jax.ShapeDtypeStruct((L_MAX,), jnp.int32),  # order
+        jax.ShapeDtypeStruct((S_MAX,), f32),  # prices
+        jax.ShapeDtypeStruct((S_MAX,), f32),  # navail
+        jax.ShapeDtypeStruct((), f32),  # window
+        jax.ShapeDtypeStruct((), f32),  # dt
+        jax.ShapeDtypeStruct((N_POL,), f32),  # pol_beta
+        jax.ShapeDtypeStruct((N_POL,), f32),  # pol_beta0
+        jax.ShapeDtypeStruct((NB_MAX,), f32),  # bid_values
+        jax.ShapeDtypeStruct((N_POL,), jnp.int32),  # bid_idx
+        jax.ShapeDtypeStruct((N_POL,), f32),  # pol_mask
+        jax.ShapeDtypeStruct((), f32),  # od_price
+        jax.ShapeDtypeStruct((), f32),  # has_pool
+    )
+
+
+def tola_update_example_args():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((N_POL,), f32),
+        jax.ShapeDtypeStruct((N_POL,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )

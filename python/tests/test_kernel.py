@@ -1,0 +1,227 @@
+"""Kernel vs oracle: the CORE correctness signal of the L1/L2 stack.
+
+The vectorized model (`compile.model.policy_cost`, which embeds the Pallas
+slot-walk kernel) must reproduce the numpy oracle (`kernels/ref.py`) across
+hypothesis-generated jobs, traces and policy grids.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import marshal, model
+from compile.kernels import ref
+
+RTOL = 2e-3  # f32 production path vs f64 oracle
+ATOL = 2e-3
+
+SLOT = 1.0 / 12.0
+
+
+def make_job(rng, l, flex=2.0):
+    delta = rng.choice([1.0, 2.0, 8.0, 64.0], size=l)
+    e = rng.uniform(0.25, 3.0, size=l)
+    z = e * delta
+    window = float(e.sum() * rng.uniform(1.01, flex))
+    return e, delta, z, window
+
+
+def make_trace(rng, window, avail=0.5):
+    n = min(int(np.ceil(window / SLOT)) + 1, model.S_MAX)
+    cheap = rng.uniform(0.12, 0.3, size=n)
+    dear = rng.uniform(0.4, 1.0, size=n)
+    return np.where(rng.uniform(size=n) < avail, cheap, dear), SLOT
+
+
+def assert_matches_oracle(e, delta, z, window, prices, dt, navail, grid_tuple, has_pool):
+    betas, beta0s, bids = grid_tuple
+    job = marshal.pad_job(e, delta, z, prices, navail, window, dt)
+    grid = marshal.pad_grid(betas, beta0s, bids, has_pool)
+    cost, sw, ow, sow = marshal.run_model(job, grid)
+    order = [int(i) for i in job["order"][: len(e)]]
+    rcost, rsw, row, rsow = ref.eval_grid(
+        e, delta, z, order, window, job["prices"][: len(prices)], dt,
+        navail, 1.0, betas, beta0s, bids, has_pool,
+    )
+    scale = max(float(np.sum(z)), 1.0)
+    for name, got, want in [
+        ("cost", cost, rcost),
+        ("spot_work", sw, rsw),
+        ("od_work", ow, row),
+        ("so_work", sow, rsow),
+    ]:
+        np.testing.assert_allclose(
+            got, want, rtol=RTOL, atol=ATOL * scale,
+            err_msg=f"{name} mismatch (kernel vs oracle)",
+        )
+
+
+def paper_grid(has_pool):
+    c1 = [2 / 12, 4 / 14, 6 / 16, 8 / 18, 0.5, 0.6, 0.7]
+    c2 = [1.0, 1 / 1.3, 1 / 1.6, 1 / 1.9, 1 / 2.2]
+    b = [0.18, 0.21, 0.24, 0.27, 0.3]
+    if not has_pool:
+        return (
+            [x for x in c2 for _ in b],
+            [0.0] * (len(c2) * len(b)),
+            b * len(c2),
+        )
+    betas, beta0s, bids = [], [], []
+    for b0 in c1:
+        for beta in c2:
+            for bid in b:
+                betas.append(beta)
+                beta0s.append(b0)
+                bids.append(bid)
+    return betas, beta0s, bids
+
+
+class TestAgainstOracle:
+    def test_paper_example_no_pool(self):
+        # §4.1.1 chain, full paper spot-only grid.
+        e = np.array([0.75, 0.5, 2.5 / 3.0, 0.5])
+        delta = np.array([2.0, 1.0, 3.0, 1.0])
+        z = e * delta
+        rng = np.random.default_rng(1)
+        prices, dt = make_trace(rng, 4.0)
+        navail = np.zeros_like(prices)
+        assert_matches_oracle(
+            e, delta, z, 4.0, prices, dt, navail, paper_grid(False), False
+        )
+
+    def test_paper_example_with_pool(self):
+        e = np.array([0.75, 0.5, 2.5 / 3.0, 0.5])
+        delta = np.array([2.0, 1.0, 3.0, 1.0])
+        z = e * delta
+        rng = np.random.default_rng(2)
+        prices, dt = make_trace(rng, 4.0)
+        navail = np.full_like(prices, 5.0)
+        assert_matches_oracle(
+            e, delta, z, 4.0, prices, dt, navail, paper_grid(True), True
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        l=st.integers(1, 12),
+        avail=st.floats(0.0, 1.0),
+        has_pool=st.booleans(),
+    )
+    def test_random_jobs_hypothesis(self, seed, l, avail, has_pool):
+        rng = np.random.default_rng(seed)
+        e, delta, z, window = make_job(rng, l)
+        prices, dt = make_trace(rng, window, avail)
+        navail = (
+            rng.integers(0, 20, size=len(prices)).astype(np.float64)
+            if has_pool
+            else np.zeros(len(prices))
+        )
+        # Small random policy grid. Bids draw from a palette of <= 6
+        # distinct values: the AOT interface dedupes bids (NB_MAX = 8).
+        n = int(rng.integers(1, 12))
+        betas = rng.uniform(0.3, 1.0, size=n).tolist()
+        beta0s = (
+            rng.uniform(0.1, 0.8, size=n).tolist() if has_pool else [0.0] * n
+        )
+        palette = rng.uniform(0.12, 0.35, size=int(rng.integers(1, 7)))
+        bids = rng.choice(palette, size=n).tolist()
+        assert_matches_oracle(
+            e, delta, z, window, prices, dt, navail,
+            (betas, beta0s, bids), has_pool,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_long_chains_resampled(self, seed):
+        # Chains near L_MAX with windows forcing resampled (coarse) slots.
+        rng = np.random.default_rng(seed)
+        l = int(rng.integers(60, 97))
+        e, delta, z, window = make_job(rng, l, flex=3.0)
+        n_slots = int(rng.integers(200, model.S_MAX))
+        dt = window / n_slots
+        prices = rng.uniform(0.12, 1.0, size=n_slots)
+        navail = np.zeros(n_slots)
+        betas = [1.0, 1 / 1.6, 1 / 2.2]
+        assert_matches_oracle(
+            e, delta, z, window, prices, dt, navail,
+            (betas, [0.0] * 3, [0.24] * 3), False,
+        )
+
+
+class TestKernelProperties:
+    def test_all_available_cheap_spot_no_od(self):
+        e = np.array([1.0, 0.5])
+        delta = np.array([2.0, 4.0])
+        z = e * delta
+        window = 4.0
+        n = int(np.ceil(window / SLOT)) + 1
+        prices = np.full(n, 0.2)
+        job = marshal.pad_job(e, delta, z, prices, np.zeros(n), window, SLOT)
+        grid = marshal.pad_grid([0.5], [0.0], [0.3], False)
+        cost, sw, ow, sow = marshal.run_model(job, grid)
+        assert ow[0] == pytest.approx(0.0, abs=1e-4)
+        assert sw[0] == pytest.approx(float(z.sum()), rel=1e-4)
+        assert cost[0] == pytest.approx(0.2 * float(z.sum()), rel=1e-3)
+
+    def test_never_available_all_od(self):
+        e = np.array([1.0])
+        delta = np.array([2.0])
+        z = e * delta
+        window = 3.0
+        prices = np.full(40, 2.0)  # above any bid
+        job = marshal.pad_job(e, delta, z, prices, np.zeros(40), window, SLOT)
+        grid = marshal.pad_grid([0.5], [0.0], [0.3], False)
+        cost, sw, ow, _ = marshal.run_model(job, grid)
+        assert sw[0] == pytest.approx(0.0, abs=1e-5)
+        assert ow[0] == pytest.approx(2.0, rel=1e-4)
+        assert cost[0] == pytest.approx(2.0, rel=1e-4)
+
+    def test_work_conservation(self):
+        rng = np.random.default_rng(7)
+        e, delta, z, window = make_job(rng, 8)
+        prices, dt = make_trace(rng, window)
+        navail = np.full(len(prices), 10.0)
+        job = marshal.pad_job(e, delta, z, prices, navail, window, dt)
+        grid = marshal.pad_grid(*paper_grid(True), True)
+        cost, sw, ow, sow = marshal.run_model(job, grid)
+        total = sw + ow + sow
+        np.testing.assert_allclose(total, float(z.sum()), rtol=1e-3)
+        assert (cost >= -1e-4).all()
+        assert (cost <= float(z.sum()) * 1.001).all()
+
+    def test_padded_policies_masked_to_zero(self):
+        rng = np.random.default_rng(9)
+        e, delta, z, window = make_job(rng, 3)
+        prices, dt = make_trace(rng, window)
+        job = marshal.pad_job(e, delta, z, prices, np.zeros(len(prices)), window, dt)
+        grid = marshal.pad_grid([0.5], [0.0], [0.24], False)
+        raw = model.policy_cost(
+            job["e"], job["delta"], job["z"], job["mask"], job["order"],
+            job["prices"], job["navail"], job["window"], job["dt"],
+            grid["pol_beta"], grid["pol_beta0"], grid["bid_values"],
+            grid["bid_idx"], grid["pol_mask"], job["od_price"], grid["has_pool"],
+        )
+        cost = np.asarray(raw[0])
+        assert (cost[1:] == 0.0).all()
+
+
+class TestTolaUpdateKernel:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(3)
+        w = rng.uniform(0.1, 1.0, size=model.N_POL).astype(np.float32)
+        w /= w.sum()
+        c = rng.uniform(0.0, 50.0, size=model.N_POL).astype(np.float32)
+        eta = np.float32(0.03)
+        (got,) = model.tola_update(w, c, eta)
+        want = ref.tola_update(w, c, float(eta))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-6)
+        assert np.asarray(got).sum() == pytest.approx(1.0, abs=1e-5)
+
+    def test_large_costs_stable(self):
+        w = np.full(model.N_POL, 1.0 / model.N_POL, np.float32)
+        c = np.full(model.N_POL, 1e6, np.float32)
+        c[5] = 1e6 - 1.0
+        (got,) = model.tola_update(w, c, np.float32(1.0))
+        got = np.asarray(got)
+        assert np.isfinite(got).all()
+        assert got[5] == got.max()

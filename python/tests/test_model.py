@@ -1,0 +1,101 @@
+"""L2 model component tests: window allocation, marshalling, shapes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import marshal, model
+from compile.kernels import ref
+
+
+class TestDeallocWindows:
+    def test_paper_example_windows(self):
+        # §4.1.1: β=0.5 → window sizes (4/3, 1/2, 5/3, 1/2).
+        e = np.array([0.75, 0.5, 2.5 / 3.0, 0.5])
+        order = [2, 0, 1, 3]  # δ desc = (3, 2, 1, 1)
+        sizes = ref.dealloc_windows(e, order, 4.0, 0.5)
+        np.testing.assert_allclose(sizes, [4 / 3, 0.5, 5 / 3, 0.5], rtol=1e-12)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 5000), l=st.integers(1, 20))
+    def test_windows_tile_and_dominate_e(self, seed, l):
+        rng = np.random.default_rng(seed)
+        e = rng.uniform(0.1, 3.0, size=l)
+        delta = rng.choice([1.0, 8.0, 64.0], size=l)
+        window = float(e.sum() * rng.uniform(1.0, 3.0))
+        order = [int(i) for i in marshal.dealloc_order(delta, l)[:l]]
+        beta = rng.uniform(0.05, 1.0)
+        sizes = ref.dealloc_windows(e, order, window, beta)
+        assert sizes.sum() == pytest.approx(window, rel=1e-9)
+        assert (sizes >= e - 1e-12).all()
+
+    def test_vectorized_windows_match_ref_through_model(self):
+        # Drive the full model with a no-spot trace: od_work == z exactly
+        # when windows are correct (no spot, no pool); any window bug
+        # changes the turning-point charges.
+        rng = np.random.default_rng(5)
+        l = 6
+        e = rng.uniform(0.3, 2.0, size=l)
+        delta = rng.choice([2.0, 8.0, 64.0], size=l)
+        z = e * delta
+        window = float(e.sum() * 1.8)
+        prices = np.full(256, 5.0)  # never wins
+        job = marshal.pad_job(e, delta, z, prices, np.zeros(256), window, window / 256)
+        grid = marshal.pad_grid([0.5, 1.0, 1 / 2.2], [0.0] * 3, [0.3] * 3, False)
+        cost, sw, ow, sow = marshal.run_model(job, grid)
+        np.testing.assert_allclose(ow, float(z.sum()), rtol=1e-4)
+        np.testing.assert_allclose(cost, float(z.sum()), rtol=1e-4)
+        assert (sw == 0).all() and (sow == 0).all()
+
+
+class TestMarshalling:
+    def test_order_real_tasks_first(self):
+        delta = [2.0, 64.0, 8.0]
+        order = marshal.dealloc_order(delta, 3)
+        assert list(order[:3]) == [1, 2, 0]
+        assert len(order) == model.L_MAX
+
+    def test_pad_job_shapes(self):
+        job = marshal.pad_job([1.0], [2.0], [2.0], [0.2] * 10, [0.0] * 10, 3.0, 0.25)
+        assert job["e"].shape == (model.L_MAX,)
+        assert job["prices"].shape == (model.S_MAX,)
+        assert job["prices"][10] == marshal.PRICE_PAD
+        assert job["delta"][5] == 1.0  # pad δ
+
+    def test_pad_grid_rejects_oversize(self):
+        with pytest.raises(AssertionError):
+            marshal.pad_grid([0.5] * (model.N_POL + 1), [0] * (model.N_POL + 1),
+                             [0.2] * (model.N_POL + 1), False)
+
+
+class TestSelfOwnedRule:
+    def test_f_matches_eq11(self):
+        # f(0) = z/ŝ; f(e/ŝ) = 0.
+        assert ref.f_selfowned(6.0, 4.0, 2.0, 0.0) == 3.0
+        assert ref.f_selfowned(6.0, 4.0, 2.0, 0.75) == 0.0
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2000))
+    def test_pool_never_grants_above_navail(self, seed):
+        rng = np.random.default_rng(seed)
+        l = int(rng.integers(1, 8))
+        e = rng.uniform(0.3, 2.0, size=l)
+        delta = rng.choice([2.0, 8.0], size=l)
+        z = e * delta
+        window = float(e.sum() * 1.5)
+        n = min(int(np.ceil(window / (1 / 12))) + 1, model.S_MAX)
+        navail = rng.integers(0, 6, size=n).astype(float)
+        prices = np.full(n, 5.0)
+        job = marshal.pad_job(e, delta, z, prices, navail, window, 1 / 12)
+        grid = marshal.pad_grid([0.5], [0.25], [0.2], True)
+        _, _, _, sow = marshal.run_model(job, grid)
+        # so_work can't exceed max navail × window.
+        assert sow[0] <= float(navail.max()) * window + 1e-3
+
+
+class TestTolaUpdateShape:
+    def test_uniform_stays_uniform_on_equal_costs(self):
+        w = np.full(model.N_POL, 1.0 / model.N_POL, np.float32)
+        c = np.full(model.N_POL, 3.0, np.float32)
+        (out,) = model.tola_update(w, c, np.float32(0.1))
+        np.testing.assert_allclose(np.asarray(out), w, rtol=1e-5)

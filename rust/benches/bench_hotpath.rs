@@ -1,0 +1,130 @@
+//! Hot-path micro/meso benches: the per-component costs that determine
+//! end-to-end throughput, plus the PJRT-vs-native counterfactual sweep
+//! comparison used in EXPERIMENTS.md §Perf.
+
+use dagcloud::learning::counterfactual::{eval_grid_native, CounterfactualJob, S_MAX};
+use dagcloud::market::{PriceTrace, SelfOwnedPool, SpotModel, SLOTS_PER_UNIT};
+use dagcloud::policy::dealloc::dealloc;
+use dagcloud::policy::{policy_set_full, Policy};
+use dagcloud::runtime::ArtifactRuntime;
+use dagcloud::sim::executor::{execute_chain, ChainStrategy, SelfOwnedRule};
+use dagcloud::util::bench::Bencher;
+use dagcloud::util::rng::Pcg32;
+use dagcloud::workload::{transform, ChainJob, GeneratorConfig, JobStream};
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_hotpath ==\n");
+
+    // Workload pieces.
+    let mut stream = JobStream::new(GeneratorConfig::paper_default(), 3);
+    let dags: Vec<_> = stream.take_jobs(64);
+    let chains: Vec<ChainJob> = dags.iter().map(transform).collect();
+    let horizon = chains.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+    let trace = PriceTrace::generate(SpotModel::paper_default(), horizon, 9);
+    let grid = policy_set_full();
+
+    // --- generator + transform ---
+    let mut gen_stream = JobStream::new(GeneratorConfig::paper_default(), 11);
+    b.bench_throughput("workload/generate_dag", 1.0, "jobs/s", || {
+        gen_stream.next_job()
+    });
+    let mut i = 0;
+    b.bench_throughput("workload/transform_dag_to_chain", 1.0, "jobs/s", || {
+        i = (i + 1) % dags.len();
+        transform(&dags[i])
+    });
+
+    // --- Dealloc ---
+    let big = &chains[0];
+    b.bench_throughput("policy/dealloc", 1.0, "allocs/s", || dealloc(big, 0.5));
+
+    // --- realized executor ---
+    let mut k = 0;
+    b.bench_throughput("sim/execute_chain_realized", 1.0, "jobs/s", || {
+        k = (k + 1) % chains.len();
+        let job = &chains[k];
+        let windows = dealloc(job, 1.0 / 1.6);
+        execute_chain(
+            job,
+            &ChainStrategy::Windows {
+                windows: &windows,
+                selfowned: SelfOwnedRule::None,
+                bid: 0.24,
+            },
+            &trace,
+            None,
+            1.0,
+        )
+    });
+
+    // --- pool (segment tree) ---
+    let mut pool = SelfOwnedPool::new(1200, horizon, 1.0 / SLOTS_PER_UNIT as f64);
+    let mut rng = Pcg32::new(5);
+    b.bench_throughput("market/pool_reserve_release", 2.0, "ops/s", || {
+        let t0 = rng.uniform(0.0, horizon - 5.0);
+        let t1 = t0 + rng.uniform(0.5, 4.0);
+        let r = pool.available_over(t0, t1).min(4);
+        pool.reserve(r, t0, t1);
+        pool.release(r, t0, t1);
+    });
+
+    // --- counterfactual sweep: native vs PJRT ---
+    let cf_jobs: Vec<CounterfactualJob> = chains
+        .iter()
+        .take(16)
+        .map(|job| {
+            let (prices, dt) = trace.resample_window(job.arrival, job.deadline, S_MAX);
+            let n = prices.len();
+            CounterfactualJob::from_job(job, prices, dt, vec![8.0; n], 1.0)
+        })
+        .collect();
+    let mut ci = 0;
+    b.bench_throughput(
+        "learning/counterfactual_native_175pol",
+        grid.len() as f64,
+        "policy-evals/s",
+        || {
+            ci = (ci + 1) % cf_jobs.len();
+            eval_grid_native(&cf_jobs[ci], &grid, true)
+        },
+    );
+
+    match ArtifactRuntime::load_default() {
+        Ok(rt) => {
+            let mut cj = 0;
+            b.bench_throughput(
+                "learning/counterfactual_pjrt_175pol",
+                grid.len() as f64,
+                "policy-evals/s",
+                || {
+                    cj = (cj + 1) % cf_jobs.len();
+                    rt.policy_cost.eval(&cf_jobs[cj], &grid, true).expect("pjrt eval")
+                },
+            );
+            if let Some(tk) = rt.tola_update.as_ref() {
+                let w = vec![1.0 / 175.0; 175];
+                let costs: Vec<f64> = (0..175).map(|i| (i % 13) as f64).collect();
+                b.bench("runtime/tola_update_pjrt", || {
+                    tk.update(&w, &costs, 0.05).expect("tola update")
+                });
+            }
+        }
+        Err(e) => println!("(PJRT benches skipped: {e})"),
+    }
+
+    // --- single-policy counterfactual (the unit of the sweep) ---
+    let p = Policy::new(1.0 / 1.6, Some(4.0 / 14.0), 0.24);
+    b.bench_throughput("learning/counterfactual_single_policy", 1.0, "evals/s", || {
+        cf_jobs[0].eval_policy(&p, true)
+    });
+
+    // --- trace ops ---
+    b.bench("market/resample_window_2048", || {
+        trace.resample_window(0.0, horizon.min(200.0), S_MAX)
+    });
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_hotpath.json").ok();
+    println!("\nresults written to results/bench_hotpath.json");
+}

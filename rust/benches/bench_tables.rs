@@ -1,0 +1,139 @@
+//! End-to-end benches: one per paper table. Each bench measures the
+//! wall-clock of regenerating a (reduced-size) table cell and prints the
+//! resulting cost-improvement figures, so `cargo bench` both times the
+//! system and re-derives every table's numbers.
+//!
+//! Harness: `util::bench` (criterion is unavailable offline); wired via
+//! `[[bench]] harness = false`.
+
+use dagcloud::coordinator::{parallel_map, tola_run, Config, Evaluator};
+use dagcloud::learning::counterfactual::CfSpec;
+use dagcloud::policy::{benchmark_bids, policy_set_full, policy_set_spot_only};
+use dagcloud::sim::cost::{cost_improvement, min_unit_cost, utilization_ratio};
+use dagcloud::sim::horizon::{HorizonRunner, StrategySpec};
+use dagcloud::util::bench::Bencher;
+
+fn cfg(jobs: usize) -> Config {
+    Config {
+        jobs,
+        seed: 7,
+        threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        use_pjrt: false,
+        ..Config::default()
+    }
+}
+
+fn main() {
+    let jobs: usize = std::env::var("DAGCLOUD_BENCH_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let c = cfg(jobs);
+    let threads = c.effective_threads();
+    let mut b = Bencher::new();
+    println!("== bench_tables: {jobs} jobs per cell, {threads} threads ==\n");
+
+    // ---- Table 2 (x2 = 2 cell) ----
+    let (jobs2, trace2) = dagcloud::experiments::tables::workload(&c, 2);
+    let proposed: Vec<StrategySpec> = policy_set_spot_only()
+        .into_iter()
+        .map(StrategySpec::Proposed)
+        .collect();
+    let greedy: Vec<StrategySpec> = benchmark_bids()
+        .into_iter()
+        .map(|bid| StrategySpec::GreedyBaseline { bid })
+        .collect();
+    let even: Vec<StrategySpec> = benchmark_bids()
+        .into_iter()
+        .map(|bid| StrategySpec::EvenBaseline { bid })
+        .collect();
+    let mut t2 = (0.0, 0.0);
+    b.bench("table2/cell_x2=2 (25-policy sweep + baselines)", || {
+        let runner = HorizonRunner::new(&trace2, 0);
+        let (a, _) = min_unit_cost(&parallel_map(proposed.len(), threads, |i| {
+            runner.run(&jobs2, proposed[i])
+        }));
+        let (ag, _) = min_unit_cost(&parallel_map(greedy.len(), threads, |i| {
+            runner.run(&jobs2, greedy[i])
+        }));
+        let (ae, _) = min_unit_cost(&parallel_map(even.len(), threads, |i| {
+            runner.run(&jobs2, even[i])
+        }));
+        t2 = (cost_improvement(a, ag), cost_improvement(a, ae));
+        t2
+    });
+    println!("   -> rho_greedy = {:.2}%, rho_even = {:.2}%\n", 100.0 * t2.0, 100.0 * t2.1);
+
+    // ---- Table 3 (x1 = 600, x2 = 2 cell) ----
+    let full: Vec<StrategySpec> = policy_set_full()
+        .into_iter()
+        .map(StrategySpec::Proposed)
+        .collect();
+    let mut t3 = 0.0;
+    b.bench("table3/cell_x1=600,x2=2 (175-policy sweep + pool)", || {
+        let runner = HorizonRunner::new(&trace2, 600);
+        let (a, _) = min_unit_cost(&parallel_map(full.len(), threads, |i| {
+            runner.run(&jobs2, full[i])
+        }));
+        let (ae, _) = min_unit_cost(&parallel_map(even.len(), threads, |i| {
+            runner.run(&jobs2, even[i])
+        }));
+        t3 = cost_improvement(a, ae);
+        t3
+    });
+    println!("   -> rho = {:.2}%\n", 100.0 * t3);
+
+    // ---- Tables 4+5 (x1 = 600, x2 = 2 cell) ----
+    let naive: Vec<StrategySpec> = policy_set_spot_only()
+        .into_iter()
+        .map(StrategySpec::DeallocNaive)
+        .collect();
+    let mut t45 = (0.0, 0.0);
+    b.bench("table4_5/cell_x1=600,x2=2 (rule12 vs naive)", || {
+        let runner = HorizonRunner::new(&trace2, 600);
+        let props = parallel_map(full.len(), threads, |i| runner.run(&jobs2, full[i]));
+        let naives = parallel_map(naive.len(), threads, |i| runner.run(&jobs2, naive[i]));
+        let (a, pi) = min_unit_cost(&props);
+        let (an, bi) = min_unit_cost(&naives);
+        t45 = (
+            cost_improvement(a, an),
+            utilization_ratio(&props[pi], &naives[bi]),
+        );
+        t45
+    });
+    println!("   -> rho = {:.2}%, mu = {:.2}%\n", 100.0 * t45.0, 100.0 * t45.1);
+
+    // ---- Table 6 (x1 = 600 cell, TOLA) ----
+    let specs: Vec<CfSpec> = policy_set_full().into_iter().map(CfSpec::Proposed).collect();
+    let bench_specs: Vec<CfSpec> = benchmark_bids()
+        .into_iter()
+        .map(|bid| CfSpec::EvenNaive { bid })
+        .collect();
+    let mut t6 = 0.0;
+    b.bench("table6/cell_x1=600 (TOLA run, native evaluator)", || {
+        let p = tola_run(
+            &jobs2,
+            &specs,
+            &trace2,
+            600,
+            1.0,
+            7,
+            &Evaluator::Native { threads },
+        );
+        let q = tola_run(
+            &jobs2,
+            &bench_specs,
+            &trace2,
+            600,
+            1.0,
+            8,
+            &Evaluator::Native { threads },
+        );
+        t6 = cost_improvement(p.average_unit_cost, q.average_unit_cost);
+        t6
+    });
+    println!("   -> rho_bar = {:.2}%\n", 100.0 * t6);
+
+    b.write_json("results/bench_tables.json").ok();
+    println!("results written to results/bench_tables.json");
+}

@@ -1,0 +1,203 @@
+//! Experiment configuration: JSON-loadable with §6.1 defaults.
+
+use crate::market::SpotModel;
+use crate::util::json::Json;
+use crate::workload::GeneratorConfig;
+
+/// Full configuration of a simulation / experiment run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of jobs to simulate (§6.2 uses ~10000).
+    pub jobs: usize,
+    /// RNG seed (workload, trace and policy sampling derive streams).
+    pub seed: u64,
+    /// Job type x₂ ∈ 1..=4 (deadline flexibility class).
+    pub job_type: u8,
+    /// Self-owned pool capacities to sweep (x₁ values).
+    pub pool_sizes: Vec<u64>,
+    /// Spot price model.
+    pub spot_model: SpotModel,
+    /// On-demand price (normalized to 1 in the paper).
+    pub od_price: f64,
+    /// Worker threads for policy sweeps (0 = all cores).
+    pub threads: usize,
+    /// Use the PJRT kernel for counterfactual sweeps when artifacts exist.
+    pub use_pjrt: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            jobs: 2000,
+            seed: 7,
+            job_type: 2,
+            pool_sizes: vec![300, 600, 900, 1200],
+            spot_model: SpotModel::paper_default(),
+            od_price: crate::market::ON_DEMAND_PRICE,
+            threads: 0,
+            use_pjrt: true,
+        }
+    }
+}
+
+impl Config {
+    /// Generator for a specific job type with this config's seed.
+    pub fn generator(&self, job_type: u8) -> GeneratorConfig {
+        GeneratorConfig::for_job_type(job_type)
+    }
+
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        }
+    }
+
+    /// Load from a JSON file; missing keys keep defaults.
+    pub fn from_json_file(path: &str) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Ok(Self::from_json(&j))
+    }
+
+    pub fn from_json(j: &Json) -> Config {
+        let d = Config::default();
+        let spot_model = match j.get("spot_model") {
+            Some(sm) => {
+                let kind = sm.opt_str("kind", "bounded_exp");
+                match kind {
+                    "markov" => SpotModel::Markov {
+                        calm_mean: sm.opt_f64("calm_mean", 0.13),
+                        surge_mean: sm.opt_f64("surge_mean", 0.6),
+                        lo: sm.opt_f64("lo", 0.12),
+                        hi: sm.opt_f64("hi", 1.0),
+                        p_calm_to_surge: sm.opt_f64("p_calm_to_surge", 0.05),
+                        p_surge_to_calm: sm.opt_f64("p_surge_to_calm", 0.2),
+                    },
+                    "google" => SpotModel::GoogleFixed {
+                        price: sm.opt_f64("price", 0.3),
+                        availability: sm.opt_f64("availability", 0.7),
+                    },
+                    _ => SpotModel::BoundedExp {
+                        mean: sm.opt_f64("mean", 0.13),
+                        lo: sm.opt_f64("lo", 0.12),
+                        hi: sm.opt_f64("hi", 1.0),
+                    },
+                }
+            }
+            None => d.spot_model.clone(),
+        };
+        Config {
+            jobs: j.opt_u64("jobs", d.jobs as u64) as usize,
+            seed: j.opt_u64("seed", d.seed),
+            job_type: j.opt_u64("job_type", d.job_type as u64) as u8,
+            pool_sizes: j
+                .get("pool_sizes")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_u64).collect())
+                .unwrap_or(d.pool_sizes),
+            spot_model,
+            od_price: j.opt_f64("od_price", d.od_price),
+            threads: j.opt_u64("threads", d.threads as u64) as usize,
+            use_pjrt: j.opt_bool("use_pjrt", d.use_pjrt),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut sm = Json::obj();
+        match &self.spot_model {
+            SpotModel::BoundedExp { mean, lo, hi } => {
+                sm.set("kind", Json::Str("bounded_exp".into()))
+                    .set("mean", Json::Num(*mean))
+                    .set("lo", Json::Num(*lo))
+                    .set("hi", Json::Num(*hi));
+            }
+            SpotModel::Markov {
+                calm_mean,
+                surge_mean,
+                lo,
+                hi,
+                p_calm_to_surge,
+                p_surge_to_calm,
+            } => {
+                sm.set("kind", Json::Str("markov".into()))
+                    .set("calm_mean", Json::Num(*calm_mean))
+                    .set("surge_mean", Json::Num(*surge_mean))
+                    .set("lo", Json::Num(*lo))
+                    .set("hi", Json::Num(*hi))
+                    .set("p_calm_to_surge", Json::Num(*p_calm_to_surge))
+                    .set("p_surge_to_calm", Json::Num(*p_surge_to_calm));
+            }
+            SpotModel::GoogleFixed {
+                price,
+                availability,
+            } => {
+                sm.set("kind", Json::Str("google".into()))
+                    .set("price", Json::Num(*price))
+                    .set("availability", Json::Num(*availability));
+            }
+        }
+        let mut j = Json::obj();
+        j.set("jobs", Json::Num(self.jobs as f64))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("job_type", Json::Num(self.job_type as f64))
+            .set(
+                "pool_sizes",
+                Json::Arr(self.pool_sizes.iter().map(|&x| Json::Num(x as f64)).collect()),
+            )
+            .set("spot_model", sm)
+            .set("od_price", Json::Num(self.od_price))
+            .set("threads", Json::Num(self.threads as f64))
+            .set("use_pjrt", Json::Bool(self.use_pjrt));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.job_type, 2);
+        assert_eq!(c.pool_sizes, vec![300, 600, 900, 1200]);
+        assert_eq!(c.spot_model, SpotModel::paper_default());
+        assert_eq!(c.od_price, 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = Config {
+            jobs: 123,
+            seed: 9,
+            job_type: 3,
+            pool_sizes: vec![10, 20],
+            spot_model: SpotModel::GoogleFixed {
+                price: 0.25,
+                availability: 0.8,
+            },
+            od_price: 2.0,
+            threads: 2,
+            use_pjrt: false,
+        };
+        let j = c.to_json();
+        let c2 = Config::from_json(&j);
+        assert_eq!(c2.jobs, 123);
+        assert_eq!(c2.job_type, 3);
+        assert_eq!(c2.pool_sizes, vec![10, 20]);
+        assert_eq!(c2.spot_model, c.spot_model);
+        assert!(!c2.use_pjrt);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"jobs": 50}"#).unwrap();
+        let c = Config::from_json(&j);
+        assert_eq!(c.jobs, 50);
+        assert_eq!(c.seed, Config::default().seed);
+    }
+}

@@ -1,0 +1,87 @@
+//! Leader/worker execution pool on std threads (tokio is unavailable
+//! offline; the workload is CPU-bound policy sweeps, so scoped threads +
+//! channels are the right tool anyway).
+
+/// Run `f(i)` for `i in 0..n` across up to `threads` workers, collecting
+/// results in index order. Panics in workers propagate.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SlotsPtr(slots.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slots_ptr = &slots_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let value = f(i);
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic counter, so no two threads write the same slot, and
+                // the scope guarantees the buffer outlives the workers.
+                unsafe {
+                    *slots_ptr.0.add(i) = Some(value);
+                }
+            });
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("worker filled slot")).collect()
+}
+
+/// Send+Sync wrapper for the raw slot pointer (disjoint writes only).
+struct SlotsPtr<T>(*mut Option<T>);
+unsafe impl<T: Send> Send for SlotsPtr<T> {}
+unsafe impl<T: Send> Sync for SlotsPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn actually_parallel() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        parallel_map(32, 8, |_| {
+            let cur = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(cur, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) >= 2, "never ran concurrently");
+    }
+}

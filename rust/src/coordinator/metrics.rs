@@ -1,0 +1,85 @@
+//! Run metrics: counters/gauges collected by the coordinator and dumped as
+//! JSON for EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A lightweight metrics registry.
+#[derive(Debug)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, Json::Num(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(k, Json::Num(*v));
+        }
+        j.set("counters", counters)
+            .set("gauges", gauges)
+            .set("elapsed_secs", Json::Num(self.elapsed_secs()));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = Metrics::new();
+        m.incr("jobs", 3);
+        m.incr("jobs", 2);
+        m.set("alpha", 0.25);
+        assert_eq!(m.counter("jobs"), 5);
+        assert_eq!(m.counter("missing"), 0);
+        assert_eq!(m.gauge("alpha"), Some(0.25));
+        let j = m.to_json();
+        assert_eq!(j.get("counters").unwrap().get("jobs").unwrap().as_f64(), Some(5.0));
+    }
+}

@@ -1,0 +1,457 @@
+//! The L3 coordinator: leader event loop tying together the workload
+//! stream, the market, the policies, the online learner and the PJRT
+//! runtime; plus the CLI front-end.
+//!
+//! The coordinator's event loop is Algorithm 2 + Algorithm 4 fused: at each
+//! simulated moment it reacts to job arrivals (policy sampling + deadline
+//! allocation), task starts (self-owned grants + spot/on-demand
+//! allocation), and job retirements (counterfactual sweep + TOLA weight
+//! update). The counterfactual sweep — the hot path — is dispatched to the
+//! AOT-compiled PJRT kernel when artifacts are available, with a native
+//! multi-threaded fallback.
+
+pub mod config;
+pub mod exec_pool;
+pub mod metrics;
+
+pub use config::Config;
+pub use exec_pool::parallel_map;
+pub use metrics::Metrics;
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::learning::counterfactual::{CfSpec, CounterfactualJob, S_MAX};
+use crate::learning::regret::RegretTracker;
+use crate::learning::Tola;
+use crate::market::{CostLedger, InstanceKind, PriceTrace, SelfOwnedPool, SLOTS_PER_UNIT};
+use crate::policy::baselines::even_windows;
+use crate::policy::dealloc::{dealloc, windows_to_deadlines};
+use crate::policy::selfowned::{naive_allocation, rule12};
+use crate::policy::Policy;
+use crate::runtime::ArtifactRuntime;
+use crate::sim::executor::execute_task;
+use crate::util::rng::Pcg32;
+use crate::workload::ChainJob;
+
+/// How counterfactual sweeps are evaluated.
+pub enum Evaluator<'a> {
+    /// Native Rust sweep, chunked over `threads` workers.
+    Native { threads: usize },
+    /// The AOT PJRT kernel (proposed-policy grids only; benchmark specs
+    /// fall back to native within the same run).
+    Pjrt(&'a ArtifactRuntime),
+}
+
+/// Result of a TOLA learning run.
+#[derive(Debug, Clone)]
+pub struct LearningReport {
+    pub jobs: usize,
+    pub ledger: CostLedger,
+    pub total_workload: f64,
+    /// Realized average unit cost ᾱ.
+    pub average_unit_cost: f64,
+    /// Final weight distribution.
+    pub final_weights: Vec<f64>,
+    /// Index + label of the highest-weight policy.
+    pub best_policy: usize,
+    /// Average regret vs best fixed policy and the Prop. B.1 bound at 95%.
+    pub average_regret: f64,
+    pub regret_bound: f64,
+    /// Self-owned utilization (busy fraction).
+    pub pool_utilization: f64,
+    /// Trajectory of the max weight (sampled every `weight_sample_every`
+    /// updates) — for the convergence figure.
+    pub weight_trajectory: Vec<f64>,
+}
+
+#[derive(Debug, PartialEq)]
+enum EventKind {
+    TaskStart(usize, usize),
+    Retire(usize),
+}
+
+#[derive(Debug, PartialEq)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl Eq for Event {}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-job live state during a learning run.
+struct JobState {
+    spec: CfSpec,
+    deadlines: Vec<f64>,
+    cost: f64,
+    done: bool,
+}
+
+/// Run TOLA (Algorithm 4) over a stream of chain jobs.
+///
+/// `specs` is the policy set (the paper's `P` or `P'`); each arriving job
+/// samples one spec from the current weights, is executed for real under
+/// it (with pool contention), and at its deadline the counterfactual sweep
+/// updates the weights.
+pub fn tola_run(
+    jobs: &[ChainJob],
+    specs: &[CfSpec],
+    trace: &PriceTrace,
+    pool_capacity: u32,
+    od_price: f64,
+    seed: u64,
+    evaluator: &Evaluator,
+) -> LearningReport {
+    assert!(!jobs.is_empty() && !specs.is_empty());
+    let horizon = jobs.iter().map(|j| j.deadline).fold(1.0, f64::max);
+    let d_max = jobs.iter().map(|j| j.window()).fold(1.0, f64::max);
+    let mut pool = (pool_capacity > 0)
+        .then(|| SelfOwnedPool::new(pool_capacity, horizon, 1.0 / SLOTS_PER_UNIT as f64));
+    let has_pool = pool.is_some();
+
+    let mut tola = Tola::new(specs.len(), d_max);
+    let mut regret = RegretTracker::new(specs.len(), d_max);
+    let mut rng = Pcg32::new(seed ^ 0x701A);
+    let mut ledger = CostLedger::new();
+    let mut weight_trajectory = Vec::new();
+    let weight_sample_every = (jobs.len() / 200).max(1);
+
+    // Pre-sample policies and windows lazily at arrival: here arrival order
+    // is the job order, and the heap interleaves task events across jobs.
+    let mut heap = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut states: Vec<Option<JobState>> = jobs.iter().map(|_| None).collect();
+    for (idx, job) in jobs.iter().enumerate() {
+        heap.push(Event {
+            time: job.arrival,
+            seq,
+            kind: EventKind::TaskStart(idx, 0),
+        });
+        seq += 1;
+        heap.push(Event {
+            time: job.deadline,
+            seq,
+            kind: EventKind::Retire(idx),
+        });
+        seq += 1;
+    }
+
+    while let Some(Event { time, kind, .. }) = heap.pop() {
+        match kind {
+            EventKind::TaskStart(ji, ti) => {
+                let job = &jobs[ji];
+                if ti == 0 {
+                    // Arrival: sample a policy and allocate deadlines
+                    // (Algorithm 4 lines 8–9 + Algorithm 2 lines 1–5).
+                    let pick = tola.pick(&mut rng);
+                    let spec = specs[pick];
+                    let windows = match spec {
+                        CfSpec::Proposed(p) => dealloc(job, p.dealloc_beta(has_pool)),
+                        CfSpec::EvenNaive { .. } => even_windows(job),
+                        CfSpec::DeallocNaive(p) => dealloc(job, p.beta),
+                    };
+                    states[ji] = Some(JobState {
+                        spec,
+                        deadlines: windows_to_deadlines(job, &windows),
+                        cost: 0.0,
+                        done: false,
+                    });
+                }
+                if ti >= job.num_tasks() {
+                    let st = states[ji].as_mut().expect("state set at arrival");
+                    st.done = true;
+                    continue;
+                }
+                let (spec, deadline) = {
+                    let st = states[ji].as_ref().expect("state set at arrival");
+                    (st.spec, st.deadlines[ti].max(time))
+                };
+                let task = &job.tasks[ti];
+                let start = time.min(deadline);
+                let hat_s = (deadline - start).max(1e-12);
+                let (bid, r) = match (&mut pool, spec) {
+                    (None, s) => (spec_bid(&s), 0),
+                    (Some(pl), CfSpec::Proposed(p)) => {
+                        let r = match p.beta0 {
+                            Some(beta0) => {
+                                let n = pl.available_over(start, deadline);
+                                let r =
+                                    rule12(task.size, task.parallelism, hat_s, beta0, n);
+                                pl.reserve(r, start, deadline);
+                                r
+                            }
+                            None => 0,
+                        };
+                        (p.bid, r)
+                    }
+                    (Some(pl), s) => {
+                        let n = pl.available_over(start, deadline);
+                        let r = naive_allocation(task.parallelism, n);
+                        pl.reserve(r, start, deadline);
+                        (spec_bid(&s), r)
+                    }
+                };
+                let out = execute_task(
+                    task.size,
+                    task.parallelism,
+                    start,
+                    deadline,
+                    r,
+                    bid,
+                    trace,
+                    od_price,
+                );
+                ledger.charge(InstanceKind::SelfOwned, 1.0, out.so_work, 0.0);
+                ledger.charge(InstanceKind::Spot, 1.0, out.spot_work, 0.0);
+                ledger.cost_spot += out.spot_cost;
+                ledger.charge(InstanceKind::OnDemand, 1.0, out.od_work, 0.0);
+                ledger.cost_ondemand += out.od_cost;
+                states[ji].as_mut().unwrap().cost += out.spot_cost + out.od_cost;
+                heap.push(Event {
+                    time: out.finish,
+                    seq,
+                    kind: EventKind::TaskStart(ji, ti + 1),
+                });
+                seq += 1;
+            }
+            EventKind::Retire(ji) => {
+                let job = &jobs[ji];
+                // Counterfactual sweep (Algorithm 4 lines 14–21): spot
+                // prices over [a_j, d_j] are now known.
+                let (prices, dt) = trace.resample_window(job.arrival, job.deadline, S_MAX);
+                let navail: Vec<f64> = match &pool {
+                    Some(pl) => (0..prices.len())
+                        .map(|k| {
+                            let t0 = job.arrival + k as f64 * dt;
+                            pl.available_at(t0.min(horizon)) as f64
+                        })
+                        .collect(),
+                    None => vec![0.0; prices.len()],
+                };
+                let cf = CounterfactualJob::from_job(job, prices, dt, navail, od_price);
+                let costs = evaluate_specs(&cf, specs, has_pool, evaluator);
+                let realized = states[ji].as_ref().map(|s| s.cost).unwrap_or(0.0);
+                tola.update(&costs, time.max(d_max * 1.001));
+                regret.record(realized, &costs);
+                if regret.jobs() % weight_sample_every as u64 == 0 {
+                    let wmax = tola
+                        .weights()
+                        .iter()
+                        .cloned()
+                        .fold(0.0f64, f64::max);
+                    weight_trajectory.push(wmax);
+                }
+            }
+        }
+    }
+
+    let total_workload: f64 = jobs.iter().map(|j| j.total_work()).sum();
+    let pool_utilization = if pool_capacity > 0 {
+        ledger.work_selfowned / (pool_capacity as f64 * horizon)
+    } else {
+        0.0
+    };
+    LearningReport {
+        jobs: jobs.len(),
+        average_unit_cost: if total_workload > 0.0 {
+            ledger.total_cost() / total_workload
+        } else {
+            0.0
+        },
+        total_workload,
+        best_policy: tola.best(),
+        final_weights: tola.weights().to_vec(),
+        average_regret: regret.average_regret(),
+        regret_bound: regret.bound(0.05),
+        pool_utilization,
+        weight_trajectory,
+        ledger,
+    }
+}
+
+fn spec_bid(spec: &CfSpec) -> f64 {
+    match spec {
+        CfSpec::Proposed(p) | CfSpec::DeallocNaive(p) => p.bid,
+        CfSpec::EvenNaive { bid } => *bid,
+    }
+}
+
+/// Evaluate all specs for one job, preferring the PJRT kernel for the
+/// proposed-policy portion of the grid.
+pub fn evaluate_specs(
+    cf: &CounterfactualJob,
+    specs: &[CfSpec],
+    has_pool: bool,
+    evaluator: &Evaluator,
+) -> Vec<f64> {
+    match evaluator {
+        Evaluator::Native { threads } => {
+            if *threads <= 1 || specs.len() < 8 {
+                specs
+                    .iter()
+                    .map(|s| cf.eval_spec(s, has_pool).0)
+                    .collect()
+            } else {
+                parallel_map(specs.len(), *threads, |i| {
+                    cf.eval_spec(&specs[i], has_pool).0
+                })
+            }
+        }
+        Evaluator::Pjrt(rt) => {
+            // Split: contiguous Proposed prefix goes to the kernel,
+            // everything else native (benchmark grids are tiny).
+            let proposed: Vec<Policy> = specs
+                .iter()
+                .filter_map(|s| match s {
+                    CfSpec::Proposed(p) => Some(*p),
+                    _ => None,
+                })
+                .collect();
+            let kernel_costs = if proposed.len() == specs.len() {
+                rt.policy_cost
+                    .eval(cf, &proposed, has_pool)
+                    .map(|e| e.costs)
+                    .ok()
+            } else {
+                None
+            };
+            match kernel_costs {
+                Some(costs) => costs,
+                None => specs
+                    .iter()
+                    .map(|s| cf.eval_spec(s, has_pool).0)
+                    .collect(),
+            }
+        }
+    }
+}
+
+/// CLI entrypoint (returns the process exit code).
+pub fn cli_main() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match crate::experiments::dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::SpotModel;
+    use crate::policy::policy_set_spot_only;
+    use crate::workload::{transform, GeneratorConfig, JobStream};
+
+    fn setup(n: usize, seed: u64) -> (Vec<ChainJob>, PriceTrace) {
+        let mut stream = JobStream::new(GeneratorConfig::small(), seed);
+        let jobs: Vec<ChainJob> = stream.take_jobs(n).iter().map(transform).collect();
+        let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+        let trace = PriceTrace::generate(SpotModel::paper_default(), horizon, seed + 1);
+        (jobs, trace)
+    }
+
+    #[test]
+    fn tola_run_processes_all_jobs() {
+        let (jobs, trace) = setup(60, 1);
+        let specs: Vec<CfSpec> = policy_set_spot_only()
+            .into_iter()
+            .map(CfSpec::Proposed)
+            .collect();
+        let rep = tola_run(
+            &jobs,
+            &specs,
+            &trace,
+            0,
+            1.0,
+            42,
+            &Evaluator::Native { threads: 1 },
+        );
+        assert_eq!(rep.jobs, 60);
+        assert!(rep.average_unit_cost > 0.0 && rep.average_unit_cost <= 1.0);
+        let wsum: f64 = rep.final_weights.iter().sum();
+        assert!((wsum - 1.0).abs() < 1e-6);
+        assert!((rep.ledger.total_work() - rep.total_workload).abs() < 1e-6 * rep.total_workload);
+    }
+
+    #[test]
+    fn tola_learns_nontrivial_distribution() {
+        let (jobs, trace) = setup(200, 3);
+        let specs: Vec<CfSpec> = policy_set_spot_only()
+            .into_iter()
+            .map(CfSpec::Proposed)
+            .collect();
+        let rep = tola_run(
+            &jobs,
+            &specs,
+            &trace,
+            0,
+            1.0,
+            43,
+            &Evaluator::Native { threads: 2 },
+        );
+        let wmax = rep.final_weights.iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            wmax > 2.0 / specs.len() as f64,
+            "weights stayed ~uniform: max {wmax}"
+        );
+        assert!(rep.average_regret.is_finite());
+    }
+
+    #[test]
+    fn tola_with_pool_uses_selfowned() {
+        let (jobs, trace) = setup(60, 5);
+        let specs: Vec<CfSpec> = crate::policy::policy_set_full()
+            .into_iter()
+            .map(CfSpec::Proposed)
+            .collect();
+        let rep = tola_run(
+            &jobs,
+            &specs,
+            &trace,
+            300,
+            1.0,
+            44,
+            &Evaluator::Native { threads: 2 },
+        );
+        assert!(rep.ledger.work_selfowned > 0.0);
+        assert!(rep.pool_utilization > 0.0);
+    }
+
+    #[test]
+    fn benchmark_specs_run_too() {
+        let (jobs, trace) = setup(40, 7);
+        let specs: Vec<CfSpec> = crate::policy::benchmark_bids()
+            .into_iter()
+            .map(|b| CfSpec::EvenNaive { bid: b })
+            .collect();
+        let rep = tola_run(
+            &jobs,
+            &specs,
+            &trace,
+            100,
+            1.0,
+            45,
+            &Evaluator::Native { threads: 1 },
+        );
+        assert_eq!(rep.jobs, 40);
+        assert!(rep.average_unit_cost > 0.0);
+    }
+}

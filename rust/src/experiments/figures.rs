@@ -1,0 +1,304 @@
+//! Data-series generators for the paper's figures.
+//!
+//! * **Figure 1** — availability of cloud instances over time (spot
+//!   on/off segments vs always-on on-demand);
+//! * **Figure 2** — single-task allocation phases of the §3.3.1 toy
+//!   example (a: no turning point, b: turning point at t = 1);
+//! * **Figure 3** — the naive schedule of the §4.1.1 chain (spot workload
+//!   2);
+//! * **Figure 4** — the optimal schedule (spot workload 22/6).
+//!
+//! Each writes a CSV the paper's plot can be regenerated from; the exact
+//! fractions are asserted in unit tests.
+
+use anyhow::Result;
+
+use crate::market::{PriceTrace, SpotModel};
+use crate::policy::dealloc::{dealloc, windows_to_deadlines};
+use crate::policy::single_task::{expected_turning_point, expected_turning_point_mixed};
+use crate::workload::ChainJob;
+
+/// One rectangle of a schedule plot: a resource band over a time span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    pub task: usize,
+    pub kind: &'static str, // "spot" | "ondemand" | "selfowned" | "idle"
+    pub t0: f64,
+    pub t1: f64,
+    pub instances: f64,
+}
+
+impl Segment {
+    pub fn work(&self) -> f64 {
+        self.instances * (self.t1 - self.t0)
+    }
+}
+
+/// Figure 2: the §3.3.1 toy task (δ=3, window [0,2], r=1, β=0.5, and the
+/// paper's mixed request o = s = 1) for z = 3.5 (a) and z = 5.5 (b).
+/// Expected-case phases via [`expected_turning_point_mixed`].
+pub fn figure2(z: f64) -> Vec<Segment> {
+    let (delta, r, window, beta) = (3.0f64, 1.0f64, 2.0f64, 0.5f64);
+    let (s, o) = (1.0f64, 1.0f64); // the toy's fixed request mix
+    let zt = z - r * window;
+    let delta_eff = delta - r;
+    let mut segs = vec![Segment {
+        task: 0,
+        kind: "selfowned",
+        t0: 0.0,
+        t1: window,
+        instances: r,
+    }];
+    match expected_turning_point_mixed(zt, delta_eff, window, beta, s, o) {
+        None => {
+            // No turning point: s spot + o on-demand drain z̃ at rate
+            // o + β·s until expected completion.
+            let t_done = zt / (o + beta * s);
+            segs.push(Segment {
+                task: 0,
+                kind: "spot",
+                t0: 0.0,
+                t1: t_done,
+                instances: s,
+            });
+            segs.push(Segment {
+                task: 0,
+                kind: "ondemand",
+                t0: 0.0,
+                t1: t_done,
+                instances: o,
+            });
+        }
+        Some(tau) => {
+            segs.push(Segment {
+                task: 0,
+                kind: "spot",
+                t0: 0.0,
+                t1: tau,
+                instances: s,
+            });
+            segs.push(Segment {
+                task: 0,
+                kind: "ondemand",
+                t0: 0.0,
+                t1: tau,
+                instances: o,
+            });
+            // Phase (ii): δ−r on-demand instances through the deadline.
+            segs.push(Segment {
+                task: 0,
+                kind: "ondemand",
+                t0: tau,
+                t1: window,
+                instances: delta_eff,
+            });
+        }
+    }
+    segs
+}
+
+/// Figure 3: the naive schedule of the §4.1.1 example — deadlines ς_i = i,
+/// expected phases with β = 0.5. Returns the segments.
+pub fn figure3() -> Vec<Segment> {
+    expected_schedule(&ChainJob::paper_example(), &[1.0, 2.0, 3.0, 4.0], 0.5)
+}
+
+/// Figure 4: the optimal schedule (Dealloc windows).
+pub fn figure4() -> Vec<Segment> {
+    let job = ChainJob::paper_example();
+    let alloc = dealloc(&job, 0.5);
+    let deadlines = windows_to_deadlines(&job, &alloc);
+    expected_schedule(&job, &deadlines, 0.5)
+}
+
+/// Expected-case schedule of a chain given task deadlines: each task runs
+/// in `[ς_{i-1}, ς_i]`, all-spot until the expected turning point, then
+/// on-demand (Prop. 4.1). Spot processes at rate β·δ in expectation.
+pub fn expected_schedule(job: &ChainJob, deadlines: &[f64], beta: f64) -> Vec<Segment> {
+    assert_eq!(deadlines.len(), job.num_tasks());
+    let mut segs = Vec::new();
+    let mut start = job.arrival;
+    for (i, task) in job.tasks.iter().enumerate() {
+        let deadline = deadlines[i];
+        let hat_s = deadline - start;
+        match expected_turning_point(task.size, task.parallelism, hat_s, beta) {
+            Some(tau) if tau > 1e-12 => {
+                segs.push(Segment {
+                    task: i,
+                    kind: "spot",
+                    t0: start,
+                    t1: start + tau,
+                    instances: task.parallelism,
+                });
+                segs.push(Segment {
+                    task: i,
+                    kind: "ondemand",
+                    t0: start + tau,
+                    t1: deadline,
+                    instances: task.parallelism,
+                });
+            }
+            Some(_) => {
+                segs.push(Segment {
+                    task: i,
+                    kind: "ondemand",
+                    t0: start,
+                    t1: deadline,
+                    instances: task.parallelism,
+                });
+            }
+            None => {
+                let t_done = start + task.min_exec_time() / beta;
+                segs.push(Segment {
+                    task: i,
+                    kind: "spot",
+                    t0: start,
+                    t1: t_done,
+                    instances: task.parallelism,
+                });
+                if t_done < deadline - 1e-12 {
+                    segs.push(Segment {
+                        task: i,
+                        kind: "idle",
+                        t0: t_done,
+                        t1: deadline,
+                        instances: 0.0,
+                    });
+                }
+            }
+        }
+        start = deadline;
+    }
+    segs
+}
+
+/// Expected spot workload of a schedule (β-weighted spot segments).
+pub fn spot_workload(segs: &[Segment], beta: f64) -> f64 {
+    segs.iter()
+        .filter(|s| s.kind == "spot")
+        .map(|s| beta * s.work())
+        .sum()
+}
+
+fn write_segments(path: &str, segs: &[Segment]) -> Result<()> {
+    let mut out = String::from("task,kind,t0,t1,instances,work\n");
+    for s in segs {
+        out.push_str(&format!(
+            "{},{},{:.6},{:.6},{},{:.6}\n",
+            s.task,
+            s.kind,
+            s.t0,
+            s.t1,
+            s.instances,
+            s.work()
+        ));
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Figure 1: availability segments of a generated trace at bid 0.24, plus
+/// the on-demand always-on band.
+pub fn figure1(out_dir: &str) -> Result<()> {
+    let trace = PriceTrace::generate(SpotModel::paper_default(), 8.0, 42);
+    let mut out = String::from("resource,t0,t1,available\n");
+    for (t0, t1, avail) in trace.availability_segments(0.0, 8.0, 0.24) {
+        out.push_str(&format!("spot,{t0:.4},{t1:.4},{}\n", avail as u8));
+    }
+    out.push_str("ondemand,0.0000,8.0000,1\n");
+    std::fs::write(format!("{out_dir}/figure1.csv"), out)?;
+    Ok(())
+}
+
+/// Generate every figure's CSV into `out_dir`.
+pub fn run_all(out_dir: &str) -> Result<()> {
+    std::fs::create_dir_all(out_dir).ok();
+    figure1(out_dir)?;
+    write_segments(&format!("{out_dir}/figure2a.csv"), &figure2(3.5))?;
+    write_segments(&format!("{out_dir}/figure2b.csv"), &figure2(5.5))?;
+    let f3 = figure3();
+    let f4 = figure4();
+    write_segments(&format!("{out_dir}/figure3.csv"), &f3)?;
+    write_segments(&format!("{out_dir}/figure4.csv"), &f4)?;
+    println!(
+        "figures written to {out_dir}/ — fig3 spot workload {:.4} (paper: 2), fig4 {:.4} (paper: 22/6 = {:.4})",
+        spot_workload(&f3, 0.5),
+        spot_workload(&f4, 0.5),
+        22.0 / 6.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure2a_has_no_turning_point() {
+        // §3.3.1 / Fig. 2(a): z=3.5 → z̃=1.5, drained by 1 spot + 1 OD at
+        // rate 1.5 → done exactly at t=1 (the paper: "at time 1, task i
+        // gets enough execution time"), no turning point.
+        let segs = figure2(3.5);
+        assert!(segs.iter().any(|s| s.kind == "selfowned"));
+        let spot = segs.iter().find(|s| s.kind == "spot").unwrap();
+        assert!((spot.t1 - 1.0).abs() < 1e-12, "completion {}", spot.t1);
+        // Only the phase-1 on-demand instance; no full-δeff tail.
+        assert!(segs
+            .iter()
+            .filter(|s| s.kind == "ondemand")
+            .all(|s| s.instances == 1.0));
+    }
+
+    #[test]
+    fn figure2b_turning_point_at_one() {
+        // §3.3.1 / Fig. 2(b): z=5.5 → z̃=3.5 → turning point ς^c = 1, then
+        // δ−r = 2 on-demand instances in [1, 2].
+        let segs = figure2(5.5);
+        let spot = segs.iter().find(|s| s.kind == "spot").unwrap();
+        assert!((spot.t1 - 1.0).abs() < 1e-12, "turning point {}", spot.t1);
+        let tail = segs
+            .iter()
+            .find(|s| s.kind == "ondemand" && s.instances == 2.0)
+            .expect("phase-2 tail");
+        assert_eq!(tail.t0, spot.t1);
+        assert_eq!(tail.t1, 2.0);
+    }
+
+    #[test]
+    fn figure3_spot_workload_is_two() {
+        // Paper §4.1.1: the naive deadlines give spot workload 2.
+        let w = spot_workload(&figure3(), 0.5);
+        assert!((w - 2.0).abs() < 1e-9, "fig3 spot workload {w}");
+    }
+
+    #[test]
+    fn figure4_spot_workload_is_22_over_6() {
+        let segs = figure4();
+        let w = spot_workload(&segs, 0.5);
+        assert!((w - 22.0 / 6.0).abs() < 1e-9, "fig4 spot workload {w}");
+        // First task: spot in [0, 7/6], on-demand in [7/6, 4/3] (paper).
+        let t0_spot = segs.iter().find(|s| s.task == 0 && s.kind == "spot").unwrap();
+        assert!((t0_spot.t1 - 7.0 / 6.0).abs() < 1e-9);
+        let t0_od = segs
+            .iter()
+            .find(|s| s.task == 0 && s.kind == "ondemand")
+            .unwrap();
+        assert!((t0_od.t1 - 4.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_figures_write_files() {
+        let dir = std::env::temp_dir().join("dagcloud_figs");
+        std::fs::create_dir_all(&dir).unwrap();
+        run_all(dir.to_str().unwrap()).unwrap();
+        for f in [
+            "figure1.csv",
+            "figure2a.csv",
+            "figure2b.csv",
+            "figure3.csv",
+            "figure4.csv",
+        ] {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+    }
+}

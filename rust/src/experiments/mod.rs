@@ -1,0 +1,81 @@
+//! Experiment harness: one driver per table/figure of the paper's
+//! evaluation (§6), plus the CLI dispatch.
+
+pub mod tables;
+pub mod figures;
+
+use crate::util::cli::Args;
+
+const HELP: &str = "\
+repro — reproduction of 'Towards Cost-Optimal Policies for DAGs to Utilize
+IaaS Clouds with Online Learning' (Wu, Yu, Casale, Gao, 2021)
+
+USAGE: repro <command> [options]
+
+COMMANDS
+  table2      Experiment 1: Dealloc vs Greedy/Even, spot+on-demand only
+  table3      Experiment 2: full framework vs Even+naive, with self-owned pool
+  table4      Experiment 3: rule (12) vs naive self-owned (cost improvement)
+  table5      Experiment 3: self-owned utilization ratio μ
+  table6      Experiment 4: TOLA online learning, proposed vs benchmark
+  figures     Regenerate data series for Figures 1–4 (CSV to --out dir)
+  run         One TOLA learning run with progress output
+  all         Run every table (tables 2–6) and figures
+
+OPTIONS
+  --jobs N        jobs per cell (default 2000; paper uses ~10000)
+  --seed N        RNG seed (default 7)
+  --threads N     worker threads (default: all cores)
+  --pool LIST     self-owned pool sizes, e.g. 300,600,900,1200
+  --job-type N    job type x2 for `run` (default 2)
+  --out DIR       output directory for JSON/CSV results (default results)
+  --no-pjrt       disable the PJRT kernel (native counterfactuals only)
+  --config FILE   load a JSON config (CLI flags override)
+";
+
+/// CLI dispatch for `repro`.
+pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::parse(argv, &["no-pjrt", "verbose"]);
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+
+    let mut cfg = match args.get("config") {
+        Some(path) => crate::coordinator::Config::from_json_file(path)?,
+        None => crate::coordinator::Config::default(),
+    };
+    cfg.jobs = args.get_u64("jobs", cfg.jobs as u64)? as usize;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.threads = args.get_u64("threads", cfg.threads as u64)? as usize;
+    cfg.job_type = args.get_u64("job-type", cfg.job_type as u64)? as u8;
+    cfg.pool_sizes = args.get_u64_list("pool", &cfg.pool_sizes)?;
+    if args.flag("no-pjrt") {
+        cfg.use_pjrt = false;
+    }
+    let out_dir = args.get_str("out", "results");
+    std::fs::create_dir_all(&out_dir).ok();
+
+    match cmd {
+        "table2" => tables::run_table2(&cfg, &out_dir)?,
+        "table3" => tables::run_table3(&cfg, &out_dir)?,
+        "table4" => tables::run_table4_5(&cfg, &out_dir)?,
+        "table5" => tables::run_table4_5(&cfg, &out_dir)?,
+        "table6" => tables::run_table6(&cfg, &out_dir)?,
+        "figures" => figures::run_all(&out_dir)?,
+        "run" => tables::run_single_tola(&cfg, &out_dir)?,
+        "all" => {
+            tables::run_table2(&cfg, &out_dir)?;
+            tables::run_table3(&cfg, &out_dir)?;
+            tables::run_table4_5(&cfg, &out_dir)?;
+            tables::run_table6(&cfg, &out_dir)?;
+            figures::run_all(&out_dir)?;
+        }
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        other => {
+            anyhow::bail!("unknown command '{other}'; see `repro help`");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,425 @@
+//! Drivers regenerating Tables 2–6 of the paper.
+//!
+//! Each driver prints the table in the paper's layout and writes a JSON
+//! result file. Absolute percentages differ from the paper (synthetic
+//! market, our trace seeds), but the *shape* must hold: see EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use crate::coordinator::{parallel_map, tola_run, Config, Evaluator};
+use crate::learning::counterfactual::CfSpec;
+use crate::market::PriceTrace;
+use crate::policy::{benchmark_bids, policy_set_full, policy_set_spot_only, Policy};
+use crate::sim::cost::{cost_improvement, min_unit_cost, utilization_ratio};
+use crate::sim::horizon::{HorizonReport, HorizonRunner, StrategySpec};
+use crate::util::json::Json;
+use crate::workload::{transform, ChainJob, GeneratorConfig, JobStream};
+
+/// Generate the chain workload for one job type.
+pub fn workload(cfg: &Config, job_type: u8) -> (Vec<ChainJob>, PriceTrace) {
+    let gen = GeneratorConfig::for_job_type(job_type);
+    let mut stream = JobStream::new(gen, cfg.seed.wrapping_mul(1315423911) ^ job_type as u64);
+    let jobs: Vec<ChainJob> = stream.take_jobs(cfg.jobs).iter().map(transform).collect();
+    let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+    let trace = PriceTrace::generate(cfg.spot_model.clone(), horizon, cfg.seed ^ 0x7ACE);
+    (jobs, trace)
+}
+
+/// Sweep a list of strategy specs over a fixed workload in parallel,
+/// returning one horizon report per spec.
+fn sweep(
+    jobs: &[ChainJob],
+    trace: &PriceTrace,
+    pool: u32,
+    specs: &[StrategySpec],
+    threads: usize,
+) -> Vec<HorizonReport> {
+    parallel_map(specs.len(), threads, |i| {
+        HorizonRunner::new(trace, pool).run(jobs, specs[i])
+    })
+}
+
+fn fmt_pct(x: f64) -> String {
+    format!("{:6.2}%", 100.0 * x)
+}
+
+/// Experiment 1 / Table 2: cost improvement of the proposed deadline
+/// allocation over Greedy and Even, spot + on-demand only.
+pub fn run_table2(cfg: &Config, out_dir: &str) -> Result<()> {
+    println!("== Table 2: cost improvement, spot + on-demand only ==");
+    println!("   ({} jobs/cell, seed {})", cfg.jobs, cfg.seed);
+    let threads = cfg.effective_threads();
+    let proposed_specs: Vec<StrategySpec> = policy_set_spot_only()
+        .into_iter()
+        .map(StrategySpec::Proposed)
+        .collect();
+    let greedy_specs: Vec<StrategySpec> = benchmark_bids()
+        .into_iter()
+        .map(|b| StrategySpec::GreedyBaseline { bid: b })
+        .collect();
+    let even_specs: Vec<StrategySpec> = benchmark_bids()
+        .into_iter()
+        .map(|b| StrategySpec::EvenBaseline { bid: b })
+        .collect();
+
+    let mut rho_greedy = Vec::new();
+    let mut rho_even = Vec::new();
+    let mut alphas = Vec::new();
+    for x2 in 1..=4u8 {
+        let (jobs, trace) = workload(cfg, x2);
+        let (alpha, _) = min_unit_cost(&sweep(&jobs, &trace, 0, &proposed_specs, threads));
+        let (alpha_greedy, _) = min_unit_cost(&sweep(&jobs, &trace, 0, &greedy_specs, threads));
+        let (alpha_even, _) = min_unit_cost(&sweep(&jobs, &trace, 0, &even_specs, threads));
+        rho_greedy.push(cost_improvement(alpha, alpha_greedy));
+        rho_even.push(cost_improvement(alpha, alpha_even));
+        alphas.push((alpha, alpha_greedy, alpha_even));
+    }
+
+    println!("          rho_0,1   rho_0,2   rho_0,3   rho_0,4");
+    println!(
+        "Greedy   {}  {}  {}  {}",
+        fmt_pct(rho_greedy[0]),
+        fmt_pct(rho_greedy[1]),
+        fmt_pct(rho_greedy[2]),
+        fmt_pct(rho_greedy[3])
+    );
+    println!(
+        "Even     {}  {}  {}  {}",
+        fmt_pct(rho_even[0]),
+        fmt_pct(rho_even[1]),
+        fmt_pct(rho_even[2]),
+        fmt_pct(rho_even[3])
+    );
+
+    let mut j = Json::obj();
+    j.set("table", Json::Str("2".into()))
+        .set("jobs", Json::Num(cfg.jobs as f64))
+        .set("seed", Json::Num(cfg.seed as f64))
+        .set("rho_greedy", Json::from_f64_slice(&rho_greedy))
+        .set("rho_even", Json::from_f64_slice(&rho_even))
+        .set(
+            "alpha",
+            Json::Arr(
+                alphas
+                    .iter()
+                    .map(|(a, g, e)| Json::from_f64_slice(&[*a, *g, *e]))
+                    .collect(),
+            ),
+        );
+    std::fs::write(format!("{out_dir}/table2.json"), j.pretty())?;
+    Ok(())
+}
+
+/// Experiment 2 / Table 3: overall improvement with self-owned instances —
+/// full framework vs Even + naive self-owned.
+pub fn run_table3(cfg: &Config, out_dir: &str) -> Result<()> {
+    println!("== Table 3: overall cost improvement with self-owned instances ==");
+    println!("   ({} jobs/cell, seed {})", cfg.jobs, cfg.seed);
+    let threads = cfg.effective_threads();
+    let proposed_specs: Vec<StrategySpec> = policy_set_full()
+        .into_iter()
+        .map(StrategySpec::Proposed)
+        .collect();
+    let even_specs: Vec<StrategySpec> = benchmark_bids()
+        .into_iter()
+        .map(|b| StrategySpec::EvenBaseline { bid: b })
+        .collect();
+
+    let mut rows = Vec::new();
+    println!("  x1\\x2       1         2         3         4");
+    for &x1 in &cfg.pool_sizes {
+        let mut row = Vec::new();
+        for x2 in 1..=4u8 {
+            let (jobs, trace) = workload(cfg, x2);
+            let (alpha, _) =
+                min_unit_cost(&sweep(&jobs, &trace, x1 as u32, &proposed_specs, threads));
+            let (alpha_bench, _) =
+                min_unit_cost(&sweep(&jobs, &trace, x1 as u32, &even_specs, threads));
+            row.push(cost_improvement(alpha, alpha_bench));
+        }
+        println!(
+            "  {:>5}   {}  {}  {}  {}",
+            x1,
+            fmt_pct(row[0]),
+            fmt_pct(row[1]),
+            fmt_pct(row[2]),
+            fmt_pct(row[3])
+        );
+        rows.push(row);
+    }
+
+    let mut j = Json::obj();
+    j.set("table", Json::Str("3".into()))
+        .set("jobs", Json::Num(cfg.jobs as f64))
+        .set(
+            "pool_sizes",
+            Json::Arr(cfg.pool_sizes.iter().map(|&x| Json::Num(x as f64)).collect()),
+        )
+        .set(
+            "rho",
+            Json::Arr(rows.iter().map(|r| Json::from_f64_slice(r)).collect()),
+        );
+    std::fs::write(format!("{out_dir}/table3.json"), j.pretty())?;
+    Ok(())
+}
+
+/// Experiment 3 / Tables 4+5: isolate rule (12) against the naive
+/// self-owned policy (both sides use Dealloc windows); also report the
+/// utilization ratio μ.
+pub fn run_table4_5(cfg: &Config, out_dir: &str) -> Result<()> {
+    println!("== Tables 4+5: self-owned policy (12) vs naive, same deadline allocation ==");
+    println!("   ({} jobs/cell, seed {})", cfg.jobs, cfg.seed);
+    let threads = cfg.effective_threads();
+    let proposed_specs: Vec<StrategySpec> = policy_set_full()
+        .into_iter()
+        .map(StrategySpec::Proposed)
+        .collect();
+    // Benchmark: Dealloc(β) windows + naive self-owned, over (β, b) grid.
+    let naive_specs: Vec<StrategySpec> = policy_set_spot_only()
+        .into_iter()
+        .map(StrategySpec::DeallocNaive)
+        .collect();
+
+    let mut rho_rows = Vec::new();
+    let mut mu_rows = Vec::new();
+    println!("  rho:  x1\\x2     1         2         3         4");
+    for &x1 in &cfg.pool_sizes {
+        let mut rho_row = Vec::new();
+        let mut mu_row = Vec::new();
+        for x2 in 1..=4u8 {
+            let (jobs, trace) = workload(cfg, x2);
+            let prop_reports = sweep(&jobs, &trace, x1 as u32, &proposed_specs, threads);
+            let naive_reports = sweep(&jobs, &trace, x1 as u32, &naive_specs, threads);
+            let (alpha, pi) = min_unit_cost(&prop_reports);
+            let (alpha_naive, bi) = min_unit_cost(&naive_reports);
+            rho_row.push(cost_improvement(alpha, alpha_naive));
+            mu_row.push(utilization_ratio(&prop_reports[pi], &naive_reports[bi]));
+        }
+        println!(
+            "  {:>5}   {}  {}  {}  {}",
+            x1,
+            fmt_pct(rho_row[0]),
+            fmt_pct(rho_row[1]),
+            fmt_pct(rho_row[2]),
+            fmt_pct(rho_row[3])
+        );
+        rho_rows.push(rho_row);
+        mu_rows.push(mu_row);
+    }
+    println!("  mu:   x1\\x2     1         2         3         4");
+    for (k, &x1) in cfg.pool_sizes.iter().enumerate() {
+        println!(
+            "  {:>5}   {}  {}  {}  {}",
+            x1,
+            fmt_pct(mu_rows[k][0]),
+            fmt_pct(mu_rows[k][1]),
+            fmt_pct(mu_rows[k][2]),
+            fmt_pct(mu_rows[k][3])
+        );
+    }
+
+    let mut j = Json::obj();
+    j.set("table", Json::Str("4+5".into()))
+        .set("jobs", Json::Num(cfg.jobs as f64))
+        .set(
+            "pool_sizes",
+            Json::Arr(cfg.pool_sizes.iter().map(|&x| Json::Num(x as f64)).collect()),
+        )
+        .set(
+            "rho",
+            Json::Arr(rho_rows.iter().map(|r| Json::from_f64_slice(r)).collect()),
+        )
+        .set(
+            "mu",
+            Json::Arr(mu_rows.iter().map(|r| Json::from_f64_slice(r)).collect()),
+        );
+    std::fs::write(format!("{out_dir}/table4_5.json"), j.pretty())?;
+    Ok(())
+}
+
+fn make_evaluator(cfg: &Config) -> (Option<crate::runtime::ArtifactRuntime>, bool) {
+    if !cfg.use_pjrt {
+        return (None, false);
+    }
+    match crate::runtime::ArtifactRuntime::load_default() {
+        Ok(rt) => (Some(rt), true),
+        Err(e) => {
+            eprintln!("note: PJRT artifacts unavailable ({e}); using native sweeps");
+            (None, false)
+        }
+    }
+}
+
+/// Experiment 4 / Table 6: TOLA online learning, job type 2, pool sizes
+/// {0} ∪ cfg.pool_sizes.
+pub fn run_table6(cfg: &Config, out_dir: &str) -> Result<()> {
+    println!("== Table 6: cost improvement under online learning (x2 = 2) ==");
+    println!("   ({} jobs/cell, seed {})", cfg.jobs, cfg.seed);
+    let threads = cfg.effective_threads();
+    let (rt, pjrt_active) = make_evaluator(cfg);
+    println!("   counterfactual evaluator: {}", if pjrt_active { "PJRT kernel" } else { "native" });
+
+    let (jobs, trace) = workload(cfg, 2);
+    let mut pools: Vec<u64> = vec![0];
+    pools.extend_from_slice(&cfg.pool_sizes);
+
+    let mut rhos = Vec::new();
+    for &x1 in &pools {
+        let proposed: Vec<CfSpec> = if x1 == 0 {
+            policy_set_spot_only().into_iter().map(CfSpec::Proposed).collect()
+        } else {
+            policy_set_full().into_iter().map(CfSpec::Proposed).collect()
+        };
+        let bench: Vec<CfSpec> = benchmark_bids()
+            .into_iter()
+            .map(|b| CfSpec::EvenNaive { bid: b })
+            .collect();
+
+        let evaluator = match &rt {
+            Some(rt) => Evaluator::Pjrt(rt),
+            None => Evaluator::Native { threads },
+        };
+        let rep_p = tola_run(&jobs, &proposed, &trace, x1 as u32, cfg.od_price, cfg.seed, &evaluator);
+        let rep_b = tola_run(
+            &jobs,
+            &bench,
+            &trace,
+            x1 as u32,
+            cfg.od_price,
+            cfg.seed + 1,
+            &Evaluator::Native { threads },
+        );
+        let rho = cost_improvement(rep_p.average_unit_cost, rep_b.average_unit_cost);
+        println!(
+            "  x1={:>5}: rho_bar = {}   (alpha_P={:.4}, alpha_P'={:.4}, regret={:.4} <= bound {:.4})",
+            x1,
+            fmt_pct(rho),
+            rep_p.average_unit_cost,
+            rep_b.average_unit_cost,
+            rep_p.average_regret,
+            rep_p.regret_bound
+        );
+        rhos.push(rho);
+    }
+
+    let mut j = Json::obj();
+    j.set("table", Json::Str("6".into()))
+        .set("jobs", Json::Num(cfg.jobs as f64))
+        .set(
+            "pools",
+            Json::Arr(pools.iter().map(|&x| Json::Num(x as f64)).collect()),
+        )
+        .set("rho_bar", Json::from_f64_slice(&rhos))
+        .set("pjrt", Json::Bool(pjrt_active));
+    std::fs::write(format!("{out_dir}/table6.json"), j.pretty())?;
+    Ok(())
+}
+
+/// `repro run`: one verbose TOLA learning run (the end-to-end demo).
+pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
+    println!(
+        "== TOLA learning run: {} jobs, type {}, pool {} ==",
+        cfg.jobs,
+        cfg.job_type,
+        cfg.pool_sizes.first().copied().unwrap_or(0)
+    );
+    let threads = cfg.effective_threads();
+    let (rt, pjrt_active) = make_evaluator(cfg);
+    println!("   evaluator: {}", if pjrt_active { "PJRT kernel" } else { "native" });
+    let (jobs, trace) = workload(cfg, cfg.job_type);
+    let pool = cfg.pool_sizes.first().copied().unwrap_or(0) as u32;
+    let specs: Vec<CfSpec> = if pool == 0 {
+        policy_set_spot_only().into_iter().map(CfSpec::Proposed).collect()
+    } else {
+        policy_set_full().into_iter().map(CfSpec::Proposed).collect()
+    };
+    let evaluator = match &rt {
+        Some(rt) => Evaluator::Pjrt(rt),
+        None => Evaluator::Native { threads },
+    };
+    let t0 = std::time::Instant::now();
+    let rep = tola_run(&jobs, &specs, &trace, pool, cfg.od_price, cfg.seed, &evaluator);
+    let dt = t0.elapsed().as_secs_f64();
+
+    let best = match specs[rep.best_policy] {
+        CfSpec::Proposed(p) => p,
+        _ => unreachable!(),
+    };
+    println!("  processed {} jobs in {:.2}s ({:.0} jobs/s)", rep.jobs, dt, rep.jobs as f64 / dt);
+    println!("  realized average unit cost: {:.4}", rep.average_unit_cost);
+    println!(
+        "  best policy: beta={:.3} beta0={} bid={:.2} (weight {:.3})",
+        best.beta,
+        best.beta0.map(|x| format!("{x:.3}")).unwrap_or("-".into()),
+        best.bid,
+        rep.final_weights[rep.best_policy]
+    );
+    println!(
+        "  avg regret {:.4} (Prop B.1 bound {:.4}); pool util {:.1}%",
+        rep.average_regret,
+        rep.regret_bound,
+        100.0 * rep.pool_utilization
+    );
+
+    let mut j = Json::obj();
+    j.set("jobs", Json::Num(rep.jobs as f64))
+        .set("alpha", Json::Num(rep.average_unit_cost))
+        .set("regret", Json::Num(rep.average_regret))
+        .set("regret_bound", Json::Num(rep.regret_bound))
+        .set("pool_utilization", Json::Num(rep.pool_utilization))
+        .set("weight_trajectory", Json::from_f64_slice(&rep.weight_trajectory))
+        .set("elapsed_secs", Json::Num(dt))
+        .set("jobs_per_sec", Json::Num(rep.jobs as f64 / dt));
+    std::fs::write(format!("{out_dir}/tola_run.json"), j.pretty())?;
+    Ok(())
+}
+
+/// A policy from the §6.1 grids by index (test helper).
+pub fn nth_policy(i: usize) -> Policy {
+    let grid = policy_set_full();
+    grid[i % grid.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> Config {
+        Config {
+            jobs: 40,
+            seed: 11,
+            threads: 2,
+            pool_sizes: vec![50],
+            use_pjrt: false,
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn table2_shape_small() {
+        let cfg = tiny_cfg();
+        let dir = std::env::temp_dir().join("dagcloud_t2");
+        std::fs::create_dir_all(&dir).unwrap();
+        run_table2(&cfg, dir.to_str().unwrap()).unwrap();
+        let j = Json::parse(
+            &std::fs::read_to_string(dir.join("table2.json")).unwrap(),
+        )
+        .unwrap();
+        let rho = j.get("rho_even").unwrap().as_arr().unwrap();
+        assert_eq!(rho.len(), 4);
+        // Proposed should never lose badly to the baselines.
+        for r in rho {
+            assert!(r.as_f64().unwrap() > -0.05);
+        }
+    }
+
+    #[test]
+    fn table6_runs_small() {
+        let mut cfg = tiny_cfg();
+        cfg.pool_sizes = vec![60];
+        let dir = std::env::temp_dir().join("dagcloud_t6");
+        std::fs::create_dir_all(&dir).unwrap();
+        run_table6(&cfg, dir.to_str().unwrap()).unwrap();
+        assert!(dir.join("table6.json").exists());
+    }
+}

@@ -1,0 +1,469 @@
+//! The counterfactual cost model: cost of a retired job under *every*
+//! policy of the grid, from the realized spot prices over its window.
+//!
+//! This is the TOLA hot path (one all-policy sweep per job) and the exact
+//! specification implemented by the AOT Pallas kernel
+//! (`python/compile/kernels/policy_sim.py`), its pure-jnp oracle
+//! (`kernels/ref.py`), and this native Rust version. All three must agree.
+//!
+//! ## Model semantics (fixed-shape, slot-quantized)
+//!
+//! The evaluation uses the paper's *expected timeline*: each task occupies
+//! exactly its allocated window `[ς_{i-1}, ς_i]` (Algorithm 2's windows; no
+//! early-finish cascading — the realized executor in [`crate::sim`] keeps
+//! that, but counterfactuals follow the analytical model the weights are
+//! meant to rank):
+//!
+//! 1. `Dealloc(β')` splits the window (`β' = β₀` when a pool exists and
+//!    `β₀ ≤ β`, else `β`), with the slack handed out in the pre-computed
+//!    `order` (descending parallelism bound, ties by index) and any
+//!    leftover going to the last task of the order.
+//! 2. Per task: `r_i = ⌊min{f(β₀), min_slot navail, δ_i}⌋` (Eq. 11/12)
+//!    from the per-slot pool availability `navail`, and
+//!    `z̃_i = max(0, z_i − r_i·ŝ_i)`.
+//! 3. Slot walk over the resampled window (slot length `dt`): the task
+//!    owning a slot is the one whose window contains the slot midpoint.
+//!    While it has flexibility (Def. 3.1) it takes `δ_i − r_i` spot
+//!    instances in winning slots (`price ≤ b`), paying the realized price;
+//!    at the turning point — Def. 3.1's strict flexibility test, checked at
+//!    each slot start before progress — the rest of `z̃` goes on-demand at
+//!    price `p` in one analytic charge (the tail runs to the task deadline
+//!    by construction).
+//!
+//! Costs are expected to be *rankings-faithful*: TOLA only needs relative
+//! costs, and the slot-end turning-point check is applied uniformly across
+//! policies.
+
+use crate::policy::selfowned::f_selfowned;
+use crate::policy::Policy;
+use crate::workload::ChainJob;
+
+/// Fixed shapes shared with the AOT artifacts (see DESIGN.md §6 and
+/// `python/compile/aot.py`). Changing these requires re-running
+/// `make artifacts`.
+pub const L_MAX: usize = 128;
+pub const S_MAX: usize = 2048;
+pub const N_POL: usize = 192;
+/// Max distinct bid values in a grid (the §6.1 grid has 5).
+pub const NB_MAX: usize = 8;
+
+/// Slot-ownership sample point: 63/128 of the slot. Exact window
+/// boundaries of the paper's rational grids (e.g. β=1/1.3 on a 1/12 slot
+/// grid) land exactly on slot midpoints, where f32 vs f64 disagree; 63/128
+/// is exactly representable and collides with no small-denominator
+/// rational. Shared with compile/model.py and kernels/ref.py.
+pub const OWNER_OFFSET: f64 = 0.4921875;
+
+/// A job marshalled for the counterfactual sweep (padded, relative times:
+/// the window is `[0, window]`).
+#[derive(Debug, Clone)]
+pub struct CounterfactualJob {
+    /// Number of (real) tasks `l ≤ L_MAX`.
+    pub l: usize,
+    /// Minimum execution times `e_i` (chain order).
+    pub e: Vec<f64>,
+    /// Parallelism bounds `δ_i`.
+    pub delta: Vec<f64>,
+    /// Workloads `z_i`.
+    pub z: Vec<f64>,
+    /// Dealloc order: task indices by descending `δ`, ties by index.
+    pub order: Vec<usize>,
+    /// Window length `D = d_j − a_j`.
+    pub window: f64,
+    /// Resampled spot prices, one per slot (`s` slots of length `dt`
+    /// covering `[0, D]`; padding slots carry `+inf`).
+    pub prices: Vec<f64>,
+    /// Slot length of the resampled window.
+    pub dt: f64,
+    /// Per-slot self-owned availability (0 everywhere when no pool).
+    pub navail: Vec<f64>,
+    /// On-demand price `p`.
+    pub od_price: f64,
+}
+
+impl CounterfactualJob {
+    /// Marshal a chain job + realized trace segment into the fixed-shape
+    /// form. `navail_of(t0, t1)` supplies pool availability per slot.
+    pub fn from_job(
+        job: &ChainJob,
+        prices: Vec<f64>,
+        dt: f64,
+        navail: Vec<f64>,
+        od_price: f64,
+    ) -> CounterfactualJob {
+        assert!(job.num_tasks() <= L_MAX, "chain too long: {}", job.num_tasks());
+        assert_eq!(prices.len(), navail.len());
+        let e: Vec<f64> = job.tasks.iter().map(|t| t.min_exec_time()).collect();
+        let delta: Vec<f64> = job.tasks.iter().map(|t| t.parallelism).collect();
+        let z: Vec<f64> = job.tasks.iter().map(|t| t.size).collect();
+        let mut order: Vec<usize> = (0..job.num_tasks()).collect();
+        order.sort_by(|&a, &b| delta[b].partial_cmp(&delta[a]).unwrap().then(a.cmp(&b)));
+        CounterfactualJob {
+            l: job.num_tasks(),
+            e,
+            delta,
+            z,
+            order,
+            window: job.window(),
+            prices,
+            dt,
+            navail,
+            od_price,
+        }
+    }
+
+    /// Dealloc window sizes under availability parameter `beta`
+    /// (vector-friendly restatement of Algorithm 1; must match
+    /// `policy::dealloc` on the same input).
+    pub fn windows(&self, beta: f64) -> Vec<f64> {
+        let mut sizes = self.e.clone();
+        let slack: f64 = (self.window - self.e.iter().sum::<f64>()).max(0.0);
+        let mut omega = slack;
+        for &i in &self.order {
+            let need = self.e[i] * (1.0 - beta) / beta;
+            let grant = need.min(omega);
+            sizes[i] += grant;
+            omega -= grant;
+        }
+        if omega > 0.0 {
+            sizes[*self.order.last().expect("non-empty")] += omega;
+        }
+        sizes
+    }
+
+    /// Even-baseline window sizes: `ŝ_i = e_i + ω/l`.
+    pub fn windows_even(&self) -> Vec<f64> {
+        let slack: f64 = (self.window - self.e.iter().sum::<f64>()).max(0.0);
+        let share = slack / self.l as f64;
+        self.e.iter().map(|e| e + share).collect()
+    }
+
+    /// Evaluate the cost of this job under one proposed policy. Returns
+    /// `(total_cost, spot_work, od_work, so_work)`.
+    pub fn eval_policy(&self, policy: &Policy, has_pool: bool) -> (f64, f64, f64, f64) {
+        self.eval_spec(&CfSpec::Proposed(*policy), has_pool)
+    }
+
+    /// Evaluate under any strategy spec (proposed or benchmark).
+    pub fn eval_spec(&self, spec: &CfSpec, has_pool: bool) -> (f64, f64, f64, f64) {
+        let (sizes, so_rule, bid, beta0) = match spec {
+            CfSpec::Proposed(policy) => (
+                self.windows(policy.dealloc_beta(has_pool)),
+                SoRule::Rule12,
+                policy.bid,
+                policy.beta0,
+            ),
+            CfSpec::EvenNaive { bid } => (self.windows_even(), SoRule::Naive, *bid, None),
+            CfSpec::DeallocNaive(policy) => (
+                self.windows(policy.beta),
+                SoRule::Naive,
+                policy.bid,
+                policy.beta0,
+            ),
+        };
+        // Task deadlines (cumulative, relative).
+        let mut deadlines = Vec::with_capacity(self.l);
+        let mut acc = 0.0;
+        for s in &sizes {
+            acc += s;
+            deadlines.push(acc);
+        }
+
+        // Per-task self-owned grant and z̃ initialization.
+        let num_slots = (self.window / self.dt).ceil() as usize;
+        let num_slots = num_slots.min(self.prices.len()).max(1);
+        let mut r = vec![0.0f64; self.l];
+        let mut ztilde = vec![0.0f64; self.l];
+        let mut so_work = 0.0;
+        // Two-pointer slot cursor: windows are consecutive, so the per-task
+        // navail range-min is a single forward sweep (O(L + S), not O(L·S)).
+        let mut slot_cursor = 0usize;
+        for i in 0..self.l {
+            let lo = if i == 0 { 0.0 } else { deadlines[i - 1] };
+            let hi = deadlines[i];
+            let needs_navail = has_pool
+                && (matches!(so_rule, SoRule::Naive) || beta0.is_some());
+            let nmin = if needs_navail {
+                let mut nmin = f64::INFINITY;
+                while slot_cursor < num_slots {
+                    let mid = (slot_cursor as f64 + OWNER_OFFSET) * self.dt;
+                    if mid < lo {
+                        slot_cursor += 1;
+                        continue;
+                    }
+                    if mid >= hi {
+                        break;
+                    }
+                    nmin = nmin.min(self.navail[slot_cursor]);
+                    slot_cursor += 1;
+                }
+                if nmin.is_finite() {
+                    nmin
+                } else {
+                    0.0
+                }
+            } else {
+                0.0
+            };
+            let hat_s = (hi - lo).max(1e-12);
+            let ri = if !has_pool {
+                0.0
+            } else {
+                match (so_rule, beta0) {
+                    // Counterfactual grants stay fractional: §4.2.1 ignores
+                    // integer rounding in the analysis, and a floor() here
+                    // would make the f32 kernel and f64 native disagree by
+                    // a whole instance on near-integer f values. The
+                    // realized executor (policy::selfowned::rule12) floors.
+                    (SoRule::Rule12, Some(b0)) => {
+                        let f = f_selfowned(self.z[i], self.delta[i], hat_s, b0);
+                        f.min(nmin).min(self.delta[i]).max(0.0)
+                    }
+                    (SoRule::Rule12, None) => 0.0,
+                    (SoRule::Naive, _) => nmin.min(self.delta[i]).max(0.0),
+                }
+            };
+            r[i] = ri;
+            let covered = ri * hat_s;
+            let zt = (self.z[i] - covered).max(0.0);
+            so_work += self.z[i].min(covered);
+            ztilde[i] = zt;
+        }
+
+        // Slot walk.
+        let zt_init = ztilde.clone();
+        let mut spot_cost = 0.0;
+        let mut spot_work = 0.0;
+        let mut od_work = 0.0;
+        let mut cur = 0usize;
+        for k in 0..num_slots {
+            let t = k as f64 * self.dt;
+            let mid = t + OWNER_OFFSET * self.dt;
+            // Advance task ownership; charge leftover z̃ of passed tasks to
+            // on-demand (their turning point fired before their deadline).
+            while cur < self.l && mid >= deadlines[cur] {
+                if ztilde[cur] > 0.0 {
+                    od_work += ztilde[cur];
+                    ztilde[cur] = 0.0;
+                }
+                cur += 1;
+            }
+            if cur >= self.l {
+                break;
+            }
+            let i = cur;
+            if ztilde[i] <= 0.0 {
+                continue;
+            }
+            let delta_eff = (self.delta[i] - r[i]).max(0.0);
+            if delta_eff <= 0.0 {
+                continue;
+            }
+            let slot_end = t + self.dt;
+            let deadline = deadlines[i];
+            // Turning point (Def. 3.1 is strict: flexibility requires
+            // z̃/(δ−r) < ς−t) checked BEFORE any progress this slot, at the
+            // slot start. The threshold uses the per-task CONSTANT z̃₀ so
+            // it is affine in cumulative losing time — the AOT closed form
+            // exploits that (FIRE_EPS in kernels/ref.py; compile/model.py).
+            let time_left = deadline - t;
+            if ztilde[i] >= delta_eff * time_left - 1e-4 * (1.0 + zt_init[i]) {
+                od_work += ztilde[i];
+                ztilde[i] = 0.0;
+                continue;
+            }
+            let price = self.prices[k];
+            if price <= bid {
+                let room = delta_eff * (slot_end.min(deadline) - t).max(0.0);
+                let dw = room.min(ztilde[i]);
+                ztilde[i] -= dw;
+                spot_work += dw;
+                spot_cost += price * dw;
+            }
+        }
+        // Any remaining z̃ (window ran out of slots): on-demand.
+        for i in cur..self.l {
+            if ztilde[i] > 0.0 {
+                od_work += ztilde[i];
+                ztilde[i] = 0.0;
+            }
+        }
+
+        let cost = spot_cost + self.od_price * od_work;
+        (cost, spot_work, od_work, so_work)
+    }
+}
+
+/// A strategy evaluated counterfactually: the proposed framework or one of
+/// the §6.1 benchmark combinations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CfSpec {
+    /// Dealloc windows + rule (12).
+    Proposed(Policy),
+    /// Even windows + naive self-owned (the benchmark set P').
+    EvenNaive { bid: f64 },
+    /// Dealloc windows + naive self-owned (Experiment 3's benchmark side).
+    DeallocNaive(Policy),
+}
+
+/// Self-owned rule selector (internal).
+#[derive(Debug, Clone, Copy)]
+enum SoRule {
+    Rule12,
+    Naive,
+}
+
+/// Per-policy evaluation results for one job.
+#[derive(Debug, Clone)]
+pub struct PolicyGridEval {
+    pub costs: Vec<f64>,
+    pub spot_work: Vec<f64>,
+    pub od_work: Vec<f64>,
+    pub so_work: Vec<f64>,
+}
+
+/// Sweep the whole policy grid natively.
+pub fn eval_grid_native(
+    job: &CounterfactualJob,
+    policies: &[Policy],
+    has_pool: bool,
+) -> PolicyGridEval {
+    let mut out = PolicyGridEval {
+        costs: Vec::with_capacity(policies.len()),
+        spot_work: Vec::with_capacity(policies.len()),
+        od_work: Vec::with_capacity(policies.len()),
+        so_work: Vec::with_capacity(policies.len()),
+    };
+    for p in policies {
+        let (c, sw, ow, sow) = job.eval_policy(p, has_pool);
+        out.costs.push(c);
+        out.spot_work.push(sw);
+        out.od_work.push(ow);
+        out.so_work.push(sow);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::SLOTS_PER_UNIT;
+    use crate::util::prop::{for_all, Config};
+    use crate::util::rng::Pcg32;
+    use crate::workload::{ChainJob, ChainTask};
+
+    fn cf(job: &ChainJob, prices: Vec<f64>, navail: f64) -> CounterfactualJob {
+        let dt = 1.0 / SLOTS_PER_UNIT as f64;
+        let n = (job.window() / dt).ceil() as usize + 1;
+        let mut p = prices;
+        p.resize(n, f64::INFINITY);
+        CounterfactualJob::from_job(job, p.clone(), dt, vec![navail; p.len()], 1.0)
+    }
+
+    #[test]
+    fn windows_match_dealloc_algorithm() {
+        let job = ChainJob::paper_example();
+        let c = cf(&job, vec![], 0.0);
+        let sizes = c.windows(0.5);
+        let reference = crate::policy::dealloc::dealloc(&job, 0.5).sizes;
+        for (a, b) in sizes.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-12, "{sizes:?} vs {reference:?}");
+        }
+    }
+
+    #[test]
+    fn all_spot_available_means_no_od() {
+        // Tasks 2 and 4 get minimum windows (ŝ = e) under Dealloc(0.5), so
+        // Def. 3.1 gives them no flexibility: they run on-demand even when
+        // spot is available (Prop. 4.1 third case). Tasks 1 and 3 ride spot.
+        let job = ChainJob::paper_example();
+        let n = (job.window() * SLOTS_PER_UNIT as f64) as usize + 2;
+        let c = cf(&job, vec![0.2; n], 0.0);
+        let (cost, sw, ow, _) = c.eval_policy(&Policy::new(0.5, None, 0.3), false);
+        assert!((sw - 4.0).abs() < 1e-6, "spot work {sw}");
+        assert!((ow - 1.0).abs() < 1e-6, "od work {ow}");
+        assert!((cost - (4.0 * 0.2 + 1.0)).abs() < 1e-6, "cost {cost}");
+    }
+
+    #[test]
+    fn no_spot_means_all_od() {
+        let job = ChainJob::paper_example();
+        let c = cf(&job, vec![], 0.0);
+        let (cost, sw, ow, _) = c.eval_policy(&Policy::new(0.5, None, 0.3), false);
+        assert_eq!(sw, 0.0);
+        assert!((ow - 5.0).abs() < 1e-6);
+        assert!((cost - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn selfowned_covers_work_and_cuts_cost() {
+        let job = ChainJob::paper_example();
+        let c = cf(&job, vec![], 100.0);
+        let pol = Policy::new(0.5, Some(2.0 / 12.0), 0.3);
+        let (cost, _, ow, sow) = c.eval_policy(&pol, true);
+        assert!(sow > 0.0, "self-owned unused");
+        assert!(ow < 5.0);
+        assert!(cost < 5.0);
+        // Work is conserved across the three kinds.
+        let (_, sw2, ow2, sow2) = c.eval_policy(&pol, true);
+        assert!((sw2 + ow2 + sow2 - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn work_conservation_across_random_jobs_and_policies() {
+        for_all(Config::cases(120).seed(31), |rng| {
+            let job = random_job(rng);
+            let dt = 1.0 / SLOTS_PER_UNIT as f64;
+            let n = (job.window() / dt).ceil() as usize + 1;
+            let prices: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.chance(0.5) {
+                        rng.uniform(0.12, 0.3)
+                    } else {
+                        rng.uniform(0.4, 1.0)
+                    }
+                })
+                .collect();
+            let navail = rng.range_inclusive(0, 50) as f64;
+            let c = CounterfactualJob::from_job(&job, prices.clone(), dt, vec![navail; n], 1.0);
+            let has_pool = navail > 0.0;
+            let pol = Policy::new(
+                rng.uniform(0.3, 1.0),
+                has_pool.then(|| rng.uniform(0.15, 0.7)),
+                rng.uniform(0.15, 0.35),
+            );
+            let (cost, sw, ow, sow) = c.eval_policy(&pol, has_pool);
+            let total = sw + ow + sow;
+            if (total - job.total_work()).abs() > 1e-6 * job.total_work().max(1.0) {
+                return Err(format!("work {total} != {}", job.total_work()));
+            }
+            if cost < -1e-9 || !cost.is_finite() {
+                return Err(format!("bad cost {cost}"));
+            }
+            // Cost bounded by all-on-demand.
+            if cost > job.total_work() + 1e-6 {
+                return Err(format!("cost {cost} above all-OD bound"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grid_eval_shapes() {
+        let job = ChainJob::paper_example();
+        let c = cf(&job, vec![0.2; 64], 10.0);
+        let grid = crate::policy::policy_set_full();
+        let eval = eval_grid_native(&c, &grid, true);
+        assert_eq!(eval.costs.len(), 175);
+        assert!(eval.costs.iter().all(|&x| x.is_finite() && x >= 0.0));
+    }
+
+    fn random_job(rng: &mut Pcg32) -> ChainJob {
+        let l = rng.range_inclusive(1, 6) as usize;
+        let tasks: Vec<ChainTask> = (0..l)
+            .map(|_| ChainTask::new(rng.uniform(0.3, 3.0), rng.uniform(1.0, 16.0)))
+            .collect();
+        let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
+        ChainJob::new(0, 0.0, makespan * rng.uniform(1.05, 2.5), tasks)
+    }
+}

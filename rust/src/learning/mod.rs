@@ -1,0 +1,154 @@
+//! Online learning: the TOLA algorithm (Appendix B.2, Algorithm 4) and the
+//! counterfactual cost model that feeds it.
+//!
+//! TOLA keeps an exponentiated-weights distribution over the policy grid
+//! `P`. Each arriving job is assigned a policy sampled from the current
+//! distribution; once a job's deadline has passed (so the spot prices over
+//! its whole window are known), its cost under *every* policy of `P` is
+//! evaluated and the weights are re-normalized with
+//! `w ← w · exp(−η_t · c_j(π))`, `η_t = sqrt(2·log n / (d·(t−d)))`.
+//!
+//! The per-job all-policy sweep is the hot path; [`counterfactual`] defines
+//! its exact semantics, implemented three ways that must agree: natively
+//! (here), in pure jnp (`python/compile/kernels/ref.py`), and as the AOT
+//! Pallas kernel executed through PJRT ([`crate::runtime`]).
+
+pub mod counterfactual;
+pub mod regret;
+
+pub use counterfactual::{CounterfactualJob, PolicyGridEval};
+
+use crate::util::rng::Pcg32;
+
+/// TOLA state (Algorithm 4).
+#[derive(Debug, Clone)]
+pub struct Tola {
+    /// Weights over the n policies (always normalized).
+    weights: Vec<f64>,
+    /// `d` — the maximum relative deadline over all jobs (sets η_t).
+    pub max_relative_deadline: f64,
+    /// Number of weight updates performed (κ in the paper).
+    pub updates: u64,
+}
+
+impl Tola {
+    pub fn new(num_policies: usize, max_relative_deadline: f64) -> Tola {
+        assert!(num_policies > 0);
+        assert!(max_relative_deadline > 0.0);
+        Tola {
+            weights: vec![1.0 / num_policies as f64; num_policies],
+            max_relative_deadline,
+            updates: 0,
+        }
+    }
+
+    pub fn num_policies(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Sample a policy index from the current distribution (line 8).
+    pub fn pick(&self, rng: &mut Pcg32) -> usize {
+        rng.weighted_index(&self.weights)
+    }
+
+    /// The learning rate at wall-clock time `t` (line 16):
+    /// `η_t = sqrt(2 log n / (d (t − d)))`, guarded for `t ≤ d`.
+    pub fn eta(&self, t: f64) -> f64 {
+        let d = self.max_relative_deadline;
+        let denom = (d * (t - d)).max(d * d * 1e-3).max(1e-12);
+        (2.0 * (self.weights.len() as f64).ln() / denom).sqrt()
+    }
+
+    /// Weight update for one retired job with per-policy costs `costs`
+    /// (lines 14–21). `t` is the current time.
+    pub fn update(&mut self, costs: &[f64], t: f64) {
+        assert_eq!(costs.len(), self.weights.len());
+        let eta = self.eta(t);
+        // Subtract the min cost before exponentiating: mathematically a
+        // no-op after normalization, numerically essential for large costs.
+        let cmin = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut total = 0.0;
+        for (w, c) in self.weights.iter_mut().zip(costs) {
+            *w *= (-eta * (c - cmin)).exp();
+            total += *w;
+        }
+        if total <= 0.0 || !total.is_finite() {
+            // Degenerate collapse: reset to uniform (cannot happen with the
+            // min-shift unless costs are non-finite).
+            let n = self.weights.len() as f64;
+            self.weights.iter_mut().for_each(|w| *w = 1.0 / n);
+        } else {
+            self.weights.iter_mut().for_each(|w| *w /= total);
+        }
+        self.updates += 1;
+    }
+
+    /// Index of the currently most-probable policy.
+    pub fn best(&self) -> usize {
+        self.weights
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_uniform_and_stays_simplex() {
+        let mut t = Tola::new(4, 10.0);
+        assert!(t.weights().iter().all(|&w| (w - 0.25).abs() < 1e-12));
+        for step in 0..50 {
+            t.update(&[1.0, 2.0, 3.0, 4.0], 10.0 + step as f64);
+            let sum: f64 = t.weights().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(t.weights().iter().all(|&w| w >= 0.0));
+        }
+    }
+
+    #[test]
+    fn converges_to_cheapest_policy() {
+        let mut t = Tola::new(3, 5.0);
+        for step in 0..2000 {
+            t.update(&[2.0, 0.5, 1.0], 5.0 + step as f64);
+        }
+        assert_eq!(t.best(), 1);
+        assert!(t.weights()[1] > 0.9, "{:?}", t.weights());
+    }
+
+    #[test]
+    fn eta_decreases_with_time() {
+        let t = Tola::new(10, 5.0);
+        assert!(t.eta(10.0) > t.eta(100.0));
+        assert!(t.eta(100.0) > t.eta(10_000.0));
+        assert!(t.eta(1.0).is_finite()); // guard below t = d
+    }
+
+    #[test]
+    fn huge_costs_do_not_collapse_numerically() {
+        let mut t = Tola::new(2, 1.0);
+        t.update(&[1e6, 1e6 + 1.0], 2.0);
+        let sum: f64 = t.weights().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(t.weights()[0] > t.weights()[1]);
+    }
+
+    #[test]
+    fn pick_follows_distribution() {
+        let mut t = Tola::new(2, 1.0);
+        for step in 0..500 {
+            t.update(&[0.1, 5.0], 2.0 + step as f64);
+        }
+        let mut rng = Pcg32::new(3);
+        let picks0 = (0..1000).filter(|_| t.pick(&mut rng) == 0).count();
+        assert!(picks0 > 900, "picks0={picks0}");
+    }
+}

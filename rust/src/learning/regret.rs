@@ -1,0 +1,116 @@
+//! Regret accounting for TOLA (Proposition B.1).
+//!
+//! Tracks, per processed job, the realized cost under the sampled policy and
+//! the matrix of counterfactual costs, and reports the average regret
+//! against the best *fixed* policy in hindsight together with the paper's
+//! high-probability bound `9·sqrt(2·d·log(n/δ) / N')`.
+
+/// Accumulates realized and counterfactual costs.
+#[derive(Debug, Clone)]
+pub struct RegretTracker {
+    /// Σ realized cost of the sampled policies.
+    realized_total: f64,
+    /// Per-policy totals of counterfactual costs.
+    per_policy_total: Vec<f64>,
+    jobs: u64,
+    /// `d`: max relative deadline (for the bound).
+    d: f64,
+}
+
+impl RegretTracker {
+    pub fn new(num_policies: usize, max_relative_deadline: f64) -> RegretTracker {
+        RegretTracker {
+            realized_total: 0.0,
+            per_policy_total: vec![0.0; num_policies],
+            jobs: 0,
+            d: max_relative_deadline,
+        }
+    }
+
+    /// Record one job: realized cost and the full counterfactual vector.
+    pub fn record(&mut self, realized: f64, counterfactuals: &[f64]) {
+        assert_eq!(counterfactuals.len(), self.per_policy_total.len());
+        self.realized_total += realized;
+        for (acc, c) in self.per_policy_total.iter_mut().zip(counterfactuals) {
+            *acc += c;
+        }
+        self.jobs += 1;
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.jobs
+    }
+
+    /// Total cost of the best fixed policy in hindsight (π*).
+    pub fn best_fixed_total(&self) -> f64 {
+        self.per_policy_total
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Index of π*.
+    pub fn best_fixed_policy(&self) -> usize {
+        self.per_policy_total
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Average regret `(Σ c(π_j) − Σ c(π*)) / N'` (LHS of Prop. B.1).
+    pub fn average_regret(&self) -> f64 {
+        if self.jobs == 0 {
+            return 0.0;
+        }
+        (self.realized_total - self.best_fixed_total()) / self.jobs as f64
+    }
+
+    /// The Prop. B.1 bound `9·sqrt(2·d·log(n/δ)/N')` at confidence `1−δ`.
+    pub fn bound(&self, delta: f64) -> f64 {
+        assert!((0.0..1.0).contains(&delta) && delta > 0.0);
+        if self.jobs == 0 {
+            return f64::INFINITY;
+        }
+        let n = self.per_policy_total.len() as f64;
+        9.0 * (2.0 * self.d * (n / delta).ln() / self.jobs as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regret_against_best_fixed() {
+        let mut r = RegretTracker::new(3, 4.0);
+        // Policy 1 is always cheapest (1.0); we "realized" alternating 2/3.
+        for i in 0..10 {
+            let realized = if i % 2 == 0 { 2.0 } else { 3.0 };
+            r.record(realized, &[2.0, 1.0, 3.0]);
+        }
+        assert_eq!(r.best_fixed_policy(), 1);
+        assert_eq!(r.best_fixed_total(), 10.0);
+        assert!((r.average_regret() - 1.5).abs() < 1e-12);
+        assert!(r.bound(0.05) > 0.0);
+    }
+
+    #[test]
+    fn zero_jobs_safe() {
+        let r = RegretTracker::new(2, 1.0);
+        assert_eq!(r.average_regret(), 0.0);
+        assert!(r.bound(0.1).is_infinite());
+    }
+
+    #[test]
+    fn bound_shrinks_with_jobs() {
+        let mut r = RegretTracker::new(5, 2.0);
+        r.record(1.0, &[1.0; 5]);
+        let b1 = r.bound(0.05);
+        for _ in 0..99 {
+            r.record(1.0, &[1.0; 5]);
+        }
+        assert!(r.bound(0.05) < b1 / 5.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! # dagcloud
+//!
+//! A production-quality reproduction of *"Towards Cost-Optimal Policies for
+//! DAGs to Utilize IaaS Clouds with Online Learning"* (Wu, Yu, Casale, Gao,
+//! 2021).
+//!
+//! The crate implements the paper's full stack:
+//!
+//! * a **cloud market substrate** ([`market`]): spot-price processes,
+//!   per-second on-demand billing, and a self-owned instance pool with
+//!   `N(t)` / `N(t1,t2)` queries;
+//! * a **workload substrate** ([`workload`]): DAG jobs, the §6.1 synthetic
+//!   generator, and the Nagarajan et al. DAG→chain transformation;
+//! * the **paper's policies** ([`policy`]): the optimal deadline allocation
+//!   `Dealloc` (Algorithm 1), the single-task spot/on-demand strategy
+//!   (Prop. 4.1), the self-owned allocation rule (Eq. 12), and the baseline
+//!   heuristics (Greedy / Even / naive self-owned);
+//! * a **discrete-event simulator** ([`sim`]) that executes chain jobs
+//!   against realized spot-price traces (Definitions 3.1/3.2);
+//! * **online learning** ([`learning`]): the TOLA exponentiated-weights
+//!   algorithm (Appendix B.2) with regret accounting;
+//! * a **PJRT runtime** ([`runtime`]) that loads the AOT-compiled JAX/Pallas
+//!   counterfactual-cost kernel (HLO text in `artifacts/`) and runs it on the
+//!   TOLA hot path — Python never runs at request time;
+//! * the **L3 coordinator** ([`coordinator`]): leader event loop, worker
+//!   thread pool, metrics and config;
+//! * an **experiment harness** ([`experiments`]) regenerating every table and
+//!   figure of the paper's evaluation section.
+
+pub mod util;
+pub mod market;
+pub mod workload;
+pub mod policy;
+pub mod sim;
+pub mod learning;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

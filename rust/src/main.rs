@@ -1,0 +1,8 @@
+//! `repro` — CLI entrypoint for the dagcloud reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation section; see
+//! `repro help`.
+
+fn main() {
+    std::process::exit(dagcloud::coordinator::cli_main());
+}

@@ -1,0 +1,33 @@
+//! Cloud market substrate: price processes, billing, and the self-owned
+//! instance pool.
+//!
+//! Models §3.1 of the paper:
+//!
+//! * **on-demand** instances — always available, fixed price `p` per unit
+//!   time, billed per second (continuous billing: using an instance for `x`
+//!   units costs `p·x` with fractional `x`);
+//! * **spot** instances — intermittently available; in the EC2/Azure model a
+//!   bid `b` wins a slot iff `price(slot) ≤ b` and the user pays the *spot*
+//!   price, in the Google model the price is constant and availability is an
+//!   exogenous on/off process;
+//! * **self-owned** instances — a finite pool of `r` instances at zero
+//!   marginal cost with `N(t)` idle at time `t` and
+//!   `N(t1,t2) = min_{t∈[t1,t2]} N(t)` (Table 1).
+
+pub mod spot;
+pub mod trace;
+pub mod pricing;
+pub mod pool;
+
+pub use pool::SelfOwnedPool;
+pub use pricing::{CostLedger, InstanceKind};
+pub use spot::{SpotModel, SpotPriceProcess};
+pub use trace::PriceTrace;
+
+/// Number of price slots per unit of time (§6.1: "each unit of time is
+/// divided into 12 equal time slots").
+pub const SLOTS_PER_UNIT: u32 = 12;
+
+/// Normalized on-demand price (§6.1: "the on-demand price p is normalized to
+/// be 1").
+pub const ON_DEMAND_PRICE: f64 = 1.0;

@@ -1,0 +1,312 @@
+//! Self-owned instance pool.
+//!
+//! Tracks `N(t)` — the number of idle self-owned instances at time `t` — and
+//! answers the range query `N(t1,t2) = min_{t∈[t1,t2]} N(t)` used by the
+//! allocation rule (12). Reservations are slot-quantized (the simulator's
+//! clock is slot-based), so the pool is a lazy segment tree over slots with
+//! *range add* updates and *range min* queries: both O(log S) on a horizon of
+//! S slots, which matters because every task of every job reserves a window.
+
+/// Lazy segment tree: range add, range min over `i64`.
+#[derive(Debug, Clone)]
+pub struct RangeAddMinTree {
+    n: usize,
+    /// min of each node's segment (including pending lazy of ancestors? no —
+    /// standard convention: node value already includes its own lazy).
+    min: Vec<i64>,
+    lazy: Vec<i64>,
+}
+
+impl RangeAddMinTree {
+    pub fn new(n: usize, initial: i64) -> Self {
+        let n = n.max(1);
+        let mut t = Self {
+            n,
+            min: vec![0; 4 * n],
+            lazy: vec![0; 4 * n],
+        };
+        if initial != 0 {
+            t.add(0, n, initial);
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Add `delta` on the half-open slot range `[lo, hi)`.
+    pub fn add(&mut self, lo: usize, hi: usize, delta: i64) {
+        if lo >= hi {
+            return;
+        }
+        let hi = hi.min(self.n);
+        self.add_rec(1, 0, self.n, lo, hi, delta);
+    }
+
+    /// Min over the half-open slot range `[lo, hi)`.
+    pub fn min(&self, lo: usize, hi: usize) -> i64 {
+        assert!(lo < hi, "empty range query");
+        let hi = hi.min(self.n);
+        self.min_rec(1, 0, self.n, lo, hi, 0)
+    }
+
+    /// Point read.
+    pub fn get(&self, i: usize) -> i64 {
+        self.min(i, i + 1)
+    }
+
+    fn add_rec(&mut self, node: usize, nl: usize, nr: usize, lo: usize, hi: usize, d: i64) {
+        if hi <= nl || nr <= lo {
+            return;
+        }
+        if lo <= nl && nr <= hi {
+            self.min[node] += d;
+            self.lazy[node] += d;
+            return;
+        }
+        let mid = (nl + nr) / 2;
+        self.add_rec(node * 2, nl, mid, lo, hi, d);
+        self.add_rec(node * 2 + 1, mid, nr, lo, hi, d);
+        self.min[node] = self.min[node * 2].min(self.min[node * 2 + 1]) + self.lazy[node];
+    }
+
+    fn min_rec(&self, node: usize, nl: usize, nr: usize, lo: usize, hi: usize, acc: i64) -> i64 {
+        if lo <= nl && nr <= hi {
+            return self.min[node] + acc;
+        }
+        let mid = (nl + nr) / 2;
+        let acc = acc + self.lazy[node];
+        if hi <= mid {
+            self.min_rec(node * 2, nl, mid, lo, hi, acc)
+        } else if lo >= mid {
+            self.min_rec(node * 2 + 1, mid, nr, lo, hi, acc)
+        } else {
+            self.min_rec(node * 2, nl, mid, lo, hi, acc)
+                .min(self.min_rec(node * 2 + 1, mid, nr, lo, hi, acc))
+        }
+    }
+}
+
+/// The tenant's pool of `r` self-owned instances over a slotted horizon.
+#[derive(Debug, Clone)]
+pub struct SelfOwnedPool {
+    capacity: u32,
+    slot_len: f64,
+    tree: RangeAddMinTree,
+    /// Total reserved instance-time (for utilization metrics).
+    reserved_instance_time: f64,
+}
+
+impl SelfOwnedPool {
+    /// `capacity` = the paper's `r`; `horizon` in time units; `slot_len` must
+    /// match the simulator clock.
+    pub fn new(capacity: u32, horizon: f64, slot_len: f64) -> Self {
+        let slots = (horizon / slot_len).ceil() as usize + 1;
+        Self {
+            capacity,
+            slot_len,
+            tree: RangeAddMinTree::new(slots, capacity as i64),
+            reserved_instance_time: 0.0,
+        }
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    fn slot(&self, t: f64) -> usize {
+        ((t / self.slot_len).floor() as usize).min(self.tree.len() - 1)
+    }
+
+    /// `N(t)`: idle self-owned instances during the slot containing `t`.
+    pub fn available_at(&self, t: f64) -> u32 {
+        self.tree.get(self.slot(t)).max(0) as u32
+    }
+
+    /// `N(t1,t2) = min_{t∈[t1,t2]} N(t)` (Table 1). Inclusive of the slot
+    /// containing `t2` only if `t2` lies strictly inside it. A degenerate
+    /// window (`t2 ≤ t1`, which arises when a task's realized start lands
+    /// exactly on its deadline) reduces to the point query `N(t1)`.
+    pub fn available_over(&self, t1: f64, t2: f64) -> u32 {
+        if t2 <= t1 {
+            return self.available_at(t1);
+        }
+        let lo = self.slot(t1);
+        // Window end exactly on a slot boundary does not occupy the next slot.
+        let hi_f = t2 / self.slot_len;
+        let hi = if hi_f.fract() == 0.0 {
+            hi_f as usize
+        } else {
+            hi_f.ceil() as usize
+        }
+        .max(lo + 1);
+        self.tree.min(lo, hi).max(0) as u32
+    }
+
+    /// Reserve `k` instances for the window `[t1, t2)`. Returns `false`
+    /// (and reserves nothing) if fewer than `k` are continuously available.
+    pub fn reserve(&mut self, k: u32, t1: f64, t2: f64) -> bool {
+        if k == 0 {
+            return true;
+        }
+        if self.available_over(t1, t2) < k {
+            return false;
+        }
+        let lo = self.slot(t1);
+        let hi_f = t2 / self.slot_len;
+        let hi = if hi_f.fract() == 0.0 {
+            hi_f as usize
+        } else {
+            hi_f.ceil() as usize
+        }
+        .max(lo + 1);
+        self.tree.add(lo, hi, -(k as i64));
+        self.reserved_instance_time += k as f64 * (t2 - t1);
+        true
+    }
+
+    /// Release `k` instances over `[t1, t2)` (early task completion).
+    pub fn release(&mut self, k: u32, t1: f64, t2: f64) {
+        if k == 0 || t2 <= t1 {
+            return;
+        }
+        let lo = self.slot(t1);
+        let hi_f = t2 / self.slot_len;
+        let hi = if hi_f.fract() == 0.0 {
+            hi_f as usize
+        } else {
+            hi_f.ceil() as usize
+        }
+        .max(lo + 1);
+        self.tree.add(lo, hi, k as i64);
+        self.reserved_instance_time -= k as f64 * (t2 - t1);
+    }
+
+    /// Total instance-time reserved so far.
+    pub fn reserved_instance_time(&self) -> f64 {
+        self.reserved_instance_time
+    }
+
+    /// Pool utilization over a horizon `[0, T]`: reserved instance-time over
+    /// capacity·T.
+    pub fn utilization(&self, horizon: f64) -> f64 {
+        if self.capacity == 0 || horizon <= 0.0 {
+            return 0.0;
+        }
+        self.reserved_instance_time / (self.capacity as f64 * horizon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_all, Config};
+
+    #[test]
+    fn tree_basic_add_min() {
+        let mut t = RangeAddMinTree::new(10, 5);
+        assert_eq!(t.min(0, 10), 5);
+        t.add(2, 5, -3);
+        assert_eq!(t.min(0, 10), 2);
+        assert_eq!(t.min(0, 2), 5);
+        assert_eq!(t.min(2, 5), 2);
+        assert_eq!(t.min(5, 10), 5);
+        t.add(0, 10, 1);
+        assert_eq!(t.get(3), 3);
+        assert_eq!(t.get(0), 6);
+    }
+
+    #[test]
+    fn tree_matches_naive_array() {
+        for_all(Config::cases(200).seed(77), |rng| {
+            let n = rng.range_inclusive(1, 64) as usize;
+            let mut tree = RangeAddMinTree::new(n, 0);
+            let mut naive = vec![0i64; n];
+            for _ in 0..30 {
+                let a = rng.below(n as u64) as usize;
+                let b = rng.range_inclusive(a as u64 + 1, n as u64) as usize;
+                if rng.chance(0.6) {
+                    let d = rng.range_inclusive(0, 10) as i64 - 5;
+                    tree.add(a, b, d);
+                    for x in &mut naive[a..b] {
+                        *x += d;
+                    }
+                } else {
+                    let want = *naive[a..b].iter().min().unwrap();
+                    let got = tree.min(a, b);
+                    if want != got {
+                        return Err(format!("min({a},{b}): naive {want}, tree {got}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pool_reserve_and_query() {
+        let mut p = SelfOwnedPool::new(10, 100.0, 0.5);
+        assert_eq!(p.available_over(0.0, 100.0), 10);
+        assert!(p.reserve(4, 10.0, 20.0));
+        assert_eq!(p.available_over(10.0, 20.0), 6);
+        assert_eq!(p.available_over(0.0, 10.0), 10); // boundary excluded
+        assert_eq!(p.available_at(15.0), 6);
+        assert!(p.reserve(6, 15.0, 17.0));
+        assert_eq!(p.available_over(15.0, 17.0), 0);
+        assert!(!p.reserve(1, 16.0, 18.0)); // overlap with exhausted region
+        assert_eq!(p.available_over(16.0, 18.0), 0);
+    }
+
+    #[test]
+    fn pool_release_restores() {
+        let mut p = SelfOwnedPool::new(5, 10.0, 0.25);
+        assert!(p.reserve(5, 0.0, 10.0));
+        assert_eq!(p.available_over(0.0, 10.0), 0);
+        p.release(5, 4.0, 10.0);
+        assert_eq!(p.available_over(4.0, 10.0), 5);
+        assert_eq!(p.available_over(0.0, 4.0), 0);
+    }
+
+    #[test]
+    fn pool_utilization() {
+        let mut p = SelfOwnedPool::new(10, 100.0, 0.5);
+        assert!(p.reserve(10, 0.0, 50.0));
+        assert!((p.utilization(100.0) - 0.5).abs() < 1e-12);
+        p.release(10, 25.0, 50.0);
+        assert!((p.utilization(100.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_capacity_pool() {
+        let p = SelfOwnedPool::new(0, 10.0, 0.5);
+        assert_eq!(p.available_over(0.0, 10.0), 0);
+        assert_eq!(p.utilization(10.0), 0.0);
+    }
+
+    #[test]
+    fn pool_never_negative_availability() {
+        for_all(Config::cases(100).seed(78), |rng| {
+            let mut p = SelfOwnedPool::new(8, 20.0, 0.5);
+            for _ in 0..20 {
+                let a = rng.uniform(0.0, 19.0);
+                let b = a + rng.uniform(0.1, 1.0);
+                let k = rng.range_inclusive(0, 9) as u32;
+                p.reserve(k, a, b); // may fail; fine
+            }
+            for _ in 0..20 {
+                let a = rng.uniform(0.0, 19.0);
+                let b = a + rng.uniform(0.1, 1.0);
+                let n = p.available_over(a, b);
+                if n > 8 {
+                    return Err(format!("availability {n} exceeds capacity"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

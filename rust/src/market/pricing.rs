@@ -1,0 +1,164 @@
+//! Billing and cost accounting.
+//!
+//! The paper's billing model (§3.1): continuous, pay-for-what-you-use.
+//! Using `k` on-demand instances for a period of length `x` costs `p·k·x`
+//! with fractional `x`; spot usage is charged at the realized spot price of
+//! each slot actually consumed; self-owned usage is free (Assumption 1
+//! normalizes its cost to zero).
+
+use std::fmt;
+
+/// The three instance kinds of the paper, cheapest first (Assumption 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InstanceKind {
+    SelfOwned,
+    Spot,
+    OnDemand,
+}
+
+impl InstanceKind {
+    pub const ALL: [InstanceKind; 3] =
+        [InstanceKind::SelfOwned, InstanceKind::Spot, InstanceKind::OnDemand];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InstanceKind::SelfOwned => "self-owned",
+            InstanceKind::Spot => "spot",
+            InstanceKind::OnDemand => "on-demand",
+        }
+    }
+}
+
+impl fmt::Display for InstanceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Accumulates cost and processed workload per instance kind.
+///
+/// "Workload" is instance-time actually spent processing (for spot, only
+/// *available* slots count; requested-but-unavailable slots process nothing
+/// and cost nothing).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostLedger {
+    pub cost_selfowned: f64,
+    pub cost_spot: f64,
+    pub cost_ondemand: f64,
+    pub work_selfowned: f64,
+    pub work_spot: f64,
+    pub work_ondemand: f64,
+}
+
+impl CostLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record usage: `instances` instances of `kind` for `duration` time at
+    /// `unit_price` per instance-unit-time.
+    pub fn charge(&mut self, kind: InstanceKind, instances: f64, duration: f64, unit_price: f64) {
+        debug_assert!(instances >= 0.0 && duration >= 0.0 && unit_price >= 0.0);
+        let work = instances * duration;
+        let cost = work * unit_price;
+        match kind {
+            InstanceKind::SelfOwned => {
+                self.work_selfowned += work;
+                self.cost_selfowned += cost;
+            }
+            InstanceKind::Spot => {
+                self.work_spot += work;
+                self.cost_spot += cost;
+            }
+            InstanceKind::OnDemand => {
+                self.work_ondemand += work;
+                self.cost_ondemand += cost;
+            }
+        }
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.cost_selfowned + self.cost_spot + self.cost_ondemand
+    }
+
+    pub fn total_work(&self) -> f64 {
+        self.work_selfowned + self.work_spot + self.work_ondemand
+    }
+
+    /// Average unit cost (the paper's performance metric denominator-wise:
+    /// total cost over total processed workload).
+    pub fn average_unit_cost(&self) -> f64 {
+        if self.total_work() == 0.0 {
+            0.0
+        } else {
+            self.total_cost() / self.total_work()
+        }
+    }
+
+    pub fn work(&self, kind: InstanceKind) -> f64 {
+        match kind {
+            InstanceKind::SelfOwned => self.work_selfowned,
+            InstanceKind::Spot => self.work_spot,
+            InstanceKind::OnDemand => self.work_ondemand,
+        }
+    }
+
+    pub fn cost(&self, kind: InstanceKind) -> f64 {
+        match kind {
+            InstanceKind::SelfOwned => self.cost_selfowned,
+            InstanceKind::Spot => self.cost_spot,
+            InstanceKind::OnDemand => self.cost_ondemand,
+        }
+    }
+
+    pub fn merge(&mut self, other: &CostLedger) {
+        self.cost_selfowned += other.cost_selfowned;
+        self.cost_spot += other.cost_spot;
+        self.cost_ondemand += other.cost_ondemand;
+        self.work_selfowned += other.work_selfowned;
+        self.work_spot += other.work_spot;
+        self.work_ondemand += other.work_ondemand;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_accumulates_by_kind() {
+        let mut l = CostLedger::new();
+        l.charge(InstanceKind::OnDemand, 2.0, 0.5, 1.0); // 1 instance-unit, cost 1
+        l.charge(InstanceKind::Spot, 3.0, 1.0, 0.2); // 3 units, cost 0.6
+        l.charge(InstanceKind::SelfOwned, 4.0, 1.0, 0.0); // 4 units, free
+        assert!((l.total_cost() - 1.6).abs() < 1e-12);
+        assert!((l.total_work() - 8.0).abs() < 1e-12);
+        assert!((l.average_unit_cost() - 0.2).abs() < 1e-12);
+        assert_eq!(l.work(InstanceKind::Spot), 3.0);
+        assert_eq!(l.cost(InstanceKind::OnDemand), 1.0);
+    }
+
+    #[test]
+    fn empty_ledger_unit_cost_zero() {
+        assert_eq!(CostLedger::new().average_unit_cost(), 0.0);
+    }
+
+    #[test]
+    fn merge_is_sum() {
+        let mut a = CostLedger::new();
+        a.charge(InstanceKind::Spot, 1.0, 1.0, 0.3);
+        let mut b = CostLedger::new();
+        b.charge(InstanceKind::Spot, 2.0, 1.0, 0.3);
+        b.charge(InstanceKind::OnDemand, 1.0, 1.0, 1.0);
+        a.merge(&b);
+        assert!((a.work_spot - 3.0).abs() < 1e-12);
+        assert!((a.total_cost() - (0.3 + 0.6 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kind_names() {
+        assert_eq!(InstanceKind::Spot.name(), "spot");
+        assert_eq!(format!("{}", InstanceKind::OnDemand), "on-demand");
+        assert_eq!(InstanceKind::ALL.len(), 3);
+    }
+}

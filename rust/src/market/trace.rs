@@ -1,0 +1,191 @@
+//! Realized price traces and bid-conditioned availability views.
+//!
+//! A [`PriceTrace`] is the ground-truth sequence of per-slot spot prices over
+//! the whole simulation horizon. Jobs see *windows* of it; the PJRT
+//! counterfactual kernel sees a *resampled* window of at most `S_MAX` slots
+//! (the kernel has a fixed AOT shape, so long windows are coarsened and the
+//! slot length `dt` travels alongside).
+
+use super::spot::{SpotModel, SpotPriceProcess};
+use super::SLOTS_PER_UNIT;
+
+/// Ground-truth spot prices for the horizon, one per slot.
+/// Slot `s` covers simulated time `[s·dt, (s+1)·dt)` with `dt = 1/SLOTS_PER_UNIT`.
+#[derive(Debug, Clone)]
+pub struct PriceTrace {
+    prices: Vec<f64>,
+    slot_len: f64,
+}
+
+impl PriceTrace {
+    /// Generate a trace covering `horizon` time units.
+    pub fn generate(model: SpotModel, horizon: f64, seed: u64) -> PriceTrace {
+        let slot_len = 1.0 / SLOTS_PER_UNIT as f64;
+        let n = (horizon / slot_len).ceil() as usize + 1;
+        let mut proc = SpotPriceProcess::new(model, seed);
+        PriceTrace {
+            prices: proc.generate(n),
+            slot_len,
+        }
+    }
+
+    /// Build directly from explicit per-slot prices (tests, file loads).
+    pub fn from_prices(prices: Vec<f64>, slot_len: f64) -> PriceTrace {
+        assert!(slot_len > 0.0);
+        PriceTrace { prices, slot_len }
+    }
+
+    pub fn slot_len(&self) -> f64 {
+        self.slot_len
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.prices.len()
+    }
+
+    pub fn horizon(&self) -> f64 {
+        self.prices.len() as f64 * self.slot_len
+    }
+
+    /// Slot index containing time `t` (clamped to the last slot).
+    #[inline]
+    pub fn slot_of(&self, t: f64) -> usize {
+        ((t / self.slot_len).floor() as usize).min(self.prices.len().saturating_sub(1))
+    }
+
+    /// Price during the slot containing time `t`.
+    #[inline]
+    pub fn price_at(&self, t: f64) -> f64 {
+        self.prices[self.slot_of(t)]
+    }
+
+    #[inline]
+    pub fn price_of_slot(&self, s: usize) -> f64 {
+        self.prices[s.min(self.prices.len() - 1)]
+    }
+
+    /// Is a bid `b` winning during the slot containing `t`?
+    #[inline]
+    pub fn spot_available(&self, t: f64, bid: f64) -> bool {
+        self.price_at(t) <= bid
+    }
+
+    /// Empirical availability of bid `b` over a window (fraction of winning
+    /// slots) — the realized counterpart of the paper's β.
+    pub fn availability(&self, t0: f64, t1: f64, bid: f64) -> f64 {
+        let (s0, s1) = (self.slot_of(t0), self.slot_of(t1.max(t0)));
+        let total = s1.saturating_sub(s0) + 1;
+        let won = (s0..=s1)
+            .filter(|&s| self.price_of_slot(s) <= bid)
+            .count();
+        won as f64 / total as f64
+    }
+
+    /// Resample the window `[t0, t1)` into at most `max_slots` equal slots
+    /// for the fixed-shape AOT kernel. Returns `(prices, dt)`, where each
+    /// output slot takes the price of the input slot containing its midpoint
+    /// (nearest sampling; exact when the window already fits).
+    ///
+    /// The output is padded with `f64::INFINITY` (spot never available) up to
+    /// `max_slots` so the kernel's fixed shape is always filled.
+    pub fn resample_window(&self, t0: f64, t1: f64, max_slots: usize) -> (Vec<f64>, f64) {
+        assert!(t1 > t0, "empty window");
+        assert!(max_slots > 0);
+        let native = ((t1 - t0) / self.slot_len).ceil() as usize;
+        let n = native.clamp(1, max_slots);
+        let dt = (t1 - t0) / n as f64;
+        let mut out = Vec::with_capacity(max_slots);
+        for k in 0..n {
+            let mid = t0 + (k as f64 + 0.5) * dt;
+            out.push(self.price_at(mid));
+        }
+        out.resize(max_slots, f64::INFINITY);
+        (out, dt)
+    }
+
+    /// Contiguous availability segments for a bid (for Figure 1): returns
+    /// `(start_time, end_time, available)` runs.
+    pub fn availability_segments(&self, t0: f64, t1: f64, bid: f64) -> Vec<(f64, f64, bool)> {
+        let (s0, s1) = (self.slot_of(t0), self.slot_of(t1));
+        let mut runs: Vec<(f64, f64, bool)> = Vec::new();
+        for s in s0..=s1 {
+            let avail = self.price_of_slot(s) <= bid;
+            let start = s as f64 * self.slot_len;
+            let end = start + self.slot_len;
+            match runs.last_mut() {
+                Some((_, e, a)) if *a == avail => *e = end,
+                _ => runs.push((start, end, avail)),
+            }
+        }
+        runs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> PriceTrace {
+        // slot_len 0.5; prices alternate cheap/expensive.
+        PriceTrace::from_prices(vec![0.1, 0.9, 0.1, 0.9, 0.1, 0.9], 0.5)
+    }
+
+    #[test]
+    fn slot_lookup() {
+        let t = toy();
+        assert_eq!(t.slot_of(0.0), 0);
+        assert_eq!(t.slot_of(0.49), 0);
+        assert_eq!(t.slot_of(0.5), 1);
+        assert_eq!(t.slot_of(100.0), 5); // clamped
+        assert_eq!(t.price_at(1.2), 0.1);
+    }
+
+    #[test]
+    fn availability_fraction() {
+        let t = toy();
+        // bid 0.5 wins the cheap slots only => half the time.
+        let a = t.availability(0.0, 2.99, 0.5);
+        assert!((a - 0.5).abs() < 1e-9, "a={a}");
+        assert_eq!(t.availability(0.0, 2.99, 1.0), 1.0);
+        assert_eq!(t.availability(0.0, 2.99, 0.05), 0.0);
+    }
+
+    #[test]
+    fn resample_exact_when_fits() {
+        let t = toy();
+        let (p, dt) = t.resample_window(0.0, 3.0, 16);
+        assert!((dt - 0.5).abs() < 1e-12);
+        assert_eq!(&p[..6], &[0.1, 0.9, 0.1, 0.9, 0.1, 0.9]);
+        assert!(p[6..].iter().all(|x| x.is_infinite()));
+        assert_eq!(p.len(), 16);
+    }
+
+    #[test]
+    fn resample_coarsens_long_windows() {
+        let trace = PriceTrace::generate(SpotModel::paper_default(), 100.0, 5);
+        let (p, dt) = trace.resample_window(0.0, 100.0, 64);
+        assert_eq!(p.len(), 64);
+        assert!((dt - 100.0 / 64.0).abs() < 1e-12);
+        assert!(p.iter().all(|&x| (0.12..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn segments_merge_runs() {
+        let t = toy();
+        let segs = t.availability_segments(0.0, 2.9, 0.5);
+        assert_eq!(segs.len(), 6); // alternating every slot
+        assert!(segs[0].2);
+        assert!(!segs[1].2);
+        // Merged case: bid winning everywhere -> single run.
+        let segs_all = t.availability_segments(0.0, 2.9, 1.0);
+        assert_eq!(segs_all.len(), 1);
+        assert!(segs_all[0].2);
+    }
+
+    #[test]
+    fn generated_trace_covers_horizon() {
+        let trace = PriceTrace::generate(SpotModel::paper_default(), 10.0, 1);
+        assert!(trace.horizon() >= 10.0);
+        assert_eq!(trace.slot_len(), 1.0 / 12.0);
+    }
+}

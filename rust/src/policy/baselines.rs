@@ -1,0 +1,91 @@
+//! Baseline heuristics of §6.1 used to measure the proposed policies.
+//!
+//! * **Even** — pre-allocate consecutive task windows with the slack
+//!   `ω = d_j − a_j − Σ e_i` split evenly: `x_i = ω / l`.
+//! * **Greedy** — no pre-allocation: bid `δ_i` spot instances for the
+//!   current task until the critical path of the *remaining* workload
+//!   reaches the remaining window, then run everything on-demand at full
+//!   parallelism. (Implemented in the executor as a runtime strategy; this
+//!   module computes its switch condition.)
+//! * the **naive self-owned** rule lives in [`super::selfowned::naive_allocation`].
+
+use super::dealloc::WindowAllocation;
+use crate::workload::ChainJob;
+
+/// Which deadline pre-allocation a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlinePolicy {
+    /// Algorithm 1 (the paper's optimal allocation).
+    Dealloc,
+    /// The Even baseline.
+    Even,
+}
+
+/// Even window allocation: `ŝ_i = e_i + ω/l`.
+pub fn even_windows(job: &ChainJob) -> WindowAllocation {
+    let l = job.num_tasks() as f64;
+    let share = job.slack().max(0.0) / l;
+    WindowAllocation {
+        sizes: job
+            .tasks
+            .iter()
+            .map(|t| t.min_exec_time() + share)
+            .collect(),
+        // Even is β-agnostic; record β=1 as a neutral marker.
+        beta: 1.0,
+    }
+}
+
+/// Greedy switch test: at elapsed remaining-window `time_left`, with
+/// per-task remaining workloads `z_rem` (chain order, current task first),
+/// should the job abandon spot and switch to all on-demand?
+///
+/// The switch fires when the critical path of the remaining workload —
+/// `Σ z_rem_k / δ_k` — is no longer strictly below the remaining window.
+pub fn greedy_must_switch(remaining: &[(f64, f64)], time_left: f64) -> bool {
+    let critical: f64 = remaining
+        .iter()
+        .map(|(z, delta)| z / delta)
+        .sum();
+    critical >= time_left - 1e-12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ChainTask;
+
+    #[test]
+    fn even_splits_slack_equally() {
+        let job = ChainJob::paper_example();
+        let alloc = even_windows(&job);
+        let omega = job.slack();
+        let share = omega / 4.0;
+        for (s, t) in alloc.sizes.iter().zip(&job.tasks) {
+            assert!((s - (t.min_exec_time() + share)).abs() < 1e-12);
+        }
+        let total: f64 = alloc.sizes.iter().sum();
+        assert!((total - job.window()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn even_handles_infeasible() {
+        let job = ChainJob::new(0, 0.0, 0.5, vec![ChainTask::new(2.0, 1.0)]);
+        let alloc = even_windows(&job);
+        assert_eq!(alloc.sizes, vec![2.0]);
+    }
+
+    #[test]
+    fn greedy_switch_condition() {
+        // remaining cp = 1.0 + 0.5 = 1.5
+        let rem = [(2.0, 2.0), (1.0, 2.0)];
+        assert!(!greedy_must_switch(&rem, 2.0));
+        assert!(greedy_must_switch(&rem, 1.5));
+        assert!(greedy_must_switch(&rem, 1.0));
+    }
+
+    #[test]
+    fn greedy_empty_remaining_never_switches() {
+        assert!(!greedy_must_switch(&[], 0.5));
+    }
+}

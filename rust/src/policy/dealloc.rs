@@ -1,0 +1,265 @@
+//! Algorithm 1 — `Dealloc(x)`: the optimal allocation of time-window sizes
+//! to the tasks of a chain job (Prop. 4.3).
+//!
+//! Every task first gets its minimum execution time `e_i`; the remaining
+//! slack `ω = (d_j − a_j) − Σ e_i` is then handed out in non-increasing
+//! order of parallelism bound `δ_i`: a task with bound `δ` converts slack
+//! into spot workload at rate `β/(1−β)·δ` (Prop. 4.2) until its window
+//! reaches `e_i/β` (saturation), so the greedy order is optimal for the ILP
+//! (10). The task at which slack runs out receives the remainder (and the
+//! very last saturated task absorbs any slack left over after everyone
+//! saturates, so the windows always tile `[a_j, d_j]` exactly).
+
+use crate::workload::ChainJob;
+
+/// Result of the deadline allocation for one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowAllocation {
+    /// `ŝ_i` — window size of task i (chain order).
+    pub sizes: Vec<f64>,
+    /// The β (or β₀) the allocation was computed with.
+    pub beta: f64,
+}
+
+impl WindowAllocation {
+    /// Slack beyond the minimum execution time, `x_i = ŝ_i − e_i`.
+    pub fn slack_of(&self, job: &ChainJob) -> Vec<f64> {
+        self.sizes
+            .iter()
+            .zip(&job.tasks)
+            .map(|(s, t)| s - t.min_exec_time())
+            .collect()
+    }
+}
+
+/// `Dealloc(x)` (Algorithm 1). `beta` is the availability parameter — the
+/// spot availability β, or the sufficiency index β₀ when self-owned
+/// instances dominate (Algorithm 2 lines 1–5 pick which).
+///
+/// Infeasible jobs (window < Σe_i) still get an allocation: every task
+/// receives `e_i` and the job will overrun; callers check
+/// [`ChainJob::is_feasible`] upstream.
+pub fn dealloc(job: &ChainJob, beta: f64) -> WindowAllocation {
+    assert!(beta > 0.0 && beta <= 1.0, "beta={beta}");
+    let l = job.num_tasks();
+    let e: Vec<f64> = job.tasks.iter().map(|t| t.min_exec_time()).collect();
+    let mut sizes = e.clone();
+    let mut omega = job.slack().max(0.0);
+
+    // Tasks in non-increasing order of parallelism bound (stable on index:
+    // ties resolve to the earlier task, matching the paper's notation
+    // δ_{i1} ≥ δ_{i2} ≥ …).
+    let mut order: Vec<usize> = (0..l).collect();
+    order.sort_by(|&a, &b| {
+        job.tasks[b]
+            .parallelism
+            .partial_cmp(&job.tasks[a].parallelism)
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+
+    let mut last = None;
+    for &i in &order {
+        if omega <= 0.0 {
+            break;
+        }
+        // Saturating slack: window e_i/β ⇔ extra e_i·(1−β)/β.
+        let need = e[i] * (1.0 - beta) / beta;
+        let grant = need.min(omega);
+        sizes[i] += grant;
+        omega -= grant;
+        last = Some(i);
+    }
+    // All tasks saturated but slack remains: give it to the last task
+    // touched (lines 6–7 put the remainder on task i_{l*}); it buys no
+    // expected spot workload but keeps Σŝ_i = d_j − a_j so the executor's
+    // task deadlines tile the whole window.
+    if omega > 0.0 {
+        let i = last.unwrap_or(*order.first().expect("non-empty chain"));
+        sizes[i] += omega;
+    }
+
+    WindowAllocation { sizes, beta }
+}
+
+/// Convert window sizes to absolute task deadlines `ς_1 < … < ς_l`
+/// (Eq. 4): `ς_i = a_j + Σ_{k≤i} ŝ_k`.
+pub fn windows_to_deadlines(job: &ChainJob, alloc: &WindowAllocation) -> Vec<f64> {
+    let mut t = job.arrival;
+    alloc
+        .sizes
+        .iter()
+        .map(|s| {
+            t += s;
+            t
+        })
+        .collect()
+}
+
+/// Expected total spot workload of an allocation (objective of ILP (10)),
+/// used by tests and the brute-force optimality check.
+pub fn expected_spot_workload(job: &ChainJob, alloc: &WindowAllocation) -> f64 {
+    job.tasks
+        .iter()
+        .zip(&alloc.sizes)
+        .map(|(t, &s)| super::single_task::spot_capacity(t.size, t.parallelism, s, alloc.beta))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_all, Config};
+    use crate::util::rng::Pcg32;
+    use crate::workload::ChainTask;
+
+    #[test]
+    fn paper_example_allocation() {
+        // §4.1.1: optimal window sizes 4/3, 1/2, 5/3, 1/2; spot workload 22/6.
+        let job = ChainJob::paper_example();
+        let alloc = dealloc(&job, 0.5);
+        let want = [4.0 / 3.0, 0.5, 5.0 / 3.0, 0.5];
+        for (got, want) in alloc.sizes.iter().zip(want) {
+            assert!((got - want).abs() < 1e-12, "{:?}", alloc.sizes);
+        }
+        let zo = expected_spot_workload(&job, &alloc);
+        assert!((zo - 22.0 / 6.0).abs() < 1e-12, "zo={zo}");
+        // Deadlines are cumulative and end exactly at d_j.
+        let dl = windows_to_deadlines(&job, &alloc);
+        assert!((dl[3] - 4.0).abs() < 1e-12);
+        assert!(dl.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn windows_tile_the_job_window() {
+        for_all(Config::cases(200).seed(10), |rng| {
+            let job = random_chain(rng);
+            let beta = rng.uniform(0.1, 1.0);
+            let alloc = dealloc(&job, beta);
+            let total: f64 = alloc.sizes.iter().sum();
+            if (total - job.window()).abs() > 1e-9 * job.window().max(1.0) {
+                return Err(format!("Σŝ={total} != window={}", job.window()));
+            }
+            for (s, t) in alloc.sizes.iter().zip(&job.tasks) {
+                if *s < t.min_exec_time() - 1e-9 {
+                    return Err(format!("window {s} < e={}", t.min_exec_time()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn optimality_vs_brute_force() {
+        // Exhaustive grid search over slack splits on small chains cannot
+        // beat Dealloc (Prop. 4.3).
+        for_all(Config::cases(60).seed(11), |rng| {
+            let l = rng.range_inclusive(2, 3) as usize;
+            let tasks: Vec<ChainTask> = (0..l)
+                .map(|_| {
+                    ChainTask::new(
+                        rng.uniform(0.5, 4.0),
+                        [1.0, 2.0, 4.0][rng.below(3) as usize],
+                    )
+                })
+                .collect();
+            let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
+            let omega = rng.uniform(0.0, 2.0 * makespan);
+            let job = ChainJob::new(0, 0.0, makespan + omega, tasks);
+            let beta = [0.3, 0.5, 1.0 / 1.3][rng.below(3) as usize];
+
+            let best_greedy = expected_spot_workload(&job, &dealloc(&job, beta));
+
+            // Brute force: split ω over l tasks on a grid of 21 steps.
+            let steps = 20;
+            let mut best = 0.0f64;
+            let mut splits = vec![0usize; l];
+            loop {
+                let used: usize = splits.iter().sum();
+                if used <= steps {
+                    let sizes: Vec<f64> = job
+                        .tasks
+                        .iter()
+                        .zip(&splits)
+                        .map(|(t, &k)| {
+                            t.min_exec_time() + omega * k as f64 / steps as f64
+                        })
+                        .collect();
+                    let total: f64 = sizes.iter().sum();
+                    if total <= job.window() + 1e-9 {
+                        let alloc = WindowAllocation { sizes, beta };
+                        best = best.max(expected_spot_workload(&job, &alloc));
+                    }
+                }
+                // Odometer increment.
+                let mut i = 0;
+                loop {
+                    if i == l {
+                        break;
+                    }
+                    splits[i] += 1;
+                    if splits[i] <= steps {
+                        break;
+                    }
+                    splits[i] = 0;
+                    i += 1;
+                }
+                if i == l {
+                    break;
+                }
+            }
+            if best > best_greedy + 1e-6 {
+                return Err(format!("brute force {best} beats Dealloc {best_greedy}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn higher_beta_never_lowers_spot_workload() {
+        for_all(Config::cases(150).seed(12), |rng| {
+            let job = random_chain(rng);
+            let b1 = rng.uniform(0.1, 0.9);
+            let b2 = rng.uniform(b1, 1.0);
+            let z1 = expected_spot_workload(&job, &dealloc(&job, b1));
+            let z2 = expected_spot_workload(&job, &dealloc(&job, b2));
+            if z2 + 1e-9 < z1 {
+                return Err(format!("β↑ lowered z^o: {z1} -> {z2}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn beta_one_gives_no_extra_slack_needs() {
+        // β=1: saturation needs are zero, remainder lands on the largest-δ
+        // task; every task keeps at least e_i and totals still tile.
+        let job = ChainJob::paper_example();
+        let alloc = dealloc(&job, 1.0);
+        let total: f64 = alloc.sizes.iter().sum();
+        assert!((total - 4.0).abs() < 1e-12);
+        assert!((expected_spot_workload(&job, &alloc) - job.total_work()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infeasible_job_gets_min_windows() {
+        let job = ChainJob::new(
+            0,
+            0.0,
+            1.0,
+            vec![ChainTask::new(2.0, 1.0), ChainTask::new(2.0, 1.0)],
+        );
+        let alloc = dealloc(&job, 0.5);
+        assert_eq!(alloc.sizes, vec![2.0, 2.0]);
+    }
+
+    fn random_chain(rng: &mut Pcg32) -> ChainJob {
+        let l = rng.range_inclusive(1, 8) as usize;
+        let tasks: Vec<ChainTask> = (0..l)
+            .map(|_| ChainTask::new(rng.uniform(0.2, 5.0), rng.uniform(1.0, 64.0)))
+            .collect();
+        let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
+        let window = makespan * rng.uniform(1.0, 3.0);
+        ChainJob::new(0, 0.0, window, tasks)
+    }
+}

@@ -1,0 +1,143 @@
+//! The paper's parametric policies and the baseline heuristics.
+//!
+//! A policy is the tuple `π = {β, β₀, b}` (§5):
+//!
+//! * `β`  — assumed availability of spot instances (expected fraction of
+//!   time a spot request is filled);
+//! * `β₀` — sufficiency index of self-owned instances, driving Eq. (12);
+//! * `b`  — bid price for spot instances (EC2/Azure; `None` for Google).
+//!
+//! The grids `C1`, `C2`, `B` and the policy sets `P` (proposed) and `P'`
+//! (benchmark) replicate §6.1 exactly.
+
+pub mod single_task;
+pub mod dealloc;
+pub mod selfowned;
+pub mod baselines;
+
+pub use baselines::DeadlinePolicy;
+pub use dealloc::{dealloc, windows_to_deadlines};
+
+/// A parametric policy `{β, β₀, b}`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Policy {
+    /// Assumed spot availability β ∈ (0, 1].
+    pub beta: f64,
+    /// Sufficiency index β₀ of self-owned instances; `None` when the user
+    /// has no self-owned instances (the β₀ machinery is bypassed).
+    pub beta0: Option<f64>,
+    /// Bid price `b` for spot instances.
+    pub bid: f64,
+}
+
+impl Policy {
+    pub fn new(beta: f64, beta0: Option<f64>, bid: f64) -> Policy {
+        assert!(beta > 0.0 && beta <= 1.0, "beta={beta}");
+        if let Some(b0) = beta0 {
+            assert!(b0 > 0.0 && b0 <= 1.0, "beta0={b0}");
+        }
+        Policy { beta, beta0, bid }
+    }
+
+    /// The β used by the deadline allocation (Algorithm 2 lines 1–5):
+    /// `Dealloc(β)` when `r = 0` or `β < β₀`, else `Dealloc(β₀)`.
+    pub fn dealloc_beta(&self, has_pool: bool) -> f64 {
+        match self.beta0 {
+            Some(b0) if has_pool && b0 <= self.beta => b0,
+            _ => self.beta,
+        }
+    }
+}
+
+/// §6.1 grid `C1` for β₀ (sufficiency index).
+pub fn grid_c1() -> Vec<f64> {
+    vec![
+        2.0 / 12.0,
+        4.0 / 14.0,
+        6.0 / 16.0,
+        8.0 / 18.0,
+        0.5,
+        0.6,
+        0.7,
+    ]
+}
+
+/// §6.1 grid `C2` for β (spot availability).
+pub fn grid_c2() -> Vec<f64> {
+    vec![1.0, 1.0 / 1.3, 1.0 / 1.6, 1.0 / 1.9, 1.0 / 2.2]
+}
+
+/// §6.1 grid `B` for bids.
+pub fn grid_b() -> Vec<f64> {
+    vec![0.18, 0.21, 0.24, 0.27, 0.3]
+}
+
+/// The proposed policy set `P` without self-owned instances:
+/// `{(β, b) | β ∈ C2, b ∈ B}` (25 policies).
+pub fn policy_set_spot_only() -> Vec<Policy> {
+    let mut out = Vec::new();
+    for &beta in &grid_c2() {
+        for &bid in &grid_b() {
+            out.push(Policy::new(beta, None, bid));
+        }
+    }
+    out
+}
+
+/// The proposed policy set `P` with self-owned instances:
+/// `{(β, b, β₀) | β₀ ∈ C1, β ∈ C2, b ∈ B}` (175 policies).
+pub fn policy_set_full() -> Vec<Policy> {
+    let mut out = Vec::new();
+    for &beta0 in &grid_c1() {
+        for &beta in &grid_c2() {
+            for &bid in &grid_b() {
+                out.push(Policy::new(beta, Some(beta0), bid));
+            }
+        }
+    }
+    out
+}
+
+/// The benchmark policy set `P' = {b | b ∈ B}` (bid-only; deadline and
+/// self-owned allocation come from the baseline heuristics).
+pub fn benchmark_bids() -> Vec<f64> {
+    grid_b()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_match_paper() {
+        assert_eq!(grid_c1().len(), 7);
+        assert_eq!(grid_c2().len(), 5);
+        assert_eq!(grid_b().len(), 5);
+        assert_eq!(policy_set_spot_only().len(), 25);
+        assert_eq!(policy_set_full().len(), 175);
+        assert!((grid_c1()[0] - 1.0 / 6.0).abs() < 1e-12);
+        assert_eq!(grid_c2()[0], 1.0);
+        assert_eq!(grid_b()[4], 0.3);
+    }
+
+    #[test]
+    fn dealloc_beta_selection() {
+        // r=0: always β.
+        let p = Policy::new(0.5, Some(0.2), 0.2);
+        assert_eq!(p.dealloc_beta(false), 0.5);
+        // pool + β₀ ≤ β: Dealloc(β₀).
+        assert_eq!(p.dealloc_beta(true), 0.2);
+        // pool + β < β₀: Dealloc(β).
+        let q = Policy::new(0.5, Some(0.7), 0.2);
+        assert_eq!(q.dealloc_beta(true), 0.5);
+        // no β₀ at all.
+        let r = Policy::new(0.5, None, 0.2);
+        assert_eq!(r.dealloc_beta(true), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_beta() {
+        Policy::new(0.0, None, 0.2);
+    }
+}

@@ -1,0 +1,220 @@
+//! Closed-form single-task analysis: Definitions 3.1/3.2 and
+//! Propositions 4.1, 4.2, 4.5.
+//!
+//! A task with workload `z`, parallelism `δ` and minimum execution time
+//! `e = z/δ` runs in a window of size `ŝ`. Under assumed spot availability
+//! `β`, the expected-optimal strategy is all-spot until the (expected)
+//! turning point, then all on-demand.
+
+/// Expected spot-processable workload `z^o` for a window of size `hat_s`
+/// (Prop. 4.2, Eq. 9). `x = ŝ − e` is the slack beyond the minimum
+/// execution time.
+pub fn spot_capacity(z: f64, delta: f64, hat_s: f64, beta: f64) -> f64 {
+    let e = z / delta;
+    debug_assert!(hat_s >= e - 1e-9, "window {hat_s} below e={e}");
+    if beta >= 1.0 {
+        // Perfectly available spot: everything fits on spot.
+        return z;
+    }
+    if hat_s >= e / beta {
+        z
+    } else {
+        let x = (hat_s - e).max(0.0);
+        (beta / (1.0 - beta) * delta * x).min(z)
+    }
+}
+
+/// Expected turning point, as the duration `τ` of the all-spot phase from
+/// the window start (Prop. 4.1 / Eq. 15–16): `τ = (δ·ŝ − z) / (δ·(1−β))`.
+///
+/// Returns `None` when the window is large enough (`ŝ ≥ e/β`) that the task
+/// is expected to finish on spot alone (no turning point).
+pub fn expected_turning_point(z: f64, delta: f64, hat_s: f64, beta: f64) -> Option<f64> {
+    let e = z / delta;
+    if beta >= 1.0 || hat_s >= e / beta {
+        return None;
+    }
+    let tau = (delta * hat_s - z) / (delta * (1.0 - beta));
+    Some(tau.clamp(0.0, hat_s))
+}
+
+/// Expected turning point for a general mix of `s` spot and `o` on-demand
+/// instances (the process of Definition 3.2 before Prop. 4.1 specializes to
+/// all-spot): `z̃(t) = z̃ − (o + β·s)·t` meets `(ŝ − t)·δeff` at
+/// `τ = (δeff·ŝ − z̃) / (δeff − o − β·s)`. Used by the Figure-2 toy, which
+/// runs `o = s = 1`.
+pub fn expected_turning_point_mixed(
+    z_rem: f64,
+    delta_eff: f64,
+    hat_s: f64,
+    beta: f64,
+    s: f64,
+    o: f64,
+) -> Option<f64> {
+    debug_assert!(s + o <= delta_eff + 1e-9);
+    let drain = o + beta * s;
+    // Completion before turning: z̃/drain if the margin never closes.
+    let denom = delta_eff - drain;
+    if denom <= 1e-12 {
+        // Remaining capacity fully deployed; no turning point possible.
+        return None;
+    }
+    let tau = (delta_eff * hat_s - z_rem) / denom;
+    if tau >= z_rem / drain.max(1e-12) {
+        // z̃ hits zero before the turning point.
+        return None;
+    }
+    Some(tau.clamp(0.0, hat_s))
+}
+
+/// Definition 3.1: does a task with remaining workload `z_rem`, effective
+/// parallelism `delta_eff = δ − r`, at time-to-deadline `time_left`, still
+/// have flexibility to gamble on spot?
+///
+/// Flexibility holds while `z_rem / delta_eff < time_left`; equality is the
+/// turning point (Def. 3.2) where the allocation must switch to all
+/// on-demand to meet the deadline.
+pub fn has_flexibility(z_rem: f64, delta_eff: f64, time_left: f64) -> bool {
+    debug_assert!(delta_eff > 0.0);
+    z_rem / delta_eff < time_left - 1e-12
+}
+
+/// Expected workload processed by spot for a task that also holds `r`
+/// self-owned instances for the whole window (Prop. 4.5).
+///
+/// With `r = f(β₀)` (Eq. 11) the result depends only on `min(β, β₀)`:
+/// both cases (13) and (14) have the form of Eq. (9) with β replaced by
+/// `min(β, β₀)`.
+pub fn spot_capacity_with_selfowned(
+    z: f64,
+    delta: f64,
+    hat_s: f64,
+    beta: f64,
+    beta0: f64,
+) -> f64 {
+    spot_capacity(z, delta, hat_s, beta.min(beta0))
+}
+
+/// Minimum window size for an all-spot finish: `e/β` (Prop. 4.1, Eq. 6).
+pub fn all_spot_window(e: f64, beta: f64) -> f64 {
+    e / beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_all, Config};
+
+    #[test]
+    fn prop41_boundary_cases() {
+        // ŝ = e → turning point at window start, zero spot.
+        let (z, d, beta) = (2.0, 2.0, 0.5);
+        let e = z / d;
+        assert_eq!(spot_capacity(z, d, e, beta), 0.0);
+        assert_eq!(expected_turning_point(z, d, e, beta), Some(0.0));
+        // ŝ = e/β → all spot, no turning point.
+        assert_eq!(spot_capacity(z, d, e / beta, beta), z);
+        assert_eq!(expected_turning_point(z, d, e / beta, beta), None);
+    }
+
+    #[test]
+    fn paper_4_1_1_first_task() {
+        // §4.1.1 / Fig. 4: task 1 (z=1.5, δ=2) with ŝ = 4/3, β = 0.5:
+        // spot phase τ = 7/6, spot workload 7/6.
+        let tau = expected_turning_point(1.5, 2.0, 4.0 / 3.0, 0.5).unwrap();
+        assert!((tau - 7.0 / 6.0).abs() < 1e-12, "tau={tau}");
+        let zo = spot_capacity(1.5, 2.0, 4.0 / 3.0, 0.5);
+        assert!((zo - 7.0 / 6.0).abs() < 1e-12, "zo={zo}");
+    }
+
+    #[test]
+    fn toy_example_of_section_3_3_1() {
+        // δ=3, window [0,2], r=1 self-owned ⇒ effective δ−r=2, β=0.5.
+        // The paper's toy runs o=s=1 (Fig. 2): z=5.5 → z̃=3.5 → turning
+        // point at t=1; z=3.5 → z̃=1.5 → no turning point.
+        assert!(expected_turning_point_mixed(1.5, 2.0, 2.0, 0.5, 1.0, 1.0).is_none());
+        let tau = expected_turning_point_mixed(3.5, 2.0, 2.0, 0.5, 1.0, 1.0).unwrap();
+        assert!((tau - 1.0).abs() < 1e-12, "tau={tau}");
+        // Under the expected-OPTIMAL all-spot strategy (Prop. 4.1) the
+        // turning point moves earlier: τ = (δeff·ŝ − z̃)/(δeff(1−β)) = 0.5.
+        let tau_opt = expected_turning_point(3.5, 2.0, 2.0, 0.5).unwrap();
+        assert!((tau_opt - 0.5).abs() < 1e-12, "tau_opt={tau_opt}");
+    }
+
+    #[test]
+    fn flexibility_definition() {
+        assert!(has_flexibility(1.0, 2.0, 1.0)); // 0.5 < 1
+        assert!(!has_flexibility(2.0, 2.0, 1.0)); // exactly the turning point
+        assert!(!has_flexibility(3.0, 2.0, 1.0)); // past it
+    }
+
+    #[test]
+    fn spot_capacity_monotone_and_capped() {
+        for_all(Config::cases(300).seed(41), |rng| {
+            let delta = rng.uniform(1.0, 64.0);
+            let e = rng.uniform(0.1, 10.0);
+            let z = e * delta;
+            let beta = rng.uniform(0.05, 0.99);
+            let s1 = e + rng.uniform(0.0, 3.0 * e / beta);
+            let s2 = s1 + rng.uniform(0.0, e);
+            let c1 = spot_capacity(z, delta, s1, beta);
+            let c2 = spot_capacity(z, delta, s2, beta);
+            if c2 + 1e-9 < c1 {
+                return Err(format!("not monotone: {c1} > {c2}"));
+            }
+            if c1 > z + 1e-9 || c1 < -1e-9 {
+                return Err(format!("out of [0, z]: {c1} (z={z})"));
+            }
+            // Saturation beyond e/β.
+            let cbig = spot_capacity(z, delta, 10.0 * e / beta, beta);
+            if (cbig - z).abs() > 1e-9 {
+                return Err(format!("no saturation: {cbig} != {z}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn turning_point_consistency_with_capacity() {
+        // Workload identity: spot phase τ at δ·β plus on-demand tail
+        // δ·(ŝ−τ) must equal z (Eq. 15 with s=δ, o=0).
+        for_all(Config::cases(300).seed(42), |rng| {
+            let delta = rng.uniform(1.0, 64.0);
+            let e = rng.uniform(0.1, 10.0);
+            let z = e * delta;
+            let beta = rng.uniform(0.05, 0.95);
+            let hat_s = rng.uniform(e, e / beta);
+            if let Some(tau) = expected_turning_point(z, delta, hat_s, beta) {
+                let processed = tau * delta * beta + (hat_s - tau) * delta;
+                if (processed - z).abs() > 1e-6 * z.max(1.0) {
+                    return Err(format!("identity violated: {processed} vs {z}"));
+                }
+                let zo = spot_capacity(z, delta, hat_s, beta);
+                if (zo - tau * delta * beta).abs() > 1e-6 * z.max(1.0) {
+                    return Err(format!("z^o mismatch: {zo} vs {}", tau * delta * beta));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn selfowned_capacity_uses_min_beta() {
+        let (z, d) = (4.0, 2.0);
+        let s = 3.0;
+        assert_eq!(
+            spot_capacity_with_selfowned(z, d, s, 0.5, 0.3),
+            spot_capacity(z, d, s, 0.3)
+        );
+        assert_eq!(
+            spot_capacity_with_selfowned(z, d, s, 0.3, 0.5),
+            spot_capacity(z, d, s, 0.3)
+        );
+    }
+
+    #[test]
+    fn beta_one_is_all_spot() {
+        assert_eq!(spot_capacity(5.0, 2.0, 2.5, 1.0), 5.0);
+        assert!(expected_turning_point(5.0, 2.0, 2.5, 1.0).is_none());
+    }
+}

@@ -1,0 +1,205 @@
+//! Marshalling between the native job/policy types and the fixed-shape f32
+//! tensors of the AOT artifacts.
+
+use crate::learning::counterfactual::{CounterfactualJob, L_MAX, NB_MAX, N_POL, S_MAX};
+use crate::policy::Policy;
+
+/// Padding price for unavailable/padded slots. A large finite value rather
+/// than +inf: it never wins any bid and keeps f32 arithmetic NaN-free inside
+/// the kernel.
+pub const PRICE_PAD: f32 = 1.0e9;
+
+/// A job padded to the artifact shapes.
+#[derive(Debug, Clone)]
+pub struct MarshalledJob {
+    pub e: Vec<f32>,
+    pub delta: Vec<f32>,
+    pub z: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub order: Vec<i32>,
+    pub prices: Vec<f32>,
+    pub navail: Vec<f32>,
+    pub window: f32,
+    pub dt: f32,
+    pub od_price: f32,
+    pub l: usize,
+}
+
+impl MarshalledJob {
+    pub fn from_counterfactual(job: &CounterfactualJob) -> MarshalledJob {
+        assert!(job.l <= L_MAX, "chain length {} exceeds L_MAX={L_MAX}", job.l);
+        assert!(
+            job.prices.len() <= S_MAX,
+            "trace window {} exceeds S_MAX={S_MAX} (resample first)",
+            job.prices.len()
+        );
+        let mut e = vec![0.0f32; L_MAX];
+        let mut delta = vec![1.0f32; L_MAX]; // pad δ=1 avoids div-by-zero
+        let mut z = vec![0.0f32; L_MAX];
+        let mut mask = vec![0.0f32; L_MAX];
+        // Padded order entries point at padded tasks (need = 0, no effect).
+        let mut order: Vec<i32> = (0..L_MAX as i32).collect();
+        for i in 0..job.l {
+            e[i] = job.e[i] as f32;
+            delta[i] = job.delta[i] as f32;
+            z[i] = job.z[i] as f32;
+            mask[i] = 1.0;
+        }
+        for (k, &oi) in job.order.iter().enumerate() {
+            order[k] = oi as i32;
+        }
+        // Real tasks occupy order[0..l]; pads occupy the tail in index
+        // order, skipping indices already used.
+        let mut used = vec![false; L_MAX];
+        for &oi in &job.order {
+            used[oi] = true;
+        }
+        let mut tail = job.l;
+        for i in 0..L_MAX {
+            if !used[i] {
+                order[tail] = i as i32;
+                tail += 1;
+            }
+        }
+
+        let mut prices = vec![PRICE_PAD; S_MAX];
+        let mut navail = vec![0.0f32; S_MAX];
+        for (k, &p) in job.prices.iter().enumerate() {
+            prices[k] = if p.is_finite() { p as f32 } else { PRICE_PAD };
+        }
+        for (k, &n) in job.navail.iter().enumerate() {
+            navail[k] = n as f32;
+        }
+
+        MarshalledJob {
+            e,
+            delta,
+            z,
+            mask,
+            order,
+            prices,
+            navail,
+            window: job.window as f32,
+            dt: job.dt as f32,
+            od_price: job.od_price as f32,
+            l: job.l,
+        }
+    }
+}
+
+/// The policy grid padded to `N_POL` (masked tail). Bids are deduplicated
+/// into `bid_values[NB_MAX]` + `bid_idx[N_POL]`: the AOT model resolves the
+/// spot market once per distinct bid (the §6.1 grids have 5).
+#[derive(Debug, Clone)]
+pub struct MarshalledGrid {
+    pub beta: Vec<f32>,
+    pub beta0: Vec<f32>,
+    pub bid_values: Vec<f32>,
+    pub bid_idx: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub has_pool: f32,
+    pub n: usize,
+}
+
+impl MarshalledGrid {
+    pub fn from_policies(policies: &[Policy], has_pool: bool) -> MarshalledGrid {
+        assert!(
+            policies.len() <= N_POL,
+            "grid {} exceeds N_POL={N_POL}",
+            policies.len()
+        );
+        let mut uniq: Vec<f32> = policies.iter().map(|p| p.bid as f32).collect();
+        uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        uniq.dedup();
+        assert!(
+            uniq.len() <= NB_MAX,
+            "grid has {} distinct bids, max {NB_MAX}",
+            uniq.len()
+        );
+        let mut beta = vec![1.0f32; N_POL];
+        let mut beta0 = vec![0.0f32; N_POL];
+        // Pad bid 0.0: wins nothing.
+        let mut bid_values = vec![0.0f32; NB_MAX];
+        bid_values[..uniq.len()].copy_from_slice(&uniq);
+        let mut bid_idx = vec![0i32; N_POL];
+        let mut mask = vec![0.0f32; N_POL];
+        for (i, p) in policies.iter().enumerate() {
+            beta[i] = p.beta as f32;
+            beta0[i] = p.beta0.unwrap_or(0.0) as f32;
+            bid_idx[i] = uniq
+                .iter()
+                .position(|&b| b == p.bid as f32)
+                .expect("bid present") as i32;
+            mask[i] = 1.0;
+        }
+        MarshalledGrid {
+            beta,
+            beta0,
+            bid_values,
+            bid_idx,
+            mask,
+            has_pool: if has_pool { 1.0 } else { 0.0 },
+            n: policies.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ChainJob;
+
+    #[test]
+    fn marshalling_pads_and_preserves() {
+        let job = ChainJob::paper_example();
+        let cf = CounterfactualJob::from_job(&job, vec![0.2; 48], 1.0 / 12.0, vec![3.0; 48], 1.0);
+        let m = MarshalledJob::from_counterfactual(&cf);
+        assert_eq!(m.l, 4);
+        assert_eq!(m.e.len(), L_MAX);
+        assert!((m.e[0] - 0.75).abs() < 1e-6);
+        assert_eq!(m.mask[3], 1.0);
+        assert_eq!(m.mask[4], 0.0);
+        assert_eq!(m.delta[100], 1.0); // pad
+        assert_eq!(m.prices[47], 0.2);
+        assert_eq!(m.prices[48], PRICE_PAD);
+        // Order is a permutation of 0..L_MAX.
+        let mut sorted = m.order.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..L_MAX as i32).collect::<Vec<_>>());
+        // Real tasks first: first 4 entries are the dealloc order (δ desc:
+        // task 2 (δ=3), task 0 (δ=2), then tasks 1, 3 (δ=1)).
+        assert_eq!(&m.order[..4], &[2, 0, 1, 3]);
+    }
+
+    #[test]
+    fn grid_marshalling() {
+        let grid = crate::policy::policy_set_full();
+        let m = MarshalledGrid::from_policies(&grid, true);
+        assert_eq!(m.n, 175);
+        assert_eq!(m.mask[174], 1.0);
+        assert_eq!(m.mask[175], 0.0);
+        assert_eq!(m.has_pool, 1.0);
+        assert!((m.beta0[0] - (2.0 / 12.0) as f32).abs() < 1e-6);
+        // 5 distinct bids, dedup + indices roundtrip.
+        assert_eq!(&m.bid_values[..5], &[0.18, 0.21, 0.24, 0.27, 0.3]);
+        assert_eq!(m.bid_values[5], 0.0);
+        for (i, p) in grid.iter().enumerate() {
+            assert_eq!(m.bid_values[m.bid_idx[i] as usize], p.bid as f32);
+        }
+    }
+
+    #[test]
+    fn infinite_prices_become_pad() {
+        let job = ChainJob::paper_example();
+        let cf = CounterfactualJob::from_job(
+            &job,
+            vec![f64::INFINITY, 0.3],
+            1.0 / 12.0,
+            vec![0.0, 0.0],
+            1.0,
+        );
+        let m = MarshalledJob::from_counterfactual(&cf);
+        assert_eq!(m.prices[0], PRICE_PAD);
+        assert_eq!(m.prices[1], 0.3);
+    }
+}

@@ -1,0 +1,153 @@
+//! Loading and executing the AOT artifacts through the PJRT CPU client.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::batch::{MarshalledGrid, MarshalledJob};
+use crate::learning::counterfactual::{CounterfactualJob, PolicyGridEval, L_MAX, N_POL, S_MAX};
+use crate::policy::Policy;
+
+/// The compiled policy-grid cost kernel.
+pub struct PolicyCostKernel {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The compiled TOLA weight-update kernel.
+pub struct TolaUpdateKernel {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Owns the PJRT client and the loaded executables.
+pub struct ArtifactRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub policy_cost: PolicyCostKernel,
+    pub tola_update: Option<TolaUpdateKernel>,
+}
+
+fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("loading HLO text from {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+impl ArtifactRuntime {
+    /// Load all artifacts from `dir` (missing `tola_update` is tolerated:
+    /// the native update is cheap; the policy-cost kernel is mandatory).
+    pub fn load(dir: &Path) -> Result<ArtifactRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let policy_cost = PolicyCostKernel {
+            exe: load_exe(&client, &dir.join("policy_cost.hlo.txt"))?,
+        };
+        let tola_path = dir.join("tola_update.hlo.txt");
+        let tola_update = if tola_path.exists() {
+            Some(TolaUpdateKernel {
+                exe: load_exe(&client, &tola_path)?,
+            })
+        } else {
+            None
+        };
+        Ok(ArtifactRuntime {
+            client,
+            policy_cost,
+            tola_update,
+        })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<ArtifactRuntime> {
+        Self::load(&super::artifact_dir())
+    }
+}
+
+fn lit_f32_1d(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+fn lit_i32_1d(xs: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+impl PolicyCostKernel {
+    /// Run the policy-grid sweep for one job. Returns per-policy cost and
+    /// work breakdown, truncated to the real grid size.
+    pub fn eval(
+        &self,
+        job: &CounterfactualJob,
+        policies: &[Policy],
+        has_pool: bool,
+    ) -> Result<PolicyGridEval> {
+        let m = MarshalledJob::from_counterfactual(job);
+        let g = MarshalledGrid::from_policies(policies, has_pool);
+        debug_assert_eq!(m.e.len(), L_MAX);
+        debug_assert_eq!(m.prices.len(), S_MAX);
+        debug_assert_eq!(g.beta.len(), N_POL);
+
+        let inputs = [
+            lit_f32_1d(&m.e),
+            lit_f32_1d(&m.delta),
+            lit_f32_1d(&m.z),
+            lit_f32_1d(&m.mask),
+            lit_i32_1d(&m.order),
+            lit_f32_1d(&m.prices),
+            lit_f32_1d(&m.navail),
+            lit_scalar(m.window),
+            lit_scalar(m.dt),
+            lit_f32_1d(&g.beta),
+            lit_f32_1d(&g.beta0),
+            lit_f32_1d(&g.bid_values),
+            lit_i32_1d(&g.bid_idx),
+            lit_f32_1d(&g.mask),
+            lit_scalar(m.od_price),
+            lit_scalar(g.has_pool),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True; outputs: (cost, spot, od, so).
+        let (cost, spot, od, so) = result.to_tuple4()?;
+        let take = |lit: xla::Literal| -> Result<Vec<f64>> {
+            Ok(lit
+                .to_vec::<f32>()?
+                .into_iter()
+                .take(g.n)
+                .map(|x| x as f64)
+                .collect())
+        };
+        Ok(PolicyGridEval {
+            costs: take(cost)?,
+            spot_work: take(spot)?,
+            od_work: take(od)?,
+            so_work: take(so)?,
+        })
+    }
+}
+
+impl TolaUpdateKernel {
+    /// `w' = normalize(w ⊙ exp(−η·(c − min c)))` on the padded grid.
+    pub fn update(&self, weights: &[f64], costs: &[f64], eta: f64) -> Result<Vec<f64>> {
+        assert_eq!(weights.len(), costs.len());
+        assert!(weights.len() <= N_POL);
+        let mut w = vec![0.0f32; N_POL];
+        let mut c = vec![f32::MAX; N_POL]; // padded costs never win
+        for (i, (&wi, &ci)) in weights.iter().zip(costs).enumerate() {
+            w[i] = wi as f32;
+            c[i] = ci as f32;
+        }
+        let inputs = [lit_f32_1d(&w), lit_f32_1d(&c), lit_scalar(eta as f32)];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out
+            .to_vec::<f32>()?
+            .into_iter()
+            .take(weights.len())
+            .map(|x| x as f64)
+            .collect())
+    }
+}

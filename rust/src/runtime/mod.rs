@@ -1,0 +1,28 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! executes them on the request path. Python never runs here.
+//!
+//! Artifacts are produced once by `make artifacts`
+//! (`python/compile/aot.py`):
+//!
+//! * `artifacts/policy_cost.hlo.txt` — the counterfactual policy-grid sweep
+//!   ([`crate::learning::counterfactual`] semantics, shapes `L_MAX=128`,
+//!   `S_MAX=2048`, `N_POL=192`);
+//! * `artifacts/tola_update.hlo.txt` — the TOLA exponentiated-weights
+//!   update.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes `HloModuleProto` with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod exec;
+pub mod batch;
+
+pub use batch::MarshalledJob;
+pub use exec::{ArtifactRuntime, PolicyCostKernel, TolaUpdateKernel};
+
+/// Default artifact directory, overridable with `DAGCLOUD_ARTIFACTS`.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("DAGCLOUD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

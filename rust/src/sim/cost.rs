@@ -1,0 +1,88 @@
+//! The paper's evaluation metrics (§6.1 "Performance Metric").
+//!
+//! * `α_{x1,x2}(π)` — average unit cost of processing all jobs under policy
+//!   π with `x1` self-owned instances on job type `x2`;
+//! * `α` / `α'` — minimum over the proposed / benchmark policy sets;
+//! * `ρ = 1 − α/α'` — cost improvement;
+//! * `μ` — ratio of self-owned utilization, proposed over benchmark.
+
+use super::horizon::HorizonReport;
+
+/// Minimum average unit cost over a set of per-policy reports
+/// (`α = min_π α(π)`); returns the index of the winning policy too.
+pub fn min_unit_cost(reports: &[HorizonReport]) -> (f64, usize) {
+    assert!(!reports.is_empty());
+    let mut best = f64::INFINITY;
+    let mut idx = 0;
+    for (i, r) in reports.iter().enumerate() {
+        let a = r.average_unit_cost();
+        if a < best {
+            best = a;
+            idx = i;
+        }
+    }
+    (best, idx)
+}
+
+/// Cost improvement `ρ = 1 − α / α'` of the proposed `α` over the benchmark
+/// `α'`.
+pub fn cost_improvement(alpha_proposed: f64, alpha_benchmark: f64) -> f64 {
+    if alpha_benchmark <= 0.0 {
+        return 0.0;
+    }
+    1.0 - alpha_proposed / alpha_benchmark
+}
+
+/// Utilization ratio `μ` = proposed self-owned utilization over benchmark's.
+pub fn utilization_ratio(proposed: &HorizonReport, benchmark: &HorizonReport) -> f64 {
+    if benchmark.pool_utilization <= 0.0 {
+        return if proposed.pool_utilization <= 0.0 { 1.0 } else { f64::INFINITY };
+    }
+    proposed.pool_utilization / benchmark.pool_utilization
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::CostLedger;
+
+    fn report(cost: f64, work: f64, util: f64) -> HorizonReport {
+        let mut ledger = CostLedger::new();
+        ledger.cost_ondemand = cost;
+        ledger.work_ondemand = work;
+        HorizonReport {
+            strategy: "t".into(),
+            jobs: 1,
+            ledger,
+            total_workload: work,
+            job_costs: vec![cost],
+            deadlines_met: 1,
+            pool_utilization: util,
+            selfowned_work: 0.0,
+        }
+    }
+
+    #[test]
+    fn min_unit_cost_picks_cheapest() {
+        let reports = vec![report(10.0, 10.0, 0.0), report(5.0, 10.0, 0.0), report(8.0, 10.0, 0.0)];
+        let (a, i) = min_unit_cost(&reports);
+        assert_eq!(i, 1);
+        assert!((a - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rho_definition() {
+        assert!((cost_improvement(0.5, 1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(cost_improvement(1.0, 1.0), 0.0);
+        assert_eq!(cost_improvement(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn mu_definition() {
+        let p = report(1.0, 1.0, 0.6);
+        let b = report(1.0, 1.0, 0.8);
+        assert!((utilization_ratio(&p, &b) - 0.75).abs() < 1e-12);
+        let z = report(1.0, 1.0, 0.0);
+        assert_eq!(utilization_ratio(&z, &z), 1.0);
+    }
+}

@@ -1,0 +1,645 @@
+//! Execution of chain jobs against a realized price trace.
+//!
+//! The executor follows Algorithm 2's event semantics exactly, in
+//! continuous time with slot-piecewise-constant prices:
+//!
+//! * a task runs in `[ς̃_i, ς_i]` where `ς̃_i` is the realized finish of its
+//!   predecessor (early finishes propagate) and `ς_i` its allocated
+//!   deadline;
+//! * it holds `r_i` self-owned instances for the whole window (rule (12) or
+//!   the naive baseline), leaving `z̃ = z − r_i·ŝ` for spot/on-demand;
+//! * while it *has flexibility* (Def. 3.1) it requests `δ−r` spot instances
+//!   at bid `b`, paying the realized spot price for slots actually won;
+//! * at the *turning point* (Def. 3.2) it switches to `δ−r` on-demand
+//!   instances through its deadline.
+//!
+//! Within an unavailable slot the flexibility margin `(ς_i−t) − z̃/(δ−r)`
+//! shrinks at unit rate, so the executor computes the exact in-slot turning
+//! point rather than checking only at slot boundaries — matching the
+//! paper's "at every moment" semantics and guaranteeing deadlines are met
+//! exactly rather than overshot by quantization.
+
+use crate::market::{CostLedger, InstanceKind, PriceTrace, SelfOwnedPool};
+use crate::policy::baselines::greedy_must_switch;
+use crate::policy::dealloc::WindowAllocation;
+use crate::policy::selfowned::{naive_allocation, rule12};
+use crate::workload::ChainJob;
+
+const EPS: f64 = 1e-9;
+
+/// How self-owned instances are granted per task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SelfOwnedRule {
+    /// No self-owned instances (r = 0).
+    None,
+    /// The paper's rule (12) with sufficiency index β₀.
+    Rule12 { beta0: f64 },
+    /// The §6.1 benchmark: grab `min(N, δ)`.
+    Naive,
+}
+
+/// A complete per-job strategy.
+#[derive(Debug, Clone)]
+pub enum ChainStrategy<'a> {
+    /// Pre-allocated windows (Dealloc or Even) + Def. 3.1/3.2 instance
+    /// allocation inside each window.
+    Windows {
+        windows: &'a WindowAllocation,
+        selfowned: SelfOwnedRule,
+        bid: f64,
+    },
+    /// The Greedy baseline: all-spot for the current task until the
+    /// remaining critical path meets the remaining window, then all
+    /// on-demand. No self-owned instances (§6.1 applies it to spot+OD
+    /// only).
+    Greedy { bid: f64 },
+}
+
+/// Outcome of one task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskOutcome {
+    pub start: f64,
+    pub deadline: f64,
+    pub finish: f64,
+    /// Self-owned instances held over `[start, deadline]`.
+    pub r: u32,
+    pub so_work: f64,
+    pub spot_work: f64,
+    pub od_work: f64,
+    pub spot_cost: f64,
+    pub od_cost: f64,
+}
+
+/// Outcome of a job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job_id: u64,
+    pub ledger: CostLedger,
+    pub tasks: Vec<TaskOutcome>,
+    pub finish: f64,
+    pub met_deadline: bool,
+}
+
+impl JobOutcome {
+    pub fn cost(&self) -> f64 {
+        self.ledger.total_cost()
+    }
+}
+
+/// Execute one task in `[start, deadline]` with `r` self-owned instances
+/// already granted, bidding `bid` for spot, falling back to on-demand at
+/// `od_price` at the turning point.
+pub fn execute_task(
+    z: f64,
+    delta: f64,
+    start: f64,
+    deadline: f64,
+    r: u32,
+    bid: f64,
+    trace: &PriceTrace,
+    od_price: f64,
+) -> TaskOutcome {
+    debug_assert!(deadline > start - EPS);
+    let hat_s = (deadline - start).max(0.0);
+    let delta_eff = delta - r as f64;
+    let so_cap = r as f64 * hat_s;
+    let so_work = z.min(so_cap);
+    let mut zt = z - so_work; // z̃: workload for spot/on-demand
+
+    let mut out = TaskOutcome {
+        start,
+        deadline,
+        finish: start,
+        r,
+        so_work,
+        spot_work: 0.0,
+        od_work: 0.0,
+        spot_cost: 0.0,
+        od_cost: 0.0,
+    };
+
+    if zt <= EPS {
+        // Self-owned covers everything; the instances are held through the
+        // window, so the task completes at its deadline (if r > 0) or
+        // immediately (degenerate z = 0).
+        out.finish = if r > 0 { deadline } else { start };
+        return out;
+    }
+    if delta_eff <= EPS {
+        // No spot/on-demand headroom and work remains: infeasible input
+        // (only possible for infeasible windows). Best effort: nothing else
+        // to do, the task overruns.
+        out.finish = deadline + zt; // sentinel overrun
+        return out;
+    }
+
+    let dt = trace.slot_len();
+    let mut t = start;
+    loop {
+        if zt <= EPS {
+            // Spot/OD share finished; self-owned still holds to ς_i.
+            out.finish = if r > 0 { deadline } else { t };
+            break;
+        }
+        let time_left = deadline - t;
+        if zt >= delta_eff * time_left - EPS {
+            // Turning point (Def. 3.2): all on-demand through the deadline.
+            out.od_work += zt;
+            out.od_cost += od_price * zt;
+            let od_finish = t + zt / delta_eff;
+            out.finish = if r > 0 { deadline.max(od_finish) } else { od_finish };
+            break;
+        }
+        // Next slot boundary strictly after t. Guard against fp division
+        // rounding making the "next" boundary equal to t (k·dt / dt can
+        // round down), which would stall the walk.
+        let mut slot_end = ((t / dt).floor() + 1.0) * dt;
+        while slot_end <= t {
+            slot_end += dt;
+        }
+        let seg_end = slot_end.min(deadline);
+        let price = trace.price_at(t + EPS);
+        if price <= bid {
+            // Winning slot: progress at δ−r; margin constant.
+            let t_fin = t + zt / delta_eff;
+            let upto = seg_end.min(t_fin);
+            let dw = delta_eff * (upto - t);
+            out.spot_work += dw;
+            out.spot_cost += price * dw;
+            zt -= dw;
+            t = upto;
+        } else {
+            // Losing slot: no progress; margin shrinks at unit rate. The
+            // in-slot turning point is at t_c = ς_i − z̃/(δ−r).
+            let t_c = deadline - zt / delta_eff;
+            t = if t_c <= seg_end + EPS { t_c.max(t) } else { seg_end };
+        }
+    }
+    out
+}
+
+/// Execute a whole chain job under a strategy.
+///
+/// `pool` supplies self-owned instances; reservations are made at each
+/// task's realized start over `[start, ς_i]` and are permanent for the
+/// window (the paper holds them through the task deadline).
+pub fn execute_chain(
+    job: &ChainJob,
+    strategy: &ChainStrategy,
+    trace: &PriceTrace,
+    pool: Option<&mut SelfOwnedPool>,
+    od_price: f64,
+) -> JobOutcome {
+    match strategy {
+        ChainStrategy::Windows {
+            windows,
+            selfowned,
+            bid,
+        } => execute_windows(job, windows, *selfowned, *bid, trace, pool, od_price),
+        ChainStrategy::Greedy { bid } => execute_greedy(job, *bid, trace, od_price),
+    }
+}
+
+fn execute_windows(
+    job: &ChainJob,
+    windows: &WindowAllocation,
+    selfowned: SelfOwnedRule,
+    bid: f64,
+    trace: &PriceTrace,
+    mut pool: Option<&mut SelfOwnedPool>,
+    od_price: f64,
+) -> JobOutcome {
+    assert_eq!(windows.sizes.len(), job.num_tasks());
+    let mut ledger = CostLedger::new();
+    let mut tasks = Vec::with_capacity(job.num_tasks());
+    let mut t = job.arrival;
+    let mut deadline_cursor = job.arrival;
+
+    for (task, &size) in job.tasks.iter().zip(&windows.sizes) {
+        deadline_cursor += size;
+        let deadline = deadline_cursor;
+        let start = t.min(deadline); // early finishes only move starts earlier
+        let hat_s = deadline - start;
+
+        // Self-owned grant for [start, deadline].
+        let r = match (selfowned, pool.as_deref_mut()) {
+            (SelfOwnedRule::None, _) | (_, None) => 0,
+            (SelfOwnedRule::Rule12 { beta0 }, Some(p)) => {
+                let n = p.available_over(start, deadline);
+                let r = rule12(task.size, task.parallelism, hat_s, beta0, n);
+                let ok = p.reserve(r, start, deadline);
+                debug_assert!(ok, "rule12 grant exceeded pool");
+                r
+            }
+            (SelfOwnedRule::Naive, Some(p)) => {
+                let n = p.available_over(start, deadline);
+                let r = naive_allocation(task.parallelism, n);
+                let ok = p.reserve(r, start, deadline);
+                debug_assert!(ok, "naive grant exceeded pool");
+                r
+            }
+        };
+
+        let outcome = execute_task(
+            task.size,
+            task.parallelism,
+            start,
+            deadline,
+            r,
+            bid,
+            trace,
+            od_price,
+        );
+        ledger.charge(InstanceKind::SelfOwned, 1.0, outcome.so_work, 0.0);
+        ledger.charge(InstanceKind::Spot, 1.0, outcome.spot_work, 0.0);
+        ledger.cost_spot += outcome.spot_cost;
+        ledger.charge(InstanceKind::OnDemand, 1.0, outcome.od_work, 0.0);
+        ledger.cost_ondemand += outcome.od_cost;
+        t = outcome.finish;
+        tasks.push(outcome);
+    }
+
+    JobOutcome {
+        job_id: job.id,
+        finish: t,
+        met_deadline: t <= job.deadline + 1e-6,
+        ledger,
+        tasks,
+    }
+}
+
+fn execute_greedy(job: &ChainJob, bid: f64, trace: &PriceTrace, od_price: f64) -> JobOutcome {
+    let mut ledger = CostLedger::new();
+    let mut remaining: Vec<(f64, f64)> = job
+        .tasks
+        .iter()
+        .map(|t| (t.size, t.parallelism))
+        .collect();
+    let mut tasks: Vec<TaskOutcome> = job
+        .tasks
+        .iter()
+        .map(|_task| TaskOutcome {
+            start: job.arrival,
+            deadline: job.deadline,
+            finish: job.arrival,
+            r: 0,
+            so_work: 0.0,
+            spot_work: 0.0,
+            od_work: 0.0,
+            spot_cost: 0.0,
+            od_cost: 0.0,
+        })
+        .collect();
+
+    let dt = trace.slot_len();
+    let mut t = job.arrival;
+    let mut cur = 0usize;
+    let finish;
+    if !remaining.is_empty() {
+        tasks[0].start = t;
+    }
+    loop {
+        if cur >= remaining.len() {
+            finish = t;
+            break;
+        }
+        let rem_slice = &remaining[cur..];
+        if greedy_must_switch(rem_slice, job.deadline - t) {
+            // Switch: every remaining task runs at full δ on-demand,
+            // sequentially.
+            let mut tt = t;
+            for (k, &(z, delta)) in rem_slice.iter().enumerate() {
+                let idx = cur + k;
+                if k > 0 {
+                    tasks[idx].start = tt;
+                }
+                tasks[idx].od_work += z;
+                tasks[idx].od_cost += od_price * z;
+                ledger.charge(InstanceKind::OnDemand, 1.0, z, 0.0);
+                ledger.cost_ondemand += od_price * z;
+                tt += z / delta;
+                tasks[idx].finish = tt;
+            }
+            finish = tt;
+            break;
+        }
+        let (z, delta) = remaining[cur];
+        let mut slot_end = ((t / dt).floor() + 1.0) * dt;
+        while slot_end <= t {
+            slot_end += dt;
+        }
+        let price = trace.price_at(t + EPS);
+        if price <= bid {
+            let t_fin = t + z / delta;
+            let upto = slot_end.min(t_fin);
+            let dw = delta * (upto - t);
+            tasks[cur].spot_work += dw;
+            tasks[cur].spot_cost += price * dw;
+            ledger.charge(InstanceKind::Spot, 1.0, dw, 0.0);
+            ledger.cost_spot += price * dw;
+            remaining[cur].0 -= dw;
+            t = upto;
+            if remaining[cur].0 <= EPS {
+                tasks[cur].finish = t;
+                cur += 1;
+                if cur < remaining.len() {
+                    tasks[cur].start = t;
+                }
+            }
+        } else {
+            // No progress; the switch moment is when cp == remaining window.
+            let cp: f64 = rem_slice.iter().map(|(z, d)| z / d).sum();
+            let t_switch = job.deadline - cp;
+            t = if t_switch <= slot_end + EPS {
+                t_switch.max(t)
+            } else {
+                slot_end
+            };
+        }
+    }
+
+    JobOutcome {
+        job_id: job.id,
+        finish,
+        met_deadline: finish <= job.deadline + 1e-6,
+        ledger,
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::SLOTS_PER_UNIT;
+    use crate::policy::dealloc::dealloc;
+    use crate::util::prop::{for_all, Config};
+    use crate::util::rng::Pcg32;
+    use crate::workload::ChainTask;
+
+    /// Trace where spot is always available at a flat price.
+    fn always(price: f64, horizon: f64) -> PriceTrace {
+        let n = (horizon * SLOTS_PER_UNIT as f64) as usize + 2;
+        PriceTrace::from_prices(vec![price; n], 1.0 / SLOTS_PER_UNIT as f64)
+    }
+
+    /// Trace where spot is never available.
+    fn never(horizon: f64) -> PriceTrace {
+        let n = (horizon * SLOTS_PER_UNIT as f64) as usize + 2;
+        PriceTrace::from_prices(vec![f64::INFINITY; n], 1.0 / SLOTS_PER_UNIT as f64)
+    }
+
+    /// Alternating available/unavailable slots (β ≈ 0.5 at bid 0.5).
+    fn alternating(horizon: f64) -> PriceTrace {
+        let n = (horizon * SLOTS_PER_UNIT as f64) as usize + 2;
+        let prices = (0..n)
+            .map(|i| if i % 2 == 0 { 0.2 } else { 0.9 })
+            .collect();
+        PriceTrace::from_prices(prices, 1.0 / SLOTS_PER_UNIT as f64)
+    }
+
+    #[test]
+    fn all_spot_when_always_available() {
+        let trace = always(0.2, 10.0);
+        let o = execute_task(2.0, 2.0, 0.0, 4.0, 0, 0.3, &trace, 1.0);
+        assert!((o.spot_work - 2.0).abs() < 1e-9);
+        assert_eq!(o.od_work, 0.0);
+        assert!((o.spot_cost - 0.4).abs() < 1e-9);
+        assert!((o.finish - 1.0).abs() < 1e-9); // z/δ = 1 at full parallelism
+    }
+
+    #[test]
+    fn all_ondemand_when_never_available() {
+        let trace = never(10.0);
+        // window exactly e: turning point at start.
+        let o = execute_task(2.0, 2.0, 0.0, 1.0, 0, 0.3, &trace, 1.0);
+        assert_eq!(o.spot_work, 0.0);
+        assert!((o.od_work - 2.0).abs() < 1e-9);
+        assert!((o.od_cost - 2.0).abs() < 1e-9);
+        assert!((o.finish - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn turning_point_fires_exactly_at_deadline_feasibility() {
+        // Never-available spot with slack: waits until the exact turning
+        // point, then on-demand finishes exactly at the deadline.
+        let trace = never(10.0);
+        let o = execute_task(2.0, 2.0, 0.0, 3.0, 0, 0.3, &trace, 1.0);
+        assert_eq!(o.spot_work, 0.0);
+        assert!((o.od_work - 2.0).abs() < 1e-9);
+        assert!((o.finish - 3.0).abs() < 1e-6);
+        assert!(o.finish <= 3.0 + 1e-6);
+    }
+
+    #[test]
+    fn alternating_slots_give_half_spot() {
+        // Window big enough to never hit the turning point: everything on
+        // spot, finishing takes ~2e (half the slots win).
+        let trace = alternating(20.0);
+        let (z, delta) = (2.0, 2.0); // e = 1
+        let o = execute_task(z, delta, 0.0, 10.0, 0, 0.5, &trace, 1.0);
+        assert!((o.spot_work - z).abs() < 1e-9);
+        assert_eq!(o.od_work, 0.0);
+        assert!((o.finish - 2.0).abs() < 0.1, "finish={}", o.finish);
+        // cost = z * 0.2 (only cheap slots won)
+        assert!((o.spot_cost - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_always_met_on_feasible_windows() {
+        for_all(Config::cases(300).seed(21), |rng| {
+            let delta = rng.uniform(1.0, 64.0);
+            let e = rng.uniform(0.1, 4.0);
+            let z = e * delta;
+            let hat_s = e * rng.uniform(1.0, 3.0);
+            let bid = rng.uniform(0.1, 0.4);
+            let trace = random_trace(rng, hat_s + 1.0);
+            let o = execute_task(z, delta, 0.0, hat_s, 0, bid, &trace, 1.0);
+            if o.finish > hat_s + 1e-6 {
+                return Err(format!("deadline missed: {} > {hat_s}", o.finish));
+            }
+            let processed = o.spot_work + o.od_work + o.so_work;
+            if (processed - z).abs() > 1e-6 * z.max(1.0) {
+                return Err(format!("workload not conserved: {processed} vs {z}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn selfowned_reduces_cloud_work() {
+        let trace = never(10.0);
+        // r=1 over window [0,2] with z=5.5, δ=3 (§3.3.1 toy example b).
+        let o = execute_task(5.5, 3.0, 0.0, 2.0, 1, 0.3, &trace, 1.0);
+        assert!((o.so_work - 2.0).abs() < 1e-9);
+        assert!((o.od_work - 3.5).abs() < 1e-9);
+        assert_eq!(o.finish, 2.0);
+    }
+
+    #[test]
+    fn toy_example_fig2a_no_turning_point() {
+        // §3.3.1: z=3.5, δ=3, r=1, window [0,2], β=0.5 via alternating
+        // slots: z̃=1.5 processed by spot (1 instance-pair alternating) and
+        // one on-demand? In the paper o_i = s_i = 1; our executor is the
+        // expected-optimal all-spot variant (Prop. 4.1), so spot does all
+        // of z̃ = 1.5.
+        let trace = alternating(10.0);
+        let o = execute_task(3.5, 3.0, 0.0, 2.0, 1, 0.5, &trace, 1.0);
+        assert!((o.so_work - 2.0).abs() < 1e-9);
+        assert!(o.spot_work > 0.0);
+        assert!(
+            (o.spot_work + o.od_work - 1.5).abs() < 1e-9,
+            "cloud work {}",
+            o.spot_work + o.od_work
+        );
+        assert_eq!(o.finish, 2.0);
+    }
+
+    #[test]
+    fn chain_execution_matches_paper_example_under_perfect_spot() {
+        let job = ChainJob::paper_example();
+        let windows = dealloc(&job, 0.5);
+        let trace = always(0.2, 10.0);
+        let o = execute_chain(
+            &job,
+            &ChainStrategy::Windows {
+                windows: &windows,
+                selfowned: SelfOwnedRule::None,
+                bid: 0.3,
+            },
+            &trace,
+            None,
+            1.0,
+        );
+        // Perfect spot: everything on spot, early finishes cascade.
+        assert!((o.ledger.work_spot - 5.0).abs() < 1e-9);
+        assert_eq!(o.ledger.work_ondemand, 0.0);
+        assert!(o.met_deadline);
+        assert!(o.finish < 4.0);
+    }
+
+    #[test]
+    fn chain_deadlines_respected_under_any_trace() {
+        for_all(Config::cases(150).seed(22), |rng| {
+            let job = random_job(rng);
+            let beta = rng.uniform(0.2, 1.0);
+            let windows = dealloc(&job, beta);
+            let trace = random_trace(rng, job.deadline + 1.0);
+            let o = execute_chain(
+                &job,
+                &ChainStrategy::Windows {
+                    windows: &windows,
+                    selfowned: SelfOwnedRule::None,
+                    bid: rng.uniform(0.1, 0.4),
+                },
+                &trace,
+                None,
+                1.0,
+            );
+            if !o.met_deadline {
+                return Err(format!("missed deadline: {} > {}", o.finish, job.deadline));
+            }
+            let total = o.ledger.total_work();
+            if (total - job.total_work()).abs() > 1e-6 * job.total_work() {
+                return Err(format!("work {total} != {}", job.total_work()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn greedy_meets_deadline_and_conserves_work() {
+        for_all(Config::cases(150).seed(23), |rng| {
+            let job = random_job(rng);
+            let trace = random_trace(rng, job.deadline + 1.0);
+            let o = execute_chain(
+                &job,
+                &ChainStrategy::Greedy {
+                    bid: rng.uniform(0.1, 0.4),
+                },
+                &trace,
+                None,
+                1.0,
+            );
+            if !o.met_deadline {
+                return Err(format!("greedy missed: {} > {}", o.finish, job.deadline));
+            }
+            let total = o.ledger.total_work();
+            if (total - job.total_work()).abs() > 1e-6 * job.total_work() {
+                return Err(format!("work {total} != {}", job.total_work()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn greedy_all_spot_when_available() {
+        let job = ChainJob::paper_example();
+        let trace = always(0.2, 10.0);
+        let o = execute_chain(&job, &ChainStrategy::Greedy { bid: 0.3 }, &trace, None, 1.0);
+        assert!((o.ledger.work_spot - 5.0).abs() < 1e-9);
+        assert!((o.finish - job.min_makespan()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn greedy_never_available_switches_at_right_time() {
+        let job = ChainJob::paper_example(); // cp = 2.5833, window 4
+        let trace = never(10.0);
+        let o = execute_chain(&job, &ChainStrategy::Greedy { bid: 0.3 }, &trace, None, 1.0);
+        // Switch at t = 4 − 2.5833…; everything on-demand; finish = 4.
+        assert_eq!(o.ledger.work_spot, 0.0);
+        assert!((o.ledger.work_ondemand - 5.0).abs() < 1e-9);
+        assert!((o.finish - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pool_contention_between_tasks() {
+        let mut pool = SelfOwnedPool::new(2, 20.0, 1.0 / SLOTS_PER_UNIT as f64);
+        let job = ChainJob::new(
+            0,
+            0.0,
+            4.0,
+            vec![ChainTask::new(4.0, 4.0), ChainTask::new(4.0, 4.0)],
+        );
+        let windows = dealloc(&job, 0.5);
+        let trace = never(10.0);
+        let o = execute_chain(
+            &job,
+            &ChainStrategy::Windows {
+                windows: &windows,
+                selfowned: SelfOwnedRule::Naive,
+                bid: 0.3,
+            },
+            &trace,
+            Some(&mut pool),
+            1.0,
+        );
+        // Naive takes min(N, δ) = 2 instances in both windows.
+        assert_eq!(o.tasks[0].r, 2);
+        assert_eq!(o.tasks[1].r, 2);
+        assert!(o.ledger.work_selfowned > 0.0);
+        assert!(o.met_deadline);
+    }
+
+    fn random_job(rng: &mut Pcg32) -> ChainJob {
+        let l = rng.range_inclusive(1, 6) as usize;
+        let tasks: Vec<ChainTask> = (0..l)
+            .map(|_| ChainTask::new(rng.uniform(0.3, 4.0), rng.uniform(1.0, 16.0)))
+            .collect();
+        let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
+        ChainJob::new(0, 0.0, makespan * rng.uniform(1.01, 3.0), tasks)
+    }
+
+    fn random_trace(rng: &mut Pcg32, horizon: f64) -> PriceTrace {
+        let n = (horizon * SLOTS_PER_UNIT as f64) as usize + 2;
+        let prices = (0..n)
+            .map(|_| {
+                if rng.chance(0.5) {
+                    rng.uniform(0.12, 0.25)
+                } else {
+                    rng.uniform(0.5, 1.0)
+                }
+            })
+            .collect();
+        PriceTrace::from_prices(prices, 1.0 / SLOTS_PER_UNIT as f64)
+    }
+}

@@ -1,0 +1,15 @@
+//! Discrete-event simulation of job execution against realized spot-price
+//! traces.
+//!
+//! [`executor`] runs a single task / chain job under a strategy
+//! (Definitions 3.1/3.2, Algorithm 2, or the Greedy baseline);
+//! [`horizon`] runs a whole arriving workload with a shared self-owned pool
+//! in event order; [`cost`] computes the paper's evaluation metrics
+//! (`α`, `ρ`, `μ`).
+
+pub mod executor;
+pub mod horizon;
+pub mod cost;
+
+pub use executor::{execute_chain, ChainStrategy, JobOutcome, SelfOwnedRule, TaskOutcome};
+pub use horizon::{HorizonReport, HorizonRunner, StrategySpec};

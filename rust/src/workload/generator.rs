@@ -1,0 +1,262 @@
+//! Synthetic workload generator reproducing §6.1.
+//!
+//! * job arrivals: Poisson process, mean inter-arrival count 4 per unit time;
+//! * tasks per job: `l ∈ {7, 49}` (random);
+//! * precedence: generation order is the topological order; each pair
+//!   `(i1, i2)` gets an edge with probability 0.5; connectivity fix-up wires
+//!   successor-less tasks forward and predecessor-less tasks backward;
+//! * parallelism bound: `δ_i ∈ {8, 64}` (random);
+//! * min execution time: bounded Pareto (see [`super::pareto`]); task size
+//!   `z_i = e_i · δ_i`;
+//! * deadline: `d_j − a_j = x · e_j^c` with `x ~ U[1, x₀]`,
+//!   `x₀ ∈ {1.5, 2, 2.5, 3}` for job types 1–4.
+
+use super::dag::{DagJob, Task};
+use super::pareto::BoundedPareto;
+use crate::util::rng::Pcg32;
+
+/// Generator configuration (§6.1 defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GeneratorConfig {
+    /// Poisson arrival rate per unit time.
+    pub arrival_rate: f64,
+    /// Possible task counts.
+    pub task_counts: Vec<usize>,
+    /// Edge probability between any forward pair.
+    pub edge_prob: f64,
+    /// Possible parallelism bounds.
+    pub parallelism_choices: Vec<f64>,
+    /// Min-exec-time distribution.
+    pub exec_time: BoundedPareto,
+    /// Deadline flexibility upper bound x₀ (job type selects it).
+    pub x0: f64,
+    /// Job type label (1–4) recorded on generated jobs.
+    pub job_type: u8,
+}
+
+impl GeneratorConfig {
+    /// §6.1 defaults for job type 2 (x₀ = 2).
+    pub fn paper_default() -> GeneratorConfig {
+        GeneratorConfig::for_job_type(2)
+    }
+
+    /// §6.1 parameters for job type `x₂ ∈ 1..=4` (x₀ = 1.5, 2, 2.5, 3).
+    pub fn for_job_type(x2: u8) -> GeneratorConfig {
+        assert!((1..=4).contains(&x2), "job type must be 1..=4");
+        GeneratorConfig {
+            arrival_rate: 4.0,
+            task_counts: vec![7, 49],
+            edge_prob: 0.5,
+            parallelism_choices: vec![8.0, 64.0],
+            exec_time: BoundedPareto::paper_default(),
+            x0: 1.0 + 0.5 * x2 as f64,
+            job_type: x2,
+        }
+    }
+
+    /// Smaller jobs for fast tests/benches.
+    pub fn small() -> GeneratorConfig {
+        GeneratorConfig {
+            task_counts: vec![3, 7],
+            ..GeneratorConfig::paper_default()
+        }
+    }
+}
+
+/// Stateful stream of jobs arriving over time.
+#[derive(Debug, Clone)]
+pub struct JobStream {
+    cfg: GeneratorConfig,
+    rng: Pcg32,
+    clock: f64,
+    next_id: u64,
+}
+
+impl JobStream {
+    pub fn new(cfg: GeneratorConfig, seed: u64) -> JobStream {
+        JobStream {
+            cfg,
+            rng: Pcg32::new(seed ^ 0x10B5),
+            clock: 0.0,
+            next_id: 0,
+        }
+    }
+
+    pub fn config(&self) -> &GeneratorConfig {
+        &self.cfg
+    }
+
+    /// Generate the next arriving job (advances the Poisson clock).
+    pub fn next_job(&mut self) -> DagJob {
+        // Exponential inter-arrival with rate λ (mean 1/λ).
+        self.clock += self.rng.exponential(1.0 / self.cfg.arrival_rate);
+        let arrival = self.clock;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.generate_at(id, arrival)
+    }
+
+    /// Generate `n` jobs.
+    pub fn take_jobs(&mut self, n: usize) -> Vec<DagJob> {
+        (0..n).map(|_| self.next_job()).collect()
+    }
+
+    /// Generate a job with a fixed arrival time (no clock advance).
+    pub fn generate_at(&mut self, id: u64, arrival: f64) -> DagJob {
+        let l = {
+            let k = self.rng.below(self.cfg.task_counts.len() as u64) as usize;
+            self.cfg.task_counts[k]
+        };
+        let tasks: Vec<Task> = (0..l)
+            .map(|_| {
+                let delta = {
+                    let k = self.rng.below(self.cfg.parallelism_choices.len() as u64) as usize;
+                    self.cfg.parallelism_choices[k]
+                };
+                let e = self.cfg.exec_time.sample(&mut self.rng);
+                Task::new(e * delta, delta)
+            })
+            .collect();
+
+        // Random forward edges (generation order = topological order).
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for i1 in 0..l {
+            for i2 in (i1 + 1)..l {
+                if self.rng.chance(self.cfg.edge_prob) {
+                    edges.push((i1, i2));
+                }
+            }
+        }
+
+        // Connectivity fix-up (§6.1): successor-less non-final tasks get a
+        // random later successor; predecessor-less non-initial tasks get a
+        // random earlier predecessor.
+        let mut has_succ = vec![false; l];
+        let mut has_pred = vec![false; l];
+        for &(u, v) in &edges {
+            has_succ[u] = true;
+            has_pred[v] = true;
+        }
+        for i in 0..l.saturating_sub(1) {
+            if !has_succ[i] {
+                let v = self.rng.range_inclusive(i as u64 + 1, l as u64 - 1) as usize;
+                edges.push((i, v));
+                has_pred[v] = true;
+                has_succ[i] = true;
+            }
+        }
+        for i in 1..l {
+            if !has_pred[i] {
+                let u = self.rng.below(i as u64) as usize;
+                edges.push((u, i));
+                has_pred[i] = true;
+            }
+        }
+        edges.sort();
+        edges.dedup();
+
+        let mut job = DagJob::new(id, arrival, arrival + 1.0, tasks, edges);
+        // Deadline: x·e_c with x ~ U[1, x₀].
+        let x = self.rng.uniform(1.0, self.cfg.x0);
+        job.deadline = arrival + x * job.critical_path();
+        job.job_type = self.cfg.job_type;
+        debug_assert!(job.validate().is_ok());
+        job
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_all, Config};
+
+    #[test]
+    fn arrival_rate_matches_poisson() {
+        let mut s = JobStream::new(GeneratorConfig::paper_default(), 1);
+        let jobs = s.take_jobs(4000);
+        let horizon = jobs.last().unwrap().arrival;
+        let rate = jobs.len() as f64 / horizon;
+        assert!((rate - 4.0).abs() < 0.25, "rate={rate}");
+        // Arrivals strictly increasing.
+        for w in jobs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn jobs_match_section_6_1_shape() {
+        let mut s = JobStream::new(GeneratorConfig::paper_default(), 2);
+        let mut seen7 = false;
+        let mut seen49 = false;
+        for job in s.take_jobs(60) {
+            assert!(job.num_tasks() == 7 || job.num_tasks() == 49);
+            seen7 |= job.num_tasks() == 7;
+            seen49 |= job.num_tasks() == 49;
+            for t in &job.tasks {
+                assert!(t.parallelism == 8.0 || t.parallelism == 64.0);
+                let e = t.min_exec_time();
+                assert!((0.25..=10.0).contains(&e), "e_i={e}");
+            }
+            assert!(job.validate().is_ok());
+            // deadline ∈ [a + e_c, a + x₀·e_c]
+            let cp = job.critical_path();
+            let rel = job.window();
+            assert!(rel >= cp - 1e-9 && rel <= 2.0 * cp + 1e-9, "rel={rel} cp={cp}");
+        }
+        assert!(seen7 && seen49);
+    }
+
+    #[test]
+    fn connectivity_fixup_leaves_no_isolated_middle_tasks() {
+        for_all(Config::cases(40).seed(3), |rng| {
+            let mut s = JobStream::new(GeneratorConfig::paper_default(), rng.next_u64());
+            let job = s.next_job();
+            let l = job.num_tasks();
+            let mut has_succ = vec![false; l];
+            let mut has_pred = vec![false; l];
+            for &(u, v) in &job.edges {
+                has_succ[u] = true;
+                has_pred[v] = true;
+            }
+            for i in 0..l - 1 {
+                if !has_succ[i] {
+                    return Err(format!("task {i} of {l} has no successor"));
+                }
+            }
+            for i in 1..l {
+                if !has_pred[i] {
+                    return Err(format!("task {i} of {l} has no predecessor"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn job_types_change_flexibility() {
+        let mut tight = JobStream::new(GeneratorConfig::for_job_type(1), 5);
+        let mut loose = JobStream::new(GeneratorConfig::for_job_type(4), 5);
+        let avg = |jobs: Vec<DagJob>| {
+            let xs: Vec<f64> = jobs
+                .iter()
+                .map(|j| j.window() / j.critical_path())
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        let a1 = avg(tight.take_jobs(300));
+        let a4 = avg(loose.take_jobs(300));
+        assert!(a1 < 1.3, "type-1 mean flexibility {a1}");
+        assert!(a4 > 1.7, "type-4 mean flexibility {a4}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = JobStream::new(GeneratorConfig::paper_default(), 9).take_jobs(10);
+        let b = JobStream::new(GeneratorConfig::paper_default(), 9).take_jobs(10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.edges, y.edges);
+            assert_eq!(x.tasks.len(), y.tasks.len());
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload substrate: DAG jobs, the §6.1 synthetic generator, and the
+//! DAG→chain transformation of Nagarajan et al. (Appendix B.1).
+
+pub mod pareto;
+pub mod dag;
+pub mod chain;
+pub mod generator;
+pub mod transform;
+
+pub use chain::{ChainJob, ChainTask};
+pub use dag::{DagJob, Task, TaskId};
+pub use generator::{GeneratorConfig, JobStream};
+pub use transform::transform;

@@ -1,0 +1,186 @@
+//! DAG → chain transformation of Nagarajan et al. (FlowFlex, MiddleWare'13),
+//! as described in Appendix B.1.
+//!
+//! Construction:
+//!
+//! 1. Build the *pseudo-schedule*: give every task its full parallelism
+//!    `δ_i` and start it as early as possible (`q_i`), so it runs exactly in
+//!    `[q_i, q_i + e_i]`.
+//! 2. Partition `[0, T_j]` (`T_j = max q_i + e_i`) at all task start/finish
+//!    boundaries into intervals `I_1 … I_{l'}` — the minimal partition such
+//!    that any task running in an interval runs through all of it.
+//! 3. Interval `I_k` becomes pseudo-task `k` with parallelism
+//!    `δ(k) = r_k = Σ_{i runs in I_k} δ_i` and size `z(k) = r_k · |I_k|`.
+//! 4. Chain the pseudo-tasks: `1 ≺ 2 ≺ … ≺ l'`.
+//!
+//! Any feasible schedule of the pseudo-job is feasible for the original DAG
+//! (parallelism, precedence and deadline respected), so all chain policies
+//! of §4 apply to general DAGs.
+
+use super::chain::{ChainJob, ChainTask};
+use super::dag::DagJob;
+
+/// Boundary-merge tolerance: boundaries closer than this collapse (guards
+/// against floating-point near-duplicates producing sliver intervals).
+const EPS: f64 = 1e-9;
+
+/// Transform a DAG job into its chain pseudo-job (Eq. 19: `j' ← transform(j)`).
+///
+/// Jobs that are already chains pass through unchanged (Algorithm 3).
+pub fn transform(job: &DagJob) -> ChainJob {
+    if job.is_chain() {
+        let mut chain = ChainJob::new(
+            job.id,
+            job.arrival,
+            job.deadline,
+            job.tasks.iter().map(ChainTask::from).collect(),
+        );
+        chain.job_type = job.job_type;
+        return chain;
+    }
+
+    let q = job.earliest_starts();
+    let e: Vec<f64> = job.tasks.iter().map(|t| t.min_exec_time()).collect();
+
+    // Interval boundaries = all starts and finishes.
+    let mut bounds: Vec<f64> = Vec::with_capacity(2 * q.len());
+    for i in 0..q.len() {
+        bounds.push(q[i]);
+        bounds.push(q[i] + e[i]);
+    }
+    bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    bounds.dedup_by(|a, b| (*a - *b).abs() < EPS);
+
+    let mut tasks = Vec::with_capacity(bounds.len().saturating_sub(1));
+    for w in bounds.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let len = hi - lo;
+        if len < EPS {
+            continue;
+        }
+        let mid = 0.5 * (lo + hi);
+        // Total parallelism of tasks running through this interval.
+        let r_k: f64 = (0..q.len())
+            .filter(|&i| q[i] - EPS <= mid && mid <= q[i] + e[i] + EPS)
+            .map(|i| job.tasks[i].parallelism)
+            .sum();
+        debug_assert!(
+            r_k > 0.0,
+            "pseudo-schedule gap at [{lo},{hi}] — earliest-start schedule must be gapless"
+        );
+        tasks.push(ChainTask::new(r_k * len, r_k));
+    }
+
+    let mut chain = ChainJob::new(job.id, job.arrival, job.deadline, tasks);
+    chain.job_type = job.job_type;
+    chain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{for_all, Config};
+    use crate::workload::dag::Task;
+    use crate::workload::generator::{GeneratorConfig, JobStream};
+
+    #[test]
+    fn chain_passes_through() {
+        let dag = DagJob::chain_of(
+            7,
+            1.0,
+            5.0,
+            vec![Task::new(1.0, 2.0), Task::new(2.0, 1.0)],
+        );
+        let chain = transform(&dag);
+        assert_eq!(chain.num_tasks(), 2);
+        assert_eq!(chain.id, 7);
+        assert!((chain.total_work() - dag.total_work()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diamond_transform_preserves_work_and_makespan() {
+        // 0 -> {1,2} -> 3 with e = 1, 2, 1, 1 (δ all 2 → z = 2e).
+        let dag = DagJob::new(
+            1,
+            0.0,
+            10.0,
+            vec![
+                Task::new(2.0, 2.0),
+                Task::new(4.0, 2.0),
+                Task::new(2.0, 2.0),
+                Task::new(2.0, 2.0),
+            ],
+            vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+        );
+        let chain = transform(&dag);
+        // Pseudo-schedule: task0 [0,1], task1 [1,3], task2 [1,2], task3 [3,4].
+        // Boundaries 0,1,2,3,4 → 4 pseudo-tasks.
+        assert_eq!(chain.num_tasks(), 4);
+        assert!((chain.total_work() - dag.total_work()).abs() < 1e-12);
+        // Pseudo-task parallelism: [2, 4, 2, 2].
+        let deltas: Vec<f64> = chain.tasks.iter().map(|t| t.parallelism).collect();
+        assert_eq!(deltas, vec![2.0, 4.0, 2.0, 2.0]);
+        // Chain makespan equals DAG critical path (pseudo-schedule length).
+        assert!((chain.min_makespan() - dag.critical_path()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_tasks_merge_into_one_interval() {
+        // Two equal independent tasks: single interval with summed δ.
+        let dag = DagJob::new(
+            2,
+            0.0,
+            5.0,
+            vec![Task::new(2.0, 2.0), Task::new(3.0, 3.0)],
+            vec![],
+        );
+        let chain = transform(&dag);
+        assert_eq!(chain.num_tasks(), 1);
+        assert_eq!(chain.tasks[0].parallelism, 5.0);
+        assert!((chain.tasks[0].size - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transform_properties_on_random_dags() {
+        let cfg = GeneratorConfig::paper_default();
+        for_all(Config::cases(60).seed(1234), |rng| {
+            let mut stream = JobStream::new(cfg.clone(), rng.next_u64());
+            let dag = stream.next_job();
+            let chain = transform(&dag);
+            // (1) workload conserved
+            if (chain.total_work() - dag.total_work()).abs() > 1e-6 * dag.total_work() {
+                return Err(format!(
+                    "work not conserved: {} vs {}",
+                    chain.total_work(),
+                    dag.total_work()
+                ));
+            }
+            // (2) makespan = critical path
+            if (chain.min_makespan() - dag.critical_path()).abs() > 1e-6 {
+                return Err(format!(
+                    "makespan {} != critical path {}",
+                    chain.min_makespan(),
+                    dag.critical_path()
+                ));
+            }
+            // (3) pseudo-task count ≤ 2l − 1
+            if chain.num_tasks() > 2 * dag.num_tasks() {
+                return Err(format!(
+                    "too many pseudo-tasks: {} for l={}",
+                    chain.num_tasks(),
+                    dag.num_tasks()
+                ));
+            }
+            // (4) same window
+            if chain.arrival != dag.arrival || chain.deadline != dag.deadline {
+                return Err("window changed".into());
+            }
+            // (5) feasibility preserved (deadline ≥ critical path by
+            //     construction of the generator)
+            if !chain.is_feasible() {
+                return Err("transformed chain infeasible".into());
+            }
+            Ok(())
+        });
+    }
+}

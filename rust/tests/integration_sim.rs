@@ -1,0 +1,226 @@
+//! Integration tests across workload → policy → simulator layers.
+
+use dagcloud::market::{PriceTrace, SpotModel};
+use dagcloud::policy::dealloc::{dealloc, expected_spot_workload};
+use dagcloud::policy::{policy_set_spot_only, Policy};
+use dagcloud::sim::executor::{execute_chain, ChainStrategy, SelfOwnedRule};
+use dagcloud::sim::horizon::{HorizonRunner, StrategySpec};
+use dagcloud::util::rng::Pcg32;
+use dagcloud::workload::{transform, ChainJob, GeneratorConfig, JobStream};
+
+fn chains(n: usize, job_type: u8, seed: u64) -> Vec<ChainJob> {
+    let mut s = JobStream::new(GeneratorConfig::for_job_type(job_type), seed);
+    s.take_jobs(n).iter().map(transform).collect()
+}
+
+fn trace_for(jobs: &[ChainJob], seed: u64) -> PriceTrace {
+    let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+    PriceTrace::generate(SpotModel::paper_default(), horizon, seed)
+}
+
+#[test]
+fn end_to_end_deadlines_never_missed() {
+    for job_type in 1..=4u8 {
+        let jobs = chains(80, job_type, 100 + job_type as u64);
+        let trace = trace_for(&jobs, 7);
+        let runner = HorizonRunner::new(&trace, 0);
+        for spec in [
+            StrategySpec::Proposed(Policy::new(1.0 / 1.9, None, 0.24)),
+            StrategySpec::EvenBaseline { bid: 0.24 },
+            StrategySpec::GreedyBaseline { bid: 0.24 },
+        ] {
+            let rep = runner.run(&jobs, spec);
+            assert_eq!(
+                rep.deadlines_met,
+                jobs.len(),
+                "type {job_type}, {}",
+                rep.strategy
+            );
+        }
+    }
+}
+
+#[test]
+fn dealloc_beats_even_in_expected_spot_workload() {
+    // Prop. 4.3 end-to-end: on generated workloads, Algorithm 1's expected
+    // spot workload dominates the Even split for every β in the grid.
+    let jobs = chains(60, 2, 11);
+    for &beta in &[1.0 / 1.3, 1.0 / 1.6, 1.0 / 2.2] {
+        for job in &jobs {
+            let opt = expected_spot_workload(job, &dealloc(job, beta));
+            let even = dagcloud::policy::baselines::even_windows(job);
+            // Evaluate Even's windows under the same β-capacity model.
+            let even_alloc = dagcloud::policy::dealloc::WindowAllocation {
+                sizes: even.sizes.clone(),
+                beta,
+            };
+            let ev = expected_spot_workload(job, &even_alloc);
+            assert!(
+                opt >= ev - 1e-9,
+                "job {}: dealloc {opt} < even {ev} at beta {beta}",
+                job.id
+            );
+        }
+    }
+}
+
+#[test]
+fn spot_heavy_market_cheaper_than_spot_scarce() {
+    let jobs = chains(60, 3, 13);
+    let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+    let cheap = PriceTrace::generate(
+        SpotModel::BoundedExp { mean: 0.13, lo: 0.12, hi: 1.0 },
+        horizon,
+        5,
+    );
+    let dear = PriceTrace::generate(
+        SpotModel::BoundedExp { mean: 0.6, lo: 0.12, hi: 1.0 },
+        horizon,
+        5,
+    );
+    let spec = StrategySpec::Proposed(Policy::new(1.0 / 1.6, None, 0.24));
+    let a_cheap = HorizonRunner::new(&cheap, 0).run(&jobs, spec).average_unit_cost();
+    let a_dear = HorizonRunner::new(&dear, 0).run(&jobs, spec).average_unit_cost();
+    assert!(
+        a_cheap < a_dear,
+        "cheap market {a_cheap} should beat dear {a_dear}"
+    );
+}
+
+#[test]
+fn google_fixed_model_works_end_to_end() {
+    let jobs = chains(40, 2, 17);
+    let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+    let trace = PriceTrace::generate(
+        SpotModel::GoogleFixed { price: 0.3, availability: 0.6 },
+        horizon,
+        9,
+    );
+    // In the Google model bids are irrelevant; any bid >= price works.
+    let rep = HorizonRunner::new(&trace, 0)
+        .run(&jobs, StrategySpec::Proposed(Policy::new(0.6, None, 0.3)));
+    assert_eq!(rep.deadlines_met, jobs.len());
+    assert!(rep.ledger.work_spot > 0.0, "no spot work under Google model");
+    // Spot charged at the fixed price.
+    let unit = rep.ledger.cost_spot / rep.ledger.work_spot;
+    assert!((unit - 0.3).abs() < 1e-9, "spot unit cost {unit}");
+}
+
+#[test]
+fn higher_bids_win_more_spot() {
+    let jobs = chains(60, 2, 19);
+    let trace = trace_for(&jobs, 3);
+    let runner = HorizonRunner::new(&trace, 0);
+    let lo = runner.run(&jobs, StrategySpec::Proposed(Policy::new(0.5, None, 0.13)));
+    let hi = runner.run(&jobs, StrategySpec::Proposed(Policy::new(0.5, None, 0.3)));
+    assert!(
+        hi.ledger.work_spot > lo.ledger.work_spot,
+        "bid 0.3 spot work {} <= bid 0.13 spot work {}",
+        hi.ledger.work_spot,
+        lo.ledger.work_spot
+    );
+}
+
+#[test]
+fn pool_capacity_monotone_cost() {
+    let jobs = chains(60, 2, 23);
+    let trace = trace_for(&jobs, 29);
+    let p = Policy::new(1.0 / 1.6, Some(4.0 / 14.0), 0.24);
+    let mut prev = f64::INFINITY;
+    for pool in [0u32, 100, 400, 1600] {
+        let a = HorizonRunner::new(&trace, pool)
+            .run(&jobs, StrategySpec::Proposed(p))
+            .average_unit_cost();
+        assert!(
+            a <= prev + 0.02,
+            "cost should not increase with pool size: {a} after {prev} (pool {pool})"
+        );
+        prev = a;
+    }
+}
+
+#[test]
+fn single_job_strategies_consistent_costs() {
+    // For one job and one trace, the realized executor's cost must lie
+    // between the all-spot lower bound and the all-on-demand upper bound.
+    let mut rng = Pcg32::new(41);
+    let jobs = chains(30, 4, 43);
+    let trace = trace_for(&jobs, 47);
+    for job in &jobs {
+        let bid = 0.18 + 0.03 * rng.below(5) as f64;
+        for beta in [1.0, 1.0 / 1.6, 1.0 / 2.2] {
+            let windows = dealloc(job, beta);
+            let o = execute_chain(
+                job,
+                &ChainStrategy::Windows {
+                    windows: &windows,
+                    selfowned: SelfOwnedRule::None,
+                    bid,
+                },
+                &trace,
+                None,
+                1.0,
+            );
+            let cost = o.cost();
+            let ub = job.total_work() * 1.0 + 1e-9;
+            let lb = 0.0;
+            assert!(cost <= ub, "cost {cost} above all-OD bound {ub}");
+            assert!(cost >= lb);
+        }
+    }
+}
+
+#[test]
+fn native_counterfactual_ranks_consistently_with_realized() {
+    // The counterfactual model is an expected-timeline approximation of the
+    // realized executor. Check rank agreement on extreme policies: cheapest
+    // counterfactual policy should realize a cost no worse than the most
+    // expensive counterfactual policy realizes.
+    use dagcloud::learning::counterfactual::{CounterfactualJob, S_MAX};
+    let jobs = chains(25, 2, 53);
+    let trace = trace_for(&jobs, 59);
+    let grid = policy_set_spot_only();
+    let mut agree = 0;
+    let mut total = 0;
+    for job in &jobs {
+        let (prices, dt) = trace.resample_window(job.arrival, job.deadline, S_MAX);
+        let n = prices.len();
+        let cf = CounterfactualJob::from_job(job, prices, dt, vec![0.0; n], 1.0);
+        let costs: Vec<f64> = grid.iter().map(|p| cf.eval_policy(p, false).0).collect();
+        let best = costs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let worst = costs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let realize = |p: &Policy| {
+            let windows = dealloc(job, p.beta);
+            execute_chain(
+                job,
+                &ChainStrategy::Windows {
+                    windows: &windows,
+                    selfowned: SelfOwnedRule::None,
+                    bid: p.bid,
+                },
+                &trace,
+                None,
+                1.0,
+            )
+            .cost()
+        };
+        total += 1;
+        if realize(&grid[best]) <= realize(&grid[worst]) + 1e-9 {
+            agree += 1;
+        }
+    }
+    assert!(
+        agree * 10 >= total * 8,
+        "counterfactual ranking agreed on only {agree}/{total} jobs"
+    );
+}

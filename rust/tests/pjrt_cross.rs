@@ -1,0 +1,144 @@
+//! Cross-implementation check: the AOT-compiled PJRT kernel must agree
+//! with the native Rust counterfactual model on identical inputs.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise —
+//! CI runs `make test`, which builds artifacts first).
+
+use dagcloud::learning::counterfactual::{eval_grid_native, CounterfactualJob, S_MAX};
+use dagcloud::market::{PriceTrace, SpotModel};
+use dagcloud::policy::{policy_set_full, policy_set_spot_only, Policy};
+use dagcloud::runtime::ArtifactRuntime;
+use dagcloud::util::rng::Pcg32;
+use dagcloud::workload::{transform, ChainJob, ChainTask, GeneratorConfig, JobStream};
+
+fn runtime() -> Option<ArtifactRuntime> {
+    match ArtifactRuntime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP pjrt_cross: artifacts not available ({e})");
+            None
+        }
+    }
+}
+
+fn cf_for(job: &ChainJob, trace: &PriceTrace, navail: f64) -> CounterfactualJob {
+    let (prices, dt) = trace.resample_window(job.arrival, job.deadline, S_MAX);
+    let n = prices.len();
+    CounterfactualJob::from_job(job, prices, dt, vec![navail; n], 1.0)
+}
+
+fn assert_close(native: &[f64], kernel: &[f64], scale: f64, what: &str) {
+    assert_eq!(native.len(), kernel.len());
+    for (i, (n, k)) in native.iter().zip(kernel).enumerate() {
+        let tol = 2e-3 * scale.max(1.0) + 2e-3 * n.abs();
+        assert!(
+            (n - k).abs() <= tol,
+            "{what}[{i}]: native {n} vs kernel {k} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn kernel_matches_native_on_paper_example() {
+    let Some(rt) = runtime() else { return };
+    let job = ChainJob::paper_example();
+    let trace = PriceTrace::generate(SpotModel::paper_default(), 6.0, 99);
+    let cf = cf_for(&job, &trace, 0.0);
+    let grid = policy_set_spot_only();
+    let native = eval_grid_native(&cf, &grid, false);
+    let kernel = rt.policy_cost.eval(&cf, &grid, false).expect("kernel eval");
+    let scale = job.total_work();
+    assert_close(&native.costs, &kernel.costs, scale, "cost");
+    assert_close(&native.spot_work, &kernel.spot_work, scale, "spot");
+    assert_close(&native.od_work, &kernel.od_work, scale, "od");
+    assert_close(&native.so_work, &kernel.so_work, scale, "so");
+}
+
+#[test]
+fn kernel_matches_native_with_pool_full_grid() {
+    let Some(rt) = runtime() else { return };
+    let job = ChainJob::paper_example();
+    let trace = PriceTrace::generate(SpotModel::paper_default(), 6.0, 7);
+    let cf = cf_for(&job, &trace, 6.0);
+    let grid = policy_set_full();
+    let native = eval_grid_native(&cf, &grid, true);
+    let kernel = rt.policy_cost.eval(&cf, &grid, true).expect("kernel eval");
+    let scale = job.total_work();
+    assert_close(&native.costs, &kernel.costs, scale, "cost");
+    assert_close(&native.so_work, &kernel.so_work, scale, "so");
+}
+
+#[test]
+fn kernel_matches_native_on_generated_workload() {
+    let Some(rt) = runtime() else { return };
+    let mut stream = JobStream::new(GeneratorConfig::paper_default(), 5);
+    let mut rng = Pcg32::new(17);
+    let grid = policy_set_full();
+    for _ in 0..8 {
+        let dag = stream.next_job();
+        let job = transform(&dag);
+        let horizon = job.deadline + 1.0;
+        let trace = PriceTrace::generate(SpotModel::paper_default(), horizon, rng.next_u64());
+        let navail = rng.range_inclusive(0, 40) as f64;
+        let cf = cf_for(&job, &trace, navail);
+        let native = eval_grid_native(&cf, &grid, navail > 0.0);
+        let kernel = rt
+            .policy_cost
+            .eval(&cf, &grid, navail > 0.0)
+            .expect("kernel eval");
+        // Large jobs accumulate f32 error across thousands of slots; the
+        // tolerance scales with total work.
+        let scale = job.total_work();
+        assert_close(&native.costs, &kernel.costs, scale, "cost");
+    }
+}
+
+#[test]
+fn kernel_handles_long_chains_near_l_max() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::new(23);
+    let tasks: Vec<ChainTask> = (0..120)
+        .map(|_| ChainTask::new(rng.uniform(0.3, 2.0), [8.0, 64.0][rng.below(2) as usize]))
+        .collect();
+    let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
+    let job = ChainJob::new(1, 0.0, makespan * 1.7, tasks);
+    let trace = PriceTrace::generate(SpotModel::paper_default(), job.deadline + 1.0, 3);
+    let cf = cf_for(&job, &trace, 20.0);
+    let grid = policy_set_full();
+    let native = eval_grid_native(&cf, &grid, true);
+    let kernel = rt.policy_cost.eval(&cf, &grid, true).expect("kernel eval");
+    assert_close(&native.costs, &kernel.costs, job.total_work(), "cost");
+}
+
+#[test]
+fn tola_update_kernel_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let Some(tk) = rt.tola_update.as_ref() else {
+        eprintln!("SKIP: tola_update artifact missing");
+        return;
+    };
+    let mut rng = Pcg32::new(31);
+    let n = 175;
+    let mut w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 1.0)).collect();
+    let total: f64 = w.iter().sum();
+    w.iter_mut().for_each(|x| *x /= total);
+    let costs: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 80.0)).collect();
+    let eta = 0.05;
+
+    // Native update formula, computed directly.
+    let cmin = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut native: Vec<f64> = w
+        .iter()
+        .zip(&costs)
+        .map(|(wi, c)| wi * (-eta * (c - cmin)).exp())
+        .collect();
+    let total: f64 = native.iter().sum();
+    native.iter_mut().for_each(|x| *x /= total);
+
+    let kernel = tk.update(&w, &costs, eta).expect("tola kernel");
+    for (i, (n, k)) in native.iter().zip(&kernel).enumerate() {
+        assert!((n - k).abs() < 1e-5, "w[{i}]: {n} vs {k}");
+    }
+    let sum: f64 = kernel.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4);
+}

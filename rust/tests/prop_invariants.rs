@@ -1,0 +1,220 @@
+//! Cross-module property tests on the crate's key invariants, using the
+//! in-repo mini property framework (`util::prop`).
+
+use dagcloud::learning::counterfactual::{CounterfactualJob, S_MAX};
+use dagcloud::market::{PriceTrace, SelfOwnedPool, SpotModel, SLOTS_PER_UNIT};
+use dagcloud::policy::dealloc::{dealloc, expected_spot_workload, windows_to_deadlines};
+use dagcloud::policy::Policy;
+use dagcloud::sim::executor::{execute_chain, ChainStrategy, SelfOwnedRule};
+use dagcloud::util::prop::{for_all, Config};
+use dagcloud::util::rng::Pcg32;
+use dagcloud::workload::{transform, ChainJob, ChainTask, DagJob, GeneratorConfig, JobStream, Task};
+
+fn random_chain(rng: &mut Pcg32, max_l: usize) -> ChainJob {
+    let l = rng.range_inclusive(1, max_l as u64) as usize;
+    let tasks: Vec<ChainTask> = (0..l)
+        .map(|_| ChainTask::new(rng.uniform(0.2, 5.0), rng.uniform(1.0, 64.0)))
+        .collect();
+    let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
+    ChainJob::new(0, 0.0, makespan * rng.uniform(1.0, 3.0), tasks)
+}
+
+#[test]
+fn prop_dealloc_windows_feasible_and_tiling() {
+    for_all(Config::cases(300).seed(1001), |rng| {
+        let job = random_chain(rng, 12);
+        let beta = rng.uniform(0.05, 1.0);
+        let alloc = dealloc(&job, beta);
+        let total: f64 = alloc.sizes.iter().sum();
+        if (total - job.window()).abs() > 1e-9 * job.window().max(1.0) {
+            return Err(format!("windows sum {total} != window {}", job.window()));
+        }
+        let dl = windows_to_deadlines(&job, &alloc);
+        let mut prev = job.arrival;
+        for (i, d) in dl.iter().enumerate() {
+            if *d < prev - 1e-12 {
+                return Err(format!("deadline {i} decreases: {d} < {prev}"));
+            }
+            prev = *d;
+        }
+        if (dl.last().unwrap() - job.deadline).abs() > 1e-9 {
+            return Err("last deadline != job deadline".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dealloc_spot_workload_bounded_by_total() {
+    for_all(Config::cases(300).seed(1002), |rng| {
+        let job = random_chain(rng, 10);
+        let beta = rng.uniform(0.05, 1.0);
+        let zo = expected_spot_workload(&job, &dealloc(&job, beta));
+        if zo < -1e-9 || zo > job.total_work() + 1e-9 {
+            return Err(format!("z^o {zo} outside [0, {}]", job.total_work()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transform_preserves_structure() {
+    let cfg = GeneratorConfig::paper_default();
+    for_all(Config::cases(60).seed(1003), |rng| {
+        let mut stream = JobStream::new(cfg.clone(), rng.next_u64());
+        let dag = stream.next_job();
+        let chain = transform(&dag);
+        if (chain.total_work() - dag.total_work()).abs() > 1e-6 * dag.total_work() {
+            return Err("work not conserved".into());
+        }
+        if (chain.min_makespan() - dag.critical_path()).abs() > 1e-6 {
+            return Err("critical path changed".into());
+        }
+        // Parallelism of every pseudo-task is at least the max δ of some
+        // task running in that interval, hence ≥ min task δ and ≤ Σ δ.
+        let max_total: f64 = dag.tasks.iter().map(|t| t.parallelism).sum();
+        for t in &chain.tasks {
+            if t.parallelism <= 0.0 || t.parallelism > max_total + 1e-9 {
+                return Err(format!("pseudo-task δ {} outside (0, {max_total}]", t.parallelism));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_executor_work_conservation_and_deadline() {
+    for_all(Config::cases(200).seed(1004), |rng| {
+        let job = random_chain(rng, 8);
+        let horizon = job.deadline + 1.0;
+        let trace = PriceTrace::generate(SpotModel::paper_default(), horizon, rng.next_u64());
+        let beta = rng.uniform(0.2, 1.0);
+        let windows = dealloc(&job, beta);
+        let mut pool = SelfOwnedPool::new(
+            rng.range_inclusive(0, 30) as u32,
+            horizon,
+            1.0 / SLOTS_PER_UNIT as f64,
+        );
+        let has_pool = pool.capacity() > 0;
+        let strategy = ChainStrategy::Windows {
+            windows: &windows,
+            selfowned: if has_pool {
+                if rng.chance(0.5) {
+                    SelfOwnedRule::Rule12 { beta0: rng.uniform(0.1, 0.8) }
+                } else {
+                    SelfOwnedRule::Naive
+                }
+            } else {
+                SelfOwnedRule::None
+            },
+            bid: rng.uniform(0.12, 0.35),
+        };
+        let o = execute_chain(&job, &strategy, &trace, Some(&mut pool), 1.0);
+        if !o.met_deadline {
+            return Err(format!("deadline missed: {} > {}", o.finish, job.deadline));
+        }
+        let w = o.ledger.total_work();
+        if (w - job.total_work()).abs() > 1e-6 * job.total_work().max(1.0) {
+            return Err(format!("work {w} != {}", job.total_work()));
+        }
+        // Cost is bounded by running everything on-demand.
+        if o.cost() > job.total_work() + 1e-6 {
+            return Err(format!("cost {} above all-OD bound", o.cost()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_counterfactual_bid_monotonicity() {
+    // A higher bid wins a superset of slots, so z̃ declines at least as
+    // fast and the turning point cannot fire earlier: on-demand work is
+    // monotone non-increasing in the bid. (Total COST is *not* monotone —
+    // a higher bid may buy expensive early slots in place of cheap later
+    // ones; that non-monotonicity is exactly why the bid is learned in
+    // Experiment 4.) Cost stays within the all-on-demand bound and pays at
+    // most the bid per unit of spot work.
+    for_all(Config::cases(150).seed(1005), |rng| {
+        let job = random_chain(rng, 6);
+        let trace =
+            PriceTrace::generate(SpotModel::paper_default(), job.deadline + 1.0, rng.next_u64());
+        let (prices, dt) = trace.resample_window(job.arrival, job.deadline, S_MAX);
+        let n = prices.len();
+        let cf = CounterfactualJob::from_job(&job, prices, dt, vec![0.0; n], 1.0);
+        let beta = rng.uniform(0.3, 1.0);
+        let b1 = rng.uniform(0.12, 0.25);
+        let b2 = rng.uniform(b1, 0.4);
+        let (c1, sw1, ow1, _) = cf.eval_policy(&Policy::new(beta, None, b1), false);
+        let (c2, sw2, ow2, _) = cf.eval_policy(&Policy::new(beta, None, b2), false);
+        if ow2 > ow1 + 1e-6 {
+            return Err(format!("bid ↑ raised OD work: {ow1} -> {ow2}"));
+        }
+        if sw2 + 1e-6 < sw1 {
+            return Err(format!("bid ↑ lowered spot work: {sw1} -> {sw2}"));
+        }
+        for (c, sw, ow, b) in [(c1, sw1, ow1, b1), (c2, sw2, ow2, b2)] {
+            if c > b * sw + ow + 1e-6 {
+                return Err(format!("cost {c} above bid·spot + od bound"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pool_reservations_never_oversubscribe() {
+    for_all(Config::cases(100).seed(1006), |rng| {
+        let cap = rng.range_inclusive(1, 20) as u32;
+        let mut pool = SelfOwnedPool::new(cap, 50.0, 0.25);
+        for _ in 0..50 {
+            let t0 = rng.uniform(0.0, 45.0);
+            let t1 = t0 + rng.uniform(0.1, 4.0);
+            let want = rng.range_inclusive(0, cap as u64 + 5) as u32;
+            let avail = pool.available_over(t0, t1);
+            let ok = pool.reserve(want, t0, t1);
+            if want <= avail && !ok {
+                return Err(format!("reserve {want} <= avail {avail} refused"));
+            }
+            if want > avail && ok {
+                return Err(format!("reserve {want} > avail {avail} accepted"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dag_generator_always_valid() {
+    for_all(Config::cases(60).seed(1007), |rng| {
+        let mut stream = JobStream::new(GeneratorConfig::paper_default(), rng.next_u64());
+        let job: DagJob = stream.next_job();
+        job.validate().map_err(|e| format!("invalid job: {e}"))?;
+        if job.window() < job.critical_path() - 1e-9 {
+            return Err("infeasible deadline generated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_task_dag_equals_chain() {
+    for_all(Config::cases(100).seed(1008), |rng| {
+        let size = rng.uniform(0.5, 10.0);
+        let para = rng.uniform(1.0, 32.0);
+        let dag = DagJob::new(
+            7,
+            0.0,
+            (size / para) * rng.uniform(1.1, 3.0),
+            vec![Task::new(size, para)],
+            vec![],
+        );
+        let chain = transform(&dag);
+        if chain.num_tasks() != 1 {
+            return Err(format!("single task became {} pseudo-tasks", chain.num_tasks()));
+        }
+        if (chain.tasks[0].size - size).abs() > 1e-9 {
+            return Err("size changed".into());
+        }
+        Ok(())
+    });
+}
