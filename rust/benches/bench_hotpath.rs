@@ -2,7 +2,8 @@
 //! end-to-end throughput, plus the PJRT-vs-native counterfactual sweep
 //! comparison used in EXPERIMENTS.md §Perf.
 
-use dagcloud::learning::counterfactual::{eval_grid_native, CounterfactualJob, S_MAX};
+use dagcloud::learning::counterfactual::{eval_grid_naive, eval_grid_native, CounterfactualJob, S_MAX};
+use dagcloud::learning::sweep;
 use dagcloud::market::{PriceTrace, SelfOwnedPool, SpotModel, SLOTS_PER_UNIT};
 use dagcloud::policy::dealloc::dealloc;
 use dagcloud::policy::{policy_set_full, Policy};
@@ -69,25 +70,43 @@ fn main() {
         pool.release(r, t0, t1);
     });
 
-    // --- counterfactual sweep: native vs PJRT ---
+    // --- counterfactual sweep: naive walk vs sweep engine vs PJRT ---
     let cf_jobs: Vec<CounterfactualJob> = chains
         .iter()
-        .take(16)
         .map(|job| {
             let (prices, dt) = trace.resample_window(job.arrival, job.deadline, S_MAX);
             let n = prices.len();
             CounterfactualJob::from_job(job, prices, dt, vec![8.0; n], 1.0)
         })
         .collect();
+    let mut cn = 0;
+    b.bench_throughput(
+        "learning/counterfactual_naive_175pol",
+        grid.len() as f64,
+        "policy-evals/s",
+        || {
+            cn = (cn + 1) % 16;
+            eval_grid_naive(&cf_jobs[cn], &grid, true)
+        },
+    );
     let mut ci = 0;
     b.bench_throughput(
         "learning/counterfactual_native_175pol",
         grid.len() as f64,
         "policy-evals/s",
         || {
-            ci = (ci + 1) % cf_jobs.len();
+            ci = (ci + 1) % 16;
             eval_grid_native(&cf_jobs[ci], &grid, true)
         },
+    );
+    // Batched retirements: the whole 64-job batch per iteration, fanned
+    // across the worker pool (the coordinator's retire-burst path).
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    b.bench_throughput(
+        "learning/sweep_batch_64jobs",
+        cf_jobs.len() as f64,
+        "jobs/s",
+        || sweep::sweep_batch(&cf_jobs, &grid, true, threads),
     );
 
     match ArtifactRuntime::load_default() {
@@ -98,7 +117,9 @@ fn main() {
                 grid.len() as f64,
                 "policy-evals/s",
                 || {
-                    cj = (cj + 1) % cf_jobs.len();
+                    // Same 16-job cycle as the naive/native benches so the
+                    // three evaluators measure an identical workload.
+                    cj = (cj + 1) % 16;
                     rt.policy_cost.eval(&cf_jobs[cj], &grid, true).expect("pjrt eval")
                 },
             );

@@ -23,7 +23,7 @@ use std::collections::BinaryHeap;
 
 use crate::learning::counterfactual::{CfSpec, CounterfactualJob, S_MAX};
 use crate::learning::regret::RegretTracker;
-use crate::learning::Tola;
+use crate::learning::{sweep, Tola};
 use crate::market::{CostLedger, InstanceKind, PriceTrace, SelfOwnedPool, SLOTS_PER_UNIT};
 use crate::policy::baselines::even_windows;
 use crate::policy::dealloc::{dealloc, windows_to_deadlines};
@@ -230,31 +230,62 @@ pub fn tola_run(
                 seq += 1;
             }
             EventKind::Retire(ji) => {
-                let job = &jobs[ji];
-                // Counterfactual sweep (Algorithm 4 lines 14–21): spot
-                // prices over [a_j, d_j] are now known.
-                let (prices, dt) = trace.resample_window(job.arrival, job.deadline, S_MAX);
-                let navail: Vec<f64> = match &pool {
-                    Some(pl) => (0..prices.len())
-                        .map(|k| {
-                            let t0 = job.arrival + k as f64 * dt;
-                            pl.available_at(t0.min(horizon)) as f64
-                        })
-                        .collect(),
-                    None => vec![0.0; prices.len()],
-                };
-                let cf = CounterfactualJob::from_job(job, prices, dt, navail, od_price);
-                let costs = evaluate_specs(&cf, specs, has_pool, evaluator);
-                let realized = states[ji].as_ref().map(|s| s.cost).unwrap_or(0.0);
-                tola.update(&costs, time.max(d_max * 1.001));
-                regret.record(realized, &costs);
-                if regret.jobs() % weight_sample_every as u64 == 0 {
-                    let wmax = tola
-                        .weights()
+                // Batch every retirement scheduled before the next task
+                // event: nothing touches the pool in between, so the
+                // counterfactual sweeps (Algorithm 4 lines 14–21) are
+                // independent and fan across the worker pool. Weight
+                // updates are applied afterwards in exact event order, so
+                // results are identical to one-at-a-time retirement.
+                let mut batch: Vec<(f64, usize)> = vec![(time, ji)];
+                while matches!(
+                    heap.peek().map(|e| &e.kind),
+                    Some(EventKind::Retire(_))
+                ) {
+                    if let Some(Event { time: t2, kind: EventKind::Retire(j2), .. }) =
+                        heap.pop()
+                    {
+                        batch.push((t2, j2));
+                    }
+                }
+                let cfs: Vec<CounterfactualJob> = batch
+                    .iter()
+                    .map(|&(_, ji)| {
+                        let job = &jobs[ji];
+                        let (prices, dt) =
+                            trace.resample_window(job.arrival, job.deadline, S_MAX);
+                        let navail: Vec<f64> = match &pool {
+                            Some(pl) => (0..prices.len())
+                                .map(|k| {
+                                    let t0 = job.arrival + k as f64 * dt;
+                                    pl.available_at(t0.min(horizon)) as f64
+                                })
+                                .collect(),
+                            None => vec![0.0; prices.len()],
+                        };
+                        CounterfactualJob::from_job(job, prices, dt, navail, od_price)
+                    })
+                    .collect();
+                let all_costs: Vec<Vec<f64>> = match evaluator {
+                    Evaluator::Native { threads } if cfs.len() > 1 => {
+                        sweep::sweep_batch_costs(&cfs, specs, has_pool, *threads)
+                    }
+                    _ => cfs
                         .iter()
-                        .cloned()
-                        .fold(0.0f64, f64::max);
-                    weight_trajectory.push(wmax);
+                        .map(|cf| evaluate_specs(cf, specs, has_pool, evaluator))
+                        .collect(),
+                };
+                for (&(t, ji), costs) in batch.iter().zip(&all_costs) {
+                    let realized = states[ji].as_ref().map(|s| s.cost).unwrap_or(0.0);
+                    tola.update(costs, t.max(d_max * 1.001));
+                    regret.record(realized, costs);
+                    if regret.jobs() % weight_sample_every as u64 == 0 {
+                        let wmax = tola
+                            .weights()
+                            .iter()
+                            .cloned()
+                            .fold(0.0f64, f64::max);
+                        weight_trajectory.push(wmax);
+                    }
                 }
             }
         }
@@ -300,18 +331,11 @@ pub fn evaluate_specs(
     evaluator: &Evaluator,
 ) -> Vec<f64> {
     match evaluator {
-        Evaluator::Native { threads } => {
-            if *threads <= 1 || specs.len() < 8 {
-                specs
-                    .iter()
-                    .map(|s| cf.eval_spec(s, has_pool).0)
-                    .collect()
-            } else {
-                parallel_map(specs.len(), *threads, |i| {
-                    cf.eval_spec(&specs[i], has_pool).0
-                })
-            }
-        }
+        // One job is a single shared-structure sweep: O(L·log S) per spec
+        // after the per-job precompute, so intra-job threading no longer
+        // pays — `threads` fans *batches* of retirements instead
+        // (see `tola_run` / `sweep::sweep_batch_costs`).
+        Evaluator::Native { .. } => sweep::eval_spec_costs(cf, specs, has_pool),
         Evaluator::Pjrt(rt) => {
             // Split: contiguous Proposed prefix goes to the kernel,
             // everything else native (benchmark grids are tiny).
@@ -332,10 +356,7 @@ pub fn evaluate_specs(
             };
             match kernel_costs {
                 Some(costs) => costs,
-                None => specs
-                    .iter()
-                    .map(|s| cf.eval_spec(s, has_pool).0)
-                    .collect(),
+                None => sweep::eval_spec_costs(cf, specs, has_pool),
             }
         }
     }

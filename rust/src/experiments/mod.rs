@@ -3,6 +3,7 @@
 
 pub mod tables;
 pub mod figures;
+pub mod perf;
 
 use crate::util::cli::Args;
 
@@ -19,6 +20,8 @@ COMMANDS
   table5      Experiment 3: self-owned utilization ratio μ
   table6      Experiment 4: TOLA online learning, proposed vs benchmark
   figures     Regenerate data series for Figures 1–4 (CSV to --out dir)
+  sweep       Counterfactual sweep-engine throughput (naive vs closed-form
+              vs batched; EXPERIMENTS.md §Perf)
   run         One TOLA learning run with progress output
   all         Run every table (tables 2–6) and figures
 
@@ -64,6 +67,7 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
         "table5" => tables::run_table4_5(&cfg, &out_dir)?,
         "table6" => tables::run_table6(&cfg, &out_dir)?,
         "figures" => figures::run_all(&out_dir)?,
+        "sweep" => perf::run_sweep_bench(&cfg, &out_dir)?,
         "run" => tables::run_single_tola(&cfg, &out_dir)?,
         "all" => {
             tables::run_table2(&cfg, &out_dir)?;

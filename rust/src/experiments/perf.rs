@@ -1,0 +1,135 @@
+//! `repro sweep`: the counterfactual sweep-engine throughput driver — the
+//! perf trajectory behind EXPERIMENTS.md §Perf, runnable as a plain
+//! subcommand (CI uses `bench_hotpath` for the same numbers with the full
+//! micro-bench harness).
+//!
+//! Measures the per-job all-policy evaluation three ways on one workload:
+//! the naive O(N_POL·S) slot walk (the oracle), the structure-sharing
+//! closed-form engine, and the batched engine fanned across the worker
+//! pool — and writes `sweep_bench.json` with policy-evals/s for each.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::Config;
+use crate::learning::counterfactual::{eval_grid_naive, CounterfactualJob, S_MAX};
+use crate::learning::sweep;
+use crate::policy::policy_set_full;
+use crate::util::json::Json;
+
+/// Jobs measured per pass (also the batch size of the batched pass).
+const BATCH: usize = 64;
+
+pub fn run_sweep_bench(cfg: &Config, out_dir: &str) -> Result<()> {
+    println!("== sweep: counterfactual engine throughput ==");
+    let (jobs, trace) = super::tables::workload(cfg, 2);
+    let take = jobs.len().min(BATCH);
+    anyhow::ensure!(take > 0, "no jobs generated");
+    let cf_jobs: Vec<CounterfactualJob> = jobs
+        .iter()
+        .take(take)
+        .map(|job| {
+            let (prices, dt) = trace.resample_window(job.arrival, job.deadline, S_MAX);
+            let n = prices.len();
+            CounterfactualJob::from_job(job, prices, dt, vec![8.0; n], cfg.od_price)
+        })
+        .collect();
+    let grid = policy_set_full();
+    let evals = (take * grid.len()) as f64;
+
+    // Realized spot availability per grid bid over the whole horizon, via
+    // the trace's prefix-sum index (no per-bid rescans).
+    let idx = trace.availability_index();
+    let s_last = trace.num_slots().saturating_sub(1);
+    let bids: Vec<f64> = idx.bids().to_vec();
+    let avail: Vec<f64> = bids
+        .iter()
+        .map(|&b| idx.availability(0, s_last, b).unwrap_or(0.0))
+        .collect();
+    println!("   realized availability per bid: {avail:.3?}");
+
+    // Naive oracle pass (single-threaded, one pass — it is the slow one).
+    let t0 = Instant::now();
+    for cf in &cf_jobs {
+        std::hint::black_box(eval_grid_naive(cf, &grid, true));
+    }
+    let naive_s = t0.elapsed().as_secs_f64();
+
+    // Closed-form engine, single-threaded, averaged over repetitions.
+    let reps = 5;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for cf in &cf_jobs {
+            std::hint::black_box(sweep::eval_grid(cf, &grid, true));
+        }
+    }
+    let sweep_s = t0.elapsed().as_secs_f64() / reps as f64;
+
+    // Batched engine across the worker pool.
+    let threads = cfg.effective_threads();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(sweep::sweep_batch(&cf_jobs, &grid, true, threads));
+    }
+    let batch_s = t0.elapsed().as_secs_f64() / reps as f64;
+
+    let report = [
+        ("naive_walk", naive_s),
+        ("sweep_engine", sweep_s),
+        ("sweep_batch", batch_s),
+    ];
+    for (name, secs) in report {
+        println!(
+            "  {name:<14} {:>10.1} policy-evals/s  ({:.2} ms / {take} jobs x {} policies)",
+            evals / secs,
+            secs * 1e3,
+            grid.len()
+        );
+    }
+    println!(
+        "  speedup: engine {:.1}x, batched {:.1}x over the naive walk",
+        naive_s / sweep_s,
+        naive_s / batch_s
+    );
+
+    let mut j = Json::obj();
+    j.set("jobs", Json::Num(take as f64))
+        .set("policies", Json::Num(grid.len() as f64))
+        .set("threads", Json::Num(threads as f64))
+        .set("naive_evals_per_s", Json::Num(evals / naive_s))
+        .set("sweep_evals_per_s", Json::Num(evals / sweep_s))
+        .set("batch_evals_per_s", Json::Num(evals / batch_s))
+        .set("speedup_sweep", Json::Num(naive_s / sweep_s))
+        .set("speedup_batch", Json::Num(naive_s / batch_s))
+        .set("bids", Json::from_f64_slice(&bids))
+        .set("availability", Json::from_f64_slice(&avail));
+    std::fs::write(format!("{out_dir}/sweep_bench.json"), j.pretty())?;
+    println!("  written to {out_dir}/sweep_bench.json");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_bench_runs_small() {
+        let cfg = Config {
+            jobs: 8,
+            seed: 13,
+            threads: 2,
+            use_pjrt: false,
+            ..Config::default()
+        };
+        let dir = std::env::temp_dir().join("dagcloud_sweepbench");
+        std::fs::create_dir_all(&dir).unwrap();
+        run_sweep_bench(&cfg, dir.to_str().unwrap()).unwrap();
+        let j = Json::parse(
+            &std::fs::read_to_string(dir.join("sweep_bench.json")).unwrap(),
+        )
+        .unwrap();
+        assert!(j.get("speedup_sweep").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("policies").unwrap().as_f64().unwrap(), 175.0);
+    }
+}

@@ -323,7 +323,22 @@ pub struct PolicyGridEval {
 }
 
 /// Sweep the whole policy grid natively.
+///
+/// Delegates to the structure-sharing closed-form engine
+/// ([`crate::learning::sweep`]); [`eval_grid_naive`] keeps the O(N_POL·S)
+/// slot-walk formulation as the test oracle.
 pub fn eval_grid_native(
+    job: &CounterfactualJob,
+    policies: &[Policy],
+    has_pool: bool,
+) -> PolicyGridEval {
+    super::sweep::eval_grid(job, policies, has_pool)
+}
+
+/// The naive per-policy slot walk over the whole grid — the specification
+/// the sweep engine (and the AOT kernel) must match. Kept for tests and
+/// the `bench_hotpath` before/after comparison.
+pub fn eval_grid_naive(
     job: &CounterfactualJob,
     policies: &[Policy],
     has_pool: bool,
@@ -456,6 +471,11 @@ mod tests {
         let eval = eval_grid_native(&c, &grid, true);
         assert_eq!(eval.costs.len(), 175);
         assert!(eval.costs.iter().all(|&x| x.is_finite() && x >= 0.0));
+        // The fast path must agree with the naive oracle grid-wide.
+        let oracle = eval_grid_naive(&c, &grid, true);
+        for (a, b) in eval.costs.iter().zip(&oracle.costs) {
+            assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "{a} vs {b}");
+        }
     }
 
     fn random_job(rng: &mut Pcg32) -> ChainJob {

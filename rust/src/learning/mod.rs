@@ -10,13 +10,16 @@
 //!
 //! The per-job all-policy sweep is the hot path; [`counterfactual`] defines
 //! its exact semantics, implemented three ways that must agree: natively
-//! (here), in pure jnp (`python/compile/kernels/ref.py`), and as the AOT
-//! Pallas kernel executed through PJRT ([`crate::runtime`]).
+//! (the [`sweep`] engine, with the naive walk kept as oracle), in pure jnp
+//! (`python/compile/kernels/ref.py`), and as the AOT Pallas kernel executed
+//! through PJRT ([`crate::runtime`]).
 
 pub mod counterfactual;
 pub mod regret;
+pub mod sweep;
 
 pub use counterfactual::{CounterfactualJob, PolicyGridEval};
+pub use sweep::{sweep_batch, SweepContext};
 
 use crate::util::rng::Pcg32;
 

@@ -1,0 +1,577 @@
+//! Structure-sharing counterfactual sweep engine: the native fast path for
+//! the per-job all-policy evaluation (the TOLA hot path).
+//!
+//! [`CounterfactualJob::eval_spec`] is the specification: an O(S) slot walk
+//! per policy, O(N_POL·S) per retired job. But the grid shares almost all of
+//! that work, and the walk itself has a closed form — the same insight the
+//! AOT Pallas model exploits (`python/compile/model.py`):
+//!
+//! 1. **Dealloc dedup** — `Dealloc(β')` depends only on the *effective*
+//!    allocation parameter (`β₀` when a pool exists and `β₀ ≤ β`, else `β`),
+//!    which the §6.1 grids confine to `C1 ∪ C2` (≤ 12 distinct values). The
+//!    windows, task deadlines, slot-ownership ranges, and per-window pool
+//!    minima are computed once per distinct β', not once per policy.
+//! 2. **Per-bid market tables** — spot availability depends on the bid
+//!    only, and a grid holds ≤ [`NB_MAX`] distinct bids. One O(S) pass per
+//!    distinct bid builds prefix sums of winning time and winning
+//!    price-mass over the resampled window.
+//! 3. **Closed-form slot walk** — Def. 3.1's turning-point test uses the
+//!    per-task *constant* z̃₀, so the firing condition is affine in
+//!    cumulative losing time and monotone along the window: the first firing
+//!    slot and the completion slot are both binary searches into the bid's
+//!    prefix rows, and the spot cost telescopes through the price-mass
+//!    prefix with a single boundary-slot correction.
+//!
+//! Total: O((NB + NW)·S) precompute + O(N_POL·L·log S) evaluation, against
+//! the naive O(N_POL·S). The engine is rankings-faithful to the naive walk
+//! (identical window/grant/ownership arithmetic, identical strict
+//! turning-point test); `eval_spec` stays in [`super::counterfactual`] as
+//! the test oracle and the property tests below pin the two paths together
+//! to 1e-9 across random jobs, grids, pool availabilities, and coarsened
+//! (`S_MAX`-truncated) windows.
+
+use crate::policy::selfowned::f_selfowned;
+use crate::policy::Policy;
+
+use super::counterfactual::{CfSpec, CounterfactualJob, PolicyGridEval, OWNER_OFFSET};
+
+/// Turning-point tolerance, shared with the naive walk and the AOT model
+/// (`FIRE_EPS` in `python/compile/kernels/ref.py`).
+const FIRE_EPS: f64 = 1e-4;
+
+/// Window layout selector: one plan per distinct effective Dealloc β', plus
+/// the even-split baseline layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WindowKey {
+    /// `Dealloc(β')`, keyed by the exact bit pattern of β'.
+    Dealloc(u64),
+    /// Even windows `ŝ_i = e_i + ω/l` (benchmark set P').
+    Even,
+}
+
+/// Self-owned grant rule for an allocation plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AllocRule {
+    /// Rule (12) with sufficiency index β₀ (bit pattern).
+    Rule12 { beta0_bits: u64 },
+    /// A proposed policy without β₀: the self-owned machinery is bypassed.
+    Rule12None,
+    /// The naive grab-everything benchmark rule.
+    Naive,
+}
+
+/// Prefix tables over the resampled window for one distinct bid.
+#[derive(Debug, Clone)]
+struct BidTables {
+    /// `cum_win[k]` = winning seconds in slots `[0, k)` (length S+1).
+    cum_win: Vec<f64>,
+    /// `cum_price[k]` = Σ `price_j·dt` over winning slots `j < k`.
+    cum_price: Vec<f64>,
+}
+
+/// Geometry shared by every policy with the same window layout.
+#[derive(Debug, Clone)]
+struct WindowPlan {
+    /// Cumulative task deadlines (relative).
+    deadlines: Vec<f64>,
+    /// Slot-ownership ranges `[k0, k1)` per task — the exact partition the
+    /// naive walk's `mid >= deadlines[cur]` cursor produces (tasks whose
+    /// window contains no slot sample point get an empty range).
+    ranges: Vec<(usize, usize)>,
+    /// Per-task `min_slot navail` over the window (naive two-pointer
+    /// semantics; 0 for windows containing no slot sample point).
+    nmin: Vec<f64>,
+}
+
+/// Per-task allocation state for one (window layout, self-owned rule) pair.
+#[derive(Debug, Clone)]
+struct AllocPlan {
+    /// `δ_i − r_i`, clamped at 0.
+    delta_eff: Vec<f64>,
+    /// Initial spot/on-demand workload `z̃_i = max(0, z_i − r_i·ŝ_i)`.
+    zt0: Vec<f64>,
+    /// Σ self-owned work (policy-invariant given the pair).
+    so_work: f64,
+}
+
+/// Lazily-built shared state for sweeping one job under many strategies.
+///
+/// Construction is O(1); each distinct window layout costs one O(S + L)
+/// pass, each distinct bid one O(S) pass, and every [`eval_spec`] after
+/// that is O(L·log S).
+///
+/// [`eval_spec`]: SweepContext::eval_spec
+pub struct SweepContext<'a> {
+    job: &'a CounterfactualJob,
+    has_pool: bool,
+    num_slots: usize,
+    bids: Vec<(u64, BidTables)>,
+    windows: Vec<(WindowKey, WindowPlan)>,
+    allocs: Vec<((usize, AllocRule), AllocPlan)>,
+}
+
+impl<'a> SweepContext<'a> {
+    pub fn new(job: &'a CounterfactualJob, has_pool: bool) -> SweepContext<'a> {
+        let num_slots = (job.window / job.dt).ceil() as usize;
+        let num_slots = num_slots.min(job.prices.len()).max(1);
+        SweepContext {
+            job,
+            has_pool,
+            num_slots,
+            bids: Vec::new(),
+            windows: Vec::new(),
+            allocs: Vec::new(),
+        }
+    }
+
+    /// Evaluate one proposed policy: `(cost, spot_work, od_work, so_work)`,
+    /// matching [`CounterfactualJob::eval_policy`] to ~1e-12.
+    pub fn eval_policy(&mut self, policy: &Policy) -> (f64, f64, f64, f64) {
+        self.eval_spec(&CfSpec::Proposed(*policy))
+    }
+
+    /// Evaluate any strategy spec (proposed or benchmark).
+    pub fn eval_spec(&mut self, spec: &CfSpec) -> (f64, f64, f64, f64) {
+        let (wkey, rule, bid) = match spec {
+            CfSpec::Proposed(p) => (
+                WindowKey::Dealloc(p.dealloc_beta(self.has_pool).to_bits()),
+                match p.beta0 {
+                    Some(b0) => AllocRule::Rule12 { beta0_bits: b0.to_bits() },
+                    None => AllocRule::Rule12None,
+                },
+                p.bid,
+            ),
+            CfSpec::EvenNaive { bid } => (WindowKey::Even, AllocRule::Naive, *bid),
+            CfSpec::DeallocNaive(p) => {
+                (WindowKey::Dealloc(p.beta.to_bits()), AllocRule::Naive, p.bid)
+            }
+        };
+        let wi = self.window_index(wkey);
+        let ai = self.alloc_index(wi, rule);
+        let bi = self.bid_index(bid);
+        let plan = &self.windows[wi].1;
+        let alloc = &self.allocs[ai].1;
+        let tab = &self.bids[bi].1;
+        let (dt, prices) = (self.job.dt, &self.job.prices);
+
+        let mut spot_work = 0.0;
+        let mut spot_cost = 0.0;
+        let mut od_work = 0.0;
+        for i in 0..self.job.l {
+            let zt0 = alloc.zt0[i];
+            if zt0 <= 0.0 {
+                continue;
+            }
+            let de = alloc.delta_eff[i];
+            let (k0, k1) = plan.ranges[i];
+            if de <= 0.0 || k0 >= k1 {
+                // No capacity or no owned slots: the whole z̃ runs on-demand
+                // (the naive walk charges it when the cursor passes the
+                // task, or in the final cleanup).
+                od_work += zt0;
+                continue;
+            }
+            let deadline = plan.deadlines[i];
+            let w_k0 = tab.cum_win[k0];
+            let tol = FIRE_EPS * (1.0 + zt0);
+
+            // First firing slot: Def. 3.1's strict test at slot start,
+            //   z̃(k) >= δeff·(ς − k·dt) − tol,  z̃(k) = z̃₀ − δeff·W(k),
+            // monotone in k because W grows by at most dt per slot.
+            let mut lo = k0;
+            let mut hi = k1;
+            while lo < hi {
+                let m = (lo + hi) / 2;
+                let fired = zt0 - de * (tab.cum_win[m] - w_k0)
+                    >= de * (deadline - m as f64 * dt) - tol;
+                if fired {
+                    hi = m;
+                } else {
+                    lo = m + 1;
+                }
+            }
+            let w_fire = if lo < k1 {
+                tab.cum_win[lo] - w_k0
+            } else {
+                f64::INFINITY
+            };
+
+            // Winning time actually available: only the last owned slot can
+            // extend past the deadline (clip it).
+            let w_full = tab.cum_win[k1] - w_k0;
+            let k_last = k1 - 1;
+            let miss = if tab.cum_win[k_last + 1] > tab.cum_win[k_last] {
+                let secs_last = (deadline - k_last as f64 * dt).clamp(0.0, dt);
+                dt - secs_last
+            } else {
+                0.0
+            };
+            let w_end = (w_full - miss).max(0.0);
+
+            let spot_time = w_fire.min(w_end).min(zt0 / de).max(0.0);
+            od_work += (zt0 - de * spot_time).max(0.0);
+            if spot_time <= 0.0 {
+                continue;
+            }
+            spot_work += de * spot_time;
+
+            // Spot cost telescopes through the price-mass prefix: find the
+            // slot where cumulative winning time reaches `spot_time` and
+            // refund the unconsumed tail of that boundary slot.
+            let target_w = w_k0 + spot_time;
+            let mut lo2 = k0;
+            let mut hi2 = k1;
+            while lo2 < hi2 {
+                let m = (lo2 + hi2) / 2;
+                if tab.cum_win[m] >= target_w {
+                    hi2 = m;
+                } else {
+                    lo2 = m + 1;
+                }
+            }
+            let k_stop = lo2; // first k with cum_win[k] >= target_w (or k1)
+            let pw = tab.cum_price[k_stop] - tab.cum_price[k0];
+            let overshoot = (tab.cum_win[k_stop] - target_w).max(0.0);
+            let price_last = prices[k_stop - 1];
+            spot_cost += de * (pw - price_last * overshoot).max(0.0);
+        }
+
+        let cost = spot_cost + self.job.od_price * od_work;
+        (cost, spot_work, od_work, alloc.so_work)
+    }
+
+    fn bid_index(&mut self, bid: f64) -> usize {
+        let key = bid.to_bits();
+        if let Some(i) = self.bids.iter().position(|(k, _)| *k == key) {
+            return i;
+        }
+        let dt = self.job.dt;
+        let mut cum_win = Vec::with_capacity(self.num_slots + 1);
+        let mut cum_price = Vec::with_capacity(self.num_slots + 1);
+        let (mut w, mut pw) = (0.0f64, 0.0f64);
+        cum_win.push(0.0);
+        cum_price.push(0.0);
+        for k in 0..self.num_slots {
+            let price = self.job.prices[k];
+            if price <= bid {
+                w += dt;
+                pw += price * dt;
+            }
+            cum_win.push(w);
+            cum_price.push(pw);
+        }
+        self.bids.push((key, BidTables { cum_win, cum_price }));
+        self.bids.len() - 1
+    }
+
+    fn window_index(&mut self, wkey: WindowKey) -> usize {
+        if let Some(i) = self.windows.iter().position(|(k, _)| *k == wkey) {
+            return i;
+        }
+        let job = self.job;
+        let sizes = match wkey {
+            WindowKey::Dealloc(bits) => job.windows(f64::from_bits(bits)),
+            WindowKey::Even => job.windows_even(),
+        };
+        let mut deadlines = Vec::with_capacity(job.l);
+        let mut acc = 0.0;
+        for s in &sizes {
+            acc += s;
+            deadlines.push(acc);
+        }
+
+        // Slot-ownership ranges: the same traversal as the naive slot walk
+        // (sample point `k·dt + OFFSET·dt`, cursor advances on `mid >= ς`).
+        let dt = job.dt;
+        let mut ranges = vec![(self.num_slots, self.num_slots); job.l];
+        let mut started = vec![false; job.l];
+        let mut cur = 0usize;
+        for k in 0..self.num_slots {
+            let mid = k as f64 * dt + OWNER_OFFSET * dt;
+            while cur < job.l && mid >= deadlines[cur] {
+                cur += 1;
+            }
+            if cur >= job.l {
+                break;
+            }
+            if started[cur] {
+                ranges[cur].1 = k + 1;
+            } else {
+                ranges[cur] = (k, k + 1);
+                started[cur] = true;
+            }
+        }
+
+        // Per-window pool minima: the naive grant loop's two-pointer
+        // (sample point `(k + OFFSET)·dt` — kept bit-identical to it).
+        let mut nmin = vec![0.0f64; job.l];
+        let mut slot_cursor = 0usize;
+        for i in 0..job.l {
+            let lo = if i == 0 { 0.0 } else { deadlines[i - 1] };
+            let hi = deadlines[i];
+            let mut nm = f64::INFINITY;
+            while slot_cursor < self.num_slots {
+                let mid = (slot_cursor as f64 + OWNER_OFFSET) * dt;
+                if mid < lo {
+                    slot_cursor += 1;
+                    continue;
+                }
+                if mid >= hi {
+                    break;
+                }
+                nm = nm.min(job.navail[slot_cursor]);
+                slot_cursor += 1;
+            }
+            nmin[i] = if nm.is_finite() { nm } else { 0.0 };
+        }
+
+        self.windows.push((wkey, WindowPlan { deadlines, ranges, nmin }));
+        self.windows.len() - 1
+    }
+
+    fn alloc_index(&mut self, wi: usize, rule: AllocRule) -> usize {
+        let key = (wi, rule);
+        if let Some(i) = self.allocs.iter().position(|(k, _)| *k == key) {
+            return i;
+        }
+        let job = self.job;
+        let plan = &self.windows[wi].1;
+        let mut delta_eff = Vec::with_capacity(job.l);
+        let mut zt0 = Vec::with_capacity(job.l);
+        let mut so_work = 0.0;
+        for i in 0..job.l {
+            let lo = if i == 0 { 0.0 } else { plan.deadlines[i - 1] };
+            let hi = plan.deadlines[i];
+            let hat_s = (hi - lo).max(1e-12);
+            let ri = if !self.has_pool {
+                0.0
+            } else {
+                match rule {
+                    AllocRule::Rule12 { beta0_bits } => {
+                        let b0 = f64::from_bits(beta0_bits);
+                        let f = f_selfowned(job.z[i], job.delta[i], hat_s, b0);
+                        f.min(plan.nmin[i]).min(job.delta[i]).max(0.0)
+                    }
+                    AllocRule::Rule12None => 0.0,
+                    AllocRule::Naive => plan.nmin[i].min(job.delta[i]).max(0.0),
+                }
+            };
+            let covered = ri * hat_s;
+            zt0.push((job.z[i] - covered).max(0.0));
+            so_work += job.z[i].min(covered);
+            delta_eff.push((job.delta[i] - ri).max(0.0));
+        }
+        self.allocs.push((key, AllocPlan { delta_eff, zt0, so_work }));
+        self.allocs.len() - 1
+    }
+}
+
+/// Sweep one job over a proposed-policy grid through the shared-structure
+/// engine (the fast path behind
+/// [`super::counterfactual::eval_grid_native`]).
+pub fn eval_grid(
+    job: &CounterfactualJob,
+    policies: &[Policy],
+    has_pool: bool,
+) -> PolicyGridEval {
+    let mut ctx = SweepContext::new(job, has_pool);
+    let mut out = PolicyGridEval {
+        costs: Vec::with_capacity(policies.len()),
+        spot_work: Vec::with_capacity(policies.len()),
+        od_work: Vec::with_capacity(policies.len()),
+        so_work: Vec::with_capacity(policies.len()),
+    };
+    for p in policies {
+        let (c, sw, ow, sow) = ctx.eval_policy(p);
+        out.costs.push(c);
+        out.spot_work.push(sw);
+        out.od_work.push(ow);
+        out.so_work.push(sow);
+    }
+    out
+}
+
+/// Sweep one job over arbitrary strategy specs, costs only (the shape the
+/// TOLA weight update consumes).
+pub fn eval_spec_costs(job: &CounterfactualJob, specs: &[CfSpec], has_pool: bool) -> Vec<f64> {
+    let mut ctx = SweepContext::new(job, has_pool);
+    specs.iter().map(|s| ctx.eval_spec(s).0).collect()
+}
+
+/// Batched retirement sweep: evaluate every job of a batch against the full
+/// grid, fanning jobs across [`crate::coordinator::exec_pool::parallel_map`]
+/// workers. Results are in job order.
+pub fn sweep_batch(
+    jobs: &[CounterfactualJob],
+    grid: &[Policy],
+    has_pool: bool,
+    threads: usize,
+) -> Vec<PolicyGridEval> {
+    crate::coordinator::exec_pool::parallel_map(jobs.len(), threads, |i| {
+        eval_grid(&jobs[i], grid, has_pool)
+    })
+}
+
+/// Batched retirement sweep over strategy specs, costs only — the entry
+/// point the coordinator's event loop uses when several jobs retire between
+/// consecutive task events.
+pub fn sweep_batch_costs(
+    jobs: &[CounterfactualJob],
+    specs: &[CfSpec],
+    has_pool: bool,
+    threads: usize,
+) -> Vec<Vec<f64>> {
+    crate::coordinator::exec_pool::parallel_map(jobs.len(), threads, |i| {
+        eval_spec_costs(&jobs[i], specs, has_pool)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::SLOTS_PER_UNIT;
+    use crate::policy::{benchmark_bids, grid_c2, policy_set_full};
+    use crate::util::prop::{for_all, Config};
+    use crate::util::rng::Pcg32;
+    use crate::workload::{ChainJob, ChainTask};
+
+    fn random_cf(rng: &mut Pcg32, coarsen: bool) -> CounterfactualJob {
+        let l = rng.range_inclusive(1, 8) as usize;
+        let tasks: Vec<ChainTask> = (0..l)
+            .map(|_| ChainTask::new(rng.uniform(0.3, 12.0), rng.uniform(1.0, 16.0)))
+            .collect();
+        let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
+        // Include zero-slack windows (multiplier 1.0): every task fires its
+        // turning point immediately.
+        let mult = if rng.chance(0.15) { 1.0 } else { rng.uniform(1.02, 2.5) };
+        let job = ChainJob::new(0, 0.0, makespan * mult, tasks);
+        let dt = if coarsen {
+            // Long window truncated to few slots — the S_MAX resampling
+            // regime (slot length grows so the fixed shape still covers it).
+            job.window() / rng.range_inclusive(4, 48) as f64
+        } else {
+            1.0 / SLOTS_PER_UNIT as f64
+        };
+        let n = (job.window() / dt).ceil() as usize + rng.range_inclusive(0, 2) as usize;
+        let n = n.max(1);
+        let prices: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.chance(0.15) {
+                    f64::INFINITY // padding-style never-winning slots
+                } else if rng.chance(0.5) {
+                    rng.uniform(0.12, 0.3)
+                } else {
+                    rng.uniform(0.4, 1.0)
+                }
+            })
+            .collect();
+        let pooled = rng.chance(0.7);
+        let navail: Vec<f64> = (0..n)
+            .map(|_| if pooled { rng.range_inclusive(0, 50) as f64 } else { 0.0 })
+            .collect();
+        CounterfactualJob::from_job(&job, prices, dt, navail, 1.0)
+    }
+
+    fn assert_quad_close(a: (f64, f64, f64, f64), b: (f64, f64, f64, f64)) -> Result<(), String> {
+        for (x, y) in [(a.0, b.0), (a.1, b.1), (a.2, b.2), (a.3, b.3)] {
+            if (x - y).abs() > 1e-9 * x.abs().max(1.0) {
+                return Err(format!("naive {a:?} vs sweep {b:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn matches_oracle_on_paper_example() {
+        let job = ChainJob::paper_example();
+        let dt = 1.0 / SLOTS_PER_UNIT as f64;
+        let n = (job.window() / dt).ceil() as usize + 1;
+        let prices: Vec<f64> = (0..n).map(|k| if k % 3 == 0 { 0.2 } else { 0.6 }).collect();
+        let cf = CounterfactualJob::from_job(&job, prices, dt, vec![6.0; n], 1.0);
+        let grid = policy_set_full();
+        let mut ctx = SweepContext::new(&cf, true);
+        for p in &grid {
+            assert_quad_close(cf.eval_policy(p, true), ctx.eval_policy(p)).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_sweep_matches_oracle_across_jobs_grids_and_pools() {
+        // The tentpole equivalence: (cost, spot, od, so) quadruples of the
+        // fast path match the naive oracle to 1e-9 across random jobs,
+        // random sub-grids, pool availabilities, and coarsened windows.
+        for_all(Config::cases(60).seed(2026), |rng| {
+            let coarsen = rng.chance(0.34);
+            let cf = random_cf(rng, coarsen);
+            let has_pool = cf.navail.iter().any(|&v| v > 0.0);
+            let mut ctx = SweepContext::new(&cf, has_pool);
+            // Full proposed grid.
+            for p in policy_set_full() {
+                assert_quad_close(cf.eval_policy(&p, has_pool), ctx.eval_policy(&p))?;
+            }
+            // Benchmark specs share the same context.
+            for bid in benchmark_bids() {
+                let spec = CfSpec::EvenNaive { bid };
+                assert_quad_close(cf.eval_spec(&spec, has_pool), ctx.eval_spec(&spec))?;
+            }
+            for beta in grid_c2() {
+                let spec = CfSpec::DeallocNaive(Policy::new(beta, None, 0.24));
+                assert_quad_close(cf.eval_spec(&spec, has_pool), ctx.eval_spec(&spec))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_structure_sharing_is_policy_order_independent() {
+        // Cached plans must not leak state between policies: evaluating the
+        // grid in reverse through the same context gives identical numbers.
+        for_all(Config::cases(20).seed(2027), |rng| {
+            let cf = random_cf(rng, false);
+            let has_pool = cf.navail.iter().any(|&v| v > 0.0);
+            let grid = policy_set_full();
+            let fwd = eval_grid(&cf, &grid, has_pool);
+            let mut ctx = SweepContext::new(&cf, has_pool);
+            let mut rev: Vec<(f64, f64, f64, f64)> =
+                grid.iter().rev().map(|p| ctx.eval_policy(p)).collect();
+            rev.reverse();
+            for (i, r) in rev.iter().enumerate() {
+                if fwd.costs[i] != r.0 || fwd.od_work[i] != r.2 {
+                    return Err(format!("order-dependent result at policy {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sweep_batch_matches_single_job_path() {
+        let mut rng = Pcg32::new(77);
+        let jobs: Vec<CounterfactualJob> = (0..6).map(|_| random_cf(&mut rng, false)).collect();
+        let grid = policy_set_full();
+        let batched = sweep_batch(&jobs, &grid, true, 4);
+        assert_eq!(batched.len(), jobs.len());
+        for (job, got) in jobs.iter().zip(&batched) {
+            let solo = eval_grid(job, &grid, true);
+            assert_eq!(solo.costs, got.costs);
+            assert_eq!(solo.so_work, got.so_work);
+        }
+    }
+
+    #[test]
+    fn batch_costs_match_spec_evaluation() {
+        let mut rng = Pcg32::new(78);
+        let jobs: Vec<CounterfactualJob> = (0..4).map(|_| random_cf(&mut rng, true)).collect();
+        let specs: Vec<CfSpec> = benchmark_bids()
+            .into_iter()
+            .map(|bid| CfSpec::EvenNaive { bid })
+            .collect();
+        let got = sweep_batch_costs(&jobs, &specs, false, 2);
+        for (job, row) in jobs.iter().zip(&got) {
+            for (spec, c) in specs.iter().zip(row) {
+                let (oracle, _, _, _) = job.eval_spec(spec, false);
+                assert!((oracle - c).abs() <= 1e-9 * oracle.abs().max(1.0));
+            }
+        }
+    }
+}

@@ -22,7 +22,7 @@ pub mod pool;
 pub use pool::SelfOwnedPool;
 pub use pricing::{CostLedger, InstanceKind};
 pub use spot::{SpotModel, SpotPriceProcess};
-pub use trace::PriceTrace;
+pub use trace::{AvailabilityIndex, PriceTrace};
 
 /// Number of price slots per unit of time (§6.1: "each unit of time is
 /// divided into 12 equal time slots").

@@ -6,8 +6,64 @@
 //! (the kernel has a fixed AOT shape, so long windows are coarsened and the
 //! slot length `dt` travels alongside).
 
+use std::sync::OnceLock;
+
 use super::spot::{SpotModel, SpotPriceProcess};
 use super::SLOTS_PER_UNIT;
+
+/// Prefix-sum index of winning-slot counts per bid of a fixed bid grid:
+/// O(1) availability queries over any slot range instead of an O(S) filter
+/// per call (the regret/figure paths query the same few §6.1 bids over and
+/// over).
+#[derive(Debug, Clone)]
+pub struct AvailabilityIndex {
+    /// Indexed bids, ascending and deduplicated.
+    bids: Vec<f64>,
+    /// Per bid: `cum[k]` = number of winning slots among `[0, k)`.
+    cum_wins: Vec<Vec<u32>>,
+}
+
+impl AvailabilityIndex {
+    fn build(prices: &[f64], mut bids: Vec<f64>) -> AvailabilityIndex {
+        bids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        bids.dedup();
+        let cum_wins = bids
+            .iter()
+            .map(|&b| {
+                let mut cum = Vec::with_capacity(prices.len() + 1);
+                let mut c = 0u32;
+                cum.push(0);
+                for &p in prices {
+                    c += (p <= b) as u32;
+                    cum.push(c);
+                }
+                cum
+            })
+            .collect();
+        AvailabilityIndex { bids, cum_wins }
+    }
+
+    pub fn bids(&self) -> &[f64] {
+        &self.bids
+    }
+
+    /// Winning slots in the inclusive slot range `[s0, s1]` for an indexed
+    /// bid; `None` when the bid is not part of the index.
+    pub fn winning_slots(&self, s0: usize, s1: usize, bid: f64) -> Option<usize> {
+        let i = self.bids.iter().position(|&b| b == bid)?;
+        let cum = &self.cum_wins[i];
+        let hi = (s1 + 1).min(cum.len() - 1);
+        let lo = s0.min(hi);
+        Some((cum[hi] - cum[lo]) as usize)
+    }
+
+    /// Fraction of winning slots over the inclusive slot range `[s0, s1]`.
+    pub fn availability(&self, s0: usize, s1: usize, bid: f64) -> Option<f64> {
+        let total = s1.saturating_sub(s0) + 1;
+        self.winning_slots(s0, s1, bid)
+            .map(|w| w as f64 / total as f64)
+    }
+}
 
 /// Ground-truth spot prices for the horizon, one per slot.
 /// Slot `s` covers simulated time `[s·dt, (s+1)·dt)` with `dt = 1/SLOTS_PER_UNIT`.
@@ -15,6 +71,9 @@ use super::SLOTS_PER_UNIT;
 pub struct PriceTrace {
     prices: Vec<f64>,
     slot_len: f64,
+    /// Lazily-built bid-grid availability index (immutable trace, so the
+    /// prefix sums are computed at most once).
+    index: OnceLock<AvailabilityIndex>,
 }
 
 impl PriceTrace {
@@ -26,13 +85,18 @@ impl PriceTrace {
         PriceTrace {
             prices: proc.generate(n),
             slot_len,
+            index: OnceLock::new(),
         }
     }
 
     /// Build directly from explicit per-slot prices (tests, file loads).
     pub fn from_prices(prices: Vec<f64>, slot_len: f64) -> PriceTrace {
         assert!(slot_len > 0.0);
-        PriceTrace { prices, slot_len }
+        PriceTrace {
+            prices,
+            slot_len,
+            index: OnceLock::new(),
+        }
     }
 
     pub fn slot_len(&self) -> f64 {
@@ -70,10 +134,28 @@ impl PriceTrace {
         self.price_at(t) <= bid
     }
 
+    /// The bid-grid availability index, built once on first use over the
+    /// §6.1 bid grid `B` (the bids the regret/figure paths actually query).
+    pub fn availability_index(&self) -> &AvailabilityIndex {
+        self.index
+            .get_or_init(|| AvailabilityIndex::build(&self.prices, crate::policy::grid_b()))
+    }
+
+    /// A one-off index over a caller-chosen bid set (not cached) — for
+    /// off-grid bid sweeps that would otherwise fall back to O(S) scans.
+    pub fn index_for_bids(&self, bids: Vec<f64>) -> AvailabilityIndex {
+        AvailabilityIndex::build(&self.prices, bids)
+    }
+
     /// Empirical availability of bid `b` over a window (fraction of winning
-    /// slots) — the realized counterpart of the paper's β.
+    /// slots) — the realized counterpart of the paper's β. Grid bids are
+    /// answered from the prefix-sum index in O(1); off-grid bids fall back
+    /// to one scan of the range.
     pub fn availability(&self, t0: f64, t1: f64, bid: f64) -> f64 {
         let (s0, s1) = (self.slot_of(t0), self.slot_of(t1.max(t0)));
+        if let Some(a) = self.availability_index().availability(s0, s1, bid) {
+            return a;
+        }
         let total = s1.saturating_sub(s0) + 1;
         let won = (s0..=s1)
             .filter(|&s| self.price_of_slot(s) <= bid)
@@ -180,6 +262,28 @@ mod tests {
         let segs_all = t.availability_segments(0.0, 2.9, 1.0);
         assert_eq!(segs_all.len(), 1);
         assert!(segs_all[0].2);
+    }
+
+    #[test]
+    fn index_matches_scan_on_grid_bids() {
+        let trace = PriceTrace::generate(SpotModel::paper_default(), 40.0, 17);
+        let idx = trace.availability_index();
+        assert!(!idx.bids().is_empty());
+        for &bid in &crate::policy::grid_b() {
+            for (t0, t1) in [(0.0, 39.0), (3.25, 7.5), (12.0, 12.0)] {
+                let (s0, s1) = (trace.slot_of(t0), trace.slot_of(t1));
+                let scan = (s0..=s1)
+                    .filter(|&s| trace.price_of_slot(s) <= bid)
+                    .count();
+                assert_eq!(idx.winning_slots(s0, s1, bid), Some(scan));
+                let a = trace.availability(t0, t1, bid);
+                let total = s1 - s0 + 1;
+                assert!((a - scan as f64 / total as f64).abs() < 1e-12);
+            }
+        }
+        // Off-grid bids still answer (scan fallback).
+        assert_eq!(idx.winning_slots(0, 10, 0.12345), None);
+        assert!(trace.availability(0.0, 10.0, 1.0) == 1.0);
     }
 
     #[test]

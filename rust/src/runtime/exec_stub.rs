@@ -1,0 +1,58 @@
+//! Stub PJRT runtime for builds without the `pjrt` feature (the `xla`
+//! bindings are not vendored; see Cargo.toml). Loading always fails with a
+//! clear message, and every caller — the coordinator, the experiment
+//! drivers, `bench_hotpath`, `pjrt_cross` — already treats a failed load as
+//! "fall back to the native sweep engine", so default builds are fully
+//! functional minus the kernel comparison paths.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::learning::counterfactual::{CounterfactualJob, PolicyGridEval};
+use crate::policy::Policy;
+
+/// Placeholder for the compiled policy-grid cost kernel.
+pub struct PolicyCostKernel {
+    _private: (),
+}
+
+/// Placeholder for the compiled TOLA weight-update kernel.
+pub struct TolaUpdateKernel {
+    _private: (),
+}
+
+/// Placeholder runtime: never constructible, so the kernel entry points
+/// below are statically unreachable.
+pub struct ArtifactRuntime {
+    pub policy_cost: PolicyCostKernel,
+    pub tola_update: Option<TolaUpdateKernel>,
+}
+
+impl ArtifactRuntime {
+    pub fn load(_dir: &Path) -> Result<ArtifactRuntime> {
+        bail!("built without the `pjrt` feature; PJRT artifacts cannot be loaded")
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<ArtifactRuntime> {
+        Self::load(&super::artifact_dir())
+    }
+}
+
+impl PolicyCostKernel {
+    pub fn eval(
+        &self,
+        _job: &CounterfactualJob,
+        _policies: &[Policy],
+        _has_pool: bool,
+    ) -> Result<PolicyGridEval> {
+        bail!("built without the `pjrt` feature")
+    }
+}
+
+impl TolaUpdateKernel {
+    pub fn update(&self, _weights: &[f64], _costs: &[f64], _eta: f64) -> Result<Vec<f64>> {
+        bail!("built without the `pjrt` feature")
+    }
+}

@@ -14,6 +14,14 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
 
+// The real runtime needs the unvendored `xla` bindings; enabling it means
+// adding the dep AND a `pjrt = ["dep:xla"]` feature in Cargo.toml (see the
+// note there). Default builds get the stub, whose loader always errors —
+// every caller falls back to the native sweep engine.
+#[cfg(feature = "pjrt")]
+pub mod exec;
+#[cfg(not(feature = "pjrt"))]
+#[path = "exec_stub.rs"]
 pub mod exec;
 pub mod batch;
 

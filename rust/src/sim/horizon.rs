@@ -184,9 +184,11 @@ impl<'a> HorizonRunner<'a> {
             })
             .collect();
 
-        let selfowned_rule = |p: &Policy| match (has_pool, spec) {
+        // The spec is fixed for the whole run, so the self-owned rule is
+        // resolved once here and drives the per-task grant below.
+        let so_rule = match (has_pool, spec) {
             (false, _) => SelfOwnedRule::None,
-            (true, StrategySpec::Proposed(_)) => match p.beta0 {
+            (true, StrategySpec::Proposed(p)) => match p.beta0 {
                 Some(beta0) => SelfOwnedRule::Rule12 { beta0 },
                 None => SelfOwnedRule::None,
             },
@@ -224,25 +226,21 @@ impl<'a> HorizonRunner<'a> {
             let deadline = per_job[ji].1[ti].max(time);
             let start = time.min(deadline);
             let hat_s = (deadline - start).max(1e-12);
-            let r = match (&mut pool, spec) {
-                (None, _) => 0,
-                (Some(pl), StrategySpec::Proposed(p)) => match p.beta0 {
-                    Some(beta0) => {
-                        let n = pl.available_over(start, deadline);
-                        let r = rule12(t.size, t.parallelism, hat_s, beta0, n);
-                        pl.reserve(r, start, deadline);
-                        r
-                    }
-                    None => 0,
-                },
-                (Some(pl), _) => {
+            let r = match (&mut pool, so_rule) {
+                (None, _) | (_, SelfOwnedRule::None) => 0,
+                (Some(pl), SelfOwnedRule::Rule12 { beta0 }) => {
+                    let n = pl.available_over(start, deadline);
+                    let r = rule12(t.size, t.parallelism, hat_s, beta0, n);
+                    pl.reserve(r, start, deadline);
+                    r
+                }
+                (Some(pl), SelfOwnedRule::Naive) => {
                     let n = pl.available_over(start, deadline);
                     let r = naive_allocation(t.parallelism, n);
                     pl.reserve(r, start, deadline);
                     r
                 }
             };
-            let _ = selfowned_rule; // (documentational; logic inlined above)
             let out: TaskOutcome = execute_task(
                 t.size,
                 t.parallelism,

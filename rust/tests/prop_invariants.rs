@@ -1,10 +1,11 @@
 //! Cross-module property tests on the crate's key invariants, using the
 //! in-repo mini property framework (`util::prop`).
 
-use dagcloud::learning::counterfactual::{CounterfactualJob, S_MAX};
+use dagcloud::learning::counterfactual::{CfSpec, CounterfactualJob, S_MAX};
+use dagcloud::learning::sweep::SweepContext;
 use dagcloud::market::{PriceTrace, SelfOwnedPool, SpotModel, SLOTS_PER_UNIT};
 use dagcloud::policy::dealloc::{dealloc, expected_spot_workload, windows_to_deadlines};
-use dagcloud::policy::Policy;
+use dagcloud::policy::{benchmark_bids, policy_set_full, Policy};
 use dagcloud::sim::executor::{execute_chain, ChainStrategy, SelfOwnedRule};
 use dagcloud::util::prop::{for_all, Config};
 use dagcloud::util::rng::Pcg32;
@@ -155,6 +156,50 @@ fn prop_counterfactual_bid_monotonicity() {
         for (c, sw, ow, b) in [(c1, sw1, ow1, b1), (c2, sw2, ow2, b2)] {
             if c > b * sw + ow + 1e-6 {
                 return Err(format!("cost {c} above bid·spot + od bound"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sweep_engine_matches_naive_walk_end_to_end() {
+    // The structure-sharing sweep engine against the naive slot walk on
+    // jobs marshalled the way the coordinator does it — realized traces,
+    // pool availabilities, and resampled windows, including windows forced
+    // through the S_MAX-style truncation (coarse dt).
+    for_all(Config::cases(40).seed(1009), |rng| {
+        let job = random_chain(rng, 10);
+        let trace = PriceTrace::generate(
+            SpotModel::paper_default(),
+            job.deadline + 1.0,
+            rng.next_u64(),
+        );
+        // Half the cases shrink the resample budget far below the native
+        // slot count, exercising the coarsened-window regime.
+        let max_slots = if rng.chance(0.5) {
+            rng.range_inclusive(4, 64) as usize
+        } else {
+            S_MAX
+        };
+        let (prices, dt) = trace.resample_window(job.arrival, job.deadline, max_slots);
+        let n = prices.len();
+        let has_pool = rng.chance(0.7);
+        let navail: Vec<f64> = (0..n)
+            .map(|_| if has_pool { rng.range_inclusive(0, 20) as f64 } else { 0.0 })
+            .collect();
+        let cf = CounterfactualJob::from_job(&job, prices, dt, navail, 1.0);
+        let mut ctx = SweepContext::new(&cf, has_pool);
+        let mut specs: Vec<CfSpec> =
+            policy_set_full().into_iter().map(CfSpec::Proposed).collect();
+        specs.extend(benchmark_bids().into_iter().map(|bid| CfSpec::EvenNaive { bid }));
+        for spec in &specs {
+            let a = cf.eval_spec(spec, has_pool);
+            let b = ctx.eval_spec(spec);
+            for (x, y) in [(a.0, b.0), (a.1, b.1), (a.2, b.2), (a.3, b.3)] {
+                if (x - y).abs() > 1e-9 * x.abs().max(1.0) {
+                    return Err(format!("sweep diverges on {spec:?}: {a:?} vs {b:?}"));
+                }
             }
         }
         Ok(())
