@@ -1,0 +1,66 @@
+//! Scenario-engine benches: what a fleet-scale evaluation sweep costs —
+//! spec parsing, world realization (workload + market), one full scenario
+//! cell, and a sharded registry batch.
+
+use dagcloud::scenario::{self, BatchOptions};
+use dagcloud::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_scenarios ==\n");
+
+    let mut specs = scenario::builtins();
+    for s in &mut specs {
+        s.workload.small_tasks = true;
+    }
+    let paper = specs[0].clone();
+    let replayed = specs
+        .iter()
+        .find(|s| s.name == "replayed-trace")
+        .expect("registry has replayed-trace")
+        .clone();
+
+    // --- spec layer ---
+    let text = paper.to_json().pretty();
+    b.bench_throughput("scenario/spec_parse_roundtrip", 1.0, "specs/s", || {
+        dagcloud::scenario::ScenarioSpec::parse(&text).expect("parse")
+    });
+
+    // --- world realization ---
+    let seed = scenario::derive_run_seed(7, &paper.name, 0);
+    b.bench_throughput("scenario/build_workload_64jobs", 64.0, "jobs/s", || {
+        scenario::build_workload(&paper, 64, seed)
+    });
+    let jobs = scenario::build_workload(&paper, 64, seed);
+    let horizon = jobs.iter().map(|j| j.deadline).fold(1.0, f64::max) + 1.0;
+    b.bench("scenario/build_market_synthetic", || {
+        scenario::build_market(&paper, horizon, seed).expect("market")
+    });
+    b.bench("scenario/build_market_replayed", || {
+        scenario::build_market(&replayed, horizon, seed).expect("market")
+    });
+
+    // --- one full cell, then the sharded registry batch ---
+    b.bench_throughput("scenario/run_once_32jobs", 32.0, "jobs/s", || {
+        scenario::run_scenario_once(&paper, seed, Some(32)).expect("run")
+    });
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let batch = BatchOptions {
+        seeds: 1,
+        base_seed: 7,
+        threads,
+        jobs_override: Some(16),
+    };
+    b.bench_throughput(
+        "scenario/registry_batch_8worlds_16jobs",
+        specs.len() as f64,
+        "worlds/s",
+        || scenario::run_batch(&specs, &batch).expect("batch"),
+    );
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_scenarios.json").ok();
+    println!("\nresults written to results/bench_scenarios.json");
+}

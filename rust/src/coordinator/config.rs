@@ -60,37 +60,18 @@ impl Config {
     pub fn from_json_file(path: &str) -> anyhow::Result<Config> {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        Ok(Self::from_json(&j))
+        Self::from_json(&j)
     }
 
-    pub fn from_json(j: &Json) -> Config {
+    /// Missing keys keep defaults; malformed values (e.g. an unknown spot
+    /// model kind) are errors rather than silent fallbacks.
+    pub fn from_json(j: &Json) -> anyhow::Result<Config> {
         let d = Config::default();
         let spot_model = match j.get("spot_model") {
-            Some(sm) => {
-                let kind = sm.opt_str("kind", "bounded_exp");
-                match kind {
-                    "markov" => SpotModel::Markov {
-                        calm_mean: sm.opt_f64("calm_mean", 0.13),
-                        surge_mean: sm.opt_f64("surge_mean", 0.6),
-                        lo: sm.opt_f64("lo", 0.12),
-                        hi: sm.opt_f64("hi", 1.0),
-                        p_calm_to_surge: sm.opt_f64("p_calm_to_surge", 0.05),
-                        p_surge_to_calm: sm.opt_f64("p_surge_to_calm", 0.2),
-                    },
-                    "google" => SpotModel::GoogleFixed {
-                        price: sm.opt_f64("price", 0.3),
-                        availability: sm.opt_f64("availability", 0.7),
-                    },
-                    _ => SpotModel::BoundedExp {
-                        mean: sm.opt_f64("mean", 0.13),
-                        lo: sm.opt_f64("lo", 0.12),
-                        hi: sm.opt_f64("hi", 1.0),
-                    },
-                }
-            }
+            Some(sm) => crate::market::spot_model_from_json(sm)?,
             None => d.spot_model.clone(),
         };
-        Config {
+        Ok(Config {
             jobs: j.opt_u64("jobs", d.jobs as u64) as usize,
             seed: j.opt_u64("seed", d.seed),
             job_type: j.opt_u64("job_type", d.job_type as u64) as u8,
@@ -103,43 +84,38 @@ impl Config {
             od_price: j.opt_f64("od_price", d.od_price),
             threads: j.opt_u64("threads", d.threads as u64) as usize,
             use_pjrt: j.opt_bool("use_pjrt", d.use_pjrt),
+        })
+    }
+
+    /// The coordinator-facing view of a scenario: home-region price model
+    /// (synthetic single-model markets only — regime/replay/composite
+    /// markets realize their trace in the scenario runner and hand it to
+    /// `tola_run` directly), home on-demand price, the scenario's pool and
+    /// job count, and the dominant job type.
+    pub fn from_scenario(spec: &crate::scenario::ScenarioSpec) -> Config {
+        let d = Config::default();
+        let home = spec.market.regions.first();
+        let spot_model = match home.map(|r| &r.price) {
+            Some(crate::scenario::PriceSpec::Model(m)) => m.clone(),
+            _ => d.spot_model.clone(),
+        };
+        Config {
+            jobs: spec.jobs,
+            job_type: spec
+                .workload
+                .components
+                .first()
+                .map(|c| c.job_type)
+                .unwrap_or(d.job_type),
+            pool_sizes: vec![spec.pool_capacity as u64],
+            spot_model,
+            od_price: home.map(|r| r.od_price).unwrap_or(d.od_price),
+            ..d
         }
     }
 
     pub fn to_json(&self) -> Json {
-        let mut sm = Json::obj();
-        match &self.spot_model {
-            SpotModel::BoundedExp { mean, lo, hi } => {
-                sm.set("kind", Json::Str("bounded_exp".into()))
-                    .set("mean", Json::Num(*mean))
-                    .set("lo", Json::Num(*lo))
-                    .set("hi", Json::Num(*hi));
-            }
-            SpotModel::Markov {
-                calm_mean,
-                surge_mean,
-                lo,
-                hi,
-                p_calm_to_surge,
-                p_surge_to_calm,
-            } => {
-                sm.set("kind", Json::Str("markov".into()))
-                    .set("calm_mean", Json::Num(*calm_mean))
-                    .set("surge_mean", Json::Num(*surge_mean))
-                    .set("lo", Json::Num(*lo))
-                    .set("hi", Json::Num(*hi))
-                    .set("p_calm_to_surge", Json::Num(*p_calm_to_surge))
-                    .set("p_surge_to_calm", Json::Num(*p_surge_to_calm));
-            }
-            SpotModel::GoogleFixed {
-                price,
-                availability,
-            } => {
-                sm.set("kind", Json::Str("google".into()))
-                    .set("price", Json::Num(*price))
-                    .set("availability", Json::Num(*availability));
-            }
-        }
+        let sm = crate::market::spot_model_to_json(&self.spot_model);
         let mut j = Json::obj();
         j.set("jobs", Json::Num(self.jobs as f64))
             .set("seed", Json::Num(self.seed as f64))
@@ -185,7 +161,7 @@ mod tests {
             use_pjrt: false,
         };
         let j = c.to_json();
-        let c2 = Config::from_json(&j);
+        let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c2.jobs, 123);
         assert_eq!(c2.job_type, 3);
         assert_eq!(c2.pool_sizes, vec![10, 20]);
@@ -194,9 +170,21 @@ mod tests {
     }
 
     #[test]
+    fn from_scenario_maps_home_region() {
+        let mut spec = crate::scenario::registry::find("pool-heavy").unwrap();
+        spec.jobs = 99;
+        let c = Config::from_scenario(&spec);
+        assert_eq!(c.jobs, 99);
+        assert_eq!(c.pool_sizes, vec![600]);
+        assert_eq!(c.job_type, 2);
+        assert_eq!(c.spot_model, SpotModel::paper_default());
+        assert_eq!(c.od_price, 1.0);
+    }
+
+    #[test]
     fn partial_json_keeps_defaults() {
         let j = Json::parse(r#"{"jobs": 50}"#).unwrap();
-        let c = Config::from_json(&j);
+        let c = Config::from_json(&j).unwrap();
         assert_eq!(c.jobs, 50);
         assert_eq!(c.seed, Config::default().seed);
     }

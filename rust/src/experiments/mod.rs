@@ -4,6 +4,7 @@
 pub mod tables;
 pub mod figures;
 pub mod perf;
+pub mod scenarios;
 
 use crate::util::cli::Args;
 
@@ -22,6 +23,8 @@ COMMANDS
   figures     Regenerate data series for Figures 1–4 (CSV to --out dir)
   sweep       Counterfactual sweep-engine throughput (naive vs closed-form
               vs batched; EXPERIMENTS.md §Perf)
+  scenarios   Run the scenario registry (or a subset) across seeds and emit
+              results/scenarios.json (see EXPERIMENTS.md §Scenarios)
   run         One TOLA learning run with progress output
   all         Run every table (tables 2–6) and figures
 
@@ -34,11 +37,18 @@ OPTIONS
   --out DIR       output directory for JSON/CSV results (default results)
   --no-pjrt       disable the PJRT kernel (native counterfactuals only)
   --config FILE   load a JSON config (CLI flags override)
+
+SCENARIO OPTIONS (`repro scenarios`; `--scenario` also configures `run`)
+  --scenario LIST comma-separated registry names (default: all built-ins)
+  --seeds N       replicates per scenario (default 3)
+  --spec FILE     append a custom scenario spec (JSON) to the batch
+  --smoke         reduced-size deterministic runs for CI (small chains,
+                  48 jobs unless --jobs overrides)
 ";
 
 /// CLI dispatch for `repro`.
 pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["no-pjrt", "verbose"]);
+    let args = Args::parse(argv, &["no-pjrt", "verbose", "smoke"]);
     let cmd = args
         .positional
         .first()
@@ -68,7 +78,67 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
         "table6" => tables::run_table6(&cfg, &out_dir)?,
         "figures" => figures::run_all(&out_dir)?,
         "sweep" => perf::run_sweep_bench(&cfg, &out_dir)?,
-        "run" => tables::run_single_tola(&cfg, &out_dir)?,
+        "scenarios" => {
+            let names = args.get("scenario").map(|s| {
+                s.split(',')
+                    .map(|x| x.trim().to_string())
+                    .filter(|x| !x.is_empty())
+                    .collect()
+            });
+            let opts = scenarios::ScenarioCliOptions {
+                names,
+                seeds: args.get_u64("seeds", 3)?,
+                smoke: args.flag("smoke"),
+                spec_file: args.get("spec").map(String::from),
+                // Only an explicit --jobs overrides the per-scenario size.
+                jobs_override: args.get("jobs").is_some().then_some(cfg.jobs),
+            };
+            scenarios::run_scenarios(&cfg, &opts, &out_dir)?
+        }
+        "run" => {
+            // `--scenario NAME` configures the single run from a registry
+            // world (its market model, pool, job mix type) via
+            // Config::from_scenario; other CLI flags still apply on top.
+            let run_cfg = match args.get("scenario") {
+                Some(name) => {
+                    let spec = crate::scenario::find(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown scenario '{name}'; known: {}",
+                            crate::scenario::builtin_names().join(", ")
+                        )
+                    })?;
+                    // `run` executes against a single synthetic price model;
+                    // refuse worlds that need the full scenario runner so we
+                    // never silently simulate a different market than named.
+                    let single_model = spec.market.regions.len() == 1
+                        && matches!(
+                            spec.market.regions[0].price,
+                            crate::scenario::PriceSpec::Model(_)
+                        );
+                    anyhow::ensure!(
+                        single_model,
+                        "scenario '{name}' uses a replayed/regime/multi-region \
+                         market; use `repro scenarios --scenario {name}` instead"
+                    );
+                    let mut sc = crate::coordinator::Config::from_scenario(&spec);
+                    // Explicit CLI flags beat the scenario's values; seed /
+                    // threads / pjrt are run-level and always carry over.
+                    sc.jobs = args.get_u64("jobs", sc.jobs as u64)? as usize;
+                    if args.get("pool").is_some() {
+                        sc.pool_sizes = cfg.pool_sizes.clone();
+                    }
+                    if args.get("job-type").is_some() {
+                        sc.job_type = cfg.job_type;
+                    }
+                    sc.seed = cfg.seed;
+                    sc.threads = cfg.threads;
+                    sc.use_pjrt = cfg.use_pjrt;
+                    sc
+                }
+                None => cfg.clone(),
+            };
+            tables::run_single_tola(&run_cfg, &out_dir)?
+        }
         "all" => {
             tables::run_table2(&cfg, &out_dir)?;
             tables::run_table3(&cfg, &out_dir)?;

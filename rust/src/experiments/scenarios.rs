@@ -1,0 +1,171 @@
+//! `repro scenarios`: run the built-in scenario registry (or a named
+//! subset, or a custom spec file) across seeds and emit one comparable
+//! report table (`results/scenarios.json`).
+
+use anyhow::Result;
+
+use crate::coordinator::Config;
+use crate::scenario::{self, BatchOptions, ScenarioSpec};
+
+/// CLI-level options for the `scenarios` subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioCliOptions {
+    /// Restrict to these registry names (None = the full registry).
+    pub names: Option<Vec<String>>,
+    /// Replicates per scenario.
+    pub seeds: u64,
+    /// Reduced-size runs: small task chains and a small job count, so the
+    /// full registry completes in seconds (CI smoke).
+    pub smoke: bool,
+    /// Additional custom spec file (JSON) appended to the batch.
+    pub spec_file: Option<String>,
+    /// Explicit `--jobs` override.
+    pub jobs_override: Option<usize>,
+}
+
+/// Jobs per run under `--smoke` (unless `--jobs` says otherwise).
+const SMOKE_JOBS: usize = 48;
+
+pub fn run_scenarios(cfg: &Config, opts: &ScenarioCliOptions, out_dir: &str) -> Result<()> {
+    let mut specs: Vec<ScenarioSpec> = match &opts.names {
+        None => scenario::builtins(),
+        Some(names) => names
+            .iter()
+            .map(|n| {
+                scenario::find(n).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scenario '{n}'; known: {}",
+                        scenario::builtin_names().join(", ")
+                    )
+                })
+            })
+            .collect::<Result<_>>()?,
+    };
+    if let Some(path) = &opts.spec_file {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("spec file '{path}': {e}"))?;
+        specs.push(ScenarioSpec::parse(&text)?);
+    }
+    anyhow::ensure!(!specs.is_empty(), "no scenarios selected");
+    // Names key both the seed derivation and the report grouping: a
+    // duplicate would collide run seeds and merge two worlds into one
+    // aggregate row.
+    for (i, s) in specs.iter().enumerate() {
+        anyhow::ensure!(
+            !specs[..i].iter().any(|o| o.name == s.name),
+            "duplicate scenario name '{}' in batch (rename the --spec world)",
+            s.name
+        );
+    }
+
+    let jobs_override = match (opts.smoke, opts.jobs_override) {
+        (_, Some(j)) => {
+            anyhow::ensure!(j > 0, "--jobs must be positive");
+            Some(j)
+        }
+        (true, None) => Some(SMOKE_JOBS),
+        (false, None) => None,
+    };
+    if opts.smoke {
+        for s in &mut specs {
+            s.workload.small_tasks = true;
+        }
+    }
+    for s in &specs {
+        s.validate()?;
+    }
+
+    let batch = BatchOptions {
+        seeds: opts.seeds.max(1),
+        base_seed: cfg.seed,
+        threads: cfg.effective_threads(),
+        jobs_override,
+    };
+    println!(
+        "== scenarios: {} worlds x {} seeds (base seed {}, threads {}{}) ==",
+        specs.len(),
+        batch.seeds,
+        batch.base_seed,
+        batch.threads,
+        if opts.smoke { ", smoke" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let outcomes = scenario::run_batch(&specs, &batch)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!(
+        "  {:<24} {:>6} {:>8} {:>8} {:>7} {:>7} {:>7}",
+        "scenario", "runs", "alpha", "regret", "util", "spot%", "od%"
+    );
+    for a in scenario::aggregate(&outcomes) {
+        println!(
+            "  {:<24} {:>6} {:>8.4} {:>8.4} {:>6.1}% {:>6.1}% {:>6.1}%",
+            a.scenario,
+            a.runs,
+            a.alpha_mean,
+            a.regret_mean,
+            100.0 * a.pool_utilization_mean,
+            100.0 * a.spot_share_mean,
+            100.0 * a.od_share_mean
+        );
+    }
+    println!("  {} runs in {dt:.2}s", outcomes.len());
+
+    let j = scenario::report_json(&outcomes, batch.seeds, batch.base_seed, opts.smoke);
+    let path = format!("{out_dir}/scenarios.json");
+    std::fs::write(&path, j.pretty())?;
+    println!("  written to {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn smoke_subset_writes_report() {
+        let cfg = Config {
+            jobs: 2000, // must be ignored: smoke picks its own size
+            seed: 21,
+            threads: 2,
+            use_pjrt: false,
+            ..Config::default()
+        };
+        let opts = ScenarioCliOptions {
+            names: Some(vec!["paper-default".into(), "replayed-trace".into()]),
+            seeds: 1,
+            smoke: true,
+            spec_file: None,
+            jobs_override: Some(10),
+        };
+        let dir = std::env::temp_dir().join("dagcloud_scenarios");
+        std::fs::create_dir_all(&dir).unwrap();
+        run_scenarios(&cfg, &opts, dir.to_str().unwrap()).unwrap();
+        let j = Json::parse(
+            &std::fs::read_to_string(dir.join("scenarios.json")).unwrap(),
+        )
+        .unwrap();
+        let arr = j.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "paper-default");
+        assert!(j.get("smoke").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn unknown_scenario_name_errors() {
+        let cfg = Config {
+            use_pjrt: false,
+            ..Config::default()
+        };
+        let opts = ScenarioCliOptions {
+            names: Some(vec!["not-a-world".into()]),
+            seeds: 1,
+            smoke: true,
+            spec_file: None,
+            jobs_override: None,
+        };
+        let err = run_scenarios(&cfg, &opts, "/tmp").unwrap_err();
+        assert!(err.to_string().contains("unknown scenario"));
+    }
+}

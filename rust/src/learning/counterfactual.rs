@@ -306,6 +306,24 @@ pub enum CfSpec {
     DeallocNaive(Policy),
 }
 
+impl CfSpec {
+    /// Human-readable label (the grammar scenario reports key on).
+    pub fn label(&self) -> String {
+        match self {
+            CfSpec::Proposed(p) => format!(
+                "proposed(β={:.3},β₀={},b={:.2})",
+                p.beta,
+                p.beta0.map(|x| format!("{x:.3}")).unwrap_or("-".into()),
+                p.bid
+            ),
+            CfSpec::EvenNaive { bid } => format!("even+naive(b={bid:.2})"),
+            CfSpec::DeallocNaive(p) => {
+                format!("dealloc+naive(β={:.3},b={:.2})", p.beta, p.bid)
+            }
+        }
+    }
+}
+
 /// Self-owned rule selector (internal).
 #[derive(Debug, Clone, Copy)]
 enum SoRule {

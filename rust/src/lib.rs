@@ -24,6 +24,9 @@
 //!   TOLA hot path — Python never runs at request time;
 //! * the **L3 coordinator** ([`coordinator`]): leader event loop, worker
 //!   thread pool, metrics and config;
+//! * a **scenario engine** ([`scenario`]): declarative multi-market worlds
+//!   (multi-region processes, regime schedules, CSV trace replay), a
+//!   built-in registry, and a sharded deterministic batch runner;
 //! * an **experiment harness** ([`experiments`]) regenerating every table and
 //!   figure of the paper's evaluation section.
 
@@ -35,6 +38,7 @@ pub mod sim;
 pub mod learning;
 pub mod runtime;
 pub mod coordinator;
+pub mod scenario;
 pub mod experiments;
 
 /// Crate-wide result type.

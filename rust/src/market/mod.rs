@@ -18,10 +18,13 @@ pub mod spot;
 pub mod trace;
 pub mod pricing;
 pub mod pool;
+pub mod replay;
+pub mod multi;
 
+pub use multi::RegionMarket;
 pub use pool::SelfOwnedPool;
 pub use pricing::{CostLedger, InstanceKind};
-pub use spot::{SpotModel, SpotPriceProcess};
+pub use spot::{spot_model_from_json, spot_model_to_json, SpotModel, SpotPriceProcess};
 pub use trace::{AvailabilityIndex, PriceTrace};
 
 /// Number of price slots per unit of time (§6.1: "each unit of time is

@@ -1,0 +1,118 @@
+//! Multi-region markets: per-region price traces with per-region on-demand
+//! prices, and the slot-wise arbitrage composite.
+//!
+//! The paper's model has one spot market; real tenants see several regions
+//! (and instance types) with independent price processes and different
+//! on-demand list prices. A region here is just a named `(PriceTrace,
+//! od_price)` pair — how the traces were produced (synthetic process,
+//! regime schedule, CSV replay) is the scenario layer's business.
+//!
+//! The *arbitrage composite* models a tenant free to place each slot of
+//! work in whichever region is currently cheapest: its trace is the
+//! slot-wise minimum across regions and its on-demand price the region
+//! minimum. This folds a multi-market world into the single-trace interface
+//! every existing consumer (executor, sweep engine, coordinator) speaks.
+
+use super::trace::PriceTrace;
+
+/// One region's realized market: a price trace plus its on-demand price.
+#[derive(Debug, Clone)]
+pub struct RegionMarket {
+    pub name: String,
+    pub od_price: f64,
+    pub trace: PriceTrace,
+}
+
+/// Slot-wise cheapest-region composite over a non-empty region set.
+///
+/// All traces must share the slot grid; the composite spans the longest
+/// region (shorter regions persist their final price via the trace's
+/// clamped slot lookup). Returns the composite trace and the minimum
+/// on-demand price.
+pub fn arbitrage_composite(regions: &[RegionMarket]) -> (PriceTrace, f64) {
+    assert!(!regions.is_empty(), "arbitrage over zero regions");
+    let slot_len = regions[0].trace.slot_len();
+    for r in regions {
+        assert!(
+            (r.trace.slot_len() - slot_len).abs() < 1e-12,
+            "region '{}' is on a different slot grid",
+            r.name
+        );
+    }
+    let n = regions
+        .iter()
+        .map(|r| r.trace.num_slots())
+        .max()
+        .expect("non-empty");
+    let mut prices = Vec::with_capacity(n);
+    for s in 0..n {
+        let p = regions
+            .iter()
+            .map(|r| r.trace.price_of_slot(s))
+            .fold(f64::INFINITY, f64::min);
+        prices.push(p);
+    }
+    let od = regions
+        .iter()
+        .map(|r| r.od_price)
+        .fold(f64::INFINITY, f64::min);
+    (PriceTrace::from_prices(prices, slot_len), od)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region(name: &str, od: f64, prices: Vec<f64>) -> RegionMarket {
+        RegionMarket {
+            name: name.into(),
+            od_price: od,
+            trace: PriceTrace::from_prices(prices, 1.0 / 12.0),
+        }
+    }
+
+    #[test]
+    fn composite_takes_slotwise_min() {
+        let a = region("a", 1.0, vec![0.2, 0.9, 0.3]);
+        let b = region("b", 1.2, vec![0.5, 0.1, 0.4]);
+        let (t, od) = arbitrage_composite(&[a, b]);
+        assert_eq!(t.num_slots(), 3);
+        assert_eq!(t.price_of_slot(0), 0.2);
+        assert_eq!(t.price_of_slot(1), 0.1);
+        assert_eq!(t.price_of_slot(2), 0.3);
+        assert_eq!(od, 1.0);
+    }
+
+    #[test]
+    fn shorter_region_persists_last_price() {
+        let a = region("a", 1.0, vec![0.6, 0.6, 0.6, 0.6]);
+        let b = region("b", 1.0, vec![0.2]);
+        let (t, _) = arbitrage_composite(&[a, b]);
+        assert_eq!(t.num_slots(), 4);
+        // b's single 0.2 price clamps forward over the whole span.
+        for s in 0..4 {
+            assert_eq!(t.price_of_slot(s), 0.2);
+        }
+    }
+
+    #[test]
+    fn single_region_composite_is_identity() {
+        let a = region("a", 1.1, vec![0.3, 0.4]);
+        let (t, od) = arbitrage_composite(std::slice::from_ref(&a));
+        assert_eq!(t.num_slots(), 2);
+        assert_eq!(t.price_of_slot(1), 0.4);
+        assert_eq!(od, 1.1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_grids_panic() {
+        let a = region("a", 1.0, vec![0.3]);
+        let b = RegionMarket {
+            name: "b".into(),
+            od_price: 1.0,
+            trace: PriceTrace::from_prices(vec![0.3], 0.5),
+        };
+        arbitrage_composite(&[a, b]);
+    }
+}

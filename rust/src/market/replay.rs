@@ -1,0 +1,216 @@
+//! CSV-replayed spot-price traces.
+//!
+//! Related work stresses bidding policies against *real* spot-market
+//! histories rather than synthetic processes (Voorsluys et al.,
+//! arXiv:1110.5972); this loader feeds such a history into [`PriceTrace`]
+//! so every downstream consumer (executor, sweep engine, coordinator) sees
+//! a replayed market exactly as it sees a generated one.
+//!
+//! ## Format
+//!
+//! Plain CSV, two accepted shapes:
+//!
+//! * **two columns** `time,price` — a step function over simulated time
+//!   units: each observation holds until the next one. The trace is
+//!   resampled onto the standard `1/SLOTS_PER_UNIT` slot grid (a slot takes
+//!   the last observation at or before its midpoint) and timestamps are
+//!   shifted so the first observation is `t = 0`;
+//! * **one column** `price` — one price per slot directly on the standard
+//!   grid.
+//!
+//! Empty lines and `#` comments are skipped; a single leading non-numeric
+//! header row is tolerated. `time_scale` multiplies timestamps into
+//! simulated time units (e.g. hours→units); `price_scale` normalizes prices
+//! against the on-demand price (the paper normalizes `p = 1`).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::trace::PriceTrace;
+use super::SLOTS_PER_UNIT;
+
+/// Parse CSV text into a [`PriceTrace`] on the standard slot grid.
+pub fn trace_from_csv(text: &str, time_scale: f64, price_scale: f64) -> Result<PriceTrace> {
+    ensure!(
+        time_scale > 0.0 && price_scale > 0.0,
+        "replay csv: scales must be positive (time_scale={time_scale}, price_scale={price_scale})"
+    );
+    let mut rows: Vec<(Option<f64>, f64)> = Vec::new();
+    let mut header_skipped = false;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: Option<(Option<f64>, f64)> = match fields.len() {
+            1 => fields[0].parse::<f64>().ok().map(|p| (None, p)),
+            _ => match (fields[0].parse::<f64>(), fields[1].parse::<f64>()) {
+                (Ok(t), Ok(p)) => Some((Some(t), p)),
+                _ => None,
+            },
+        };
+        match parsed {
+            Some((_, p)) if !(p.is_finite() && p > 0.0) => {
+                bail!("replay csv line {}: non-positive price '{line}'", lineno + 1)
+            }
+            Some(row) => rows.push(row),
+            // Exactly one leading non-numeric row is tolerated as the
+            // header; any further unparsable row is data corruption.
+            None if rows.is_empty() && !header_skipped => header_skipped = true,
+            None => bail!("replay csv line {}: unparsable row '{line}'", lineno + 1),
+        }
+    }
+    ensure!(!rows.is_empty(), "replay csv: no data rows");
+
+    let slot_len = 1.0 / SLOTS_PER_UNIT as f64;
+    let timed = rows.iter().any(|(t, _)| t.is_some());
+    if !timed {
+        let prices: Vec<f64> = rows.iter().map(|(_, p)| *p * price_scale).collect();
+        return Ok(PriceTrace::from_prices(prices, slot_len));
+    }
+    ensure!(
+        rows.iter().all(|(t, _)| t.is_some()),
+        "replay csv: mixed timed and untimed rows"
+    );
+    let mut pts: Vec<(f64, f64)> = rows
+        .iter()
+        .map(|(t, p)| (t.unwrap() * time_scale, *p * price_scale))
+        .collect();
+    for w in pts.windows(2) {
+        ensure!(
+            w[1].0 >= w[0].0,
+            "replay csv: timestamps must be non-decreasing ({} after {})",
+            w[1].0,
+            w[0].0
+        );
+    }
+    let t0 = pts[0].0;
+    for p in &mut pts {
+        p.0 -= t0;
+    }
+    let last = pts.last().unwrap().0;
+    // Size the grid so the final observation's own slot midpoint is
+    // covered — it holds for (at least) half a slot past its timestamp.
+    let n = ((last / slot_len + 0.5).ceil() as usize).max(1);
+    let mut prices = Vec::with_capacity(n);
+    let mut j = 0usize;
+    for s in 0..n {
+        let mid = (s as f64 + 0.5) * slot_len;
+        while j + 1 < pts.len() && pts[j + 1].0 <= mid {
+            j += 1;
+        }
+        prices.push(pts[j].1);
+    }
+    Ok(PriceTrace::from_prices(prices, slot_len))
+}
+
+/// Load a CSV trace from a file path.
+pub fn trace_from_csv_file(path: &str, time_scale: f64, price_scale: f64) -> Result<PriceTrace> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("replay csv '{path}'"))?;
+    trace_from_csv(&text, time_scale, price_scale)
+}
+
+/// Tile a replayed trace so it covers at least `horizon` time units (short
+/// real histories wrap around; a no-op when the trace is already long
+/// enough).
+pub fn tile_to_horizon(trace: &PriceTrace, horizon: f64) -> PriceTrace {
+    let need = ((horizon / trace.slot_len()).ceil() as usize).max(1);
+    let n = trace.num_slots();
+    if n >= need {
+        return trace.clone();
+    }
+    let mut prices = Vec::with_capacity(need);
+    for s in 0..need {
+        prices.push(trace.price_of_slot(s % n));
+    }
+    PriceTrace::from_prices(prices, trace.slot_len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_column_is_one_price_per_slot() {
+        let t = trace_from_csv("0.2\n0.3\n0.4\n", 1.0, 1.0).unwrap();
+        assert_eq!(t.num_slots(), 3);
+        assert_eq!(t.price_of_slot(0), 0.2);
+        assert_eq!(t.price_of_slot(2), 0.4);
+        assert!((t.slot_len() - 1.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_column_step_function_resamples_to_grid() {
+        // Price 0.2 on [0,1), then 0.8: the final observation gets its own
+        // slot (13 slots: 12 at 0.2 plus the closing 0.8).
+        let t = trace_from_csv("time,price\n0,0.2\n1,0.8\n", 1.0, 1.0).unwrap();
+        assert_eq!(t.num_slots(), 13);
+        assert_eq!(t.price_of_slot(0), 0.2);
+        assert_eq!(t.price_of_slot(11), 0.2);
+        assert_eq!(t.price_of_slot(12), 0.8);
+        assert_eq!(t.price_at(0.99), 0.2);
+        // Longer history: every segment materializes.
+        let t2 = trace_from_csv("0,0.2\n1,0.8\n3,0.5\n", 1.0, 1.0).unwrap();
+        assert_eq!(t2.num_slots(), 37);
+        assert_eq!(t2.price_at(0.5), 0.2);
+        assert_eq!(t2.price_at(1.5), 0.8);
+        assert_eq!(t2.price_at(2.9), 0.8);
+        assert_eq!(t2.price_of_slot(36), 0.5);
+    }
+
+    #[test]
+    fn scales_apply() {
+        // Timestamps in hours (24 h = 1 unit), prices in cents of OD.
+        let t = trace_from_csv("0,20\n24,80\n48,20\n", 1.0 / 24.0, 0.01).unwrap();
+        assert_eq!(t.num_slots(), 25);
+        assert!((t.price_at(0.5) - 0.2).abs() < 1e-12);
+        assert!((t.price_at(1.5) - 0.8).abs() < 1e-12);
+        assert!((t.price_of_slot(24) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comments_headers_and_blanks_skipped() {
+        let t = trace_from_csv("# comment\ntime,price\n\n0,0.3\n2,0.6\n", 1.0, 1.0).unwrap();
+        assert_eq!(t.price_at(0.0), 0.3);
+        assert_eq!(t.price_at(1.99), 0.3);
+    }
+
+    #[test]
+    fn bad_rows_rejected() {
+        assert!(trace_from_csv("", 1.0, 1.0).is_err());
+        assert!(trace_from_csv("time,price\n", 1.0, 1.0).is_err());
+        assert!(trace_from_csv("0,0.2\njunk,row\n", 1.0, 1.0).is_err());
+        // Only ONE leading header row is tolerated; a second bad row before
+        // any data is corruption, not a header.
+        assert!(trace_from_csv("time,price\nstill,bad\n0,0.2\n", 1.0, 1.0).is_err());
+        assert!(trace_from_csv("0,-0.5\n", 1.0, 1.0).is_err());
+        assert!(trace_from_csv("5,0.2\n1,0.3\n", 1.0, 1.0).is_err()); // unsorted
+        assert!(trace_from_csv("0.2\n", 0.0, 1.0).is_err()); // bad scale
+    }
+
+    #[test]
+    fn tile_wraps_short_traces() {
+        let t = trace_from_csv("0.2\n0.4\n", 1.0, 1.0).unwrap();
+        let tiled = tile_to_horizon(&t, 1.0); // 12 slots
+        assert_eq!(tiled.num_slots(), 12);
+        assert_eq!(tiled.price_of_slot(0), 0.2);
+        assert_eq!(tiled.price_of_slot(1), 0.4);
+        assert_eq!(tiled.price_of_slot(2), 0.2);
+        assert_eq!(tiled.price_of_slot(11), 0.4);
+        // Long enough already: untouched.
+        let same = tile_to_horizon(&t, 0.1);
+        assert_eq!(same.num_slots(), 2);
+    }
+
+    #[test]
+    fn sample_trace_ships_and_loads() {
+        let text = include_str!("../../../examples/traces/spot_sample.csv");
+        let t = trace_from_csv(text, 1.0, 1.0).unwrap();
+        assert!(t.horizon() > 100.0, "horizon {}", t.horizon());
+        // Calm baseline plus surge regimes: prices span a wide band.
+        let lo = (0..t.num_slots()).map(|s| t.price_of_slot(s)).fold(f64::INFINITY, f64::min);
+        let hi = (0..t.num_slots()).map(|s| t.price_of_slot(s)).fold(0.0, f64::max);
+        assert!(lo >= 0.12 && lo < 0.2, "lo {lo}");
+        assert!(hi > 0.5 && hi <= 1.0, "hi {hi}");
+    }
+}

@@ -12,6 +12,7 @@
 //! * [`SpotModel::GoogleFixed`] — Google-cloud style: constant discounted
 //!   price with exogenous on/off availability (no bidding; §3.1).
 
+use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
 /// Configuration of a spot price process.
@@ -50,6 +51,81 @@ impl SpotModel {
     pub fn bid_dependent(&self) -> bool {
         !matches!(self, SpotModel::GoogleFixed { .. })
     }
+}
+
+/// Serialize a [`SpotModel`] (the shape `coordinator::Config` files and
+/// scenario specs share).
+pub fn spot_model_to_json(m: &SpotModel) -> Json {
+    let mut sm = Json::obj();
+    match m {
+        SpotModel::BoundedExp { mean, lo, hi } => {
+            sm.set("kind", Json::Str("bounded_exp".into()))
+                .set("mean", Json::Num(*mean))
+                .set("lo", Json::Num(*lo))
+                .set("hi", Json::Num(*hi));
+        }
+        SpotModel::Markov {
+            calm_mean,
+            surge_mean,
+            lo,
+            hi,
+            p_calm_to_surge,
+            p_surge_to_calm,
+        } => {
+            sm.set("kind", Json::Str("markov".into()))
+                .set("calm_mean", Json::Num(*calm_mean))
+                .set("surge_mean", Json::Num(*surge_mean))
+                .set("lo", Json::Num(*lo))
+                .set("hi", Json::Num(*hi))
+                .set("p_calm_to_surge", Json::Num(*p_calm_to_surge))
+                .set("p_surge_to_calm", Json::Num(*p_surge_to_calm));
+        }
+        SpotModel::GoogleFixed {
+            price,
+            availability,
+        } => {
+            sm.set("kind", Json::Str("google".into()))
+                .set("price", Json::Num(*price))
+                .set("availability", Json::Num(*availability));
+        }
+    }
+    sm
+}
+
+/// Parse a [`SpotModel`]. Missing *fields* fall back to §6.1-flavored
+/// defaults (config files stay forward-compatible), but an unknown `kind`
+/// is an error — a typo must not silently run the default market.
+pub fn spot_model_from_json(sm: &Json) -> anyhow::Result<SpotModel> {
+    // A present-but-non-string kind (null, number) must not silently fall
+    // back to the default either.
+    if let Some(k) = sm.get("kind") {
+        anyhow::ensure!(
+            matches!(k, Json::Str(_)),
+            "spot model 'kind' must be a string"
+        );
+    }
+    Ok(match sm.opt_str("kind", "bounded_exp") {
+        "markov" => SpotModel::Markov {
+            calm_mean: sm.opt_f64("calm_mean", 0.13),
+            surge_mean: sm.opt_f64("surge_mean", 0.6),
+            lo: sm.opt_f64("lo", 0.12),
+            hi: sm.opt_f64("hi", 1.0),
+            p_calm_to_surge: sm.opt_f64("p_calm_to_surge", 0.05),
+            p_surge_to_calm: sm.opt_f64("p_surge_to_calm", 0.2),
+        },
+        "google" => SpotModel::GoogleFixed {
+            price: sm.opt_f64("price", 0.3),
+            availability: sm.opt_f64("availability", 0.7),
+        },
+        "bounded_exp" => SpotModel::BoundedExp {
+            mean: sm.opt_f64("mean", 0.13),
+            lo: sm.opt_f64("lo", 0.12),
+            hi: sm.opt_f64("hi", 1.0),
+        },
+        other => anyhow::bail!(
+            "unknown spot model kind '{other}' (bounded_exp|markov|google)"
+        ),
+    })
 }
 
 /// Stateful generator of per-slot spot prices.
@@ -210,5 +286,42 @@ mod tests {
             availability: 0.5
         }
         .bid_dependent());
+    }
+
+    #[test]
+    fn spot_model_json_roundtrips_all_kinds() {
+        for m in [
+            SpotModel::paper_default(),
+            SpotModel::Markov {
+                calm_mean: 0.13,
+                surge_mean: 0.6,
+                lo: 0.12,
+                hi: 1.0,
+                p_calm_to_surge: 0.05,
+                p_surge_to_calm: 0.2,
+            },
+            SpotModel::GoogleFixed {
+                price: 0.3,
+                availability: 0.7,
+            },
+        ] {
+            let j = spot_model_to_json(&m);
+            assert_eq!(spot_model_from_json(&j).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn unknown_model_kind_rejected() {
+        let j = Json::parse(r#"{"kind": "markvo", "calm_mean": 0.2}"#).unwrap();
+        assert!(spot_model_from_json(&j).is_err());
+        // Present-but-non-string kind is rejected too, not defaulted.
+        let n = Json::parse(r#"{"kind": 1, "mean": 0.6}"#).unwrap();
+        assert!(spot_model_from_json(&n).is_err());
+        // Missing kind still defaults to bounded_exp.
+        let d = Json::parse(r#"{"mean": 0.2}"#).unwrap();
+        assert!(matches!(
+            spot_model_from_json(&d).unwrap(),
+            SpotModel::BoundedExp { .. }
+        ));
     }
 }

@@ -19,8 +19,10 @@ use super::SLOTS_PER_UNIT;
 pub struct AvailabilityIndex {
     /// Indexed bids, ascending and deduplicated.
     bids: Vec<f64>,
-    /// Per bid: `cum[k]` = number of winning slots among `[0, k)`.
-    cum_wins: Vec<Vec<u32>>,
+    /// Per bid: `cum[k]` = number of winning slots among `[0, k)`. `u64`:
+    /// multi-week replayed traces at fine slot granularity overflow `u32`
+    /// counters long before they exhaust memory.
+    cum_wins: Vec<Vec<u64>>,
 }
 
 impl AvailabilityIndex {
@@ -31,10 +33,10 @@ impl AvailabilityIndex {
             .iter()
             .map(|&b| {
                 let mut cum = Vec::with_capacity(prices.len() + 1);
-                let mut c = 0u32;
+                let mut c = 0u64;
                 cum.push(0);
                 for &p in prices {
-                    c += (p <= b) as u32;
+                    c += (p <= b) as u64;
                     cum.push(c);
                 }
                 cum

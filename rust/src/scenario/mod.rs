@@ -1,0 +1,34 @@
+//! Scenario engine: declarative multi-market worlds, trace replay, and a
+//! sharded deterministic scenario runner.
+//!
+//! The paper's policies are *parametric* precisely so online learning can
+//! track shifting market dynamics — but a reproduction that only ever sees
+//! the §6.1 bounded-exp market cannot show that. This subsystem turns the
+//! single-run reproduction into an evaluation platform:
+//!
+//! * [`spec`] — a JSON-round-trippable [`ScenarioSpec`] composing a market
+//!   (multi-region price processes, regime-switch schedules, or CSV trace
+//!   replay), a workload mix with arrival-rate schedules, a pool, and a
+//!   policy grid;
+//! * [`registry`] — eight built-in named worlds, from `paper-default` to
+//!   `multi-region-arbitrage`;
+//! * [`runner`] — fans `scenarios × seeds` cells across the worker pool
+//!   with per-run seed derivation, so a batch is bit-identical under any
+//!   `--threads`;
+//! * [`report`] — folds the outcomes into one comparable JSON table
+//!   (`results/scenarios.json`, tracked by CI as `BENCH_scenarios.json`).
+
+pub mod spec;
+pub mod registry;
+pub mod runner;
+pub mod report;
+
+pub use registry::{builtin_names, builtins, find};
+pub use report::{aggregate, report_json, ScenarioAggregate};
+pub use runner::{
+    build_market, build_workload, derive_run_seed, run_batch, run_scenario_once, BatchOptions,
+    ScenarioOutcome,
+};
+pub use spec::{
+    MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplaySpec, ScenarioSpec, WorkloadSpec,
+};

@@ -1,0 +1,221 @@
+//! The built-in scenario registry: ~8 named worlds spanning the market and
+//! workload regimes the platform must handle, from the paper's §6.1 default
+//! to replayed real-style traces and multi-region arbitrage.
+
+use crate::market::SpotModel;
+use crate::workload::MixComponent;
+
+use super::spec::{
+    MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplaySpec, ScenarioSpec, WorkloadSpec,
+};
+
+/// The sample spot-price history shipped with the repo
+/// (`examples/traces/spot_sample.csv`): ~120 time units of calm baseline
+/// with two surge regimes, two-column `time,price` format. Embedded so the
+/// registry works from any working directory; file-based replays use the
+/// spec's `path` field.
+pub const SAMPLE_TRACE_CSV: &str = include_str!("../../../examples/traces/spot_sample.csv");
+
+fn base(name: &str, description: &str, model: SpotModel) -> ScenarioSpec {
+    ScenarioSpec {
+        name: name.into(),
+        description: description.into(),
+        market: MarketSpec::single(model, crate::market::ON_DEMAND_PRICE),
+        workload: WorkloadSpec::uniform(2),
+        pool_capacity: 0,
+        policy_set: PolicySetSpec::Auto,
+        jobs: 400,
+    }
+}
+
+/// All built-in scenarios, in canonical order.
+pub fn builtins() -> Vec<ScenarioSpec> {
+    let calm = SpotModel::paper_default();
+    let surge = SpotModel::BoundedExp {
+        mean: 0.55,
+        lo: 0.12,
+        hi: 1.0,
+    };
+
+    let paper_default = base(
+        "paper-default",
+        "The §6.1 world: bounded-exp spot market, uniform type-2 jobs, no pool.",
+        SpotModel::paper_default(),
+    );
+
+    let calm_surge = base(
+        "calm-surge-markov",
+        "Markov-modulated spot prices alternating calm and surge states \
+         (price autocorrelation the i.i.d. §6.1 process lacks).",
+        SpotModel::Markov {
+            calm_mean: 0.13,
+            surge_mean: 0.65,
+            lo: 0.12,
+            hi: 1.0,
+            p_calm_to_surge: 0.04,
+            p_surge_to_calm: 0.15,
+        },
+    );
+
+    let google = base(
+        "google-fixed",
+        "Google-style market: constant discounted price with exogenous \
+         on/off availability; bids are irrelevant.",
+        SpotModel::GoogleFixed {
+            price: 0.3,
+            availability: 0.7,
+        },
+    );
+
+    let mut replayed = base(
+        "replayed-trace",
+        "CSV-replayed spot history (examples/traces/spot_sample.csv): calm \
+         baseline with two surge regimes, tiled over the workload horizon.",
+        SpotModel::paper_default(),
+    );
+    replayed.market.regions[0].price = PriceSpec::Replay(ReplaySpec::inline(SAMPLE_TRACE_CSV));
+
+    let multi_region = ScenarioSpec {
+        name: "multi-region-arbitrage".into(),
+        description: "Two regions with independent processes (one on a \
+                      regime-switch schedule) and different on-demand \
+                      prices, folded into the slot-wise cheapest composite."
+            .into(),
+        market: MarketSpec {
+            regions: vec![
+                RegionSpec {
+                    name: "us-east".into(),
+                    od_price: 1.0,
+                    price: PriceSpec::Model(calm.clone()),
+                },
+                RegionSpec {
+                    name: "eu-west".into(),
+                    od_price: 1.15,
+                    price: PriceSpec::Regimes(vec![(16.0, calm.clone()), (6.0, surge.clone())]),
+                },
+            ],
+            arbitrage: true,
+        },
+        workload: WorkloadSpec::uniform(2),
+        pool_capacity: 0,
+        policy_set: PolicySetSpec::Auto,
+        jobs: 400,
+    };
+
+    let mut bursty = base(
+        "bursty-arrivals",
+        "Cyclic load: long calm phases at a quarter of the base rate \
+         punctuated by short 16x bursts.",
+        SpotModel::paper_default(),
+    );
+    bursty.workload.rate_phases = vec![(6.0, 0.25), (2.0, 4.0)];
+
+    let mut pool_heavy = base(
+        "pool-heavy",
+        "A large self-owned pool (rule 12 vs the market) over a mixed \
+         type-2/type-3 workload; full 175-policy grid.",
+        SpotModel::paper_default(),
+    );
+    pool_heavy.pool_capacity = 600;
+    pool_heavy.policy_set = PolicySetSpec::Full;
+    pool_heavy.workload.components = vec![
+        MixComponent {
+            job_type: 2,
+            weight: 1.0,
+        },
+        MixComponent {
+            job_type: 3,
+            weight: 1.0,
+        },
+    ];
+
+    let mut deadline_tight = base(
+        "deadline-tight",
+        "Deadline-pressure world: 3:1 mix of type-1 (x0 = 1.5) to type-2 \
+         jobs — little slack for the allocation to exploit.",
+        SpotModel::paper_default(),
+    );
+    deadline_tight.workload.components = vec![
+        MixComponent {
+            job_type: 1,
+            weight: 3.0,
+        },
+        MixComponent {
+            job_type: 2,
+            weight: 1.0,
+        },
+    ];
+
+    vec![
+        paper_default,
+        calm_surge,
+        google,
+        replayed,
+        multi_region,
+        bursty,
+        pool_heavy,
+        deadline_tight,
+    ]
+}
+
+/// Canonical registry names.
+pub fn builtin_names() -> Vec<String> {
+    builtins().into_iter().map(|s| s.name).collect()
+}
+
+/// Look up one built-in scenario by name.
+pub fn find(name: &str) -> Option<ScenarioSpec> {
+    builtins().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_expected_worlds() {
+        let names = builtin_names();
+        assert_eq!(names.len(), 8);
+        for want in [
+            "paper-default",
+            "calm-surge-markov",
+            "google-fixed",
+            "replayed-trace",
+            "multi-region-arbitrage",
+            "bursty-arrivals",
+            "pool-heavy",
+            "deadline-tight",
+        ] {
+            assert!(names.iter().any(|n| n == want), "missing '{want}'");
+        }
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate names");
+    }
+
+    #[test]
+    fn all_builtins_validate() {
+        for s in builtins() {
+            s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+    }
+
+    #[test]
+    fn find_is_by_name() {
+        assert!(find("pool-heavy").unwrap().pool_capacity > 0);
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn replayed_scenario_embeds_the_sample_trace() {
+        let s = find("replayed-trace").unwrap();
+        match &s.market.regions[0].price {
+            PriceSpec::Replay(r) => {
+                assert!(r.csv.as_deref().unwrap().contains("time,price"));
+                assert!(r.tile);
+            }
+            other => panic!("expected replay price spec, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Scenario report: fold a batch of [`ScenarioOutcome`]s into one
+//! comparable JSON table (per-run rows plus per-scenario aggregates).
+//!
+//! The report is a pure function of the outcomes — no timestamps, no
+//! environment — so byte-identical batches produce byte-identical JSON
+//! (the determinism contract `repro scenarios` is tested against).
+
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+
+use super::runner::ScenarioOutcome;
+
+/// Per-scenario aggregate across replicates.
+#[derive(Debug, Clone)]
+pub struct ScenarioAggregate {
+    pub scenario: String,
+    pub runs: usize,
+    pub alpha_mean: f64,
+    pub alpha_std: f64,
+    pub regret_mean: f64,
+    pub regret_bound_mean: f64,
+    pub pool_utilization_mean: f64,
+    pub so_share_mean: f64,
+    pub spot_share_mean: f64,
+    pub od_share_mean: f64,
+    pub availability_lo_mean: f64,
+    pub availability_hi_mean: f64,
+}
+
+/// Aggregate outcomes per scenario, preserving first-seen scenario order.
+pub fn aggregate(outcomes: &[ScenarioOutcome]) -> Vec<ScenarioAggregate> {
+    let mut order: Vec<&str> = Vec::new();
+    for o in outcomes {
+        if !order.contains(&o.scenario.as_str()) {
+            order.push(&o.scenario);
+        }
+    }
+    order
+        .into_iter()
+        .map(|name| {
+            let runs: Vec<&ScenarioOutcome> =
+                outcomes.iter().filter(|o| o.scenario == name).collect();
+            let mut alpha = Welford::new();
+            let fold = |f: fn(&ScenarioOutcome) -> f64| {
+                runs.iter().map(|&o| f(o)).sum::<f64>() / runs.len() as f64
+            };
+            for o in &runs {
+                alpha.push(o.average_unit_cost);
+            }
+            ScenarioAggregate {
+                scenario: name.to_string(),
+                runs: runs.len(),
+                alpha_mean: alpha.mean(),
+                alpha_std: alpha.stddev(),
+                regret_mean: fold(|o| o.average_regret),
+                regret_bound_mean: fold(|o| o.regret_bound),
+                pool_utilization_mean: fold(|o| o.pool_utilization),
+                so_share_mean: fold(|o| o.so_share),
+                spot_share_mean: fold(|o| o.spot_share),
+                od_share_mean: fold(|o| o.od_share),
+                availability_lo_mean: fold(|o| o.availability_lo),
+                availability_hi_mean: fold(|o| o.availability_hi),
+            }
+        })
+        .collect()
+}
+
+fn run_to_json(o: &ScenarioOutcome) -> Json {
+    let mut j = Json::obj();
+    // Seeds are full-range u64; JSON numbers (f64) lose bits above 2^53,
+    // so the seed travels as a string to stay replayable.
+    j.set("replicate", Json::Num(o.replicate as f64))
+        .set("run_seed", Json::Str(o.run_seed.to_string()))
+        .set("jobs", Json::Num(o.jobs as f64))
+        .set("alpha", Json::Num(o.average_unit_cost))
+        .set("regret", Json::Num(o.average_regret))
+        .set("regret_bound", Json::Num(o.regret_bound))
+        .set("pool_utilization", Json::Num(o.pool_utilization))
+        .set("so_share", Json::Num(o.so_share))
+        .set("spot_share", Json::Num(o.spot_share))
+        .set("od_share", Json::Num(o.od_share))
+        .set("availability_lo", Json::Num(o.availability_lo))
+        .set("availability_hi", Json::Num(o.availability_hi))
+        .set("best_policy", Json::Str(o.best_policy.clone()));
+    j
+}
+
+/// The full report document.
+pub fn report_json(outcomes: &[ScenarioOutcome], seeds: u64, base_seed: u64, smoke: bool) -> Json {
+    let aggs = aggregate(outcomes);
+    let mut j = Json::obj();
+    // base_seed is a full-range u64 like the per-run seeds: stringified so
+    // the recorded value replays the batch exactly (f64 loses bits > 2^53).
+    j.set("schema", Json::Str("dagcloud.scenarios/v1".into()))
+        .set("seeds", Json::Num(seeds as f64))
+        .set("base_seed", Json::Str(base_seed.to_string()))
+        .set("smoke", Json::Bool(smoke))
+        .set(
+            "scenarios",
+            Json::Arr(
+                aggs.iter()
+                    .map(|a| {
+                        let mut sj = Json::obj();
+                        sj.set("name", Json::Str(a.scenario.clone()))
+                            .set("runs", Json::Num(a.runs as f64))
+                            .set("alpha_mean", Json::Num(a.alpha_mean))
+                            .set("alpha_std", Json::Num(a.alpha_std))
+                            .set("regret_mean", Json::Num(a.regret_mean))
+                            .set("regret_bound_mean", Json::Num(a.regret_bound_mean))
+                            .set(
+                                "pool_utilization_mean",
+                                Json::Num(a.pool_utilization_mean),
+                            )
+                            .set("so_share_mean", Json::Num(a.so_share_mean))
+                            .set("spot_share_mean", Json::Num(a.spot_share_mean))
+                            .set("od_share_mean", Json::Num(a.od_share_mean))
+                            .set("availability_lo_mean", Json::Num(a.availability_lo_mean))
+                            .set("availability_hi_mean", Json::Num(a.availability_hi_mean))
+                            .set(
+                                "details",
+                                Json::Arr(
+                                    outcomes
+                                        .iter()
+                                        .filter(|o| o.scenario == a.scenario)
+                                        .map(run_to_json)
+                                        .collect(),
+                                ),
+                            );
+                        sj
+                    })
+                    .collect(),
+            ),
+        );
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(name: &str, rep: u64, alpha: f64) -> ScenarioOutcome {
+        ScenarioOutcome {
+            scenario: name.into(),
+            replicate: rep,
+            run_seed: 100 + rep,
+            jobs: 10,
+            average_unit_cost: alpha,
+            average_regret: 0.01,
+            regret_bound: 0.5,
+            pool_utilization: 0.0,
+            so_share: 0.0,
+            spot_share: 0.8,
+            od_share: 0.2,
+            availability_lo: 0.4,
+            availability_hi: 0.9,
+            best_policy: "proposed(β=1.000,β₀=-,b=0.24)".into(),
+        }
+    }
+
+    #[test]
+    fn aggregate_groups_and_averages() {
+        let outs = vec![
+            outcome("a", 0, 0.2),
+            outcome("a", 1, 0.4),
+            outcome("b", 0, 0.6),
+        ];
+        let aggs = aggregate(&outs);
+        assert_eq!(aggs.len(), 2);
+        assert_eq!(aggs[0].scenario, "a");
+        assert_eq!(aggs[0].runs, 2);
+        assert!((aggs[0].alpha_mean - 0.3).abs() < 1e-12);
+        assert!(aggs[0].alpha_std > 0.0);
+        assert_eq!(aggs[1].scenario, "b");
+        assert_eq!(aggs[1].runs, 1);
+    }
+
+    #[test]
+    fn report_is_deterministic_and_parses() {
+        let outs = vec![outcome("a", 0, 0.2), outcome("b", 0, 0.3)];
+        let a = report_json(&outs, 1, 7, true).pretty();
+        let b = report_json(&outs, 1, 7, true).pretty();
+        assert_eq!(a, b);
+        let j = Json::parse(&a).unwrap();
+        assert_eq!(
+            j.get("schema").unwrap().as_str().unwrap(),
+            "dagcloud.scenarios/v1"
+        );
+        let arr = j.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(
+            arr[0].get("details").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+}

@@ -1,0 +1,393 @@
+//! The sharded deterministic scenario runner.
+//!
+//! A batch is `scenarios × seeds`; every cell is an independent TOLA
+//! learning run whose RNG streams derive from `(base_seed, scenario name,
+//! replicate)` alone — never from cell order or thread assignment — so a
+//! batch fanned across [`parallel_map`] is bit-identical under any
+//! `--threads`. Within a cell the PR-1 structure-sharing sweep engine
+//! evaluates the counterfactual grid single-threaded; parallelism comes
+//! from sharding cells across the worker pool.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{parallel_map, tola_run, Evaluator};
+use crate::learning::counterfactual::CfSpec;
+use crate::market::{multi, replay, PriceTrace, RegionMarket, SpotPriceProcess, SLOTS_PER_UNIT};
+use crate::policy::{benchmark_bids, grid_b, policy_set_full, policy_set_spot_only};
+use crate::util::rng::SplitMix64;
+use crate::workload::{transform, ArrivalSchedule, ChainJob, GeneratorConfig, MixStream};
+
+use super::spec::{PolicySetSpec, PriceSpec, ScenarioSpec};
+
+/// Batch-level options for [`run_batch`].
+#[derive(Debug, Clone)]
+pub struct BatchOptions {
+    /// Replicates per scenario.
+    pub seeds: u64,
+    /// The user-facing seed every run seed derives from.
+    pub base_seed: u64,
+    /// Worker threads the cells shard across (affects wall-clock only).
+    pub threads: usize,
+    /// Override each scenario's job count (smoke / --jobs).
+    pub jobs_override: Option<usize>,
+}
+
+/// The metrics one scenario run produces.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub scenario: String,
+    pub replicate: u64,
+    pub run_seed: u64,
+    pub jobs: usize,
+    /// Realized average unit cost ᾱ.
+    pub average_unit_cost: f64,
+    pub average_regret: f64,
+    pub regret_bound: f64,
+    pub pool_utilization: f64,
+    /// Work-share per instance kind (fractions of total processed work).
+    pub so_share: f64,
+    pub spot_share: f64,
+    pub od_share: f64,
+    /// Realized spot availability over the horizon at the lowest / highest
+    /// §6.1 grid bid.
+    pub availability_lo: f64,
+    pub availability_hi: f64,
+    /// Label of the highest-weight policy at the end of the run.
+    pub best_policy: String,
+}
+
+/// Deterministic per-run seed: FNV-1a over the scenario name folded with
+/// the base seed and replicate index through SplitMix64. Cell order and
+/// thread count cannot influence any run's streams.
+pub fn derive_run_seed(base_seed: u64, scenario: &str, replicate: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in scenario.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut sm = SplitMix64::new(
+        h ^ base_seed.rotate_left(17) ^ replicate.wrapping_mul(0xA24B_AED4_963E_E407),
+    );
+    sm.next_u64()
+}
+
+/// Build one region's realized [`PriceTrace`] for the horizon.
+fn region_trace(price: &PriceSpec, horizon: f64, seed: u64) -> Result<PriceTrace> {
+    match price {
+        PriceSpec::Model(m) => Ok(PriceTrace::generate(m.clone(), horizon, seed)),
+        PriceSpec::Regimes(segments) => {
+            let slot_len = 1.0 / SLOTS_PER_UNIT as f64;
+            let total = (horizon / slot_len).ceil() as usize + 1;
+            // One persistent process per regime: Markov/RNG state carries
+            // across cycles of the schedule.
+            let mut procs: Vec<SpotPriceProcess> = segments
+                .iter()
+                .enumerate()
+                .map(|(k, (_, m))| {
+                    SpotPriceProcess::new(m.clone(), seed ^ (k as u64 + 1).wrapping_mul(0x9E37))
+                })
+                .collect();
+            let mut prices = Vec::with_capacity(total);
+            let mut seg = 0usize;
+            let mut remaining = segments[0].0;
+            while prices.len() < total {
+                if remaining <= 0.0 {
+                    seg = (seg + 1) % segments.len();
+                    remaining = segments[seg].0;
+                }
+                prices.push(procs[seg].next_price());
+                remaining -= slot_len;
+            }
+            Ok(PriceTrace::from_prices(prices, slot_len))
+        }
+        PriceSpec::Replay(r) => {
+            let trace = match (&r.csv, &r.path) {
+                (Some(text), _) => replay::trace_from_csv(text, r.time_scale, r.price_scale)?,
+                (None, Some(path)) => {
+                    replay::trace_from_csv_file(path, r.time_scale, r.price_scale)?
+                }
+                (None, None) => bail!("replay spec has neither csv nor path"),
+            };
+            Ok(if r.tile {
+                replay::tile_to_horizon(&trace, horizon)
+            } else {
+                trace
+            })
+        }
+    }
+}
+
+/// Realize the scenario's market over `horizon`: the effective trace and
+/// on-demand price the coordinator runs against.
+pub fn build_market(spec: &ScenarioSpec, horizon: f64, seed: u64) -> Result<(PriceTrace, f64)> {
+    // Without arbitrage, region 0 is the home region and the rest never
+    // influence the run — don't pay to realize their traces.
+    let wanted = if spec.market.arbitrage {
+        spec.market.regions.len()
+    } else {
+        1
+    };
+    let regions: Vec<RegionMarket> = spec
+        .market
+        .regions
+        .iter()
+        .take(wanted)
+        .enumerate()
+        .map(|(k, r)| {
+            Ok(RegionMarket {
+                name: r.name.clone(),
+                od_price: r.od_price,
+                trace: region_trace(&r.price, horizon, seed ^ ((k as u64 + 1) << 8))?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    if regions.len() > 1 {
+        Ok(multi::arbitrage_composite(&regions))
+    } else {
+        let r = regions.into_iter().next().expect("validated non-empty");
+        Ok((r.trace, r.od_price))
+    }
+}
+
+/// Realize the scenario's workload: `jobs` chain jobs from the weighted mix
+/// under the arrival schedule.
+pub fn build_workload(spec: &ScenarioSpec, jobs: usize, seed: u64) -> Vec<ChainJob> {
+    let components: Vec<(GeneratorConfig, f64)> = spec
+        .workload
+        .components
+        .iter()
+        .map(|c| {
+            let mut g = GeneratorConfig::for_job_type(c.job_type);
+            if spec.workload.small_tasks {
+                g.task_counts = vec![3, 7];
+            }
+            (g, c.weight)
+        })
+        .collect();
+    let schedule = ArrivalSchedule {
+        base_rate: spec.workload.arrival_rate,
+        phases: spec.workload.rate_phases.clone(),
+    };
+    let mut stream = MixStream::new(components, schedule, seed);
+    stream.take_jobs(jobs).iter().map(transform).collect()
+}
+
+/// Resolve the scenario's policy grid into counterfactual specs.
+fn cf_specs(spec: &ScenarioSpec) -> Vec<CfSpec> {
+    let set = match spec.policy_set {
+        PolicySetSpec::Auto if spec.pool_capacity > 0 => PolicySetSpec::Full,
+        PolicySetSpec::Auto => PolicySetSpec::SpotOnly,
+        s => s,
+    };
+    match set {
+        PolicySetSpec::SpotOnly => policy_set_spot_only()
+            .into_iter()
+            .map(CfSpec::Proposed)
+            .collect(),
+        PolicySetSpec::Full => policy_set_full().into_iter().map(CfSpec::Proposed).collect(),
+        PolicySetSpec::Benchmark => benchmark_bids()
+            .into_iter()
+            .map(|b| CfSpec::EvenNaive { bid: b })
+            .collect(),
+        PolicySetSpec::Auto => unreachable!("resolved above"),
+    }
+}
+
+/// Run one scenario cell: realize workload and market from the run seed,
+/// execute the TOLA learning loop, and distill the comparable metrics.
+pub fn run_scenario_once(
+    spec: &ScenarioSpec,
+    run_seed: u64,
+    jobs_override: Option<usize>,
+) -> Result<ScenarioOutcome> {
+    spec.validate()?;
+    let n_jobs = jobs_override.unwrap_or(spec.jobs);
+    let jobs = build_workload(spec, n_jobs, run_seed ^ 0x10AD);
+    let horizon = jobs.iter().map(|j| j.deadline).fold(1.0, f64::max) + 1.0;
+    let (trace, od_price) = build_market(spec, horizon, run_seed ^ 0x7ACE)?;
+    let specs = cf_specs(spec);
+    let rep = tola_run(
+        &jobs,
+        &specs,
+        &trace,
+        spec.pool_capacity,
+        od_price,
+        run_seed ^ 0x701A_2,
+        &Evaluator::Native { threads: 1 },
+    );
+
+    let grid = grid_b();
+    let lo_bid = grid.first().copied().unwrap_or(0.18);
+    let hi_bid = grid.last().copied().unwrap_or(0.3);
+    let t1 = (trace.horizon() - 1e-9).max(0.0);
+    let total_work = rep.ledger.total_work().max(1e-12);
+    Ok(ScenarioOutcome {
+        scenario: spec.name.clone(),
+        replicate: 0, // filled by run_batch
+        run_seed,
+        jobs: rep.jobs,
+        average_unit_cost: rep.average_unit_cost,
+        average_regret: rep.average_regret,
+        regret_bound: rep.regret_bound,
+        pool_utilization: rep.pool_utilization,
+        so_share: rep.ledger.work_selfowned / total_work,
+        spot_share: rep.ledger.work_spot / total_work,
+        od_share: rep.ledger.work_ondemand / total_work,
+        availability_lo: trace.availability(0.0, t1, lo_bid),
+        availability_hi: trace.availability(0.0, t1, hi_bid),
+        best_policy: specs[rep.best_policy].label(),
+    })
+}
+
+/// Run `specs × opts.seeds` cells across the worker pool. Outcomes come
+/// back in deterministic `(scenario, replicate)` order regardless of thread
+/// count; any cell error fails the batch.
+pub fn run_batch(specs: &[ScenarioSpec], opts: &BatchOptions) -> Result<Vec<ScenarioOutcome>> {
+    let reps = opts.seeds.max(1);
+    let mut cells: Vec<(usize, u64)> = Vec::new();
+    for i in 0..specs.len() {
+        for rep in 0..reps {
+            cells.push((i, rep));
+        }
+    }
+    let results: Vec<Result<ScenarioOutcome>> = parallel_map(cells.len(), opts.threads, |k| {
+        let (i, rep) = cells[k];
+        let spec = &specs[i];
+        run_scenario_once(
+            spec,
+            derive_run_seed(opts.base_seed, &spec.name, rep),
+            opts.jobs_override,
+        )
+        .map(|mut o| {
+            o.replicate = rep;
+            o
+        })
+    });
+    results.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::SpotModel;
+    use crate::scenario::spec::{MarketSpec, ReplaySpec, WorkloadSpec};
+
+    fn tiny(name: &str) -> ScenarioSpec {
+        let mut w = WorkloadSpec::uniform(2);
+        w.small_tasks = true;
+        ScenarioSpec {
+            name: name.into(),
+            description: String::new(),
+            market: MarketSpec::single(SpotModel::paper_default(), 1.0),
+            workload: w,
+            pool_capacity: 0,
+            policy_set: PolicySetSpec::Auto,
+            jobs: 12,
+        }
+    }
+
+    #[test]
+    fn run_seed_depends_on_all_inputs() {
+        let a = derive_run_seed(7, "x", 0);
+        assert_eq!(a, derive_run_seed(7, "x", 0));
+        assert_ne!(a, derive_run_seed(8, "x", 0));
+        assert_ne!(a, derive_run_seed(7, "y", 0));
+        assert_ne!(a, derive_run_seed(7, "x", 1));
+    }
+
+    #[test]
+    fn single_run_is_reproducible() {
+        let spec = tiny("repro");
+        let s = derive_run_seed(3, &spec.name, 0);
+        let a = run_scenario_once(&spec, s, None).unwrap();
+        let b = run_scenario_once(&spec, s, None).unwrap();
+        assert_eq!(a.average_unit_cost, b.average_unit_cost);
+        assert_eq!(a.average_regret, b.average_regret);
+        assert_eq!(a.best_policy, b.best_policy);
+        assert_eq!(a.jobs, 12);
+    }
+
+    #[test]
+    fn batch_order_and_values_are_thread_invariant() {
+        let specs = vec![tiny("a"), tiny("b")];
+        let run = |threads| {
+            run_batch(
+                &specs,
+                &BatchOptions {
+                    seeds: 2,
+                    base_seed: 5,
+                    threads,
+                    jobs_override: Some(8),
+                },
+            )
+            .unwrap()
+        };
+        let one = run(1);
+        let eight = run(8);
+        assert_eq!(one.len(), 4);
+        for (x, y) in one.iter().zip(&eight) {
+            assert_eq!(x.scenario, y.scenario);
+            assert_eq!(x.replicate, y.replicate);
+            assert_eq!(x.run_seed, y.run_seed);
+            assert_eq!(x.average_unit_cost, y.average_unit_cost);
+            assert_eq!(x.average_regret, y.average_regret);
+        }
+    }
+
+    #[test]
+    fn replay_market_flows_end_to_end() {
+        // Constant cheap price 0.2: every grid bid ≥ 0.21 always wins, so
+        // the learner should end far below on-demand cost.
+        let mut spec = tiny("replay-e2e");
+        spec.market.regions[0].price =
+            PriceSpec::Replay(ReplaySpec::inline("time,price\n0,0.2\n10,0.2\n"));
+        let out = run_scenario_once(&spec, derive_run_seed(1, "replay-e2e", 0), None).unwrap();
+        assert!(
+            out.availability_hi > 0.999,
+            "bid 0.3 vs constant 0.2 price: availability {}",
+            out.availability_hi
+        );
+        assert!(
+            out.average_unit_cost < 0.75,
+            "alpha {} should sit well below on-demand 1.0",
+            out.average_unit_cost
+        );
+        assert!(out.spot_share > 0.1, "spot share {}", out.spot_share);
+    }
+
+    #[test]
+    fn pool_scenario_reports_utilization() {
+        let mut spec = tiny("pooled");
+        spec.pool_capacity = 150;
+        let out = run_scenario_once(&spec, derive_run_seed(2, "pooled", 0), None).unwrap();
+        assert!(out.so_share > 0.0, "self-owned share {}", out.so_share);
+        assert!(out.pool_utilization > 0.0);
+        assert!(out.best_policy.starts_with("proposed"));
+    }
+
+    #[test]
+    fn regime_schedule_produces_mixed_prices() {
+        let calm = SpotModel::BoundedExp {
+            mean: 0.13,
+            lo: 0.12,
+            hi: 0.3,
+        };
+        let surge = SpotModel::BoundedExp {
+            mean: 0.7,
+            lo: 0.5,
+            hi: 1.0,
+        };
+        let trace = region_trace(
+            &PriceSpec::Regimes(vec![(4.0, calm), (4.0, surge)]),
+            40.0,
+            9,
+        )
+        .unwrap();
+        let n = trace.num_slots();
+        let low = (0..n).filter(|&s| trace.price_of_slot(s) <= 0.3).count();
+        let high = (0..n).filter(|&s| trace.price_of_slot(s) >= 0.5).count();
+        // Half the schedule in each regime.
+        assert!(low as f64 > 0.4 * n as f64, "low {low}/{n}");
+        assert!(high as f64 > 0.4 * n as f64, "high {high}/{n}");
+    }
+}

@@ -1,0 +1,697 @@
+//! The declarative scenario specification.
+//!
+//! A [`ScenarioSpec`] composes a *world* the evaluation platform can run:
+//!
+//! * a **market** — one or more regions, each with its own on-demand price
+//!   and price process (a [`SpotModel`], a cyclic regime-switch schedule,
+//!   or a CSV-replayed real trace), optionally folded into an arbitrage
+//!   composite;
+//! * a **workload** — a weighted mix of §6.1 job types under a cyclic
+//!   arrival-rate schedule;
+//! * a **pool** — the self-owned capacity;
+//! * a **policy set** — which grid the TOLA learner runs over.
+//!
+//! Specs round-trip through the crate's own JSON (`util::json`; serde is
+//! unavailable offline), so worlds can live in files, be diffed, and be
+//! shipped to sharded runners.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::market::{spot_model_from_json, spot_model_to_json, SpotModel};
+use crate::util::json::Json;
+use crate::workload::MixComponent;
+
+/// How a region's per-slot prices are produced.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PriceSpec {
+    /// A single synthetic price process.
+    Model(SpotModel),
+    /// Regime-switch schedule: `(duration, model)` segments cycled over the
+    /// horizon (each segment's process keeps its RNG/Markov state across
+    /// cycles).
+    Regimes(Vec<(f64, SpotModel)>),
+    /// A CSV-replayed real price history (see [`crate::market::replay`]).
+    Replay(ReplaySpec),
+}
+
+/// A CSV replay source: inline content or a file path (exactly one).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplaySpec {
+    pub csv: Option<String>,
+    pub path: Option<String>,
+    /// Multiplies CSV timestamps into simulated time units.
+    pub time_scale: f64,
+    /// Multiplies CSV prices (normalize against the on-demand price).
+    pub price_scale: f64,
+    /// Tile the trace to cover the workload horizon (short histories wrap).
+    pub tile: bool,
+}
+
+impl ReplaySpec {
+    pub fn inline(csv: &str) -> ReplaySpec {
+        ReplaySpec {
+            csv: Some(csv.to_string()),
+            path: None,
+            time_scale: 1.0,
+            price_scale: 1.0,
+            tile: true,
+        }
+    }
+}
+
+/// One market region.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionSpec {
+    pub name: String,
+    pub od_price: f64,
+    pub price: PriceSpec,
+}
+
+/// The market side of a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarketSpec {
+    pub regions: Vec<RegionSpec>,
+    /// Fold multiple regions into the slot-wise cheapest composite
+    /// ([`crate::market::multi::arbitrage_composite`]). When false, region 0
+    /// is the home region and the rest are ignored by the runner (reserved
+    /// for a future multi-coordinator fleet).
+    pub arbitrage: bool,
+}
+
+impl MarketSpec {
+    /// A single-region market over one synthetic model.
+    pub fn single(model: SpotModel, od_price: f64) -> MarketSpec {
+        MarketSpec {
+            regions: vec![RegionSpec {
+                name: "default".into(),
+                od_price,
+                price: PriceSpec::Model(model),
+            }],
+            arbitrage: false,
+        }
+    }
+}
+
+/// The workload side of a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Weighted job-type mix (at least one component).
+    pub components: Vec<MixComponent>,
+    /// Base Poisson arrival rate λ.
+    pub arrival_rate: f64,
+    /// Cyclic `(duration, rate multiplier)` phases; empty = constant rate.
+    pub rate_phases: Vec<(f64, f64)>,
+    /// Use the reduced task counts of [`crate::workload::GeneratorConfig::small`]
+    /// (smoke runs / CI).
+    pub small_tasks: bool,
+}
+
+impl WorkloadSpec {
+    pub fn uniform(job_type: u8) -> WorkloadSpec {
+        WorkloadSpec {
+            components: vec![MixComponent {
+                job_type,
+                weight: 1.0,
+            }],
+            arrival_rate: 4.0,
+            rate_phases: Vec::new(),
+            small_tasks: false,
+        }
+    }
+}
+
+/// Which policy grid the learner runs over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicySetSpec {
+    /// `Full` when the scenario has a pool, else `SpotOnly`.
+    Auto,
+    /// The §6.1 set `P` without β₀ (25 policies).
+    SpotOnly,
+    /// The §6.1 set `P` with β₀ (175 policies).
+    Full,
+    /// The benchmark set `P'` (Even windows + naive self-owned, 5 bids).
+    Benchmark,
+}
+
+impl PolicySetSpec {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicySetSpec::Auto => "auto",
+            PolicySetSpec::SpotOnly => "spot_only",
+            PolicySetSpec::Full => "full",
+            PolicySetSpec::Benchmark => "benchmark",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<PolicySetSpec> {
+        Ok(match s {
+            "auto" => PolicySetSpec::Auto,
+            "spot_only" => PolicySetSpec::SpotOnly,
+            "full" => PolicySetSpec::Full,
+            "benchmark" => PolicySetSpec::Benchmark,
+            other => bail!("unknown policy set '{other}' (auto|spot_only|full|benchmark)"),
+        })
+    }
+}
+
+/// A complete, runnable world.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    pub market: MarketSpec,
+    pub workload: WorkloadSpec,
+    /// Self-owned pool capacity (0 = no pool).
+    pub pool_capacity: u32,
+    pub policy_set: PolicySetSpec,
+    /// Jobs per run (the runner's `--jobs` / `--smoke` flags override).
+    pub jobs: usize,
+}
+
+impl ScenarioSpec {
+    /// Structural validation with path-style error messages.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "scenario: empty name");
+        ensure!(self.jobs > 0, "scenario '{}': jobs must be positive", self.name);
+        ensure!(
+            !self.market.regions.is_empty(),
+            "scenario '{}': market needs at least one region",
+            self.name
+        );
+        for r in &self.market.regions {
+            ensure!(
+                r.od_price > 0.0,
+                "scenario '{}', region '{}': od_price must be positive",
+                self.name,
+                r.name
+            );
+            match &r.price {
+                PriceSpec::Model(m) => {
+                    validate_spot_model(m, &self.name, &r.name)?;
+                }
+                PriceSpec::Regimes(segments) => {
+                    ensure!(
+                        !segments.is_empty(),
+                        "scenario '{}', region '{}': empty regime schedule",
+                        self.name,
+                        r.name
+                    );
+                    ensure!(
+                        segments.iter().all(|(d, _)| *d > 0.0),
+                        "scenario '{}', region '{}': regime durations must be positive",
+                        self.name,
+                        r.name
+                    );
+                    for (_, m) in segments {
+                        validate_spot_model(m, &self.name, &r.name)?;
+                    }
+                }
+                PriceSpec::Replay(rp) => {
+                    ensure!(
+                        rp.csv.is_some() != rp.path.is_some(),
+                        "scenario '{}', region '{}': replay needs exactly one of csv/path",
+                        self.name,
+                        r.name
+                    );
+                    ensure!(
+                        rp.time_scale > 0.0 && rp.price_scale > 0.0,
+                        "scenario '{}', region '{}': replay scales must be positive",
+                        self.name,
+                        r.name
+                    );
+                }
+            }
+        }
+        ensure!(
+            !self.workload.components.is_empty(),
+            "scenario '{}': workload needs at least one component",
+            self.name
+        );
+        for c in &self.workload.components {
+            ensure!(
+                (1..=4).contains(&c.job_type),
+                "scenario '{}': job_type {} outside 1..=4",
+                self.name,
+                c.job_type
+            );
+            ensure!(
+                c.weight >= 0.0,
+                "scenario '{}': negative component weight",
+                self.name
+            );
+        }
+        ensure!(
+            self.workload.components.iter().map(|c| c.weight).sum::<f64>() > 0.0,
+            "scenario '{}': zero total component weight",
+            self.name
+        );
+        ensure!(
+            self.workload.arrival_rate > 0.0,
+            "scenario '{}': arrival_rate must be positive",
+            self.name
+        );
+        ensure!(
+            self.workload.rate_phases.iter().all(|(d, m)| *d > 0.0 && *m > 0.0),
+            "scenario '{}': rate phases need positive duration and multiplier",
+            self.name
+        );
+        Ok(())
+    }
+
+    /// Parse a JSON document into a validated spec.
+    pub fn parse(text: &str) -> Result<ScenarioSpec> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("scenario spec: {e}"))?;
+        let spec = Self::from_json(&j)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("scenario: missing 'name'"))?
+            .to_string();
+        let description = j.opt_str("description", "").to_string();
+        let market_j = j
+            .get("market")
+            .ok_or_else(|| anyhow::anyhow!("scenario '{name}': missing 'market'"))?;
+        let workload_j = j
+            .get("workload")
+            .ok_or_else(|| anyhow::anyhow!("scenario '{name}': missing 'workload'"))?;
+        let pool_capacity = j.opt_u64("pool_capacity", 0);
+        ensure!(
+            pool_capacity <= u32::MAX as u64,
+            "scenario '{name}': pool_capacity {pool_capacity} exceeds u32"
+        );
+        Ok(ScenarioSpec {
+            description,
+            market: market_from_json(market_j, &name)?,
+            workload: workload_from_json(workload_j, &name)?,
+            pool_capacity: pool_capacity as u32,
+            policy_set: PolicySetSpec::from_str(j.opt_str("policy_set", "auto"))?,
+            jobs: j.opt_u64("jobs", 400) as usize,
+            name,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::Str(self.name.clone()))
+            .set("description", Json::Str(self.description.clone()))
+            .set("jobs", Json::Num(self.jobs as f64))
+            .set("pool_capacity", Json::Num(self.pool_capacity as f64))
+            .set("policy_set", Json::Str(self.policy_set.as_str().into()))
+            .set("market", market_to_json(&self.market))
+            .set("workload", workload_to_json(&self.workload));
+        j
+    }
+}
+
+/// Sanity-check a price process's parameters so a malformed spec fails
+/// with a path-style error instead of a downstream panic (bounded-exp
+/// rejection sampling asserts `lo < hi`) or a degenerate run.
+fn validate_spot_model(m: &SpotModel, scenario: &str, region: &str) -> Result<()> {
+    let ctx = || format!("scenario '{scenario}', region '{region}'");
+    match m {
+        SpotModel::BoundedExp { mean, lo, hi } => {
+            ensure!(
+                *mean > 0.0 && *lo >= 0.0 && lo < hi,
+                "{}: bounded_exp needs mean > 0 and 0 <= lo < hi (mean={mean}, lo={lo}, hi={hi})",
+                ctx()
+            );
+        }
+        SpotModel::Markov {
+            calm_mean,
+            surge_mean,
+            lo,
+            hi,
+            p_calm_to_surge,
+            p_surge_to_calm,
+        } => {
+            ensure!(
+                *calm_mean > 0.0 && *surge_mean > 0.0 && *lo >= 0.0 && lo < hi,
+                "{}: markov needs positive means and 0 <= lo < hi",
+                ctx()
+            );
+            ensure!(
+                (0.0..=1.0).contains(p_calm_to_surge) && (0.0..=1.0).contains(p_surge_to_calm),
+                "{}: markov transition probabilities must lie in [0, 1]",
+                ctx()
+            );
+        }
+        SpotModel::GoogleFixed {
+            price,
+            availability,
+        } => {
+            ensure!(
+                *price > 0.0 && (0.0..=1.0).contains(availability),
+                "{}: google needs price > 0 and availability in [0, 1]",
+                ctx()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn price_to_json(p: &PriceSpec) -> Json {
+    let mut j = Json::obj();
+    match p {
+        PriceSpec::Model(m) => {
+            j.set("kind", Json::Str("model".into()))
+                .set("model", spot_model_to_json(m));
+        }
+        PriceSpec::Regimes(segments) => {
+            j.set("kind", Json::Str("regimes".into())).set(
+                "segments",
+                Json::Arr(
+                    segments
+                        .iter()
+                        .map(|(d, m)| {
+                            let mut s = Json::obj();
+                            s.set("duration", Json::Num(*d))
+                                .set("model", spot_model_to_json(m));
+                            s
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        PriceSpec::Replay(r) => {
+            j.set("kind", Json::Str("replay".into()))
+                .set("time_scale", Json::Num(r.time_scale))
+                .set("price_scale", Json::Num(r.price_scale))
+                .set("tile", Json::Bool(r.tile));
+            if let Some(csv) = &r.csv {
+                j.set("csv", Json::Str(csv.clone()));
+            }
+            if let Some(path) = &r.path {
+                j.set("path", Json::Str(path.clone()));
+            }
+        }
+    }
+    j
+}
+
+fn price_from_json(j: &Json, ctx: &str) -> Result<PriceSpec> {
+    if let Some(k) = j.get("kind") {
+        ensure!(
+            matches!(k, Json::Str(_)),
+            "{ctx}: price 'kind' must be a string"
+        );
+    }
+    match j.opt_str("kind", "model") {
+        "model" => {
+            let m = j
+                .get("model")
+                .ok_or_else(|| anyhow::anyhow!("{ctx}: price kind 'model' missing 'model'"))?;
+            Ok(PriceSpec::Model(spot_model_from_json(m)?))
+        }
+        "regimes" => {
+            let segs = j
+                .get("segments")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("{ctx}: price kind 'regimes' missing 'segments'"))?;
+            let mut out = Vec::with_capacity(segs.len());
+            for s in segs {
+                let d = s.req_f64("duration")?;
+                let m = s
+                    .get("model")
+                    .ok_or_else(|| anyhow::anyhow!("{ctx}: regime segment missing 'model'"))?;
+                out.push((d, spot_model_from_json(m)?));
+            }
+            Ok(PriceSpec::Regimes(out))
+        }
+        "replay" => Ok(PriceSpec::Replay(ReplaySpec {
+            csv: j.get("csv").and_then(Json::as_str).map(str::to_string),
+            path: j.get("path").and_then(Json::as_str).map(str::to_string),
+            time_scale: j.opt_f64("time_scale", 1.0),
+            price_scale: j.opt_f64("price_scale", 1.0),
+            tile: j.opt_bool("tile", true),
+        })),
+        other => bail!("{ctx}: unknown price kind '{other}' (model|regimes|replay)"),
+    }
+}
+
+fn market_to_json(m: &MarketSpec) -> Json {
+    let mut j = Json::obj();
+    j.set("arbitrage", Json::Bool(m.arbitrage)).set(
+        "regions",
+        Json::Arr(
+            m.regions
+                .iter()
+                .map(|r| {
+                    let mut rj = Json::obj();
+                    rj.set("name", Json::Str(r.name.clone()))
+                        .set("od_price", Json::Num(r.od_price))
+                        .set("price", price_to_json(&r.price));
+                    rj
+                })
+                .collect(),
+        ),
+    );
+    j
+}
+
+fn market_from_json(j: &Json, scenario: &str) -> Result<MarketSpec> {
+    let regions_j = j
+        .get("regions")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("scenario '{scenario}': market missing 'regions'"))?;
+    let mut regions = Vec::with_capacity(regions_j.len());
+    for (k, rj) in regions_j.iter().enumerate() {
+        let name = rj.opt_str("name", "").to_string();
+        let name = if name.is_empty() {
+            format!("region-{k}")
+        } else {
+            name
+        };
+        let ctx = format!("scenario '{scenario}', region '{name}'");
+        let price_j = rj
+            .get("price")
+            .ok_or_else(|| anyhow::anyhow!("{ctx}: missing 'price'"))?;
+        regions.push(RegionSpec {
+            od_price: rj.opt_f64("od_price", crate::market::ON_DEMAND_PRICE),
+            price: price_from_json(price_j, &ctx)?,
+            name,
+        });
+    }
+    Ok(MarketSpec {
+        regions,
+        arbitrage: j.opt_bool("arbitrage", false),
+    })
+}
+
+fn workload_to_json(w: &WorkloadSpec) -> Json {
+    let mut j = Json::obj();
+    j.set("arrival_rate", Json::Num(w.arrival_rate))
+        .set("small_tasks", Json::Bool(w.small_tasks))
+        .set(
+            "components",
+            Json::Arr(
+                w.components
+                    .iter()
+                    .map(|c| {
+                        let mut cj = Json::obj();
+                        cj.set("job_type", Json::Num(c.job_type as f64))
+                            .set("weight", Json::Num(c.weight));
+                        cj
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "rate_phases",
+            Json::Arr(
+                w.rate_phases
+                    .iter()
+                    .map(|(d, m)| {
+                        let mut pj = Json::obj();
+                        pj.set("duration", Json::Num(*d))
+                            .set("multiplier", Json::Num(*m));
+                        pj
+                    })
+                    .collect(),
+            ),
+        );
+    j
+}
+
+fn workload_from_json(j: &Json, scenario: &str) -> Result<WorkloadSpec> {
+    let comps_j = j
+        .get("components")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("scenario '{scenario}': workload missing 'components'"))?;
+    let mut components = Vec::with_capacity(comps_j.len());
+    for cj in comps_j {
+        let job_type = cj.opt_u64("job_type", 2);
+        ensure!(
+            job_type <= u8::MAX as u64,
+            "scenario '{scenario}': job_type {job_type} out of range"
+        );
+        components.push(MixComponent {
+            job_type: job_type as u8,
+            weight: cj.opt_f64("weight", 1.0),
+        });
+    }
+    let mut rate_phases = Vec::new();
+    if let Some(phases) = j.get("rate_phases").and_then(Json::as_arr) {
+        for pj in phases {
+            rate_phases.push((pj.req_f64("duration")?, pj.req_f64("multiplier")?));
+        }
+    }
+    Ok(WorkloadSpec {
+        components,
+        arrival_rate: j.opt_f64("arrival_rate", 4.0),
+        rate_phases,
+        small_tasks: j.opt_bool("small_tasks", false),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "test-world".into(),
+            description: "two regions, bursty".into(),
+            market: MarketSpec {
+                regions: vec![
+                    RegionSpec {
+                        name: "us-east".into(),
+                        od_price: 1.0,
+                        price: PriceSpec::Model(SpotModel::paper_default()),
+                    },
+                    RegionSpec {
+                        name: "eu-west".into(),
+                        od_price: 1.2,
+                        price: PriceSpec::Regimes(vec![
+                            (12.0, SpotModel::paper_default()),
+                            (
+                                4.0,
+                                SpotModel::BoundedExp {
+                                    mean: 0.5,
+                                    lo: 0.12,
+                                    hi: 1.0,
+                                },
+                            ),
+                        ]),
+                    },
+                ],
+                arbitrage: true,
+            },
+            workload: WorkloadSpec {
+                components: vec![
+                    MixComponent {
+                        job_type: 1,
+                        weight: 2.0,
+                    },
+                    MixComponent {
+                        job_type: 3,
+                        weight: 1.0,
+                    },
+                ],
+                arrival_rate: 4.0,
+                rate_phases: vec![(6.0, 0.25), (2.0, 4.0)],
+                small_tasks: true,
+            },
+            pool_capacity: 120,
+            policy_set: PolicySetSpec::Auto,
+            jobs: 250,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_spec() {
+        let s = sample();
+        s.validate().unwrap();
+        let j = s.to_json();
+        let back = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(back, s);
+        // And via text.
+        let re = ScenarioSpec::parse(&j.pretty()).unwrap();
+        assert_eq!(re, s);
+    }
+
+    #[test]
+    fn replay_roundtrip() {
+        let mut s = sample();
+        s.market = MarketSpec {
+            regions: vec![RegionSpec {
+                name: "replayed".into(),
+                od_price: 1.0,
+                price: PriceSpec::Replay(ReplaySpec::inline("0,0.2\n5,0.5\n")),
+            }],
+            arbitrage: false,
+        };
+        s.validate().unwrap();
+        let back = ScenarioSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn validation_catches_bad_specs() {
+        let mut s = sample();
+        s.workload.components.clear();
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.market.regions.clear();
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.workload.components[0].job_type = 9;
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.market.regions[0].price = PriceSpec::Replay(ReplaySpec {
+            csv: None,
+            path: None,
+            time_scale: 1.0,
+            price_scale: 1.0,
+            tile: true,
+        });
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.jobs = 0;
+        assert!(s.validate().is_err());
+
+        // Degenerate price-process parameters fail validation, not the run.
+        let mut s = sample();
+        s.market.regions[0].price = PriceSpec::Model(SpotModel::BoundedExp {
+            mean: 0.13,
+            lo: 1.0,
+            hi: 0.5,
+        });
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.market.regions[0].price = PriceSpec::Model(SpotModel::GoogleFixed {
+            price: 0.3,
+            availability: 1.5,
+        });
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn missing_required_keys_error() {
+        assert!(ScenarioSpec::parse("{}").is_err());
+        assert!(ScenarioSpec::parse(r#"{"name":"x"}"#).is_err());
+        assert!(PolicySetSpec::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn out_of_range_numbers_rejected_not_truncated() {
+        let mut j = sample().to_json();
+        j.set("pool_capacity", Json::Num(4294967296.0)); // 2^32
+        assert!(ScenarioSpec::from_json(&j).is_err());
+
+        let text = sample()
+            .to_json()
+            .pretty()
+            .replace("\"job_type\": 1", "\"job_type\": 258");
+        assert!(ScenarioSpec::parse(&text).is_err());
+    }
+}

@@ -6,8 +6,10 @@ pub mod dag;
 pub mod chain;
 pub mod generator;
 pub mod transform;
+pub mod mix;
 
 pub use chain::{ChainJob, ChainTask};
 pub use dag::{DagJob, Task, TaskId};
 pub use generator::{GeneratorConfig, JobStream};
+pub use mix::{ArrivalSchedule, MixComponent, MixStream};
 pub use transform::transform;

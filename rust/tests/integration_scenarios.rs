@@ -1,0 +1,153 @@
+//! End-to-end scenario engine tests: registry health, JSON round-trips,
+//! thread-count-independent determinism of the report, and CSV replay
+//! through the full stack (loader → PriceTrace → coordinator → report).
+
+use dagcloud::scenario::{self, BatchOptions, PriceSpec, ScenarioSpec};
+use dagcloud::util::prop::{for_all, Config as PropConfig};
+
+/// The registry at smoke size (small chains keep runtime in seconds).
+fn smoke_specs() -> Vec<ScenarioSpec> {
+    let mut specs = scenario::builtins();
+    for s in &mut specs {
+        s.workload.small_tasks = true;
+    }
+    specs
+}
+
+#[test]
+fn every_builtin_parses_roundtrips_and_completes_a_run() {
+    for spec in smoke_specs() {
+        spec.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        // JSON round-trip: value-level and text-level.
+        let j = spec.to_json();
+        let back = ScenarioSpec::from_json(&j)
+            .unwrap_or_else(|e| panic!("{}: from_json: {e}", spec.name));
+        assert_eq!(back, spec, "{}: JSON value round-trip", spec.name);
+        let re = ScenarioSpec::parse(&j.pretty())
+            .unwrap_or_else(|e| panic!("{}: parse: {e}", spec.name));
+        assert_eq!(re, spec, "{}: JSON text round-trip", spec.name);
+
+        // A small run completes with sane metrics.
+        let seed = scenario::derive_run_seed(7, &spec.name, 0);
+        let out = scenario::run_scenario_once(&spec, seed, Some(16))
+            .unwrap_or_else(|e| panic!("{}: run: {e}", spec.name));
+        assert_eq!(out.jobs, 16, "{}", spec.name);
+        assert!(
+            out.average_unit_cost.is_finite() && out.average_unit_cost >= 0.0,
+            "{}: alpha {}",
+            spec.name,
+            out.average_unit_cost
+        );
+        let shares = out.so_share + out.spot_share + out.od_share;
+        assert!(
+            (shares - 1.0).abs() < 1e-6,
+            "{}: work shares sum to {shares}",
+            spec.name
+        );
+        assert!(
+            (0.0..=1.0).contains(&out.availability_hi),
+            "{}: availability {}",
+            spec.name,
+            out.availability_hi
+        );
+    }
+}
+
+/// The `repro scenarios` determinism contract: the report JSON is
+/// byte-identical for `--threads 1` vs `--threads 8` on the same seed.
+/// Property-tested across base seeds and scenario pairs.
+#[test]
+fn report_json_is_byte_identical_across_thread_counts() {
+    let all = smoke_specs();
+    for_all(PropConfig::cases(4).seed(0xD06), |rng| {
+        let base_seed = rng.next_u64() % 1000;
+        // A random pair of *distinct* worlds keeps each case fast while
+        // covering the registry across cases (duplicate names are a batch
+        // shape the CLI rejects).
+        let i = rng.below(all.len() as u64) as usize;
+        let j = (i + 1 + rng.below(all.len() as u64 - 1) as usize) % all.len();
+        let specs: Vec<ScenarioSpec> = vec![all[i].clone(), all[j].clone()];
+        let report_at = |threads: usize| {
+            let outs = scenario::run_batch(
+                &specs,
+                &BatchOptions {
+                    seeds: 2,
+                    base_seed,
+                    threads,
+                    jobs_override: Some(10),
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            Ok::<String, String>(scenario::report_json(&outs, 2, base_seed, true).pretty())
+        };
+        let single = report_at(1)?;
+        let eight = report_at(8)?;
+        if single != eight {
+            return Err(format!(
+                "report differs between --threads 1 and --threads 8 \
+                 (base_seed {base_seed}, scenarios {:?})",
+                specs.iter().map(|s| s.name.clone()).collect::<Vec<_>>()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// CSV replay end-to-end: loader → PriceTrace → coordinator → report, with
+/// the market structure visible in the learned outcome.
+#[test]
+fn replayed_trace_scenario_reflects_its_market() {
+    let mut spec = scenario::find("replayed-trace").unwrap();
+    spec.workload.small_tasks = true;
+    match &spec.market.regions[0].price {
+        PriceSpec::Replay(r) => assert!(r.csv.is_some()),
+        other => panic!("expected replay, got {other:?}"),
+    }
+    let out =
+        scenario::run_scenario_once(&spec, scenario::derive_run_seed(7, &spec.name, 0), Some(40))
+            .unwrap();
+    // The sample trace's calm baseline sits near 0.15 with surge regimes:
+    // the top grid bid (0.3) wins most slots, the bottom one (0.18) only
+    // the calm dips.
+    assert!(
+        out.availability_hi > 0.5,
+        "availability at bid 0.3: {}",
+        out.availability_hi
+    );
+    assert!(
+        out.availability_hi >= out.availability_lo,
+        "bid monotonicity: {} < {}",
+        out.availability_hi,
+        out.availability_lo
+    );
+    // Learned cost must beat pure on-demand (alpha = 1.0) on this market.
+    assert!(
+        out.average_unit_cost < 1.0,
+        "alpha {}",
+        out.average_unit_cost
+    );
+    assert!(out.spot_share > 0.0);
+}
+
+#[test]
+fn multi_region_arbitrage_never_loses_to_home_region() {
+    let mut arb = scenario::find("multi-region-arbitrage").unwrap();
+    arb.workload.small_tasks = true;
+    // Same world restricted to the home region only.
+    let mut home = arb.clone();
+    home.name = "multi-region-home-only".into();
+    home.market.regions.truncate(1);
+    home.market.arbitrage = false;
+
+    let seed = scenario::derive_run_seed(13, "arb-vs-home", 0);
+    let a = scenario::run_scenario_once(&arb, seed, Some(60)).unwrap();
+    let h = scenario::run_scenario_once(&home, seed, Some(60)).unwrap();
+    // The composite price is a slot-wise lower bound of the home region's,
+    // so availability at any bid can only improve.
+    assert!(
+        a.availability_hi >= h.availability_hi - 1e-9,
+        "arbitrage availability {} vs home {}",
+        a.availability_hi,
+        h.availability_hi
+    );
+}
