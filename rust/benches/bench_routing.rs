@@ -1,0 +1,128 @@
+//! Routing/`MarketView` benches: what the multi-offer generalization costs
+//! on the sweep hot path and in the routed executor.
+//!
+//! The headline numbers CI tracks (`BENCH_routing.json`):
+//!
+//! * `sweep/one_offer_legacy` vs `sweep/one_offer_view` — the degenerate
+//!   case's overhead (must be ~zero: the one-offer multi path is the same
+//!   context evaluated through one more call frame);
+//! * `sweep/four_offer_view` — the real multi-offer sweep (4x the prefix
+//!   tables, 4x the closed-form walks, one min);
+//! * routed vs legacy chain execution on a one-offer view, and a
+//!   capacity-contended four-offer spillover execution.
+
+use dagcloud::learning::counterfactual::{CfSpec, CounterfactualJob, S_MAX};
+use dagcloud::learning::sweep;
+use dagcloud::market::{CapacityLedger, MarketOffer, MarketView, PriceTrace, SpotModel};
+use dagcloud::policy::dealloc::dealloc;
+use dagcloud::policy::policy_set_full;
+use dagcloud::policy::routing::RoutingPolicy;
+use dagcloud::sim::executor::{execute_chain, execute_chain_routed, ChainStrategy, SelfOwnedRule};
+use dagcloud::util::bench::Bencher;
+use dagcloud::workload::{transform, ChainJob, GeneratorConfig, JobStream};
+
+fn offer(region: &str, trace: PriceTrace, od: f64, capacity: Option<u32>) -> MarketOffer {
+    MarketOffer {
+        region: region.into(),
+        instance_type: "default".into(),
+        od_price: od,
+        trace,
+        capacity,
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_routing ==\n");
+
+    let mut stream = JobStream::new(GeneratorConfig::paper_default(), 5);
+    let chains: Vec<ChainJob> = stream.take_jobs(32).iter().map(transform).collect();
+    let horizon = chains.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+    let traces: Vec<PriceTrace> = (0..4)
+        .map(|k| PriceTrace::generate(SpotModel::paper_default(), horizon, 17 + k))
+        .collect();
+
+    // --- counterfactual sweep: one offer, legacy vs view path ---
+    let grid: Vec<CfSpec> = policy_set_full().into_iter().map(CfSpec::Proposed).collect();
+    let job = &chains[0];
+    let (prices, dt) = traces[0].resample_window(job.arrival, job.deadline, S_MAX);
+    let navail = vec![0.0; prices.len()];
+    let cf_home = CounterfactualJob::from_job(job, prices, dt, navail.clone(), 1.0);
+    b.bench_throughput("sweep/one_offer_legacy_175pol", 175.0, "evals/s", || {
+        sweep::eval_spec_costs(&cf_home, &grid, false)
+    });
+    let one_offer = vec![cf_home.clone()];
+    b.bench_throughput("sweep/one_offer_view_175pol", 175.0, "evals/s", || {
+        sweep::eval_spec_costs_multi(&one_offer, &grid, false)
+    });
+    let four_offers: Vec<CounterfactualJob> = (0..4)
+        .map(|k| {
+            let (p, d) = traces[k].resample_window(job.arrival, job.deadline, S_MAX);
+            CounterfactualJob::from_job(job, p, d, navail.clone(), 1.0 + 0.05 * k as f64)
+        })
+        .collect();
+    b.bench_throughput("sweep/four_offer_view_175pol", 175.0, "evals/s", || {
+        sweep::eval_spec_costs_multi(&four_offers, &grid, false)
+    });
+
+    // --- routed executor: degenerate overhead, then real contention ---
+    let windows: Vec<_> = chains.iter().map(|j| dealloc(j, 1.0 / 1.6)).collect();
+    let single_view = MarketView::single(traces[0].clone(), 1.0);
+    let mut k = 0;
+    b.bench_throughput("exec/legacy_chain", 1.0, "jobs/s", || {
+        k = (k + 1) % chains.len();
+        execute_chain(
+            &chains[k],
+            &ChainStrategy::Windows {
+                windows: &windows[k],
+                selfowned: SelfOwnedRule::None,
+                bid: 0.24,
+            },
+            &traces[0],
+            None,
+            1.0,
+        )
+    });
+    let mut k2 = 0;
+    b.bench_throughput("exec/routed_chain_one_offer", 1.0, "jobs/s", || {
+        k2 = (k2 + 1) % chains.len();
+        let mut cap = CapacityLedger::new(&single_view, horizon);
+        execute_chain_routed(
+            &chains[k2],
+            &windows[k2],
+            SelfOwnedRule::None,
+            0.24,
+            &single_view,
+            &mut cap,
+            RoutingPolicy::Home,
+            None,
+        )
+    });
+    let four_view = MarketView::new(vec![
+        offer("a", traces[0].clone(), 1.0, Some(24)),
+        offer("b", traces[1].clone(), 1.05, Some(24)),
+        offer("c", traces[2].clone(), 1.1, Some(48)),
+        offer("d", traces[3].clone(), 1.2, None),
+    ])
+    .expect("valid view");
+    b.bench_throughput("exec/routed_batch_four_offer_spillover", chains.len() as f64, "jobs/s", || {
+        // One shared ledger across the batch: real contention.
+        let mut cap = CapacityLedger::new(&four_view, horizon);
+        for (j, w) in chains.iter().zip(&windows) {
+            execute_chain_routed(
+                j,
+                w,
+                SelfOwnedRule::None,
+                0.24,
+                &four_view,
+                &mut cap,
+                RoutingPolicy::Spillover,
+                None,
+            );
+        }
+    });
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_routing.json").ok();
+    println!("\nresults written to results/bench_routing.json");
+}

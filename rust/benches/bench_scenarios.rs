@@ -54,7 +54,7 @@ fn main() {
         jobs_override: Some(16),
     };
     b.bench_throughput(
-        "scenario/registry_batch_8worlds_16jobs",
+        "scenario/registry_batch_16jobs",
         specs.len() as f64,
         "worlds/s",
         || scenario::run_batch(&specs, &batch).expect("batch"),

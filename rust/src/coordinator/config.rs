@@ -1,8 +1,29 @@
 //! Experiment configuration: JSON-loadable with §6.1 defaults.
+//!
+//! Since the `MarketView` refactor a config describes a whole market view:
+//! the legacy `(spot_model, od_price)` pair is the *home offer*, and
+//! `extra_offers` (empty by default) adds named `(region, instance_type)`
+//! offers with their own price processes, on-demand prices, and spot
+//! capacities. The default config is the one-offer degenerate case, so
+//! pre-existing runs are bit-identical.
 
-use crate::market::SpotModel;
+use anyhow::{ensure, Result};
+
+use crate::market::{MarketOffer, MarketView, PriceTrace, SpotModel};
+use crate::policy::routing::RoutingPolicy;
 use crate::util::json::Json;
 use crate::workload::GeneratorConfig;
+
+/// One additional market offer beyond the home `(spot_model, od_price)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OfferConfig {
+    pub region: String,
+    pub instance_type: String,
+    pub od_price: f64,
+    pub spot_model: SpotModel,
+    /// Per-slot concurrent spot-instance cap; `None` = infinite.
+    pub capacity: Option<u32>,
+}
 
 /// Full configuration of a simulation / experiment run.
 #[derive(Debug, Clone)]
@@ -15,10 +36,17 @@ pub struct Config {
     pub job_type: u8,
     /// Self-owned pool capacities to sweep (x₁ values).
     pub pool_sizes: Vec<u64>,
-    /// Spot price model.
+    /// Spot price model of the home offer.
     pub spot_model: SpotModel,
-    /// On-demand price (normalized to 1 in the paper).
+    /// On-demand price of the home offer (normalized to 1 in the paper).
     pub od_price: f64,
+    /// Per-slot spot capacity of the home offer; `None` = infinite (the
+    /// legacy assumption).
+    pub home_capacity: Option<u32>,
+    /// Additional market offers; empty = the legacy single market.
+    pub extra_offers: Vec<OfferConfig>,
+    /// How tasks are routed across offers (ignored for the single market).
+    pub routing: RoutingPolicy,
     /// Worker threads for policy sweeps (0 = all cores).
     pub threads: usize,
     /// Use the PJRT kernel for counterfactual sweeps when artifacts exist.
@@ -34,6 +62,9 @@ impl Default for Config {
             pool_sizes: vec![300, 600, 900, 1200],
             spot_model: SpotModel::paper_default(),
             od_price: crate::market::ON_DEMAND_PRICE,
+            home_capacity: None,
+            extra_offers: Vec::new(),
+            routing: RoutingPolicy::Home,
             threads: 0,
             use_pjrt: true,
         }
@@ -56,6 +87,39 @@ impl Config {
         }
     }
 
+    /// Whether this config describes more than the degenerate home market.
+    pub fn is_multi_market(&self) -> bool {
+        !self.extra_offers.is_empty()
+    }
+
+    /// Realize the configured market view: `home_trace` is the home
+    /// offer's already-generated trace (the legacy `workload()` trace, so
+    /// degenerate runs stay bit-identical); extra offers generate their
+    /// own traces from per-offer derived seeds.
+    pub fn realize_view(&self, home_trace: PriceTrace, horizon: f64) -> Result<MarketView> {
+        let mut offers = vec![MarketOffer {
+            region: "home".into(),
+            instance_type: "default".into(),
+            od_price: self.od_price,
+            trace: home_trace,
+            capacity: self.home_capacity,
+        }];
+        for (k, o) in self.extra_offers.iter().enumerate() {
+            offers.push(MarketOffer {
+                region: o.region.clone(),
+                instance_type: o.instance_type.clone(),
+                od_price: o.od_price,
+                trace: PriceTrace::generate(
+                    o.spot_model.clone(),
+                    horizon,
+                    self.seed ^ 0x7ACE ^ ((k as u64 + 1) << 8),
+                ),
+                capacity: o.capacity,
+            });
+        }
+        MarketView::new(offers)
+    }
+
     /// Load from a JSON file; missing keys keep defaults.
     pub fn from_json_file(path: &str) -> anyhow::Result<Config> {
         let text = std::fs::read_to_string(path)?;
@@ -64,13 +128,37 @@ impl Config {
     }
 
     /// Missing keys keep defaults; malformed values (e.g. an unknown spot
-    /// model kind) are errors rather than silent fallbacks.
+    /// model kind, a zero offer capacity, an unknown routing policy) are
+    /// errors rather than silent fallbacks.
     pub fn from_json(j: &Json) -> anyhow::Result<Config> {
         let d = Config::default();
         let spot_model = match j.get("spot_model") {
             Some(sm) => crate::market::spot_model_from_json(sm)?,
             None => d.spot_model.clone(),
         };
+        spot_model
+            .validate()
+            .map_err(|e| anyhow::anyhow!("config: spot_model: {e}"))?;
+        let routing = match j.get("routing") {
+            Some(Json::Str(s)) => RoutingPolicy::from_str(s)?,
+            Some(_) => anyhow::bail!("config: 'routing' must be a string"),
+            None => d.routing,
+        };
+        let mut extra_offers = Vec::new();
+        if let Some(arr) = j.get("offers").and_then(Json::as_arr) {
+            for (k, oj) in arr.iter().enumerate() {
+                extra_offers.push(offer_from_json(oj, k)?);
+            }
+        }
+        // Dead-weight guard: home routing never places work on the extra
+        // offers, so a config combining the two is a mistake, not a world.
+        ensure!(
+            extra_offers.is_empty() || routing != RoutingPolicy::Home,
+            "config: 'offers' requires routing cheapest|spillover (home routing \
+             ignores every offer but the first)"
+        );
+        let home_capacity =
+            crate::market::view::capacity_from_json(j, "home_capacity", "config")?;
         Ok(Config {
             jobs: j.opt_u64("jobs", d.jobs as u64) as usize,
             seed: j.opt_u64("seed", d.seed),
@@ -82,6 +170,9 @@ impl Config {
                 .unwrap_or(d.pool_sizes),
             spot_model,
             od_price: j.opt_f64("od_price", d.od_price),
+            home_capacity,
+            extra_offers,
+            routing,
             threads: j.opt_u64("threads", d.threads as u64) as usize,
             use_pjrt: j.opt_bool("use_pjrt", d.use_pjrt),
         })
@@ -91,15 +182,49 @@ impl Config {
     /// (synthetic single-model markets only — regime/replay/composite
     /// markets realize their trace in the scenario runner and hand it to
     /// `tola_run` directly), home on-demand price, the scenario's pool and
-    /// job count, and the dominant job type.
-    pub fn from_scenario(spec: &crate::scenario::ScenarioSpec) -> Config {
+    /// job count, the dominant job type — and, for routed all-synthetic
+    /// worlds, the remaining offers plus the routing policy, so
+    /// `repro run --scenario` drives real multi-offer routing end to end.
+    ///
+    /// Errors when a routed (cheapest/spillover) world has a
+    /// replay/regime-priced offer: dropping it would silently simulate a
+    /// different market than named — run those through the scenario
+    /// runner instead.
+    pub fn from_scenario(spec: &crate::scenario::ScenarioSpec) -> Result<Config> {
         let d = Config::default();
-        let home = spec.market.regions.first();
-        let spot_model = match home.map(|r| &r.price) {
+        let offers = spec.market.flattened_offers();
+        let home = offers.first();
+        let spot_model = match home.map(|o| &o.price) {
             Some(crate::scenario::PriceSpec::Model(m)) => m.clone(),
             _ => d.spot_model.clone(),
         };
-        Config {
+        let extra_offers = match spec.market.routing.runtime() {
+            // Arbitrage collapses pre-run and Home ignores the rest: both
+            // stay the single home market here.
+            None | Some(RoutingPolicy::Home) => Vec::new(),
+            Some(_) => offers
+                .iter()
+                .skip(1)
+                .map(|o| match &o.price {
+                    crate::scenario::PriceSpec::Model(m) => Ok(OfferConfig {
+                        region: o.region.clone(),
+                        instance_type: o.instance_type.clone(),
+                        od_price: o.od_price,
+                        spot_model: m.clone(),
+                        capacity: o.capacity,
+                    }),
+                    _ => Err(anyhow::anyhow!(
+                        "scenario '{}': routed offer '{}/{}' uses a replay/regime \
+                         price process; `repro scenarios --scenario {}` realizes it",
+                        spec.name,
+                        o.region,
+                        o.instance_type,
+                        spec.name
+                    )),
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(Config {
             jobs: spec.jobs,
             job_type: spec
                 .workload
@@ -109,9 +234,12 @@ impl Config {
                 .unwrap_or(d.job_type),
             pool_sizes: vec![spec.pool_capacity as u64],
             spot_model,
-            od_price: home.map(|r| r.od_price).unwrap_or(d.od_price),
+            od_price: home.map(|o| o.od_price).unwrap_or(d.od_price),
+            home_capacity: home.and_then(|o| o.capacity),
+            extra_offers,
+            routing: spec.market.routing.runtime().unwrap_or(RoutingPolicy::Home),
             ..d
-        }
+        })
     }
 
     pub fn to_json(&self) -> Json {
@@ -128,8 +256,62 @@ impl Config {
             .set("od_price", Json::Num(self.od_price))
             .set("threads", Json::Num(self.threads as f64))
             .set("use_pjrt", Json::Bool(self.use_pjrt));
+        if !self.extra_offers.is_empty() || self.routing != RoutingPolicy::Home {
+            j.set("routing", Json::Str(self.routing.as_str().into()));
+        }
+        if let Some(c) = self.home_capacity {
+            j.set("home_capacity", Json::Num(c as f64));
+        }
+        if !self.extra_offers.is_empty() {
+            j.set(
+                "offers",
+                Json::Arr(self.extra_offers.iter().map(offer_to_json).collect()),
+            );
+        }
         j
     }
+}
+
+fn offer_to_json(o: &OfferConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("region", Json::Str(o.region.clone()))
+        .set("instance_type", Json::Str(o.instance_type.clone()))
+        .set("od_price", Json::Num(o.od_price))
+        .set(
+            "spot_model",
+            crate::market::spot_model_to_json(&o.spot_model),
+        );
+    if let Some(c) = o.capacity {
+        j.set("capacity", Json::Num(c as f64));
+    }
+    j
+}
+
+fn offer_from_json(j: &Json, index: usize) -> Result<OfferConfig> {
+    let sm = j
+        .get("spot_model")
+        .ok_or_else(|| anyhow::anyhow!("config offer {index}: missing 'spot_model'"))?;
+    let spot_model = crate::market::spot_model_from_json(sm)?;
+    spot_model
+        .validate()
+        .map_err(|e| anyhow::anyhow!("config offer {index}: {e}"))?;
+    let capacity = crate::market::view::capacity_from_json(
+        j,
+        "capacity",
+        &format!("config offer {index}"),
+    )?;
+    let od_price = j.opt_f64("od_price", crate::market::ON_DEMAND_PRICE);
+    ensure!(
+        od_price > 0.0,
+        "config offer {index}: od_price must be positive"
+    );
+    Ok(OfferConfig {
+        region: j.opt_str("region", &format!("region-{index}")).to_string(),
+        instance_type: j.opt_str("instance_type", "default").to_string(),
+        od_price,
+        spot_model,
+        capacity,
+    })
 }
 
 #[cfg(test)]
@@ -143,6 +325,8 @@ mod tests {
         assert_eq!(c.pool_sizes, vec![300, 600, 900, 1200]);
         assert_eq!(c.spot_model, SpotModel::paper_default());
         assert_eq!(c.od_price, 1.0);
+        assert!(!c.is_multi_market());
+        assert_eq!(c.routing, RoutingPolicy::Home);
     }
 
     #[test]
@@ -157,10 +341,15 @@ mod tests {
                 availability: 0.8,
             },
             od_price: 2.0,
+            home_capacity: None,
+            extra_offers: Vec::new(),
+            routing: RoutingPolicy::Home,
             threads: 2,
             use_pjrt: false,
         };
         let j = c.to_json();
+        assert!(j.get("offers").is_none(), "degenerate config stays legacy-shaped");
+        assert!(j.get("routing").is_none());
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c2.jobs, 123);
         assert_eq!(c2.job_type, 3);
@@ -170,15 +359,96 @@ mod tests {
     }
 
     #[test]
+    fn multi_offer_json_roundtrip() {
+        let c = Config {
+            extra_offers: vec![OfferConfig {
+                region: "eu-west".into(),
+                instance_type: "m5".into(),
+                od_price: 1.2,
+                spot_model: SpotModel::paper_default(),
+                capacity: Some(64),
+            }],
+            routing: RoutingPolicy::CheapestFeasible,
+            ..Config::default()
+        };
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.extra_offers, c.extra_offers);
+        assert_eq!(c2.routing, RoutingPolicy::CheapestFeasible);
+        assert!(c2.is_multi_market());
+    }
+
+    #[test]
+    fn bad_offer_and_routing_are_errors() {
+        let j = Json::parse(r#"{"routing": "teleport"}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        let j = Json::parse(
+            r#"{"offers": [{"spot_model": {"kind": "bounded_exp"}, "capacity": 0}]}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_err());
+        let j = Json::parse(r#"{"offers": [{"capacity": 4}]}"#).unwrap();
+        assert!(Config::from_json(&j).is_err(), "offer without spot_model");
+        let j = Json::parse(
+            r#"{"offers": [{"spot_model": {"kind": "bounded_exp", "mean": 0.2, "lo": 0.9, "hi": 0.5}}]}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_err(), "degenerate model params");
+        // The *home* spot model gets the same scrutiny as the offers.
+        let j = Json::parse(
+            r#"{"spot_model": {"kind": "bounded_exp", "mean": 0.2, "lo": 0.9, "hi": 0.5}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_err(), "degenerate home model params");
+        // Offers with (default) home routing are dead weight: reject.
+        let j = Json::parse(
+            r#"{"offers": [{"spot_model": {"kind": "bounded_exp", "mean": 0.13, "lo": 0.12, "hi": 1.0}}]}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("routing"), "{err}");
+    }
+
+    #[test]
+    fn realize_view_home_first_with_extras() {
+        let c = Config {
+            extra_offers: vec![OfferConfig {
+                region: "b".into(),
+                instance_type: "default".into(),
+                od_price: 1.1,
+                spot_model: SpotModel::paper_default(),
+                capacity: Some(32),
+            }],
+            routing: RoutingPolicy::Spillover,
+            ..Config::default()
+        };
+        let home = PriceTrace::generate(c.spot_model.clone(), 10.0, c.seed ^ 0x7ACE);
+        let v = c.realize_view(home, 10.0).unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.home().region, "home");
+        assert_eq!(v.offers()[1].capacity, Some(32));
+        assert!(!v.is_degenerate());
+    }
+
+    #[test]
     fn from_scenario_maps_home_region() {
         let mut spec = crate::scenario::registry::find("pool-heavy").unwrap();
         spec.jobs = 99;
-        let c = Config::from_scenario(&spec);
+        let c = Config::from_scenario(&spec).unwrap();
         assert_eq!(c.jobs, 99);
         assert_eq!(c.pool_sizes, vec![600]);
         assert_eq!(c.job_type, 2);
         assert_eq!(c.spot_model, SpotModel::paper_default());
         assert_eq!(c.od_price, 1.0);
+        assert!(!c.is_multi_market());
+    }
+
+    #[test]
+    fn from_scenario_maps_routed_offers() {
+        let spec = crate::scenario::registry::find("capacity-crunch").unwrap();
+        let c = Config::from_scenario(&spec).unwrap();
+        assert!(c.is_multi_market(), "routed world should carry its offers");
+        assert_ne!(c.routing, RoutingPolicy::Home);
     }
 
     #[test]
@@ -187,5 +457,6 @@ mod tests {
         let c = Config::from_json(&j).unwrap();
         assert_eq!(c.jobs, 50);
         assert_eq!(c.seed, Config::default().seed);
+        assert!(c.extra_offers.is_empty());
     }
 }

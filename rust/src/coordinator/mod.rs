@@ -14,7 +14,7 @@ pub mod config;
 pub mod exec_pool;
 pub mod metrics;
 
-pub use config::Config;
+pub use config::{Config, OfferConfig};
 pub use exec_pool::parallel_map;
 pub use metrics::Metrics;
 
@@ -24,13 +24,17 @@ use std::collections::BinaryHeap;
 use crate::learning::counterfactual::{CfSpec, CounterfactualJob, S_MAX};
 use crate::learning::regret::RegretTracker;
 use crate::learning::{sweep, Tola};
-use crate::market::{CostLedger, InstanceKind, PriceTrace, SelfOwnedPool, SLOTS_PER_UNIT};
+use crate::market::{
+    CapacityLedger, CostLedger, InstanceKind, MarketView, PriceTrace, SelfOwnedPool,
+    SLOTS_PER_UNIT,
+};
 use crate::policy::baselines::even_windows;
 use crate::policy::dealloc::{dealloc, windows_to_deadlines};
+use crate::policy::routing::RoutingPolicy;
 use crate::policy::selfowned::{naive_allocation, rule12};
 use crate::policy::Policy;
 use crate::runtime::ArtifactRuntime;
-use crate::sim::executor::execute_task;
+use crate::sim::executor::{execute_task, execute_task_routed};
 use crate::util::rng::Pcg32;
 use crate::workload::ChainJob;
 
@@ -63,6 +67,9 @@ pub struct LearningReport {
     /// Trajectory of the max weight (sampled every `weight_sample_every`
     /// updates) — for the convergence figure.
     pub weight_trajectory: Vec<f64>,
+    /// Cloud work (spot + on-demand) charged per market offer, in view
+    /// order; a single element for legacy single-trace runs.
+    pub offer_work: Vec<f64>,
 }
 
 #[derive(Debug, PartialEq)]
@@ -102,12 +109,10 @@ struct JobState {
     done: bool,
 }
 
-/// Run TOLA (Algorithm 4) over a stream of chain jobs.
-///
-/// `specs` is the policy set (the paper's `P` or `P'`); each arriving job
-/// samples one spec from the current weights, is executed for real under
-/// it (with pool contention), and at its deadline the counterfactual sweep
-/// updates the weights.
+/// Run TOLA (Algorithm 4) over a stream of chain jobs against the legacy
+/// single-trace market — the one-offer degenerate case of
+/// [`tola_run_view`], kept as the convenience entry point every
+/// pre-existing caller uses.
 pub fn tola_run(
     jobs: &[ChainJob],
     specs: &[CfSpec],
@@ -117,9 +122,53 @@ pub fn tola_run(
     seed: u64,
     evaluator: &Evaluator,
 ) -> LearningReport {
+    let view = MarketView::single(trace.clone(), od_price);
+    tola_run_view(
+        jobs,
+        specs,
+        &view,
+        RoutingPolicy::Home,
+        pool_capacity,
+        seed,
+        evaluator,
+    )
+}
+
+/// Run TOLA (Algorithm 4) over a stream of chain jobs against a
+/// capacity-aware [`MarketView`].
+///
+/// `specs` is the policy set (the paper's `P` or `P'`); each arriving job
+/// samples one spec from the current weights, is executed for real under
+/// it (with pool contention, and — for multi-offer views — per-task
+/// routing against remaining offer capacity), and at its deadline the
+/// counterfactual sweep updates the weights.
+///
+/// A degenerate view (one offer, infinite capacity) takes the exact legacy
+/// code path: direct `execute_task` against the home trace and the
+/// single-offer sweep engine, so results are bit-identical to the
+/// pre-`MarketView` single-trace implementation. Multi-offer or
+/// finite-capacity views route every task ([`crate::policy::routing`]) and
+/// sweep counterfactuals per offer (cheapest offer wins; capacity-free by
+/// construction — see [`sweep::MultiSweepContext`]). The PJRT kernel only
+/// accelerates the degenerate case; routed runs always use the native
+/// engine.
+pub fn tola_run_view(
+    jobs: &[ChainJob],
+    specs: &[CfSpec],
+    view: &MarketView,
+    routing: RoutingPolicy,
+    pool_capacity: u32,
+    seed: u64,
+    evaluator: &Evaluator,
+) -> LearningReport {
     assert!(!jobs.is_empty() && !specs.is_empty());
+    let degenerate = view.is_degenerate();
+    let home = view.home();
+    let (trace, od_price) = (&home.trace, home.od_price);
     let horizon = jobs.iter().map(|j| j.deadline).fold(1.0, f64::max);
     let d_max = jobs.iter().map(|j| j.window()).fold(1.0, f64::max);
+    let mut capacity = CapacityLedger::new(view, horizon + d_max + 1.0);
+    let mut offer_work = vec![0.0f64; view.len()];
     let mut pool = (pool_capacity > 0)
         .then(|| SelfOwnedPool::new(pool_capacity, horizon, 1.0 / SLOTS_PER_UNIT as f64));
     let has_pool = pool.is_some();
@@ -206,16 +255,34 @@ pub fn tola_run(
                         (spec_bid(&s), r)
                     }
                 };
-                let out = execute_task(
-                    task.size,
-                    task.parallelism,
-                    start,
-                    deadline,
-                    r,
-                    bid,
-                    trace,
-                    od_price,
-                );
+                let (offer, out) = if degenerate {
+                    (
+                        0,
+                        execute_task(
+                            task.size,
+                            task.parallelism,
+                            start,
+                            deadline,
+                            r,
+                            bid,
+                            trace,
+                            od_price,
+                        ),
+                    )
+                } else {
+                    execute_task_routed(
+                        task.size,
+                        task.parallelism,
+                        start,
+                        deadline,
+                        r,
+                        bid,
+                        view,
+                        &mut capacity,
+                        routing,
+                    )
+                };
+                offer_work[offer] += out.spot_work + out.od_work;
                 ledger.charge(InstanceKind::SelfOwned, 1.0, out.so_work, 0.0);
                 ledger.charge(InstanceKind::Spot, 1.0, out.spot_work, 0.0);
                 ledger.cost_spot += out.spot_cost;
@@ -247,32 +314,96 @@ pub fn tola_run(
                         batch.push((t2, j2));
                     }
                 }
-                let cfs: Vec<CounterfactualJob> = batch
-                    .iter()
-                    .map(|&(_, ji)| {
-                        let job = &jobs[ji];
-                        let (prices, dt) =
-                            trace.resample_window(job.arrival, job.deadline, S_MAX);
-                        let navail: Vec<f64> = match &pool {
-                            Some(pl) => (0..prices.len())
-                                .map(|k| {
-                                    let t0 = job.arrival + k as f64 * dt;
-                                    pl.available_at(t0.min(horizon)) as f64
-                                })
-                                .collect(),
-                            None => vec![0.0; prices.len()],
-                        };
-                        CounterfactualJob::from_job(job, prices, dt, navail, od_price)
-                    })
-                    .collect();
-                let all_costs: Vec<Vec<f64>> = match evaluator {
-                    Evaluator::Native { threads } if cfs.len() > 1 => {
-                        sweep::sweep_batch_costs(&cfs, specs, has_pool, *threads)
-                    }
-                    _ => cfs
+                let all_costs: Vec<Vec<f64>> = if degenerate {
+                    let cfs: Vec<CounterfactualJob> = batch
                         .iter()
-                        .map(|cf| evaluate_specs(cf, specs, has_pool, evaluator))
-                        .collect(),
+                        .map(|&(_, ji)| {
+                            let job = &jobs[ji];
+                            let (prices, dt) =
+                                trace.resample_window(job.arrival, job.deadline, S_MAX);
+                            let navail: Vec<f64> = match &pool {
+                                Some(pl) => (0..prices.len())
+                                    .map(|k| {
+                                        let t0 = job.arrival + k as f64 * dt;
+                                        pl.available_at(t0.min(horizon)) as f64
+                                    })
+                                    .collect(),
+                                None => vec![0.0; prices.len()],
+                            };
+                            CounterfactualJob::from_job(job, prices, dt, navail, od_price)
+                        })
+                        .collect();
+                    match evaluator {
+                        Evaluator::Native { threads } if cfs.len() > 1 => {
+                            sweep::sweep_batch_costs(&cfs, specs, has_pool, *threads)
+                        }
+                        _ => cfs
+                            .iter()
+                            .map(|cf| evaluate_specs(cf, specs, has_pool, evaluator))
+                            .collect(),
+                    }
+                } else {
+                    // Multi-offer retirement: marshal the job once per
+                    // *reachable* offer (that offer's resampled prices and
+                    // od price — the window geometry and pool availability
+                    // are offer-independent) and let the multi-sweep pick
+                    // the cheapest offer per spec. Under Home routing only
+                    // offer 0 is ever placeable, so the counterfactual
+                    // market is restricted to it — sweeping unreachable
+                    // offers would score specs against costs no policy can
+                    // realize. Native engine only: the AOT kernel's fixed
+                    // shape is single-market.
+                    let sweep_offers = match routing {
+                        RoutingPolicy::Home => &view.offers()[..1],
+                        _ => view.offers(),
+                    };
+                    let cfs: Vec<Vec<CounterfactualJob>> = batch
+                        .iter()
+                        .map(|&(_, ji)| {
+                            let job = &jobs[ji];
+                            let (home_prices, dt) =
+                                trace.resample_window(job.arrival, job.deadline, S_MAX);
+                            let navail: Vec<f64> = match &pool {
+                                Some(pl) => (0..home_prices.len())
+                                    .map(|k| {
+                                        let t0 = job.arrival + k as f64 * dt;
+                                        pl.available_at(t0.min(horizon)) as f64
+                                    })
+                                    .collect(),
+                                None => vec![0.0; home_prices.len()],
+                            };
+                            sweep_offers
+                                .iter()
+                                .enumerate()
+                                .map(|(k, o)| {
+                                    let prices = if k == 0 {
+                                        home_prices.clone()
+                                    } else {
+                                        o.trace
+                                            .resample_window(job.arrival, job.deadline, S_MAX)
+                                            .0
+                                    };
+                                    CounterfactualJob::from_job(
+                                        job,
+                                        prices,
+                                        dt,
+                                        navail.clone(),
+                                        o.od_price,
+                                    )
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    let threads = match evaluator {
+                        Evaluator::Native { threads } => *threads,
+                        // The kernel can't serve multi-offer sweeps; fall
+                        // back to a fully-parallel native sweep rather
+                        // than silently single-threading the hot path.
+                        Evaluator::Pjrt(_) => std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1),
+                    };
+                    sweep::sweep_batch_costs_multi(&cfs, specs, has_pool, threads)
                 };
                 for (&(t, ji), costs) in batch.iter().zip(&all_costs) {
                     let realized = states[ji].as_ref().map(|s| s.cost).unwrap_or(0.0);
@@ -311,6 +442,7 @@ pub fn tola_run(
         regret_bound: regret.bound(0.05),
         pool_utilization,
         weight_trajectory,
+        offer_work,
         ledger,
     }
 }
@@ -454,6 +586,162 @@ mod tests {
         );
         assert!(rep.ledger.work_selfowned > 0.0);
         assert!(rep.pool_utilization > 0.0);
+    }
+
+    #[test]
+    fn one_offer_view_matches_legacy_entry_point_bitwise() {
+        // The acceptance contract: a one-offer infinite-capacity view run
+        // is the legacy single-trace run — same weights, same costs, under
+        // every routing policy (routing makes no decision with one offer).
+        let (jobs, trace) = setup(50, 11);
+        let specs: Vec<CfSpec> = policy_set_spot_only()
+            .into_iter()
+            .map(CfSpec::Proposed)
+            .collect();
+        let legacy = tola_run(
+            &jobs,
+            &specs,
+            &trace,
+            120,
+            1.0,
+            46,
+            &Evaluator::Native { threads: 2 },
+        );
+        for routing in [
+            RoutingPolicy::Home,
+            RoutingPolicy::CheapestFeasible,
+            RoutingPolicy::Spillover,
+        ] {
+            let view = MarketView::single(trace.clone(), 1.0);
+            let rep = tola_run_view(
+                &jobs,
+                &specs,
+                &view,
+                routing,
+                120,
+                46,
+                &Evaluator::Native { threads: 2 },
+            );
+            assert_eq!(rep.average_unit_cost, legacy.average_unit_cost, "{routing:?}");
+            assert_eq!(rep.average_regret, legacy.average_regret, "{routing:?}");
+            assert_eq!(rep.final_weights, legacy.final_weights, "{routing:?}");
+            assert_eq!(rep.best_policy, legacy.best_policy, "{routing:?}");
+            assert_eq!(rep.offer_work.len(), 1);
+            assert!(
+                (rep.offer_work[0]
+                    - (rep.ledger.work_spot + rep.ledger.work_ondemand))
+                    .abs()
+                    < 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn routed_view_runs_and_spreads_work_across_offers() {
+        use crate::market::MarketOffer;
+        let (jobs, trace) = setup(80, 13);
+        let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+        // Home offer: capped tightly so contention forces routing; second
+        // offer: always-available flat cheap market with pricier OD.
+        let n = (horizon * crate::market::SLOTS_PER_UNIT as f64) as usize + 2;
+        let flat = PriceTrace::from_prices(
+            vec![0.25; n],
+            1.0 / crate::market::SLOTS_PER_UNIT as f64,
+        );
+        let view = MarketView::new(vec![
+            MarketOffer {
+                region: "primary".into(),
+                instance_type: "default".into(),
+                od_price: 1.0,
+                trace,
+                capacity: Some(8),
+            },
+            MarketOffer {
+                region: "overflow".into(),
+                instance_type: "default".into(),
+                od_price: 1.2,
+                trace: flat,
+                capacity: None,
+            },
+        ])
+        .unwrap();
+        let specs: Vec<CfSpec> = policy_set_spot_only()
+            .into_iter()
+            .map(CfSpec::Proposed)
+            .collect();
+        for routing in [RoutingPolicy::CheapestFeasible, RoutingPolicy::Spillover] {
+            let rep = tola_run_view(
+                &jobs,
+                &specs,
+                &view,
+                routing,
+                0,
+                47,
+                &Evaluator::Native { threads: 2 },
+            );
+            assert_eq!(rep.jobs, 80);
+            assert_eq!(rep.offer_work.len(), 2);
+            let total: f64 = rep.offer_work.iter().sum();
+            assert!(
+                (total - (rep.ledger.work_spot + rep.ledger.work_ondemand)).abs()
+                    < 1e-6 * total.max(1.0),
+                "{routing:?}: offer work {total}"
+            );
+            assert!(
+                rep.offer_work[1] > 0.0,
+                "{routing:?}: the 8-unit primary cap never spilled over"
+            );
+            assert!(rep.average_unit_cost > 0.0 && rep.average_unit_cost.is_finite());
+        }
+    }
+
+    #[test]
+    fn routed_run_is_reproducible() {
+        use crate::market::MarketOffer;
+        let (jobs, trace) = setup(40, 17);
+        let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+        let n = (horizon * crate::market::SLOTS_PER_UNIT as f64) as usize + 2;
+        let alt = PriceTrace::from_prices(
+            (0..n).map(|i| if i % 3 == 0 { 0.15 } else { 0.7 }).collect(),
+            1.0 / crate::market::SLOTS_PER_UNIT as f64,
+        );
+        let view = MarketView::new(vec![
+            MarketOffer {
+                region: "a".into(),
+                instance_type: "default".into(),
+                od_price: 1.0,
+                trace,
+                capacity: Some(16),
+            },
+            MarketOffer {
+                region: "b".into(),
+                instance_type: "default".into(),
+                od_price: 1.1,
+                trace: alt,
+                capacity: None,
+            },
+        ])
+        .unwrap();
+        let specs: Vec<CfSpec> = policy_set_spot_only()
+            .into_iter()
+            .map(CfSpec::Proposed)
+            .collect();
+        let run = |threads| {
+            tola_run_view(
+                &jobs,
+                &specs,
+                &view,
+                RoutingPolicy::CheapestFeasible,
+                0,
+                48,
+                &Evaluator::Native { threads },
+            )
+        };
+        let a = run(1);
+        let b = run(8);
+        assert_eq!(a.average_unit_cost, b.average_unit_cost);
+        assert_eq!(a.final_weights, b.final_weights);
+        assert_eq!(a.offer_work, b.offer_work);
     }
 
     #[test]

@@ -39,6 +39,7 @@ OPTIONS
   --config FILE   load a JSON config (CLI flags override)
 
 SCENARIO OPTIONS (`repro scenarios`; `--scenario` also configures `run`)
+  --list          print the registry worlds with one-line descriptions
   --scenario LIST comma-separated registry names (default: all built-ins)
   --seeds N       replicates per scenario (default 3)
   --spec FILE     append a custom scenario spec (JSON) to the batch
@@ -48,7 +49,7 @@ SCENARIO OPTIONS (`repro scenarios`; `--scenario` also configures `run`)
 
 /// CLI dispatch for `repro`.
 pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["no-pjrt", "verbose", "smoke"]);
+    let args = Args::parse(argv, &["no-pjrt", "verbose", "smoke", "list"]);
     let cmd = args
         .positional
         .first()
@@ -78,6 +79,7 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
         "table6" => tables::run_table6(&cfg, &out_dir)?,
         "figures" => figures::run_all(&out_dir)?,
         "sweep" => perf::run_sweep_bench(&cfg, &out_dir)?,
+        "scenarios" if args.flag("list") => scenarios::list_scenarios(),
         "scenarios" => {
             let names = args.get("scenario").map(|s| {
                 s.split(',')
@@ -107,20 +109,31 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
                             crate::scenario::builtin_names().join(", ")
                         )
                     })?;
-                    // `run` executes against a single synthetic price model;
-                    // refuse worlds that need the full scenario runner so we
-                    // never silently simulate a different market than named.
-                    let single_model = spec.market.regions.len() == 1
-                        && matches!(
+                    // `run` executes against synthetic price models only
+                    // (single market, or routed multi-offer with every
+                    // offer synthetic); refuse worlds that need the full
+                    // scenario runner (replay/regime traces, arbitrage
+                    // composites) so we never silently simulate a
+                    // different market than named.
+                    let offers = spec.market.flattened_offers();
+                    let all_models = offers
+                        .iter()
+                        .all(|o| matches!(o.price, crate::scenario::PriceSpec::Model(_)));
+                    let runnable = match spec.market.routing {
+                        crate::scenario::RoutingSpec::Home => matches!(
                             spec.market.regions[0].price,
                             crate::scenario::PriceSpec::Model(_)
-                        );
+                        ),
+                        crate::scenario::RoutingSpec::Arbitrage => false,
+                        crate::scenario::RoutingSpec::Cheapest
+                        | crate::scenario::RoutingSpec::Spillover => all_models,
+                    };
                     anyhow::ensure!(
-                        single_model,
-                        "scenario '{name}' uses a replayed/regime/multi-region \
+                        runnable,
+                        "scenario '{name}' uses a replayed/regime/arbitrage \
                          market; use `repro scenarios --scenario {name}` instead"
                     );
-                    let mut sc = crate::coordinator::Config::from_scenario(&spec);
+                    let mut sc = crate::coordinator::Config::from_scenario(&spec)?;
                     // Explicit CLI flags beat the scenario's values; seed /
                     // threads / pjrt are run-level and always carry over.
                     sc.jobs = args.get_u64("jobs", sc.jobs as u64)? as usize;

@@ -26,6 +26,20 @@ pub struct ScenarioCliOptions {
 /// Jobs per run under `--smoke` (unless `--jobs` says otherwise).
 const SMOKE_JOBS: usize = 48;
 
+/// `repro scenarios --list`: print every registry world with a one-line
+/// description (the only other way to discover world names is reading
+/// `registry.rs`).
+pub fn list_scenarios() {
+    let worlds = scenario::builtins();
+    println!("{} built-in scenario worlds:\n", worlds.len());
+    for s in worlds {
+        // Descriptions are wrapped in the source; collapse to one line.
+        let one_line = s.description.split_whitespace().collect::<Vec<_>>().join(" ");
+        println!("  {:<24} {one_line}", s.name);
+    }
+    println!("\nrun one with: repro scenarios --scenario NAME  (or repro run --scenario NAME)");
+}
+
 pub fn run_scenarios(cfg: &Config, opts: &ScenarioCliOptions, out_dir: &str) -> Result<()> {
     let mut specs: Vec<ScenarioSpec> = match &opts.names {
         None => scenario::builtins(),

@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{parallel_map, tola_run, Config, Evaluator};
+use crate::coordinator::{parallel_map, tola_run, tola_run_view, Config, Evaluator};
 use crate::learning::counterfactual::CfSpec;
 use crate::market::PriceTrace;
 use crate::policy::{benchmark_bids, policy_set_full, policy_set_spot_only, Policy};
@@ -324,7 +324,12 @@ pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
         cfg.pool_sizes.first().copied().unwrap_or(0)
     );
     let threads = cfg.effective_threads();
-    let (rt, pjrt_active) = make_evaluator(cfg);
+    // Multi-market configs (extra offers and/or a home capacity) realize
+    // the full view and route; the default config is the degenerate
+    // one-offer case and stays on the bit-identical legacy path. The PJRT
+    // kernel only serves single-market sweeps, so routed runs go native.
+    let multi = cfg.is_multi_market() || cfg.home_capacity.is_some();
+    let (rt, pjrt_active) = if multi { (None, false) } else { make_evaluator(cfg) };
     println!("   evaluator: {}", if pjrt_active { "PJRT kernel" } else { "native" });
     let (jobs, trace) = workload(cfg, cfg.job_type);
     let pool = cfg.pool_sizes.first().copied().unwrap_or(0) as u32;
@@ -337,8 +342,23 @@ pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
         Some(rt) => Evaluator::Pjrt(rt),
         None => Evaluator::Native { threads },
     };
+    let view = if multi {
+        let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+        let v = cfg.realize_view(trace.clone(), horizon)?;
+        println!(
+            "   market: {} offers, routing {}",
+            v.len(),
+            cfg.routing.as_str()
+        );
+        Some(v)
+    } else {
+        None
+    };
     let t0 = std::time::Instant::now();
-    let rep = tola_run(&jobs, &specs, &trace, pool, cfg.od_price, cfg.seed, &evaluator);
+    let rep = match &view {
+        Some(v) => tola_run_view(&jobs, &specs, v, cfg.routing, pool, cfg.seed, &evaluator),
+        None => tola_run(&jobs, &specs, &trace, pool, cfg.od_price, cfg.seed, &evaluator),
+    };
     let dt = t0.elapsed().as_secs_f64();
 
     let best = match specs[rep.best_policy] {
@@ -370,6 +390,21 @@ pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
         .set("weight_trajectory", Json::from_f64_slice(&rep.weight_trajectory))
         .set("elapsed_secs", Json::Num(dt))
         .set("jobs_per_sec", Json::Num(rep.jobs as f64 / dt));
+    // Only routed runs add the market keys: degenerate tola_run.json stays
+    // byte-identical to the pre-MarketView schema.
+    if let Some(v) = &view {
+        j.set("routing", Json::Str(cfg.routing.as_str().into()));
+        let cloud: f64 = rep.offer_work.iter().sum::<f64>().max(1e-12);
+        let mut shares = Json::obj();
+        for (o, &w) in v.offers().iter().zip(&rep.offer_work) {
+            shares.set(&o.label(), Json::Num(w / cloud));
+        }
+        j.set("offer_shares", shares);
+        println!("  offer shares:");
+        for (o, &w) in v.offers().iter().zip(&rep.offer_work) {
+            println!("    {:<28} {:>5.1}%", o.label(), 100.0 * w / cloud);
+        }
+    }
     std::fs::write(format!("{out_dir}/tola_run.json"), j.pretty())?;
     Ok(())
 }

@@ -353,6 +353,31 @@ pub fn eval_grid_native(
     super::sweep::eval_grid(job, policies, has_pool)
 }
 
+/// The naive multi-offer oracle: evaluate one spec independently on each
+/// offer's marshalled job (that offer's prices and on-demand price) and
+/// take the cheapest, ties to the lowest offer index — the specification
+/// [`super::sweep::MultiSweepContext`] must match. Counterfactuals are
+/// capacity-free: one job's "what if" cannot replay the whole market's
+/// contention, so the counterfactual router is pure price arbitrage at
+/// job granularity.
+pub fn eval_spec_multi_naive(
+    offers: &[CounterfactualJob],
+    spec: &CfSpec,
+    has_pool: bool,
+) -> (usize, (f64, f64, f64, f64)) {
+    assert!(!offers.is_empty(), "multi-offer oracle over zero offers");
+    let mut best_k = 0usize;
+    let mut best = offers[0].eval_spec(spec, has_pool);
+    for (k, cf) in offers.iter().enumerate().skip(1) {
+        let q = cf.eval_spec(spec, has_pool);
+        if q.0 < best.0 {
+            best = q;
+            best_k = k;
+        }
+    }
+    (best_k, best)
+}
+
 /// The naive per-policy slot walk over the whole grid — the specification
 /// the sweep engine (and the AOT kernel) must match. Kept for tests and
 /// the `bench_hotpath` before/after comparison.

@@ -426,6 +426,78 @@ pub fn sweep_batch_costs(
     })
 }
 
+/// The multi-offer sweep: one structure-sharing [`SweepContext`] per market
+/// offer, sharing nothing *across* offers (each offer has its own realized
+/// prices) but everything *within* one — per-offer bid prefix tables,
+/// window plans, and allocation plans are all built at most once per
+/// distinct value, exactly as in the single-offer engine.
+///
+/// A counterfactual is capacity-free by construction (one job's "what if"
+/// cannot replay the whole market's contention), so the counterfactual
+/// router places each (job, policy) pair on its cheapest offer: the cost
+/// is the min over offers, ties to the lowest index. A one-element offer
+/// set is the degenerate case and returns the single context's numbers
+/// unchanged — the same floating-point ops in the same order.
+pub struct MultiSweepContext<'a> {
+    ctxs: Vec<SweepContext<'a>>,
+}
+
+impl<'a> MultiSweepContext<'a> {
+    /// `offers` holds the same retired job marshalled once per market
+    /// offer (that offer's resampled prices and on-demand price).
+    pub fn new(offers: &'a [CounterfactualJob], has_pool: bool) -> MultiSweepContext<'a> {
+        assert!(!offers.is_empty(), "multi-sweep over zero offers");
+        MultiSweepContext {
+            ctxs: offers
+                .iter()
+                .map(|cf| SweepContext::new(cf, has_pool))
+                .collect(),
+        }
+    }
+
+    /// Evaluate one spec: `(offer, (cost, spot_work, od_work, so_work))`
+    /// of the cheapest offer. Matches [`eval_spec_multi_naive`]
+    /// (min over per-offer naive walks) to the single-offer tolerance.
+    ///
+    /// [`eval_spec_multi_naive`]: super::counterfactual::eval_spec_multi_naive
+    pub fn eval_spec(&mut self, spec: &CfSpec) -> (usize, (f64, f64, f64, f64)) {
+        let mut best_k = 0usize;
+        let mut best = self.ctxs[0].eval_spec(spec);
+        for k in 1..self.ctxs.len() {
+            let q = self.ctxs[k].eval_spec(spec);
+            if q.0 < best.0 {
+                best = q;
+                best_k = k;
+            }
+        }
+        (best_k, best)
+    }
+}
+
+/// Sweep one retired job (marshalled per offer) over strategy specs,
+/// costs only — the multi-offer counterpart of [`eval_spec_costs`].
+pub fn eval_spec_costs_multi(
+    offers: &[CounterfactualJob],
+    specs: &[CfSpec],
+    has_pool: bool,
+) -> Vec<f64> {
+    let mut ctx = MultiSweepContext::new(offers, has_pool);
+    specs.iter().map(|s| ctx.eval_spec(s).1 .0).collect()
+}
+
+/// Batched multi-offer retirement sweep: `jobs[i]` is one retired job
+/// marshalled once per offer. Results are in job order.
+pub fn sweep_batch_costs_multi(
+    jobs: &[Vec<CounterfactualJob>],
+    specs: &[CfSpec],
+    has_pool: bool,
+    threads: usize,
+) -> Vec<Vec<f64>> {
+    crate::coordinator::exec_pool::parallel_map(jobs.len(), threads, |i| {
+        eval_spec_costs_multi(&jobs[i], specs, has_pool)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -542,6 +614,108 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Re-marshal one job with fresh prices/od, as one market offer would.
+    fn offer_variant(rng: &mut Pcg32, cf: &CounterfactualJob, od: f64) -> CounterfactualJob {
+        let prices: Vec<f64> = (0..cf.prices.len())
+            .map(|_| {
+                if rng.chance(0.1) {
+                    f64::INFINITY
+                } else {
+                    rng.uniform(0.12, 1.0)
+                }
+            })
+            .collect();
+        CounterfactualJob {
+            prices,
+            od_price: od,
+            ..cf.clone()
+        }
+    }
+
+    #[test]
+    fn prop_multi_sweep_matches_min_over_offer_oracles() {
+        use super::super::counterfactual::eval_spec_multi_naive;
+        // The multi-offer generalization: per-offer prefix tables, cheapest
+        // offer wins. Pinned against the min-over-naive-walks oracle across
+        // random jobs, offer counts, and the full spec zoo.
+        for_all(Config::cases(40).seed(2028), |rng| {
+            let base = random_cf(rng, rng.chance(0.3));
+            let n_offers = rng.range_inclusive(1, 4) as usize;
+            let offers: Vec<CounterfactualJob> = (0..n_offers)
+                .map(|k| {
+                    if k == 0 {
+                        base.clone()
+                    } else {
+                        offer_variant(rng, &base, rng.uniform(0.8, 1.4))
+                    }
+                })
+                .collect();
+            let has_pool = base.navail.iter().any(|&v| v > 0.0);
+            let mut ctx = MultiSweepContext::new(&offers, has_pool);
+            let mut specs: Vec<CfSpec> =
+                policy_set_full().into_iter().map(CfSpec::Proposed).collect();
+            specs.extend(benchmark_bids().into_iter().map(|bid| CfSpec::EvenNaive { bid }));
+            for spec in &specs {
+                let (ko, oracle) = eval_spec_multi_naive(&offers, spec, has_pool);
+                let (ks, fast) = ctx.eval_spec(spec);
+                // The min cost must always agree.
+                if (fast.0 - oracle.0).abs() > 1e-9 * oracle.0.abs().max(1.0) {
+                    return Err(format!(
+                        "min cost {} (offer {ks}) vs oracle {} (offer {ko})",
+                        fast.0, oracle.0
+                    ));
+                }
+                // The full work breakdown is only comparable when both
+                // picked the same offer; a near-tie may legitimately
+                // resolve differently between the 1e-12-close paths.
+                if ko == ks {
+                    assert_quad_close(oracle, fast)?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn one_offer_multi_sweep_is_bit_identical_to_single() {
+        // The degenerate case must not just be close — it must be the same
+        // floating-point results, or one-offer view runs would drift from
+        // the legacy single-trace path.
+        let mut rng = Pcg32::new(79);
+        for _ in 0..10 {
+            let cf = random_cf(&mut rng, false);
+            let has_pool = cf.navail.iter().any(|&v| v > 0.0);
+            let offers = vec![cf.clone()];
+            let specs: Vec<CfSpec> = policy_set_full()
+                .into_iter()
+                .map(CfSpec::Proposed)
+                .collect();
+            let single = eval_spec_costs(&cf, &specs, has_pool);
+            let multi = eval_spec_costs_multi(&offers, &specs, has_pool);
+            assert_eq!(single, multi);
+        }
+    }
+
+    #[test]
+    fn multi_batch_matches_per_job_path() {
+        let mut rng = Pcg32::new(80);
+        let jobs: Vec<Vec<CounterfactualJob>> = (0..5)
+            .map(|_| {
+                let base = random_cf(&mut rng, false);
+                let extra = offer_variant(&mut rng, &base, 1.1);
+                vec![base, extra]
+            })
+            .collect();
+        let specs: Vec<CfSpec> = benchmark_bids()
+            .into_iter()
+            .map(|bid| CfSpec::EvenNaive { bid })
+            .collect();
+        let batched = sweep_batch_costs_multi(&jobs, &specs, false, 3);
+        for (job, row) in jobs.iter().zip(&batched) {
+            assert_eq!(row, &eval_spec_costs_multi(job, &specs, false));
+        }
     }
 
     #[test]

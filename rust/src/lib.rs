@@ -7,8 +7,10 @@
 //! The crate implements the paper's full stack:
 //!
 //! * a **cloud market substrate** ([`market`]): spot-price processes,
-//!   per-second on-demand billing, and a self-owned instance pool with
-//!   `N(t)` / `N(t1,t2)` queries;
+//!   per-second on-demand billing, a self-owned instance pool with
+//!   `N(t)` / `N(t1,t2)` queries, and a capacity-aware multi-offer
+//!   [`market::MarketView`] over named `(region, instance_type)` pairs
+//!   (the paper's single market is its one-offer degenerate case);
 //! * a **workload substrate** ([`workload`]): DAG jobs, the §6.1 synthetic
 //!   generator, and the Nagarajan et al. DAG→chain transformation;
 //! * the **paper's policies** ([`policy`]): the optimal deadline allocation

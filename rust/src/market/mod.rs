@@ -13,6 +13,11 @@
 //! * **self-owned** instances — a finite pool of `r` instances at zero
 //!   marginal cost with `N(t)` idle at time `t` and
 //!   `N(t1,t2) = min_{t∈[t1,t2]} N(t)` (Table 1).
+//!
+//! Beyond the paper's single market, [`view`] lifts all of the above into a
+//! capacity-aware multi-offer [`MarketView`] over named
+//! `(region, instance_type)` pairs; the single-trace world is its one-offer
+//! degenerate case.
 
 pub mod spot;
 pub mod trace;
@@ -20,12 +25,14 @@ pub mod pricing;
 pub mod pool;
 pub mod replay;
 pub mod multi;
+pub mod view;
 
 pub use multi::RegionMarket;
-pub use pool::SelfOwnedPool;
+pub use pool::{RangeAddMinTree, SelfOwnedPool};
 pub use pricing::{CostLedger, InstanceKind};
 pub use spot::{spot_model_from_json, spot_model_to_json, SpotModel, SpotPriceProcess};
 pub use trace::{AvailabilityIndex, PriceTrace};
+pub use view::{CapacityLedger, MarketOffer, MarketView};
 
 /// Number of price slots per unit of time (§6.1: "each unit of time is
 /// divided into 12 equal time slots").

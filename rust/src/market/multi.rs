@@ -8,12 +8,18 @@
 //! regime schedule, CSV replay) is the scenario layer's business.
 //!
 //! The *arbitrage composite* models a tenant free to place each slot of
-//! work in whichever region is currently cheapest: its trace is the
-//! slot-wise minimum across regions and its on-demand price the region
-//! minimum. This folds a multi-market world into the single-trace interface
-//! every existing consumer (executor, sweep engine, coordinator) speaks.
+//! work in whichever region is currently cheapest. Since the capacity-aware
+//! [`MarketView`](super::view::MarketView) refactor, the composite is just
+//! the degenerate all-infinite-capacity view collapsed slot-wise
+//! ([`MarketView::arbitrage_collapse`](super::view::MarketView::arbitrage_collapse));
+//! the free-standing function below is kept as the region-level entry
+//! point. Worlds that model finite capacity or real placement route through
+//! the view instead ([`crate::policy::routing`]).
+
+use anyhow::Result;
 
 use super::trace::PriceTrace;
+use super::view::MarketView;
 
 /// One region's realized market: a price trace plus its on-demand price.
 #[derive(Debug, Clone)]
@@ -28,35 +34,10 @@ pub struct RegionMarket {
 /// All traces must share the slot grid; the composite spans the longest
 /// region (shorter regions persist their final price via the trace's
 /// clamped slot lookup). Returns the composite trace and the minimum
-/// on-demand price.
-pub fn arbitrage_composite(regions: &[RegionMarket]) -> (PriceTrace, f64) {
-    assert!(!regions.is_empty(), "arbitrage over zero regions");
-    let slot_len = regions[0].trace.slot_len();
-    for r in regions {
-        assert!(
-            (r.trace.slot_len() - slot_len).abs() < 1e-12,
-            "region '{}' is on a different slot grid",
-            r.name
-        );
-    }
-    let n = regions
-        .iter()
-        .map(|r| r.trace.num_slots())
-        .max()
-        .expect("non-empty");
-    let mut prices = Vec::with_capacity(n);
-    for s in 0..n {
-        let p = regions
-            .iter()
-            .map(|r| r.trace.price_of_slot(s))
-            .fold(f64::INFINITY, f64::min);
-        prices.push(p);
-    }
-    let od = regions
-        .iter()
-        .map(|r| r.od_price)
-        .fold(f64::INFINITY, f64::min);
-    (PriceTrace::from_prices(prices, slot_len), od)
+/// on-demand price, or an error for an empty region set / mismatched slot
+/// grids (surfaced through scenario spec validation rather than a panic).
+pub fn arbitrage_composite(regions: &[RegionMarket]) -> Result<(PriceTrace, f64)> {
+    MarketView::from_regions(regions)?.arbitrage_collapse()
 }
 
 #[cfg(test)]
@@ -75,7 +56,7 @@ mod tests {
     fn composite_takes_slotwise_min() {
         let a = region("a", 1.0, vec![0.2, 0.9, 0.3]);
         let b = region("b", 1.2, vec![0.5, 0.1, 0.4]);
-        let (t, od) = arbitrage_composite(&[a, b]);
+        let (t, od) = arbitrage_composite(&[a, b]).unwrap();
         assert_eq!(t.num_slots(), 3);
         assert_eq!(t.price_of_slot(0), 0.2);
         assert_eq!(t.price_of_slot(1), 0.1);
@@ -87,7 +68,7 @@ mod tests {
     fn shorter_region_persists_last_price() {
         let a = region("a", 1.0, vec![0.6, 0.6, 0.6, 0.6]);
         let b = region("b", 1.0, vec![0.2]);
-        let (t, _) = arbitrage_composite(&[a, b]);
+        let (t, _) = arbitrage_composite(&[a, b]).unwrap();
         assert_eq!(t.num_slots(), 4);
         // b's single 0.2 price clamps forward over the whole span.
         for s in 0..4 {
@@ -98,21 +79,28 @@ mod tests {
     #[test]
     fn single_region_composite_is_identity() {
         let a = region("a", 1.1, vec![0.3, 0.4]);
-        let (t, od) = arbitrage_composite(std::slice::from_ref(&a));
+        let (t, od) = arbitrage_composite(std::slice::from_ref(&a)).unwrap();
         assert_eq!(t.num_slots(), 2);
         assert_eq!(t.price_of_slot(1), 0.4);
         assert_eq!(od, 1.1);
     }
 
     #[test]
-    #[should_panic]
-    fn mismatched_grids_panic() {
+    fn empty_region_set_is_an_error_not_a_panic() {
+        let err = arbitrage_composite(&[]).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_grids_error_names_the_region() {
         let a = region("a", 1.0, vec![0.3]);
         let b = RegionMarket {
             name: "b".into(),
             od_price: 1.0,
             trace: PriceTrace::from_prices(vec![0.3], 0.5),
         };
-        arbitrage_composite(&[a, b]);
+        let err = arbitrage_composite(&[a, b]).unwrap_err().to_string();
+        assert!(err.contains('b'), "{err}");
+        assert!(err.contains("slot grid"), "{err}");
     }
 }

@@ -51,6 +51,49 @@ impl SpotModel {
     pub fn bid_dependent(&self) -> bool {
         !matches!(self, SpotModel::GoogleFixed { .. })
     }
+
+    /// Sanity-check the process parameters so a malformed model fails with
+    /// an error instead of a downstream panic (bounded-exp rejection
+    /// sampling asserts `lo < hi`) or a degenerate run. Callers that know a
+    /// path (scenario, region, offer) wrap the message with context.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            SpotModel::BoundedExp { mean, lo, hi } => {
+                anyhow::ensure!(
+                    *mean > 0.0 && *lo >= 0.0 && lo < hi,
+                    "bounded_exp needs mean > 0 and 0 <= lo < hi (mean={mean}, lo={lo}, hi={hi})"
+                );
+            }
+            SpotModel::Markov {
+                calm_mean,
+                surge_mean,
+                lo,
+                hi,
+                p_calm_to_surge,
+                p_surge_to_calm,
+            } => {
+                anyhow::ensure!(
+                    *calm_mean > 0.0 && *surge_mean > 0.0 && *lo >= 0.0 && lo < hi,
+                    "markov needs positive means and 0 <= lo < hi"
+                );
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(p_calm_to_surge)
+                        && (0.0..=1.0).contains(p_surge_to_calm),
+                    "markov transition probabilities must lie in [0, 1]"
+                );
+            }
+            SpotModel::GoogleFixed {
+                price,
+                availability,
+            } => {
+                anyhow::ensure!(
+                    *price > 0.0 && (0.0..=1.0).contains(availability),
+                    "google needs price > 0 and availability in [0, 1]"
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Serialize a [`SpotModel`] (the shape `coordinator::Config` files and

@@ -1,0 +1,441 @@
+//! The capacity-aware market view: slot-indexed offers over named
+//! `(region, instance_type)` pairs.
+//!
+//! The paper's model (§3.1) has one spot market; real tenants face several
+//! regions and instance types with independent price processes, different
+//! on-demand list prices, and — crucially — *finite capacity*. A
+//! [`MarketView`] is the seam every price consumer speaks:
+//!
+//! * each [`MarketOffer`] carries its own [`PriceTrace`], on-demand price,
+//!   and an optional per-slot cap on concurrently placed spot instances;
+//! * the legacy single-trace world is the one-offer degenerate case
+//!   ([`MarketView::single`]) and reduces bit-identically to the old
+//!   `(PriceTrace, od_price)` interface;
+//! * the old arbitrage composite is re-expressed as a view whose capacities
+//!   are all infinite, collapsed slot-wise ([`MarketView::arbitrage_collapse`]);
+//! * remaining capacity is tracked by a [`CapacityLedger`] (one lazy
+//!   range-add/range-min segment tree lane per finite-capacity offer, the
+//!   same structure the self-owned pool uses), which routing policies
+//!   ([`crate::policy::routing`]) consult before placing a task.
+//!
+//! On-demand instances stay elastic (the cloud's contract): capacity caps
+//! bound *spot* placement only, so a market-wide capacity exhaustion
+//! degrades a task to all-on-demand rather than stalling it.
+
+use anyhow::{bail, ensure, Result};
+
+use super::multi::RegionMarket;
+use super::pool::RangeAddMinTree;
+use super::trace::PriceTrace;
+
+/// One placeable offer: a named `(region, instance_type)` pair with its own
+/// realized price trace, on-demand price, and spot capacity.
+#[derive(Debug, Clone)]
+pub struct MarketOffer {
+    pub region: String,
+    pub instance_type: String,
+    pub od_price: f64,
+    pub trace: PriceTrace,
+    /// Per-slot cap on concurrently placed spot instances; `None` = infinite
+    /// (the paper's §3.1 assumption).
+    pub capacity: Option<u32>,
+}
+
+impl MarketOffer {
+    /// Canonical `region/instance_type` label (report keys, error paths).
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.region, self.instance_type)
+    }
+}
+
+/// A slot-indexed view over one or more market offers. Immutable once
+/// built; mutable capacity state lives in [`CapacityLedger`].
+#[derive(Debug, Clone)]
+pub struct MarketView {
+    offers: Vec<MarketOffer>,
+}
+
+impl MarketView {
+    /// Validate and build a view. Errors (never silent defaults): empty
+    /// offer set, mismatched slot grids, non-positive on-demand prices,
+    /// zero capacities, duplicate `region/instance_type` labels.
+    pub fn new(offers: Vec<MarketOffer>) -> Result<MarketView> {
+        ensure!(!offers.is_empty(), "market view over an empty offer set");
+        let slot_len = offers[0].trace.slot_len();
+        for (i, o) in offers.iter().enumerate() {
+            ensure!(
+                (o.trace.slot_len() - slot_len).abs() < 1e-12,
+                "offer '{}' is on a different slot grid ({} vs {})",
+                o.label(),
+                o.trace.slot_len(),
+                slot_len
+            );
+            ensure!(
+                o.od_price > 0.0,
+                "offer '{}': od_price must be positive",
+                o.label()
+            );
+            ensure!(
+                o.capacity != Some(0),
+                "offer '{}': capacity 0 is never placeable (omit it for infinite)",
+                o.label()
+            );
+            ensure!(
+                !offers[..i].iter().any(|p| p.label() == o.label()),
+                "duplicate offer label '{}'",
+                o.label()
+            );
+        }
+        Ok(MarketView { offers })
+    }
+
+    /// The legacy single-trace market as a one-offer, infinite-capacity
+    /// view — the degenerate case every pre-existing run reduces to.
+    pub fn single(trace: PriceTrace, od_price: f64) -> MarketView {
+        MarketView {
+            offers: vec![MarketOffer {
+                region: "default".into(),
+                instance_type: "default".into(),
+                od_price,
+                trace,
+                capacity: None,
+            }],
+        }
+    }
+
+    /// A view over whole regions (one offer per region, infinite capacity)
+    /// — the shape the old `market::multi` layer produced.
+    pub fn from_regions(regions: &[RegionMarket]) -> Result<MarketView> {
+        MarketView::new(
+            regions
+                .iter()
+                .map(|r| MarketOffer {
+                    region: r.name.clone(),
+                    instance_type: "default".into(),
+                    od_price: r.od_price,
+                    trace: r.trace.clone(),
+                    capacity: None,
+                })
+                .collect(),
+        )
+    }
+
+    pub fn offers(&self) -> &[MarketOffer] {
+        &self.offers
+    }
+
+    pub fn len(&self) -> usize {
+        self.offers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offers.is_empty()
+    }
+
+    /// The home offer (index 0) — what legacy single-market paths run on.
+    pub fn home(&self) -> &MarketOffer {
+        &self.offers[0]
+    }
+
+    pub fn slot_len(&self) -> f64 {
+        self.offers[0].trace.slot_len()
+    }
+
+    /// One offer, infinite capacity: the view reduces exactly to the legacy
+    /// `(PriceTrace, od_price)` interface and consumers may take the
+    /// bit-identical single-trace fast path.
+    pub fn is_degenerate(&self) -> bool {
+        self.offers.len() == 1 && self.offers[0].capacity.is_none()
+    }
+
+    pub fn has_finite_capacity(&self) -> bool {
+        self.offers.iter().any(|o| o.capacity.is_some())
+    }
+
+    /// Offer index with the lowest on-demand price (ties → lowest index):
+    /// where capacity-exhausted work degrades to all-on-demand.
+    pub fn cheapest_od(&self) -> usize {
+        let mut best = 0usize;
+        for k in 1..self.offers.len() {
+            if self.offers[k].od_price < self.offers[best].od_price {
+                best = k;
+            }
+        }
+        best
+    }
+
+    /// The old arbitrage composite, re-expressed on the view: slot-wise
+    /// cheapest price across offers, minimum on-demand price. Only valid
+    /// when every capacity is infinite — the composite models *free
+    /// placement*, which a finite cap contradicts.
+    pub fn arbitrage_collapse(&self) -> Result<(PriceTrace, f64)> {
+        if let Some(o) = self.offers.iter().find(|o| o.capacity.is_some()) {
+            bail!(
+                "arbitrage composite assumes infinite capacity, but offer '{}' \
+                 is capped at {} (use cheapest/spillover routing instead)",
+                o.label(),
+                o.capacity.unwrap()
+            );
+        }
+        let slot_len = self.slot_len();
+        let n = self
+            .offers
+            .iter()
+            .map(|o| o.trace.num_slots())
+            .max()
+            .expect("validated non-empty");
+        let mut prices = Vec::with_capacity(n);
+        for s in 0..n {
+            let p = self
+                .offers
+                .iter()
+                .map(|o| o.trace.price_of_slot(s))
+                .fold(f64::INFINITY, f64::min);
+            prices.push(p);
+        }
+        let od = self
+            .offers
+            .iter()
+            .map(|o| o.od_price)
+            .fold(f64::INFINITY, f64::min);
+        Ok((PriceTrace::from_prices(prices, slot_len), od))
+    }
+}
+
+/// Parse an optional per-slot capacity key from JSON: absent = infinite;
+/// present must be a positive integer that fits `u32` (0 or junk is an
+/// error, never a silent infinite). Shared by coordinator configs and
+/// scenario specs so the bounds and message cannot drift.
+pub fn capacity_from_json(
+    j: &crate::util::json::Json,
+    key: &str,
+    ctx: &str,
+) -> Result<Option<u32>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(c) => {
+            let c = c.as_u64().ok_or_else(|| {
+                anyhow::anyhow!("{ctx}: {key} must be a non-negative integer")
+            })?;
+            ensure!(
+                c > 0 && c <= u32::MAX as u64,
+                "{ctx}: {key} {c} outside 1..=u32::MAX (omit it for infinite)"
+            );
+            Ok(Some(c as u32))
+        }
+    }
+}
+
+/// Mutable remaining-capacity state for one simulation run: a segment-tree
+/// lane per finite-capacity offer (range add, range min — O(log S) per
+/// reservation/query), nothing at all for infinite offers.
+#[derive(Debug, Clone)]
+pub struct CapacityLedger {
+    lanes: Vec<Option<RangeAddMinTree>>,
+    slot_len: f64,
+}
+
+impl CapacityLedger {
+    pub fn new(view: &MarketView, horizon: f64) -> CapacityLedger {
+        let slot_len = view.slot_len();
+        let slots = (horizon / slot_len).ceil() as usize + 1;
+        CapacityLedger {
+            lanes: view
+                .offers()
+                .iter()
+                .map(|o| {
+                    o.capacity
+                        .map(|c| RangeAddMinTree::new(slots, c as i64))
+                })
+                .collect(),
+            slot_len,
+        }
+    }
+
+    /// Slot-quantized `[lo, hi)` range of a time window, using the same
+    /// convention as [`crate::market::SelfOwnedPool`]: a window ending
+    /// exactly on a slot boundary does not occupy the next slot; a
+    /// degenerate window reduces to its start slot.
+    fn slot_range(&self, n_slots: usize, t1: f64, t2: f64) -> (usize, usize) {
+        let lo = ((t1 / self.slot_len).floor() as usize).min(n_slots - 1);
+        if t2 <= t1 {
+            return (lo, lo + 1);
+        }
+        let hi_f = t2 / self.slot_len;
+        let hi = if hi_f.fract() == 0.0 {
+            hi_f as usize
+        } else {
+            hi_f.ceil() as usize
+        }
+        .max(lo + 1);
+        (lo, hi.min(n_slots))
+    }
+
+    /// Can `units` spot instances be placed on `offer` over `[t1, t2)`?
+    /// Infinite-capacity offers always say yes.
+    pub fn can_place(&self, offer: usize, units: u32, t1: f64, t2: f64) -> bool {
+        if units == 0 {
+            return true;
+        }
+        match &self.lanes[offer] {
+            None => true,
+            Some(tree) => {
+                let (lo, hi) = self.slot_range(tree.len(), t1, t2);
+                tree.min(lo, hi) >= units as i64
+            }
+        }
+    }
+
+    /// Remaining continuously-available units over `[t1, t2)`; `None` for
+    /// infinite offers.
+    pub fn remaining_over(&self, offer: usize, t1: f64, t2: f64) -> Option<u32> {
+        self.lanes[offer].as_ref().map(|tree| {
+            let (lo, hi) = self.slot_range(tree.len(), t1, t2);
+            tree.min(lo, hi).max(0) as u32
+        })
+    }
+
+    /// Reserve `units` on `offer` over `[t1, t2)`. Returns `false` (and
+    /// reserves nothing) when fewer than `units` are continuously free.
+    pub fn reserve(&mut self, offer: usize, units: u32, t1: f64, t2: f64) -> bool {
+        if units == 0 {
+            return true;
+        }
+        if !self.can_place(offer, units, t1, t2) {
+            return false;
+        }
+        let range = self.lanes[offer]
+            .as_ref()
+            .map(|tree| self.slot_range(tree.len(), t1, t2));
+        if let (Some(tree), Some((lo, hi))) = (&mut self.lanes[offer], range) {
+            tree.add(lo, hi, -(units as i64));
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn offer(region: &str, itype: &str, od: f64, prices: Vec<f64>, cap: Option<u32>) -> MarketOffer {
+        MarketOffer {
+            region: region.into(),
+            instance_type: itype.into(),
+            od_price: od,
+            trace: PriceTrace::from_prices(prices, 0.5),
+            capacity: cap,
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_views() {
+        assert!(MarketView::new(vec![]).is_err());
+        // zero capacity
+        assert!(
+            MarketView::new(vec![offer("a", "t", 1.0, vec![0.2], Some(0))]).is_err()
+        );
+        // duplicate labels
+        assert!(MarketView::new(vec![
+            offer("a", "t", 1.0, vec![0.2], None),
+            offer("a", "t", 1.2, vec![0.3], None),
+        ])
+        .is_err());
+        // mismatched slot grids
+        let mut b = offer("b", "t", 1.0, vec![0.2], None);
+        b.trace = PriceTrace::from_prices(vec![0.2], 0.25);
+        assert!(
+            MarketView::new(vec![offer("a", "t", 1.0, vec![0.2], None), b]).is_err()
+        );
+        // non-positive od price
+        assert!(
+            MarketView::new(vec![offer("a", "t", 0.0, vec![0.2], None)]).is_err()
+        );
+    }
+
+    #[test]
+    fn single_view_is_degenerate() {
+        let v = MarketView::single(PriceTrace::from_prices(vec![0.2, 0.3], 0.5), 1.0);
+        assert!(v.is_degenerate());
+        assert!(!v.has_finite_capacity());
+        assert_eq!(v.len(), 1);
+        assert_eq!(v.home().od_price, 1.0);
+        let mut cap = CapacityLedger::new(&v, 1.0);
+        assert!(cap.can_place(0, 1_000_000, 0.0, 1.0));
+        assert!(cap.reserve(0, 1_000_000, 0.0, 1.0));
+    }
+
+    #[test]
+    fn capped_view_is_not_degenerate() {
+        let v = MarketView::new(vec![offer("a", "t", 1.0, vec![0.2], Some(4))]).unwrap();
+        assert!(!v.is_degenerate());
+        assert!(v.has_finite_capacity());
+    }
+
+    #[test]
+    fn arbitrage_collapse_takes_slotwise_min() {
+        let v = MarketView::new(vec![
+            offer("a", "t", 1.0, vec![0.2, 0.9, 0.3], None),
+            offer("b", "t", 1.2, vec![0.5, 0.1, 0.4], None),
+        ])
+        .unwrap();
+        let (t, od) = v.arbitrage_collapse().unwrap();
+        assert_eq!(t.num_slots(), 3);
+        assert_eq!(t.price_of_slot(0), 0.2);
+        assert_eq!(t.price_of_slot(1), 0.1);
+        assert_eq!(t.price_of_slot(2), 0.3);
+        assert_eq!(od, 1.0);
+    }
+
+    #[test]
+    fn arbitrage_collapse_refuses_finite_capacity() {
+        let v = MarketView::new(vec![
+            offer("a", "t", 1.0, vec![0.2], None),
+            offer("b", "t", 1.0, vec![0.3], Some(8)),
+        ])
+        .unwrap();
+        let err = v.arbitrage_collapse().unwrap_err().to_string();
+        assert!(err.contains("b/t"), "{err}");
+    }
+
+    #[test]
+    fn cheapest_od_breaks_ties_low_index() {
+        let v = MarketView::new(vec![
+            offer("a", "t", 1.1, vec![0.2], None),
+            offer("b", "t", 0.9, vec![0.3], None),
+            offer("c", "t", 0.9, vec![0.4], None),
+        ])
+        .unwrap();
+        assert_eq!(v.cheapest_od(), 1);
+    }
+
+    #[test]
+    fn ledger_tracks_per_offer_capacity() {
+        let v = MarketView::new(vec![
+            offer("a", "t", 1.0, vec![0.2; 20], Some(5)),
+            offer("b", "t", 1.0, vec![0.3; 20], None),
+        ])
+        .unwrap();
+        let mut cap = CapacityLedger::new(&v, 10.0);
+        assert_eq!(cap.remaining_over(0, 0.0, 10.0), Some(5));
+        assert_eq!(cap.remaining_over(1, 0.0, 10.0), None);
+        assert!(cap.reserve(0, 3, 1.0, 4.0));
+        assert_eq!(cap.remaining_over(0, 1.0, 4.0), Some(2));
+        assert!(!cap.can_place(0, 3, 2.0, 3.0));
+        assert!(cap.can_place(0, 2, 2.0, 3.0));
+        // Outside the reserved window the full capacity remains.
+        assert_eq!(cap.remaining_over(0, 5.0, 9.0), Some(5));
+        // Offer b is never constrained.
+        assert!(cap.reserve(1, 10_000, 0.0, 10.0));
+    }
+
+    #[test]
+    fn ledger_boundary_excludes_end_slot() {
+        let v = MarketView::new(vec![offer("a", "t", 1.0, vec![0.2; 20], Some(1))]).unwrap();
+        let mut cap = CapacityLedger::new(&v, 10.0);
+        assert!(cap.reserve(0, 1, 0.0, 2.0));
+        // [0,2) ended exactly on a slot boundary: slot at t=2.0 is free.
+        assert!(cap.can_place(0, 1, 2.0, 3.0));
+        assert!(!cap.can_place(0, 1, 1.5, 2.5));
+    }
+}

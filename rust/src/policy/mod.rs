@@ -14,9 +14,11 @@ pub mod single_task;
 pub mod dealloc;
 pub mod selfowned;
 pub mod baselines;
+pub mod routing;
 
 pub use baselines::DeadlinePolicy;
 pub use dealloc::{dealloc, windows_to_deadlines};
+pub use routing::{route, RouteDecision, RoutingPolicy};
 
 /// A parametric policy `{β, β₀, b}`.
 #[derive(Debug, Clone, Copy, PartialEq)]

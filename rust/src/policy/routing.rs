@@ -1,0 +1,208 @@
+//! Offer routing: which `(region, instance_type)` offer a task is placed
+//! on when the market is a multi-offer [`MarketView`].
+//!
+//! Routing happens at *task granularity*: at a task's realized start the
+//! router picks one offer, the task reserves its spot units there for the
+//! whole window (the paper holds instances through the task deadline), and
+//! the executor charges that offer's realized prices. This is deliberately
+//! coarser than the old slot-wise arbitrage composite — the composite
+//! assumed free per-slot placement and infinite capacity, which is exactly
+//! the assumption the capacity-aware view removes. The composite survives
+//! as [`MarketView::arbitrage_collapse`] for worlds that want it.
+//!
+//! Capacity bounds *spot* placement only; on-demand stays elastic (§3.1's
+//! "always available" contract). When no offer can fit a task's spot
+//! units, the task degrades to all-on-demand on the cheapest-OD offer
+//! instead of stalling — deadlines are never sacrificed to a capacity
+//! wall.
+
+use anyhow::{bail, Result};
+
+use crate::market::{CapacityLedger, MarketView};
+
+/// How tasks are routed across a view's offers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingPolicy {
+    /// Always offer 0 — the legacy single-trace behavior (and the only
+    /// sensible choice for a degenerate view).
+    #[default]
+    Home,
+    /// The offer with the lowest current spot price among those with
+    /// enough remaining capacity for the task's units (ties → lowest
+    /// index).
+    CheapestFeasible,
+    /// Offers in declared order; the first with enough remaining capacity
+    /// wins. Models a primary region with overflow targets.
+    Spillover,
+}
+
+impl RoutingPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoutingPolicy::Home => "home",
+            RoutingPolicy::CheapestFeasible => "cheapest",
+            RoutingPolicy::Spillover => "spillover",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<RoutingPolicy> {
+        Ok(match s {
+            "home" => RoutingPolicy::Home,
+            "cheapest" => RoutingPolicy::CheapestFeasible,
+            "spillover" => RoutingPolicy::Spillover,
+            other => bail!("unknown routing policy '{other}' (home|cheapest|spillover)"),
+        })
+    }
+}
+
+/// Where a task landed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    /// Offer index into the view.
+    pub offer: usize,
+    /// `true`: the offer can hold the task's spot units (the caller
+    /// reserves them). `false`: capacity is exhausted everywhere the
+    /// policy looks — run the task all-on-demand on `offer` (the
+    /// cheapest-OD offer for capacity-seeking policies, home for `Home`).
+    pub spot_capacity: bool,
+}
+
+/// Route one task: `units` spot instances wanted over `[t, deadline)`.
+///
+/// Pure decision — the caller reserves capacity on the returned offer.
+/// Only price *comparisons* are made, so routing introduces no floating-
+/// point arithmetic of its own and a one-offer infinite-capacity view
+/// routes identically (offer 0, spot OK) under every policy.
+pub fn route(
+    policy: RoutingPolicy,
+    view: &MarketView,
+    cap: &CapacityLedger,
+    units: u32,
+    t: f64,
+    deadline: f64,
+) -> RouteDecision {
+    match policy {
+        RoutingPolicy::Home => RouteDecision {
+            offer: 0,
+            spot_capacity: cap.can_place(0, units, t, deadline),
+        },
+        RoutingPolicy::CheapestFeasible => {
+            let mut best: Option<(usize, f64)> = None;
+            for (k, o) in view.offers().iter().enumerate() {
+                if !cap.can_place(k, units, t, deadline) {
+                    continue;
+                }
+                let p = o.trace.price_at(t);
+                if best.map_or(true, |(_, bp)| p < bp) {
+                    best = Some((k, p));
+                }
+            }
+            match best {
+                Some((k, _)) => RouteDecision {
+                    offer: k,
+                    spot_capacity: true,
+                },
+                None => RouteDecision {
+                    offer: view.cheapest_od(),
+                    spot_capacity: false,
+                },
+            }
+        }
+        RoutingPolicy::Spillover => {
+            for k in 0..view.len() {
+                if cap.can_place(k, units, t, deadline) {
+                    return RouteDecision {
+                        offer: k,
+                        spot_capacity: true,
+                    };
+                }
+            }
+            RouteDecision {
+                offer: view.cheapest_od(),
+                spot_capacity: false,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::{MarketOffer, PriceTrace};
+
+    fn view(specs: &[(&str, f64, f64, Option<u32>)]) -> MarketView {
+        // (name, od, flat price, capacity)
+        MarketView::new(
+            specs
+                .iter()
+                .map(|(name, od, price, cap)| MarketOffer {
+                    region: name.to_string(),
+                    instance_type: "default".into(),
+                    od_price: *od,
+                    trace: PriceTrace::from_prices(vec![*price; 24], 0.5),
+                    capacity: *cap,
+                })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_strings() {
+        for p in [
+            RoutingPolicy::Home,
+            RoutingPolicy::CheapestFeasible,
+            RoutingPolicy::Spillover,
+        ] {
+            assert_eq!(RoutingPolicy::from_str(p.as_str()).unwrap(), p);
+        }
+        assert!(RoutingPolicy::from_str("nope").is_err());
+    }
+
+    #[test]
+    fn home_always_offer_zero() {
+        let v = view(&[("a", 1.0, 0.5, None), ("b", 1.0, 0.1, None)]);
+        let cap = CapacityLedger::new(&v, 12.0);
+        let d = route(RoutingPolicy::Home, &v, &cap, 8, 0.0, 2.0);
+        assert_eq!(d.offer, 0);
+        assert!(d.spot_capacity);
+    }
+
+    #[test]
+    fn cheapest_picks_lowest_price_with_capacity() {
+        let v = view(&[("a", 1.0, 0.5, None), ("b", 1.0, 0.1, Some(4))]);
+        let mut cap = CapacityLedger::new(&v, 12.0);
+        let d = route(RoutingPolicy::CheapestFeasible, &v, &cap, 4, 0.0, 2.0);
+        assert_eq!(d.offer, 1, "cheap offer fits");
+        assert!(cap.reserve(d.offer, 4, 0.0, 2.0));
+        // b is now full over [0,2): the pricier a wins.
+        let d2 = route(RoutingPolicy::CheapestFeasible, &v, &cap, 1, 0.5, 1.5);
+        assert_eq!(d2.offer, 0);
+        assert!(d2.spot_capacity);
+    }
+
+    #[test]
+    fn spillover_takes_declared_order() {
+        let v = view(&[("a", 1.0, 0.5, Some(2)), ("b", 1.2, 0.1, None)]);
+        let mut cap = CapacityLedger::new(&v, 12.0);
+        let d = route(RoutingPolicy::Spillover, &v, &cap, 2, 0.0, 2.0);
+        assert_eq!(d.offer, 0, "primary has room despite pricier spot");
+        assert!(cap.reserve(0, 2, 0.0, 2.0));
+        let d2 = route(RoutingPolicy::Spillover, &v, &cap, 1, 0.5, 1.5);
+        assert_eq!(d2.offer, 1, "primary full: spill to b");
+        assert!(d2.spot_capacity);
+    }
+
+    #[test]
+    fn exhausted_everywhere_degrades_to_cheapest_od() {
+        let v = view(&[("a", 1.3, 0.2, Some(1)), ("b", 1.1, 0.3, Some(1))]);
+        let mut cap = CapacityLedger::new(&v, 12.0);
+        assert!(cap.reserve(0, 1, 0.0, 6.0));
+        assert!(cap.reserve(1, 1, 0.0, 6.0));
+        for policy in [RoutingPolicy::CheapestFeasible, RoutingPolicy::Spillover] {
+            let d = route(policy, &v, &cap, 1, 1.0, 3.0);
+            assert!(!d.spot_capacity);
+            assert_eq!(d.offer, 1, "b has the cheaper on-demand fallback");
+        }
+    }
+}

@@ -7,11 +7,14 @@
 //! single-run reproduction into an evaluation platform:
 //!
 //! * [`spec`] — a JSON-round-trippable [`ScenarioSpec`] composing a market
-//!   (multi-region price processes, regime-switch schedules, or CSV trace
-//!   replay), a workload mix with arrival-rate schedules, a pool, and a
-//!   policy grid;
-//! * [`registry`] — eight built-in named worlds, from `paper-default` to
-//!   `multi-region-arbitrage`;
+//!   (multi-region, multi-instance-type price processes with per-offer
+//!   spot capacity, regime-switch schedules, or CSV trace replay, plus a
+//!   routing mode: home / arbitrage composite / capacity-aware routing),
+//!   a workload mix with arrival-rate schedules, a pool, and a policy
+//!   grid;
+//! * [`registry`] — ten built-in named worlds, from `paper-default` to
+//!   `multi-region-arbitrage` and the capacity-aware `capacity-crunch` /
+//!   `multi-region-routed`;
 //! * [`runner`] — fans `scenarios × seeds` cells across the worker pool
 //!   with per-run seed derivation, so a batch is bit-identical under any
 //!   `--threads`;
@@ -26,9 +29,10 @@ pub mod report;
 pub use registry::{builtin_names, builtins, find};
 pub use report::{aggregate, report_json, ScenarioAggregate};
 pub use runner::{
-    build_market, build_workload, derive_run_seed, run_batch, run_scenario_once, BatchOptions,
-    ScenarioOutcome,
+    build_market, build_market_view, build_workload, derive_run_seed, run_batch,
+    run_scenario_once, BatchOptions, ScenarioOutcome,
 };
 pub use spec::{
-    MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplaySpec, ScenarioSpec, WorkloadSpec,
+    FlatOffer, InstanceTypeSpec, MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplaySpec,
+    RoutingSpec, ScenarioSpec, WorkloadSpec,
 };

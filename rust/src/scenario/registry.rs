@@ -1,12 +1,14 @@
-//! The built-in scenario registry: ~8 named worlds spanning the market and
+//! The built-in scenario registry: ~10 named worlds spanning the market and
 //! workload regimes the platform must handle, from the paper's §6.1 default
-//! to replayed real-style traces and multi-region arbitrage.
+//! to replayed real-style traces, multi-region arbitrage, and the
+//! capacity-aware routed markets.
 
 use crate::market::SpotModel;
 use crate::workload::MixComponent;
 
 use super::spec::{
-    MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplaySpec, ScenarioSpec, WorkloadSpec,
+    InstanceTypeSpec, MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplaySpec, RoutingSpec,
+    ScenarioSpec, WorkloadSpec,
 };
 
 /// The sample spot-price history shipped with the repo
@@ -87,14 +89,105 @@ pub fn builtins() -> Vec<ScenarioSpec> {
                     name: "us-east".into(),
                     od_price: 1.0,
                     price: PriceSpec::Model(calm.clone()),
+                    capacity: None,
+                    instance_types: Vec::new(),
                 },
                 RegionSpec {
                     name: "eu-west".into(),
                     od_price: 1.15,
                     price: PriceSpec::Regimes(vec![(16.0, calm.clone()), (6.0, surge.clone())]),
+                    capacity: None,
+                    instance_types: Vec::new(),
                 },
             ],
-            arbitrage: true,
+            routing: RoutingSpec::Arbitrage,
+        },
+        workload: WorkloadSpec::uniform(2),
+        pool_capacity: 0,
+        policy_set: PolicySetSpec::Auto,
+        jobs: 400,
+    };
+
+    // A tightly-capped cheap primary region spilling into a pricier
+    // overflow region: exercises capacity exhaustion end to end (tasks
+    // that find both spot pools full degrade to on-demand).
+    let capacity_crunch = ScenarioSpec {
+        name: "capacity-crunch".into(),
+        description: "Capacity-exhaustion world: a cheap primary region \
+                      capped at 16 concurrent spot instances spills into a \
+                      pricier overflow region (capped at 64); when both are \
+                      full, tasks degrade to on-demand."
+            .into(),
+        market: MarketSpec {
+            regions: vec![
+                RegionSpec {
+                    name: "primary".into(),
+                    od_price: 1.0,
+                    price: PriceSpec::Model(calm.clone()),
+                    capacity: Some(16),
+                    instance_types: Vec::new(),
+                },
+                RegionSpec {
+                    name: "overflow".into(),
+                    od_price: 1.2,
+                    price: PriceSpec::Model(SpotModel::BoundedExp {
+                        mean: 0.22,
+                        lo: 0.15,
+                        hi: 1.0,
+                    }),
+                    capacity: Some(64),
+                    instance_types: Vec::new(),
+                },
+            ],
+            routing: RoutingSpec::Spillover,
+        },
+        workload: WorkloadSpec::uniform(2),
+        pool_capacity: 0,
+        policy_set: PolicySetSpec::Auto,
+        jobs: 400,
+    };
+
+    // Non-arbitrage routing across regions *and* instance types: every
+    // task lands on the cheapest feasible offer and is charged that
+    // offer's realized prices — no slot-wise composite anywhere.
+    let multi_region_routed = ScenarioSpec {
+        name: "multi-region-routed".into(),
+        description: "Real routing world: 2 regions x 2 instance types \
+                      with independent processes, different on-demand \
+                      prices and a capped burst type; tasks route to the \
+                      cheapest feasible offer instead of an arbitrage \
+                      composite."
+            .into(),
+        market: MarketSpec {
+            regions: vec![
+                RegionSpec {
+                    name: "us-east".into(),
+                    od_price: 1.0,
+                    price: PriceSpec::Model(calm.clone()),
+                    capacity: Some(48),
+                    instance_types: vec![InstanceTypeSpec {
+                        name: "burst".into(),
+                        od_price: Some(0.9),
+                        price: PriceSpec::Model(SpotModel::Markov {
+                            calm_mean: 0.14,
+                            surge_mean: 0.7,
+                            lo: 0.12,
+                            hi: 1.0,
+                            p_calm_to_surge: 0.05,
+                            p_surge_to_calm: 0.2,
+                        }),
+                        capacity: Some(24),
+                    }],
+                },
+                RegionSpec {
+                    name: "eu-west".into(),
+                    od_price: 1.15,
+                    price: PriceSpec::Model(surge.clone()),
+                    capacity: None,
+                    instance_types: Vec::new(),
+                },
+            ],
+            routing: RoutingSpec::Cheapest,
         },
         workload: WorkloadSpec::uniform(2),
         pool_capacity: 0,
@@ -152,6 +245,8 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         google,
         replayed,
         multi_region,
+        capacity_crunch,
+        multi_region_routed,
         bursty,
         pool_heavy,
         deadline_tight,
@@ -175,13 +270,15 @@ mod tests {
     #[test]
     fn registry_has_expected_worlds() {
         let names = builtin_names();
-        assert_eq!(names.len(), 8);
+        assert_eq!(names.len(), 10);
         for want in [
             "paper-default",
             "calm-surge-markov",
             "google-fixed",
             "replayed-trace",
             "multi-region-arbitrage",
+            "capacity-crunch",
+            "multi-region-routed",
             "bursty-arrivals",
             "pool-heavy",
             "deadline-tight",
@@ -192,6 +289,24 @@ mod tests {
         dedup.sort();
         dedup.dedup();
         assert_eq!(dedup.len(), names.len(), "duplicate names");
+    }
+
+    #[test]
+    fn routed_worlds_carry_capacity_and_routing() {
+        let crunch = find("capacity-crunch").unwrap();
+        assert_eq!(crunch.market.routing, RoutingSpec::Spillover);
+        let offers = crunch.market.flattened_offers();
+        assert_eq!(offers.len(), 2);
+        assert_eq!(offers[0].capacity, Some(16));
+        assert_eq!(offers[1].capacity, Some(64));
+
+        let routed = find("multi-region-routed").unwrap();
+        assert_eq!(routed.market.routing, RoutingSpec::Cheapest);
+        let offers = routed.market.flattened_offers();
+        assert_eq!(offers.len(), 3, "2 regions x (default + burst type)");
+        assert_eq!(offers[1].instance_type, "burst");
+        assert_eq!(offers[1].od_price, 0.9);
+        assert!(offers[2].capacity.is_none());
     }
 
     #[test]

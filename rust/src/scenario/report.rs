@@ -82,6 +82,16 @@ fn run_to_json(o: &ScenarioOutcome) -> Json {
         .set("availability_lo", Json::Num(o.availability_lo))
         .set("availability_hi", Json::Num(o.availability_hi))
         .set("best_policy", Json::Str(o.best_policy.clone()));
+    // Only routed multi-offer runs carry offer shares; omitting the key
+    // otherwise keeps legacy rows byte-identical to the pre-MarketView
+    // schema.
+    if !o.offer_shares.is_empty() {
+        let mut shares = Json::obj();
+        for (label, share) in &o.offer_shares {
+            shares.set(label, Json::Num(*share));
+        }
+        j.set("offer_shares", shares);
+    }
     j
 }
 
@@ -154,7 +164,19 @@ mod tests {
             availability_lo: 0.4,
             availability_hi: 0.9,
             best_policy: "proposed(β=1.000,β₀=-,b=0.24)".into(),
+            offer_shares: Vec::new(),
         }
+    }
+
+    #[test]
+    fn offer_shares_only_serialized_when_present() {
+        let plain = run_to_json(&outcome("a", 0, 0.2));
+        assert!(plain.get("offer_shares").is_none());
+        let mut routed = outcome("b", 0, 0.3);
+        routed.offer_shares = vec![("us-east/default".into(), 0.7), ("eu-west/default".into(), 0.3)];
+        let j = run_to_json(&routed);
+        let shares = j.get("offer_shares").unwrap();
+        assert_eq!(shares.get("us-east/default").unwrap().as_f64().unwrap(), 0.7);
     }
 
     #[test]

@@ -10,14 +10,17 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{parallel_map, tola_run, Evaluator};
+use crate::coordinator::{parallel_map, tola_run_view, Evaluator};
 use crate::learning::counterfactual::CfSpec;
-use crate::market::{multi, replay, PriceTrace, RegionMarket, SpotPriceProcess, SLOTS_PER_UNIT};
+use crate::market::{
+    replay, MarketOffer, MarketView, PriceTrace, SpotPriceProcess, SLOTS_PER_UNIT,
+};
+use crate::policy::routing::RoutingPolicy;
 use crate::policy::{benchmark_bids, grid_b, policy_set_full, policy_set_spot_only};
 use crate::util::rng::SplitMix64;
 use crate::workload::{transform, ArrivalSchedule, ChainJob, GeneratorConfig, MixStream};
 
-use super::spec::{PolicySetSpec, PriceSpec, ScenarioSpec};
+use super::spec::{PolicySetSpec, PriceSpec, RoutingSpec, ScenarioSpec};
 
 /// Batch-level options for [`run_batch`].
 #[derive(Debug, Clone)]
@@ -54,6 +57,10 @@ pub struct ScenarioOutcome {
     pub availability_hi: f64,
     /// Label of the highest-weight policy at the end of the run.
     pub best_policy: String,
+    /// Cloud-work share per `(offer label, share)` for routed multi-offer
+    /// worlds; empty for degenerate (single-offer) markets, so legacy
+    /// report rows are byte-identical.
+    pub offer_shares: Vec<(String, f64)>,
 }
 
 /// Deterministic per-run seed: FNV-1a over the scenario name folded with
@@ -117,36 +124,66 @@ fn region_trace(price: &PriceSpec, horizon: f64, seed: u64) -> Result<PriceTrace
     }
 }
 
-/// Realize the scenario's market over `horizon`: the effective trace and
-/// on-demand price the coordinator runs against.
-pub fn build_market(spec: &ScenarioSpec, horizon: f64, seed: u64) -> Result<(PriceTrace, f64)> {
-    // Without arbitrage, region 0 is the home region and the rest never
-    // influence the run — don't pay to realize their traces.
-    let wanted = if spec.market.arbitrage {
-        spec.market.regions.len()
-    } else {
-        1
+/// Realize the scenario's market over `horizon` into a capacity-aware
+/// [`MarketView`], plus the runtime routing policy for multi-offer views.
+///
+/// * `home` routing realizes only offer 0 (the rest are inert — don't pay
+///   to generate their traces) and yields a one-offer view;
+/// * `arbitrage` realizes every offer and collapses them into the
+///   slot-wise cheapest composite — again a one-offer view, so the
+///   coordinator takes the bit-identical single-trace path;
+/// * `cheapest` / `spillover` realize every flattened
+///   `(region, instance_type)` offer with per-offer derived seeds and keep
+///   them separate for real routing.
+pub fn build_market_view(
+    spec: &ScenarioSpec,
+    horizon: f64,
+    seed: u64,
+) -> Result<(MarketView, RoutingPolicy)> {
+    let offers = spec.market.flattened_offers();
+    let wanted = match spec.market.routing {
+        RoutingSpec::Home => 1,
+        _ => offers.len(),
     };
-    let regions: Vec<RegionMarket> = spec
-        .market
-        .regions
+    let realized: Vec<MarketOffer> = offers
         .iter()
         .take(wanted)
         .enumerate()
-        .map(|(k, r)| {
-            Ok(RegionMarket {
-                name: r.name.clone(),
-                od_price: r.od_price,
-                trace: region_trace(&r.price, horizon, seed ^ ((k as u64 + 1) << 8))?,
+        .map(|(k, o)| {
+            Ok(MarketOffer {
+                region: o.region.clone(),
+                instance_type: o.instance_type.clone(),
+                od_price: o.od_price,
+                trace: region_trace(&o.price, horizon, seed ^ ((k as u64 + 1) << 8))?,
+                capacity: o.capacity,
             })
         })
         .collect::<Result<_>>()?;
-    if regions.len() > 1 {
-        Ok(multi::arbitrage_composite(&regions))
-    } else {
-        let r = regions.into_iter().next().expect("validated non-empty");
-        Ok((r.trace, r.od_price))
+    let view = MarketView::new(realized)?;
+    match spec.market.routing.runtime() {
+        None => {
+            // Arbitrage: collapse to the composite one-offer view.
+            let (trace, od) = view.arbitrage_collapse()?;
+            Ok((MarketView::single(trace, od), RoutingPolicy::Home))
+        }
+        Some(routing) => Ok((view, routing)),
     }
+}
+
+/// Realize the scenario's market as the legacy `(trace, od_price)` pair —
+/// only defined for worlds that collapse to one offer (home or arbitrage
+/// routing). Routed multi-offer worlds error: use [`build_market_view`].
+pub fn build_market(spec: &ScenarioSpec, horizon: f64, seed: u64) -> Result<(PriceTrace, f64)> {
+    let (view, _) = build_market_view(spec, horizon, seed)?;
+    if view.len() > 1 {
+        bail!(
+            "scenario '{}' routes across {} offers; use build_market_view",
+            spec.name,
+            view.len()
+        );
+    }
+    let offer = view.offers()[0].clone();
+    Ok((offer.trace, offer.od_price))
 }
 
 /// Realize the scenario's workload: `jobs` chain jobs from the weighted mix
@@ -195,6 +232,12 @@ fn cf_specs(spec: &ScenarioSpec) -> Vec<CfSpec> {
 
 /// Run one scenario cell: realize workload and market from the run seed,
 /// execute the TOLA learning loop, and distill the comparable metrics.
+///
+/// Worlds that collapse to one offer (home / arbitrage routing) take the
+/// coordinator's bit-identical legacy path; routed worlds place every task
+/// against remaining offer capacity. Availability metrics are always
+/// measured on the effective home offer (the composite for arbitrage),
+/// keeping rows comparable across worlds.
 pub fn run_scenario_once(
     spec: &ScenarioSpec,
     run_seed: u64,
@@ -204,14 +247,14 @@ pub fn run_scenario_once(
     let n_jobs = jobs_override.unwrap_or(spec.jobs);
     let jobs = build_workload(spec, n_jobs, run_seed ^ 0x10AD);
     let horizon = jobs.iter().map(|j| j.deadline).fold(1.0, f64::max) + 1.0;
-    let (trace, od_price) = build_market(spec, horizon, run_seed ^ 0x7ACE)?;
+    let (view, routing) = build_market_view(spec, horizon, run_seed ^ 0x7ACE)?;
     let specs = cf_specs(spec);
-    let rep = tola_run(
+    let rep = tola_run_view(
         &jobs,
         &specs,
-        &trace,
+        &view,
+        routing,
         spec.pool_capacity,
-        od_price,
         run_seed ^ 0x701A_2,
         &Evaluator::Native { threads: 1 },
     );
@@ -219,8 +262,19 @@ pub fn run_scenario_once(
     let grid = grid_b();
     let lo_bid = grid.first().copied().unwrap_or(0.18);
     let hi_bid = grid.last().copied().unwrap_or(0.3);
+    let trace = &view.home().trace;
     let t1 = (trace.horizon() - 1e-9).max(0.0);
     let total_work = rep.ledger.total_work().max(1e-12);
+    let offer_shares = if view.len() > 1 {
+        let cloud: f64 = rep.offer_work.iter().sum::<f64>().max(1e-12);
+        view.offers()
+            .iter()
+            .zip(&rep.offer_work)
+            .map(|(o, &w)| (o.label(), w / cloud))
+            .collect()
+    } else {
+        Vec::new()
+    };
     Ok(ScenarioOutcome {
         scenario: spec.name.clone(),
         replicate: 0, // filled by run_batch
@@ -236,6 +290,7 @@ pub fn run_scenario_once(
         availability_lo: trace.availability(0.0, t1, lo_bid),
         availability_hi: trace.availability(0.0, t1, hi_bid),
         best_policy: specs[rep.best_policy].label(),
+        offer_shares,
     })
 }
 
@@ -363,6 +418,42 @@ mod tests {
         assert!(out.so_share > 0.0, "self-owned share {}", out.so_share);
         assert!(out.pool_utilization > 0.0);
         assert!(out.best_policy.starts_with("proposed"));
+    }
+
+    #[test]
+    fn routed_world_cell_reports_offer_shares() {
+        let mut spec = crate::scenario::registry::find("multi-region-routed").unwrap();
+        spec.workload.small_tasks = true;
+        let out = run_scenario_once(
+            &spec,
+            derive_run_seed(5, "multi-region-routed", 0),
+            Some(24),
+        )
+        .unwrap();
+        assert_eq!(out.offer_shares.len(), 3, "one share per flattened offer");
+        let total: f64 = out.offer_shares.iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-6, "shares sum to {total}");
+        assert!(out.offer_shares[0].0.contains("us-east"));
+        let shares = out.so_share + out.spot_share + out.od_share;
+        assert!((shares - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_world_reports_no_offer_shares() {
+        let spec = tiny("degenerate");
+        let out = run_scenario_once(&spec, derive_run_seed(6, "degenerate", 0), None).unwrap();
+        assert!(out.offer_shares.is_empty(), "legacy rows must not change shape");
+    }
+
+    #[test]
+    fn build_market_errors_on_routed_worlds() {
+        let spec = crate::scenario::registry::find("multi-region-routed").unwrap();
+        let err = build_market(&spec, 10.0, 1).unwrap_err().to_string();
+        assert!(err.contains("build_market_view"), "{err}");
+        // But stays defined for home and arbitrage worlds.
+        assert!(build_market(&tiny("t"), 10.0, 1).is_ok());
+        let arb = crate::scenario::registry::find("multi-region-arbitrage").unwrap();
+        assert!(build_market(&arb, 10.0, 1).is_ok());
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //!
 //! A [`ScenarioSpec`] composes a *world* the evaluation platform can run:
 //!
-//! * a **market** — one or more regions, each with its own on-demand price
-//!   and price process (a [`SpotModel`], a cyclic regime-switch schedule,
-//!   or a CSV-replayed real trace), optionally folded into an arbitrage
-//!   composite;
+//! * a **market** — one or more regions, each with its own on-demand
+//!   price, per-slot spot capacity, and one or more instance types, each
+//!   type with its own price process (a [`SpotModel`], a cyclic
+//!   regime-switch schedule, or a CSV-replayed real trace); a routing mode
+//!   says how the flattened `(region, instance_type)` offers combine —
+//!   home-only, the arbitrage composite, or real capacity-aware routing;
 //! * a **workload** — a weighted mix of §6.1 job types under a cyclic
 //!   arrival-rate schedule;
 //! * a **pool** — the self-owned capacity;
@@ -59,23 +61,104 @@ impl ReplaySpec {
     }
 }
 
-/// One market region.
+/// An additional named instance type inside a region: its own price
+/// process, optionally its own on-demand price (defaults to the region's)
+/// and spot capacity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceTypeSpec {
+    pub name: String,
+    /// `None`: inherit the region's `od_price`.
+    pub od_price: Option<f64>,
+    pub price: PriceSpec,
+    /// Per-slot concurrent spot-instance cap; `None` = infinite.
+    pub capacity: Option<u32>,
+}
+
+/// One market region. The region itself is its `default` instance-type
+/// offer; `instance_types` adds further offers.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RegionSpec {
     pub name: String,
     pub od_price: f64,
     pub price: PriceSpec,
+    /// Per-slot concurrent spot-instance cap of the default offer;
+    /// `None` = infinite (the paper's assumption).
+    pub capacity: Option<u32>,
+    /// Additional named instance types, each its own offer.
+    pub instance_types: Vec<InstanceTypeSpec>,
+}
+
+/// How the market's flattened `(region, instance_type)` offers combine at
+/// run time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingSpec {
+    /// Offer 0 is the home market; the rest are inert (the legacy
+    /// single-trace behavior).
+    #[default]
+    Home,
+    /// Fold every offer into the slot-wise cheapest composite
+    /// ([`crate::market::MarketView::arbitrage_collapse`]) — free
+    /// placement, requires every capacity to be infinite.
+    Arbitrage,
+    /// Route each task to the cheapest offer with remaining capacity
+    /// ([`crate::policy::routing::RoutingPolicy::CheapestFeasible`]).
+    Cheapest,
+    /// Route each task to the first offer (declared order) with remaining
+    /// capacity ([`crate::policy::routing::RoutingPolicy::Spillover`]).
+    Spillover,
+}
+
+impl RoutingSpec {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoutingSpec::Home => "home",
+            RoutingSpec::Arbitrage => "arbitrage",
+            RoutingSpec::Cheapest => "cheapest",
+            RoutingSpec::Spillover => "spillover",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<RoutingSpec> {
+        Ok(match s {
+            "home" => RoutingSpec::Home,
+            "arbitrage" => RoutingSpec::Arbitrage,
+            "cheapest" => RoutingSpec::Cheapest,
+            "spillover" => RoutingSpec::Spillover,
+            other => bail!("unknown routing '{other}' (home|arbitrage|cheapest|spillover)"),
+        })
+    }
+
+    /// The per-task runtime routing policy; `None` when the market
+    /// collapses to a single composite offer before the run (arbitrage).
+    pub fn runtime(&self) -> Option<crate::policy::routing::RoutingPolicy> {
+        use crate::policy::routing::RoutingPolicy;
+        match self {
+            RoutingSpec::Home => Some(RoutingPolicy::Home),
+            RoutingSpec::Arbitrage => None,
+            RoutingSpec::Cheapest => Some(RoutingPolicy::CheapestFeasible),
+            RoutingSpec::Spillover => Some(RoutingPolicy::Spillover),
+        }
+    }
+}
+
+/// One flattened `(region, instance_type)` offer of a market spec, in
+/// canonical order (regions in declared order; within a region the
+/// `default` offer first, then `instance_types` in declared order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatOffer {
+    pub region: String,
+    pub instance_type: String,
+    pub od_price: f64,
+    pub price: PriceSpec,
+    pub capacity: Option<u32>,
 }
 
 /// The market side of a scenario.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MarketSpec {
     pub regions: Vec<RegionSpec>,
-    /// Fold multiple regions into the slot-wise cheapest composite
-    /// ([`crate::market::multi::arbitrage_composite`]). When false, region 0
-    /// is the home region and the rest are ignored by the runner (reserved
-    /// for a future multi-coordinator fleet).
-    pub arbitrage: bool,
+    /// How the flattened offers combine at run time.
+    pub routing: RoutingSpec,
 }
 
 impl MarketSpec {
@@ -86,9 +169,37 @@ impl MarketSpec {
                 name: "default".into(),
                 od_price,
                 price: PriceSpec::Model(model),
+                capacity: None,
+                instance_types: Vec::new(),
             }],
-            arbitrage: false,
+            routing: RoutingSpec::Home,
         }
+    }
+
+    /// The flattened `(region, instance_type)` offer list in canonical
+    /// order — what the runner realizes into a
+    /// [`crate::market::MarketView`].
+    pub fn flattened_offers(&self) -> Vec<FlatOffer> {
+        let mut out = Vec::new();
+        for r in &self.regions {
+            out.push(FlatOffer {
+                region: r.name.clone(),
+                instance_type: "default".into(),
+                od_price: r.od_price,
+                price: r.price.clone(),
+                capacity: r.capacity,
+            });
+            for it in &r.instance_types {
+                out.push(FlatOffer {
+                    region: r.name.clone(),
+                    instance_type: it.name.clone(),
+                    od_price: it.od_price.unwrap_or(r.od_price),
+                    price: it.price.clone(),
+                    capacity: it.capacity,
+                });
+            }
+        }
+        out
     }
 }
 
@@ -178,48 +289,70 @@ impl ScenarioSpec {
             "scenario '{}': market needs at least one region",
             self.name
         );
-        for r in &self.market.regions {
+        for (ri, r) in self.market.regions.iter().enumerate() {
+            ensure!(
+                !self.market.regions[..ri].iter().any(|o| o.name == r.name),
+                "scenario '{}': duplicate region name '{}'",
+                self.name,
+                r.name
+            );
             ensure!(
                 r.od_price > 0.0,
                 "scenario '{}', region '{}': od_price must be positive",
                 self.name,
                 r.name
             );
-            match &r.price {
-                PriceSpec::Model(m) => {
-                    validate_spot_model(m, &self.name, &r.name)?;
-                }
-                PriceSpec::Regimes(segments) => {
+            ensure!(
+                r.capacity != Some(0),
+                "scenario '{}', region '{}': capacity 0 is never placeable (omit it for infinite)",
+                self.name,
+                r.name
+            );
+            validate_price(&r.price, &self.name, &r.name)?;
+            for (ti, it) in r.instance_types.iter().enumerate() {
+                let ctx = format!("{}:{}", r.name, it.name);
+                ensure!(
+                    !it.name.is_empty() && it.name != "default",
+                    "scenario '{}', region '{}': instance type names must be non-empty and \
+                     not 'default' (the region itself is the default offer)",
+                    self.name,
+                    r.name
+                );
+                ensure!(
+                    !r.instance_types[..ti].iter().any(|o| o.name == it.name),
+                    "scenario '{}', region '{}': duplicate instance type '{}'",
+                    self.name,
+                    r.name,
+                    it.name
+                );
+                if let Some(od) = it.od_price {
                     ensure!(
-                        !segments.is_empty(),
-                        "scenario '{}', region '{}': empty regime schedule",
-                        self.name,
-                        r.name
-                    );
-                    ensure!(
-                        segments.iter().all(|(d, _)| *d > 0.0),
-                        "scenario '{}', region '{}': regime durations must be positive",
-                        self.name,
-                        r.name
-                    );
-                    for (_, m) in segments {
-                        validate_spot_model(m, &self.name, &r.name)?;
-                    }
-                }
-                PriceSpec::Replay(rp) => {
-                    ensure!(
-                        rp.csv.is_some() != rp.path.is_some(),
-                        "scenario '{}', region '{}': replay needs exactly one of csv/path",
-                        self.name,
-                        r.name
-                    );
-                    ensure!(
-                        rp.time_scale > 0.0 && rp.price_scale > 0.0,
-                        "scenario '{}', region '{}': replay scales must be positive",
-                        self.name,
-                        r.name
+                        od > 0.0,
+                        "scenario '{}', offer '{ctx}': od_price must be positive",
+                        self.name
                     );
                 }
+                ensure!(
+                    it.capacity != Some(0),
+                    "scenario '{}', offer '{ctx}': capacity 0 is never placeable (omit it for infinite)",
+                    self.name
+                );
+                validate_price(&it.price, &self.name, &ctx)?;
+            }
+        }
+        if self.market.routing == RoutingSpec::Arbitrage {
+            // The composite models free placement; a finite cap contradicts
+            // it. Refuse here instead of silently ignoring the cap.
+            for o in self.market.flattened_offers() {
+                ensure!(
+                    o.capacity.is_none(),
+                    "scenario '{}': arbitrage routing assumes infinite capacity, but offer \
+                     '{}/{}' is capped at {} (use cheapest or spillover routing)",
+                    self.name,
+                    o.region,
+                    o.instance_type,
+                    o.capacity.unwrap()
+                );
             }
         }
         ensure!(
@@ -308,45 +441,37 @@ impl ScenarioSpec {
     }
 }
 
-/// Sanity-check a price process's parameters so a malformed spec fails
-/// with a path-style error instead of a downstream panic (bounded-exp
-/// rejection sampling asserts `lo < hi`) or a degenerate run.
-fn validate_spot_model(m: &SpotModel, scenario: &str, region: &str) -> Result<()> {
-    let ctx = || format!("scenario '{scenario}', region '{region}'");
-    match m {
-        SpotModel::BoundedExp { mean, lo, hi } => {
-            ensure!(
-                *mean > 0.0 && *lo >= 0.0 && lo < hi,
-                "{}: bounded_exp needs mean > 0 and 0 <= lo < hi (mean={mean}, lo={lo}, hi={hi})",
-                ctx()
-            );
+/// Sanity-check a price spec so a malformed world fails with a path-style
+/// error instead of a downstream panic (bounded-exp rejection sampling
+/// asserts `lo < hi`) or a degenerate run. Model parameter checks live on
+/// [`SpotModel::validate`]; this adds the spec-level structure and the
+/// `scenario, offer` context path.
+fn validate_price(price: &PriceSpec, scenario: &str, offer: &str) -> Result<()> {
+    let ctx = || format!("scenario '{scenario}', region '{offer}'");
+    match price {
+        PriceSpec::Model(m) => {
+            m.validate().map_err(|e| anyhow::anyhow!("{}: {e}", ctx()))?;
         }
-        SpotModel::Markov {
-            calm_mean,
-            surge_mean,
-            lo,
-            hi,
-            p_calm_to_surge,
-            p_surge_to_calm,
-        } => {
+        PriceSpec::Regimes(segments) => {
+            ensure!(!segments.is_empty(), "{}: empty regime schedule", ctx());
             ensure!(
-                *calm_mean > 0.0 && *surge_mean > 0.0 && *lo >= 0.0 && lo < hi,
-                "{}: markov needs positive means and 0 <= lo < hi",
+                segments.iter().all(|(d, _)| *d > 0.0),
+                "{}: regime durations must be positive",
                 ctx()
             );
-            ensure!(
-                (0.0..=1.0).contains(p_calm_to_surge) && (0.0..=1.0).contains(p_surge_to_calm),
-                "{}: markov transition probabilities must lie in [0, 1]",
-                ctx()
-            );
+            for (_, m) in segments {
+                m.validate().map_err(|e| anyhow::anyhow!("{}: {e}", ctx()))?;
+            }
         }
-        SpotModel::GoogleFixed {
-            price,
-            availability,
-        } => {
+        PriceSpec::Replay(rp) => {
             ensure!(
-                *price > 0.0 && (0.0..=1.0).contains(availability),
-                "{}: google needs price > 0 and availability in [0, 1]",
+                rp.csv.is_some() != rp.path.is_some(),
+                "{}: replay needs exactly one of csv/path",
+                ctx()
+            );
+            ensure!(
+                rp.time_scale > 0.0 && rp.price_scale > 0.0,
+                "{}: replay scales must be positive",
                 ctx()
             );
         }
@@ -435,21 +560,53 @@ fn price_from_json(j: &Json, ctx: &str) -> Result<PriceSpec> {
 
 fn market_to_json(m: &MarketSpec) -> Json {
     let mut j = Json::obj();
-    j.set("arbitrage", Json::Bool(m.arbitrage)).set(
-        "regions",
-        Json::Arr(
-            m.regions
-                .iter()
-                .map(|r| {
-                    let mut rj = Json::obj();
-                    rj.set("name", Json::Str(r.name.clone()))
-                        .set("od_price", Json::Num(r.od_price))
-                        .set("price", price_to_json(&r.price));
-                    rj
-                })
-                .collect(),
-        ),
-    );
+    // `arbitrage` is kept alongside `routing` for readers of the old
+    // one-bit schema; `from_json` checks the two agree.
+    j.set("routing", Json::Str(m.routing.as_str().into()))
+        .set(
+            "arbitrage",
+            Json::Bool(m.routing == RoutingSpec::Arbitrage),
+        )
+        .set(
+            "regions",
+            Json::Arr(
+                m.regions
+                    .iter()
+                    .map(|r| {
+                        let mut rj = Json::obj();
+                        rj.set("name", Json::Str(r.name.clone()))
+                            .set("od_price", Json::Num(r.od_price))
+                            .set("price", price_to_json(&r.price));
+                        if let Some(c) = r.capacity {
+                            rj.set("capacity", Json::Num(c as f64));
+                        }
+                        if !r.instance_types.is_empty() {
+                            rj.set(
+                                "instance_types",
+                                Json::Arr(
+                                    r.instance_types
+                                        .iter()
+                                        .map(|it| {
+                                            let mut ij = Json::obj();
+                                            ij.set("name", Json::Str(it.name.clone()))
+                                                .set("price", price_to_json(&it.price));
+                                            if let Some(od) = it.od_price {
+                                                ij.set("od_price", Json::Num(od));
+                                            }
+                                            if let Some(c) = it.capacity {
+                                                ij.set("capacity", Json::Num(c as f64));
+                                            }
+                                            ij
+                                        })
+                                        .collect(),
+                                ),
+                            );
+                        }
+                        rj
+                    })
+                    .collect(),
+            ),
+        );
     j
 }
 
@@ -470,16 +627,66 @@ fn market_from_json(j: &Json, scenario: &str) -> Result<MarketSpec> {
         let price_j = rj
             .get("price")
             .ok_or_else(|| anyhow::anyhow!("{ctx}: missing 'price'"))?;
+        let mut instance_types = Vec::new();
+        if let Some(arr) = rj.get("instance_types").and_then(Json::as_arr) {
+            for ij in arr {
+                let it_name = ij
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("{ctx}: instance type missing 'name'"))?
+                    .to_string();
+                let it_ctx = format!("{ctx}, instance type '{it_name}'");
+                let it_price = ij
+                    .get("price")
+                    .ok_or_else(|| anyhow::anyhow!("{it_ctx}: missing 'price'"))?;
+                // od_price is optional (inherit the region's) but a
+                // present-and-malformed value must error, not silently
+                // fall back to inheritance.
+                let it_od = match ij.get("od_price") {
+                    None => None,
+                    Some(v) => Some(v.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("{it_ctx}: od_price must be a number")
+                    })?),
+                };
+                instance_types.push(InstanceTypeSpec {
+                    od_price: it_od,
+                    price: price_from_json(it_price, &it_ctx)?,
+                    capacity: crate::market::view::capacity_from_json(ij, "capacity", &it_ctx)?,
+                    name: it_name,
+                });
+            }
+        }
         regions.push(RegionSpec {
             od_price: rj.opt_f64("od_price", crate::market::ON_DEMAND_PRICE),
             price: price_from_json(price_j, &ctx)?,
+            capacity: crate::market::view::capacity_from_json(rj, "capacity", &ctx)?,
+            instance_types,
             name,
         });
     }
-    Ok(MarketSpec {
-        regions,
-        arbitrage: j.opt_bool("arbitrage", false),
-    })
+    let routing = match (j.get("routing"), j.get("arbitrage")) {
+        (Some(Json::Str(s)), arb) => {
+            let routing = RoutingSpec::from_str(s)?;
+            if let Some(a) = arb.and_then(Json::as_bool) {
+                ensure!(
+                    a == (routing == RoutingSpec::Arbitrage),
+                    "scenario '{scenario}': market has routing '{}' but arbitrage={a} \
+                     (drop one of the two keys)",
+                    routing.as_str()
+                );
+            }
+            routing
+        }
+        (Some(_), _) => bail!("scenario '{scenario}': market 'routing' must be a string"),
+        (None, _) => {
+            if j.opt_bool("arbitrage", false) {
+                RoutingSpec::Arbitrage
+            } else {
+                RoutingSpec::Home
+            }
+        }
+    };
+    Ok(MarketSpec { regions, routing })
 }
 
 fn workload_to_json(w: &WorkloadSpec) -> Json {
@@ -562,6 +769,8 @@ mod tests {
                         name: "us-east".into(),
                         od_price: 1.0,
                         price: PriceSpec::Model(SpotModel::paper_default()),
+                        capacity: None,
+                        instance_types: Vec::new(),
                     },
                     RegionSpec {
                         name: "eu-west".into(),
@@ -577,9 +786,11 @@ mod tests {
                                 },
                             ),
                         ]),
+                        capacity: None,
+                        instance_types: Vec::new(),
                     },
                 ],
-                arbitrage: true,
+                routing: RoutingSpec::Arbitrage,
             },
             workload: WorkloadSpec {
                 components: vec![
@@ -622,12 +833,177 @@ mod tests {
                 name: "replayed".into(),
                 od_price: 1.0,
                 price: PriceSpec::Replay(ReplaySpec::inline("0,0.2\n5,0.5\n")),
+                capacity: None,
+                instance_types: Vec::new(),
             }],
-            arbitrage: false,
+            routing: RoutingSpec::Home,
         };
         s.validate().unwrap();
         let back = ScenarioSpec::from_json(&s.to_json()).unwrap();
         assert_eq!(back, s);
+    }
+
+    /// A capacity-and-instance-type market for the routed-world tests.
+    fn routed_sample() -> ScenarioSpec {
+        let mut s = sample();
+        s.market = MarketSpec {
+            regions: vec![
+                RegionSpec {
+                    name: "us-east".into(),
+                    od_price: 1.0,
+                    price: PriceSpec::Model(SpotModel::paper_default()),
+                    capacity: Some(32),
+                    instance_types: vec![InstanceTypeSpec {
+                        name: "burst".into(),
+                        od_price: Some(0.95),
+                        price: PriceSpec::Model(SpotModel::BoundedExp {
+                            mean: 0.4,
+                            lo: 0.12,
+                            hi: 1.0,
+                        }),
+                        capacity: Some(16),
+                    }],
+                },
+                RegionSpec {
+                    name: "eu-west".into(),
+                    od_price: 1.15,
+                    price: PriceSpec::Model(SpotModel::paper_default()),
+                    capacity: None,
+                    instance_types: Vec::new(),
+                },
+            ],
+            routing: RoutingSpec::Cheapest,
+        };
+        s
+    }
+
+    #[test]
+    fn routed_market_roundtrips_and_flattens() {
+        let s = routed_sample();
+        s.validate().unwrap();
+        let back = ScenarioSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        let re = ScenarioSpec::parse(&s.to_json().pretty()).unwrap();
+        assert_eq!(re, s);
+        let offers = s.market.flattened_offers();
+        assert_eq!(offers.len(), 3);
+        assert_eq!(offers[0].instance_type, "default");
+        assert_eq!(offers[1].instance_type, "burst");
+        assert_eq!(offers[1].od_price, 0.95);
+        assert_eq!(offers[1].capacity, Some(16));
+        assert_eq!(offers[2].region, "eu-west");
+        assert_eq!(offers[2].od_price, 1.15, "inherits the region od price");
+    }
+
+    /// Mutate the market object of a serialized spec (test helper).
+    fn with_market_key(spec: &ScenarioSpec, key: &str, value: Option<Json>) -> Json {
+        let mut j = spec.to_json();
+        if let Json::Obj(top) = &mut j {
+            if let Some(Json::Obj(market)) = top.get_mut("market") {
+                match value {
+                    Some(v) => {
+                        market.insert(key.to_string(), v);
+                    }
+                    None => {
+                        market.remove(key);
+                    }
+                }
+            }
+        }
+        j
+    }
+
+    #[test]
+    fn routing_json_compat_and_conflicts() {
+        let spec = sample(); // routing: Arbitrage
+        // Old one-bit schema (no 'routing' key) still parses.
+        let old = with_market_key(&spec, "routing", None);
+        let s = ScenarioSpec::from_json(&old).unwrap();
+        assert_eq!(s.market.routing, RoutingSpec::Arbitrage);
+        // And the no-arbitrage old form maps to Home.
+        let mut plain = with_market_key(&spec, "routing", None);
+        if let Json::Obj(top) = &mut plain {
+            if let Some(Json::Obj(market)) = top.get_mut("market") {
+                market.insert("arbitrage".into(), Json::Bool(false));
+            }
+        }
+        assert_eq!(
+            ScenarioSpec::from_json(&plain).unwrap().market.routing,
+            RoutingSpec::Home
+        );
+        // Conflicting keys are an error, not a silent pick.
+        let conflicted = with_market_key(&spec, "arbitrage", Some(Json::Bool(false)));
+        assert!(ScenarioSpec::from_json(&conflicted).is_err());
+        // Unknown routing string is an error.
+        let bogus = with_market_key(&spec, "routing", Some(Json::Str("teleport".into())));
+        assert!(ScenarioSpec::from_json(&bogus).is_err());
+        // Non-string routing is an error.
+        let nonstr = with_market_key(&spec, "routing", Some(Json::Num(3.0)));
+        assert!(ScenarioSpec::from_json(&nonstr).is_err());
+    }
+
+    #[test]
+    fn capacity_and_instance_type_validation() {
+        // capacity 0 is an error, not infinite.
+        let mut s = routed_sample();
+        s.market.regions[0].capacity = Some(0);
+        assert!(s.validate().is_err());
+
+        let mut s = routed_sample();
+        s.market.regions[0].instance_types[0].capacity = Some(0);
+        assert!(s.validate().is_err());
+
+        // instance type may not shadow the default offer.
+        let mut s = routed_sample();
+        s.market.regions[0].instance_types[0].name = "default".into();
+        assert!(s.validate().is_err());
+
+        // duplicate instance type names in one region.
+        let mut s = routed_sample();
+        let dup = s.market.regions[0].instance_types[0].clone();
+        s.market.regions[0].instance_types.push(dup);
+        assert!(s.validate().is_err());
+
+        // duplicate region names.
+        let mut s = routed_sample();
+        s.market.regions[1].name = "us-east".into();
+        assert!(s.validate().is_err());
+
+        // arbitrage + finite capacity contradict each other.
+        let mut s = routed_sample();
+        s.market.routing = RoutingSpec::Arbitrage;
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("arbitrage"), "{err}");
+
+        // a present-but-malformed instance-type od_price errors instead of
+        // silently inheriting the region's price.
+        let mut j = routed_sample().to_json();
+        if let Json::Obj(top) = &mut j {
+            if let Some(Json::Obj(market)) = top.get_mut("market") {
+                if let Some(Json::Arr(regions)) = market.get_mut("regions") {
+                    if let Some(Json::Obj(r0)) = regions.get_mut(0) {
+                        if let Some(Json::Arr(its)) = r0.get_mut("instance_types") {
+                            if let Some(it) = its.get_mut(0) {
+                                it.set("od_price", Json::Str("0.9".into()));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let err = ScenarioSpec::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("od_price"), "{err}");
+
+        // bad instance-type model params are caught with the offer path.
+        let mut s = routed_sample();
+        s.market.regions[0].instance_types[0].price =
+            PriceSpec::Model(SpotModel::BoundedExp {
+                mean: 0.3,
+                lo: 0.9,
+                hi: 0.2,
+            });
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("burst"), "{err}");
     }
 
     #[test]

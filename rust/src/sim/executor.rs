@@ -19,9 +19,10 @@
 //! paper's "at every moment" semantics and guaranteeing deadlines are met
 //! exactly rather than overshot by quantization.
 
-use crate::market::{CostLedger, InstanceKind, PriceTrace, SelfOwnedPool};
+use crate::market::{CapacityLedger, CostLedger, InstanceKind, MarketView, PriceTrace, SelfOwnedPool};
 use crate::policy::baselines::greedy_must_switch;
 use crate::policy::dealloc::WindowAllocation;
+use crate::policy::routing::{route, RoutingPolicy};
 use crate::policy::selfowned::{naive_allocation, rule12};
 use crate::workload::ChainJob;
 
@@ -178,40 +179,105 @@ pub fn execute_task(
     out
 }
 
-/// Execute a whole chain job under a strategy.
+/// Spot instance units a task places on an offer: the whole `δ − r`
+/// request, rounded up (capacity is counted in whole instances).
+#[inline]
+pub fn spot_units(delta: f64, r: u32) -> u32 {
+    (delta - r as f64).max(0.0).ceil() as u32
+}
+
+/// Execute one task against a capacity-aware [`MarketView`]: route it,
+/// reserve its spot units on the chosen offer, and run the Def. 3.1/3.2
+/// walk against that offer's realized prices. Returns `(offer, outcome)`.
 ///
-/// `pool` supplies self-owned instances; reservations are made at each
-/// task's realized start over `[start, ς_i]` and are permanent for the
-/// window (the paper holds them through the task deadline).
-pub fn execute_chain(
-    job: &ChainJob,
-    strategy: &ChainStrategy,
-    trace: &PriceTrace,
-    pool: Option<&mut SelfOwnedPool>,
-    od_price: f64,
-) -> JobOutcome {
-    match strategy {
-        ChainStrategy::Windows {
-            windows,
-            selfowned,
-            bid,
-        } => execute_windows(job, windows, *selfowned, *bid, trace, pool, od_price),
-        ChainStrategy::Greedy { bid } => execute_greedy(job, *bid, trace, od_price),
+/// When no offer can hold the task's units the task runs all-on-demand on
+/// the decision's fallback offer (`bid = −∞` disables every spot slot, so
+/// the walk is the exact never-available case and the deadline still
+/// holds). A one-offer infinite-capacity view reduces bit-identically to
+/// [`execute_task`] on that offer's trace under every routing policy.
+pub fn execute_task_routed(
+    z: f64,
+    delta: f64,
+    start: f64,
+    deadline: f64,
+    r: u32,
+    bid: f64,
+    view: &MarketView,
+    cap: &mut CapacityLedger,
+    routing: RoutingPolicy,
+) -> (usize, TaskOutcome) {
+    let units = spot_units(delta, r);
+    let d = route(routing, view, cap, units, start, deadline);
+    let offer = &view.offers()[d.offer];
+    if d.spot_capacity {
+        let ok = cap.reserve(d.offer, units, start, deadline);
+        debug_assert!(ok, "router approved an offer the ledger refused");
+        (
+            d.offer,
+            execute_task(z, delta, start, deadline, r, bid, &offer.trace, offer.od_price),
+        )
+    } else {
+        (
+            d.offer,
+            execute_task(
+                z,
+                delta,
+                start,
+                deadline,
+                r,
+                f64::NEG_INFINITY,
+                &offer.trace,
+                offer.od_price,
+            ),
+        )
     }
 }
 
-fn execute_windows(
+/// A routed chain execution: the legacy outcome plus where each task ran.
+#[derive(Debug, Clone)]
+pub struct RoutedChainOutcome {
+    pub outcome: JobOutcome,
+    /// Offer index each task was placed on, in chain order.
+    pub task_offers: Vec<usize>,
+}
+
+/// Execute a whole chain job against a [`MarketView`] under windows +
+/// Def. 3.1/3.2 allocation, routing each task at its realized start.
+/// The one-offer infinite-capacity case reproduces [`execute_chain`] with
+/// a `Windows` strategy exactly (both run through the same
+/// [`execute_windows_with`] loop).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_chain_routed(
     job: &ChainJob,
     windows: &WindowAllocation,
     selfowned: SelfOwnedRule,
     bid: f64,
-    trace: &PriceTrace,
+    view: &MarketView,
+    cap: &mut CapacityLedger,
+    routing: RoutingPolicy,
+    pool: Option<&mut SelfOwnedPool>,
+) -> RoutedChainOutcome {
+    execute_windows_with(job, windows, selfowned, pool, |z, delta, start, deadline, r| {
+        execute_task_routed(z, delta, start, deadline, r, bid, view, cap, routing)
+    })
+}
+
+/// The shared windows-execution loop: deadline cursor, per-task self-owned
+/// grant, ledger charging — parameterized by how one task actually runs
+/// (legacy single-trace vs routed). Both public entry points are thin
+/// closures over this, so the grant/charging arithmetic cannot diverge
+/// between the paths whose bit-identity the tests pin.
+fn execute_windows_with(
+    job: &ChainJob,
+    windows: &WindowAllocation,
+    selfowned: SelfOwnedRule,
     mut pool: Option<&mut SelfOwnedPool>,
-    od_price: f64,
-) -> JobOutcome {
+    mut exec: impl FnMut(f64, f64, f64, f64, u32) -> (usize, TaskOutcome),
+) -> RoutedChainOutcome {
     assert_eq!(windows.sizes.len(), job.num_tasks());
     let mut ledger = CostLedger::new();
     let mut tasks = Vec::with_capacity(job.num_tasks());
+    let mut task_offers = Vec::with_capacity(job.num_tasks());
     let mut t = job.arrival;
     let mut deadline_cursor = job.arrival;
 
@@ -240,16 +306,7 @@ fn execute_windows(
             }
         };
 
-        let outcome = execute_task(
-            task.size,
-            task.parallelism,
-            start,
-            deadline,
-            r,
-            bid,
-            trace,
-            od_price,
-        );
+        let (offer, outcome) = exec(task.size, task.parallelism, start, deadline, r);
         ledger.charge(InstanceKind::SelfOwned, 1.0, outcome.so_work, 0.0);
         ledger.charge(InstanceKind::Spot, 1.0, outcome.spot_work, 0.0);
         ledger.cost_spot += outcome.spot_cost;
@@ -257,15 +314,59 @@ fn execute_windows(
         ledger.cost_ondemand += outcome.od_cost;
         t = outcome.finish;
         tasks.push(outcome);
+        task_offers.push(offer);
     }
 
-    JobOutcome {
-        job_id: job.id,
-        finish: t,
-        met_deadline: t <= job.deadline + 1e-6,
-        ledger,
-        tasks,
+    RoutedChainOutcome {
+        outcome: JobOutcome {
+            job_id: job.id,
+            finish: t,
+            met_deadline: t <= job.deadline + 1e-6,
+            ledger,
+            tasks,
+        },
+        task_offers,
     }
+}
+
+/// Execute a whole chain job under a strategy.
+///
+/// `pool` supplies self-owned instances; reservations are made at each
+/// task's realized start over `[start, ς_i]` and are permanent for the
+/// window (the paper holds them through the task deadline).
+pub fn execute_chain(
+    job: &ChainJob,
+    strategy: &ChainStrategy,
+    trace: &PriceTrace,
+    pool: Option<&mut SelfOwnedPool>,
+    od_price: f64,
+) -> JobOutcome {
+    match strategy {
+        ChainStrategy::Windows {
+            windows,
+            selfowned,
+            bid,
+        } => execute_windows(job, windows, *selfowned, *bid, trace, pool, od_price),
+        ChainStrategy::Greedy { bid } => execute_greedy(job, *bid, trace, od_price),
+    }
+}
+
+fn execute_windows(
+    job: &ChainJob,
+    windows: &WindowAllocation,
+    selfowned: SelfOwnedRule,
+    bid: f64,
+    trace: &PriceTrace,
+    pool: Option<&mut SelfOwnedPool>,
+    od_price: f64,
+) -> JobOutcome {
+    execute_windows_with(job, windows, selfowned, pool, |z, delta, start, deadline, r| {
+        (
+            0,
+            execute_task(z, delta, start, deadline, r, bid, trace, od_price),
+        )
+    })
+    .outcome
 }
 
 fn execute_greedy(job: &ChainJob, bid: f64, trace: &PriceTrace, od_price: f64) -> JobOutcome {
@@ -618,6 +719,125 @@ mod tests {
         assert_eq!(o.tasks[1].r, 2);
         assert!(o.ledger.work_selfowned > 0.0);
         assert!(o.met_deadline);
+    }
+
+    #[test]
+    fn one_offer_routed_chain_matches_legacy_exactly() {
+        // The acceptance contract: a one-offer infinite-capacity view must
+        // reproduce the single-trace executor bit-for-bit, under every
+        // routing policy.
+        use crate::market::{CapacityLedger, MarketView};
+        use crate::policy::routing::RoutingPolicy;
+        for_all(Config::cases(120).seed(24), |rng| {
+            let job = random_job(rng);
+            let windows = dealloc(&job, rng.uniform(0.2, 1.0));
+            let bid = rng.uniform(0.1, 0.4);
+            let trace = random_trace(rng, job.deadline + 1.0);
+            let legacy = execute_chain(
+                &job,
+                &ChainStrategy::Windows {
+                    windows: &windows,
+                    selfowned: SelfOwnedRule::None,
+                    bid,
+                },
+                &trace,
+                None,
+                1.0,
+            );
+            let view = MarketView::single(trace.clone(), 1.0);
+            for routing in [
+                RoutingPolicy::Home,
+                RoutingPolicy::CheapestFeasible,
+                RoutingPolicy::Spillover,
+            ] {
+                let mut cap = CapacityLedger::new(&view, job.deadline + 1.0);
+                let routed = execute_chain_routed(
+                    &job,
+                    &windows,
+                    SelfOwnedRule::None,
+                    bid,
+                    &view,
+                    &mut cap,
+                    routing,
+                    None,
+                );
+                if routed.task_offers.iter().any(|&o| o != 0) {
+                    return Err("one-offer view routed off offer 0".into());
+                }
+                if routed.outcome.cost() != legacy.cost()
+                    || routed.outcome.finish != legacy.finish
+                    || routed.outcome.ledger.work_spot != legacy.ledger.work_spot
+                    || routed.outcome.ledger.work_ondemand != legacy.ledger.work_ondemand
+                {
+                    return Err(format!(
+                        "{routing:?}: routed ({}, {}) != legacy ({}, {})",
+                        routed.outcome.cost(),
+                        routed.outcome.finish,
+                        legacy.cost(),
+                        legacy.finish
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn capacity_exhaustion_degrades_to_on_demand_not_deadline_miss() {
+        use crate::market::{CapacityLedger, MarketOffer, MarketView};
+        use crate::policy::routing::RoutingPolicy;
+        // One cheap always-available offer with room for a single task.
+        let n = (20.0 * SLOTS_PER_UNIT as f64) as usize + 2;
+        let view = MarketView::new(vec![MarketOffer {
+            region: "tiny".into(),
+            instance_type: "default".into(),
+            od_price: 1.0,
+            trace: PriceTrace::from_prices(vec![0.2; n], 1.0 / SLOTS_PER_UNIT as f64),
+            capacity: Some(2),
+        }])
+        .unwrap();
+        let mut cap = CapacityLedger::new(&view, 20.0);
+        // First task takes both units over [0, 4].
+        let (o1, out1) = execute_task_routed(2.0, 2.0, 0.0, 4.0, 0, 0.3, &view, &mut cap, RoutingPolicy::CheapestFeasible);
+        assert_eq!(o1, 0);
+        assert!(out1.spot_work > 0.0);
+        // Second concurrent task finds no spot capacity: all on-demand,
+        // deadline still met.
+        let (o2, out2) = execute_task_routed(2.0, 2.0, 0.0, 2.0, 0, 0.3, &view, &mut cap, RoutingPolicy::CheapestFeasible);
+        assert_eq!(o2, 0);
+        assert_eq!(out2.spot_work, 0.0);
+        assert!((out2.od_work - 2.0).abs() < 1e-9);
+        assert!(out2.finish <= 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn routed_task_charges_the_offer_it_ran_on() {
+        use crate::market::{CapacityLedger, MarketOffer, MarketView};
+        use crate::policy::routing::RoutingPolicy;
+        let n = (10.0 * SLOTS_PER_UNIT as f64) as usize + 2;
+        let dt = 1.0 / SLOTS_PER_UNIT as f64;
+        let view = MarketView::new(vec![
+            MarketOffer {
+                region: "pricey".into(),
+                instance_type: "default".into(),
+                od_price: 1.0,
+                trace: PriceTrace::from_prices(vec![0.8; n], dt),
+                capacity: None,
+            },
+            MarketOffer {
+                region: "cheap".into(),
+                instance_type: "default".into(),
+                od_price: 1.2,
+                trace: PriceTrace::from_prices(vec![0.2; n], dt),
+                capacity: None,
+            },
+        ])
+        .unwrap();
+        let mut cap = CapacityLedger::new(&view, 10.0);
+        let (offer, out) = execute_task_routed(2.0, 2.0, 0.0, 4.0, 0, 0.9, &view, &mut cap, RoutingPolicy::CheapestFeasible);
+        assert_eq!(offer, 1, "cheapest spot price wins");
+        // Cost reflects the cheap offer's 0.2 spot price, not 0.8.
+        assert!((out.spot_cost - 0.4).abs() < 1e-9, "cost {}", out.spot_cost);
     }
 
     fn random_job(rng: &mut Pcg32) -> ChainJob {

@@ -11,5 +11,8 @@ pub mod executor;
 pub mod horizon;
 pub mod cost;
 
-pub use executor::{execute_chain, ChainStrategy, JobOutcome, SelfOwnedRule, TaskOutcome};
+pub use executor::{
+    execute_chain, execute_chain_routed, execute_task_routed, spot_units, ChainStrategy,
+    JobOutcome, RoutedChainOutcome, SelfOwnedRule, TaskOutcome,
+};
 pub use horizon::{HorizonReport, HorizonRunner, StrategySpec};

@@ -263,3 +263,130 @@ fn prop_single_task_dag_equals_chain() {
         Ok(())
     });
 }
+
+/// ISSUE-3 satellite: the arbitrage composite's price is slot-wise ≤ every
+/// region's price (and its od price is the region minimum) on randomized
+/// traces — the "free placement lower bound" the routed worlds are
+/// measured against.
+#[test]
+fn prop_arbitrage_composite_is_slotwise_lower_bound() {
+    use dagcloud::market::multi::{arbitrage_composite, RegionMarket};
+    for_all(Config::cases(150).seed(1009), |rng| {
+        let n_regions = rng.range_inclusive(1, 5) as usize;
+        let slot_len = 1.0 / SLOTS_PER_UNIT as f64;
+        let regions: Vec<RegionMarket> = (0..n_regions)
+            .map(|k| {
+                let n = rng.range_inclusive(1, 200) as usize;
+                RegionMarket {
+                    name: format!("r{k}"),
+                    od_price: rng.uniform(0.5, 2.0),
+                    trace: PriceTrace::from_prices(
+                        (0..n).map(|_| rng.uniform(0.05, 1.5)).collect(),
+                        slot_len,
+                    ),
+                }
+            })
+            .collect();
+        let (composite, od) = arbitrage_composite(&regions).map_err(|e| e.to_string())?;
+        let max_slots = regions.iter().map(|r| r.trace.num_slots()).max().unwrap();
+        if composite.num_slots() != max_slots {
+            return Err(format!(
+                "composite spans {} slots, longest region {max_slots}",
+                composite.num_slots()
+            ));
+        }
+        for s in 0..max_slots {
+            let c = composite.price_of_slot(s);
+            for r in &regions {
+                // price_of_slot clamps past-the-end lookups, matching the
+                // composite's persist-last-price semantics.
+                if c > r.trace.price_of_slot(s) + 1e-15 {
+                    return Err(format!(
+                        "slot {s}: composite {c} above region '{}' price {}",
+                        r.name,
+                        r.trace.price_of_slot(s)
+                    ));
+                }
+            }
+            if !regions.iter().any(|r| r.trace.price_of_slot(s) == c) {
+                return Err(format!("slot {s}: composite {c} matches no region"));
+            }
+        }
+        let od_min = regions.iter().map(|r| r.od_price).fold(f64::INFINITY, f64::min);
+        if od != od_min {
+            return Err(format!("composite od {od} != region min {od_min}"));
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE-3 satellite: a one-offer `MarketView` reproduces the legacy
+/// single-trace executor cost exactly (1e-12) on randomized traces — the
+/// degenerate case of the capacity-aware refactor is the old code path.
+#[test]
+fn prop_one_offer_view_reproduces_legacy_executor_cost() {
+    use dagcloud::market::{CapacityLedger, MarketView};
+    use dagcloud::policy::routing::RoutingPolicy;
+    use dagcloud::sim::executor::execute_chain_routed;
+    for_all(Config::cases(150).seed(1010), |rng| {
+        let job = random_chain(rng, 8);
+        let beta = rng.uniform(0.1, 1.0);
+        let windows = dealloc(&job, beta);
+        let bid = rng.uniform(0.1, 0.4);
+        let od_price = rng.uniform(0.8, 1.5);
+        let horizon = job.deadline + 1.0;
+        let n = (horizon * SLOTS_PER_UNIT as f64) as usize + 2;
+        let trace = PriceTrace::from_prices(
+            (0..n)
+                .map(|_| {
+                    if rng.chance(0.5) {
+                        rng.uniform(0.1, 0.3)
+                    } else {
+                        rng.uniform(0.5, 1.2)
+                    }
+                })
+                .collect(),
+            1.0 / SLOTS_PER_UNIT as f64,
+        );
+        let legacy = execute_chain(
+            &job,
+            &ChainStrategy::Windows {
+                windows: &windows,
+                selfowned: SelfOwnedRule::None,
+                bid,
+            },
+            &trace,
+            None,
+            od_price,
+        );
+        let view = MarketView::single(trace.clone(), od_price);
+        for routing in [
+            RoutingPolicy::Home,
+            RoutingPolicy::CheapestFeasible,
+            RoutingPolicy::Spillover,
+        ] {
+            let mut cap = CapacityLedger::new(&view, horizon);
+            let routed = execute_chain_routed(
+                &job,
+                &windows,
+                SelfOwnedRule::None,
+                bid,
+                &view,
+                &mut cap,
+                routing,
+                None,
+            );
+            let (a, b) = (routed.outcome.cost(), legacy.cost());
+            if (a - b).abs() > 1e-12 * b.abs().max(1.0) {
+                return Err(format!("{routing:?}: routed cost {a} != legacy {b}"));
+            }
+            if routed.outcome.finish != legacy.finish {
+                return Err(format!(
+                    "{routing:?}: finish {} != {}",
+                    routed.outcome.finish, legacy.finish
+                ));
+            }
+        }
+        Ok(())
+    });
+}
