@@ -1,0 +1,103 @@
+//! Streaming-feed benches: what ingestion costs and what the incremental
+//! availability index saves.
+//!
+//! The headline numbers CI tracks (`BENCH_feed.json`):
+//!
+//! * `feed/ingest_events` — event → slot materialization throughput
+//!   through a bounded [`FeedBuffer`] (steady-state memory);
+//! * `feed/load_ec2_jsonl` — loader throughput on the JSON-lines dump
+//!   shape (parse + normalize);
+//! * `index/append_120_incremental` vs `index/rebuild_*` — the contract
+//!   the subsystem exists for: appending k slots costs O(k·L) no matter
+//!   how long the history is, while a batch rebuild pays O(S·L) again.
+//!   The rebuild is measured at two history lengths to show it scaling
+//!   with S while the incremental append does not.
+
+use dagcloud::feed::{load_events, FeedBuffer, FeedFilter, FeedFormat, PriceEvent};
+use dagcloud::market::{AvailabilityIndex, SLOTS_PER_UNIT};
+use dagcloud::policy::grid_b;
+use dagcloud::util::bench::Bencher;
+
+const DT: f64 = 1.0 / SLOTS_PER_UNIT as f64;
+
+/// Deterministic synthetic price path (no RNG dependency in benches).
+fn price(i: usize) -> f64 {
+    0.14 + 0.7 * (((i * 2_654_435_761) >> 7) & 0xff) as f64 / 255.0
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_feed ==\n");
+
+    // --- event ingestion through a bounded buffer ---
+    let events: Vec<PriceEvent> = (0..5_000)
+        .map(|i| PriceEvent {
+            time: (i as f64 + 1.0) * 0.25,
+            price: price(i),
+        })
+        .collect();
+    b.bench_throughput("feed/ingest_events_5k", events.len() as f64, "events/s", || {
+        let mut buf = FeedBuffer::new(DT).with_retention(4_096);
+        for &e in &events {
+            buf.push_event(e).unwrap();
+        }
+        buf.close();
+        buf.len_slots()
+    });
+
+    // --- loader throughput on the JSON-lines dump shape ---
+    let jsonl: String = (0..2_000)
+        .map(|i| {
+            format!(
+                "{{\"Timestamp\":\"2024-03-{:02}T{:02}:{:02}:00Z\",\"SpotPrice\":\"{:.4}\",\
+                 \"AvailabilityZone\":\"us-east-1a\",\"InstanceType\":\"m5.large\"}}\n",
+                1 + i / 96,
+                (i / 4) % 24,
+                (i % 4) * 15,
+                price(i)
+            )
+        })
+        .collect();
+    b.bench_throughput("feed/load_ec2_jsonl_2k", 2_000.0, "records/s", || {
+        load_events(&jsonl, FeedFormat::Ec2Json, &FeedFilter::default(), 1.0 / 3600.0, 1.0)
+            .unwrap()
+            .events
+            .len()
+    });
+
+    // --- incremental index append vs batch rebuild ---
+    // Contract: the incremental append's cost tracks the k new slots, the
+    // rebuild's cost tracks the whole history S.
+    let bids = grid_b();
+    let short: Vec<f64> = (0..6_000).map(price).collect();
+    let long: Vec<f64> = (0..48_000).map(price).collect();
+    let fresh: Vec<f64> = (0..120).map(|i| price(i + 48_000)).collect();
+
+    // Steady state: bounded retention keeps the buffer from growing across
+    // iterations while each append still does the full O(k·L) index work.
+    let mut live = FeedBuffer::with_bids(DT, bids.clone()).with_retention(64_000);
+    live.push_slots(&long).unwrap();
+    b.bench("index/append_120_incremental", || {
+        live.push_slots(&fresh).unwrap();
+        live.index().len_slots()
+    });
+    b.bench("index/rebuild_6k_slots", || {
+        AvailabilityIndex::build(&short, bids.clone()).bids().len()
+    });
+    b.bench("index/rebuild_48k_slots", || {
+        AvailabilityIndex::build(&long, bids.clone()).bids().len()
+    });
+
+    let incr = b.results.iter().find(|r| r.name.contains("incremental")).unwrap().mean_ns;
+    let rebuild = b.results.iter().find(|r| r.name.contains("48k")).unwrap().mean_ns;
+    println!(
+        "\nappend 120 slots: incremental {:.1} µs vs 48k-history rebuild {:.1} µs ({:.0}x)",
+        incr / 1e3,
+        rebuild / 1e3,
+        rebuild / incr.max(1.0)
+    );
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_feed.json").expect("write bench json");
+    println!("\nwritten results/bench_feed.json");
+}

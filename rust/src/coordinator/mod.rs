@@ -13,10 +13,12 @@
 pub mod config;
 pub mod exec_pool;
 pub mod metrics;
+pub mod online;
 
 pub use config::{Config, OfferConfig};
 pub use exec_pool::parallel_map;
 pub use metrics::Metrics;
+pub use online::{tola_run_online, OnlineOptions, OnlineReport, OnlineSnapshot};
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -447,7 +449,7 @@ pub fn tola_run_view(
     }
 }
 
-fn spec_bid(spec: &CfSpec) -> f64 {
+pub(crate) fn spec_bid(spec: &CfSpec) -> f64 {
     match spec {
         CfSpec::Proposed(p) | CfSpec::DeallocNaive(p) => p.bid,
         CfSpec::EvenNaive { bid } => *bid,

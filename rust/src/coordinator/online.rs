@@ -1,0 +1,557 @@
+//! The long-running online coordinator loop: TOLA against a streaming
+//! price feed.
+//!
+//! [`tola_run_online`] is the feed-driven counterpart of
+//! [`super::tola_run_view`]. The event loop is the same fused
+//! Algorithm 2 + Algorithm 4 — same heap order, same RNG stream, same
+//! retire batching, same weight updates — with one added rule: **an event
+//! may only be resolved once every feed has ingested the prices its
+//! resolution reads**. Before each popped event the loop computes the slot
+//! frontier that event's execution (or counterfactual sweep) will touch,
+//! drains feed events until the [`crate::feed::FeedMux`] covers it, and
+//! fails hard — a *lookahead error*, not a clamp — if the feed ends first.
+//! Scheduling *decisions* (policy sampling, deadline allocation, the
+//! self-owned grant) happen at arrival and read no prices at all.
+//!
+//! Because gating only ever interposes ingestion between events — never
+//! reorders them, never touches the RNG — a run over a fully pre-loaded
+//! feed is **bit-identical** to the batch `tola_run_view` on the same
+//! trace (the streaming integration tests pin every report field).
+//!
+//! Between reporting windows the loop emits [`OnlineSnapshot`]s (realized
+//! cost, regret vs the Prop. B.1 bound via
+//! [`crate::learning::regret::RegretTracker::snapshot`], weight mass), so
+//! a long-running process can be observed without waiting for the stream
+//! to end.
+
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::feed::FeedMux;
+use crate::learning::counterfactual::{CfSpec, CounterfactualJob, S_MAX};
+use crate::learning::regret::RegretTracker;
+use crate::learning::{sweep, Tola};
+use crate::market::{CapacityLedger, CostLedger, InstanceKind, MarketView, SelfOwnedPool, SLOTS_PER_UNIT};
+use crate::policy::baselines::even_windows;
+use crate::policy::dealloc::{dealloc, windows_to_deadlines};
+use crate::policy::routing::RoutingPolicy;
+use crate::policy::selfowned::{naive_allocation, rule12};
+use crate::sim::executor::{execute_task, execute_task_routed};
+use crate::util::rng::Pcg32;
+use crate::workload::ChainJob;
+
+use super::{evaluate_specs, spec_bid, Evaluator, LearningReport};
+
+/// Options for an online run.
+#[derive(Debug, Clone)]
+pub struct OnlineOptions {
+    pub routing: RoutingPolicy,
+    pub pool_capacity: u32,
+    pub seed: u64,
+    /// Emit an [`OnlineSnapshot`] every this many retired jobs
+    /// (0 = final report only).
+    pub snapshot_every: usize,
+}
+
+impl Default for OnlineOptions {
+    fn default() -> Self {
+        OnlineOptions {
+            routing: RoutingPolicy::Home,
+            pool_capacity: 0,
+            seed: 7,
+            snapshot_every: 0,
+        }
+    }
+}
+
+/// Point-in-time progress of a streaming run.
+#[derive(Debug, Clone)]
+pub struct OnlineSnapshot {
+    /// Jobs retired so far.
+    pub jobs: u64,
+    /// Simulated time of the retirement that triggered the snapshot.
+    pub sim_time: f64,
+    /// Shared feed frontier at the snapshot (slots ingested everywhere).
+    pub ingested_slots: usize,
+    /// Realized average unit cost over the retired jobs so far.
+    pub average_unit_cost: f64,
+    pub average_regret: f64,
+    pub regret_bound: f64,
+    /// Current maximum policy weight (convergence signal).
+    pub max_weight: f64,
+    /// Index of the currently most-probable policy.
+    pub best_policy: usize,
+}
+
+/// Result of an online run: the batch-shaped final report plus the
+/// streaming trajectory.
+#[derive(Debug, Clone)]
+pub struct OnlineReport {
+    pub report: LearningReport,
+    pub snapshots: Vec<OnlineSnapshot>,
+    /// Final shared feed frontier (slots ingested on every feed).
+    pub ingested_slots: usize,
+}
+
+/// The ingested market: a mux plus its latest materialized view. The view
+/// is refreshed lazily — only when an event needs slots past what the
+/// current materialization covers — so a fully pre-loaded feed
+/// materializes exactly once.
+struct LiveMarket {
+    mux: FeedMux,
+    view: MarketView,
+    view_slots: usize,
+}
+
+impl LiveMarket {
+    fn new(mut mux: FeedMux) -> Result<LiveMarket> {
+        if !mux.advance_to_slot(1)? {
+            bail!("feed delivered no price slots at all");
+        }
+        let view = mux.view()?;
+        let view_slots = mux.frontier_slot();
+        Ok(LiveMarket {
+            mux,
+            view,
+            view_slots,
+        })
+    }
+
+    /// Make the view cover `need` slots, ingesting as required. The
+    /// lookahead guard lives here: an event that needs prices the feed has
+    /// not delivered is a hard error.
+    ///
+    /// Each view refresh clones the ingested history (traces are
+    /// immutable), so ingestion is opportunistically advanced to double
+    /// the current frontier whenever it must grow at all: refresh count is
+    /// O(log S) and total clone cost O(S log S) instead of O(events · S).
+    /// Ingesting *queued feed data* ahead of `need` is not lookahead —
+    /// only resolving an event whose reads outrun the feed is.
+    fn ensure_slots(&mut self, need: usize, at: f64) -> Result<()> {
+        if need > self.mux.frontier_slot() {
+            let target = need.max(self.mux.frontier_slot().saturating_mul(2));
+            self.mux.advance_to_slot(target)?;
+            if self.mux.frontier_slot() < need {
+                let (label, have) = self.mux.laggard();
+                let dt = self.mux.slot_len();
+                bail!(
+                    "lookahead at t={at:.4}: resolving this event reads prices through \
+                     slot {need} (t={:.4}) but feed '{label}' ends after {have} slots \
+                     (t={:.4}); a streaming run never peeks past the ingested frontier",
+                    need as f64 * dt,
+                    have as f64 * dt
+                );
+            }
+        }
+        if need > self.view_slots {
+            self.view = self.mux.view()?;
+            self.view_slots = self.mux.frontier_slot();
+        }
+        Ok(())
+    }
+}
+
+/// Slots that must be ingested so every price read strictly before time
+/// `t` is determined (the slot containing `t − ε`).
+#[inline]
+fn slots_through(t: f64, dt: f64) -> usize {
+    (t / dt).ceil().max(0.0) as usize
+}
+
+/// Slots that must be ingested so the slot *containing* `t` is determined
+/// (a read exactly at `t`, e.g. the router's `price_at(start)`).
+#[inline]
+fn slots_covering(t: f64, dt: f64) -> usize {
+    (t / dt).floor().max(0.0) as usize + 1
+}
+
+#[derive(Debug, PartialEq)]
+enum EventKind {
+    TaskStart(usize, usize),
+    Retire(usize),
+}
+
+#[derive(Debug, PartialEq)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl Eq for Event {}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct JobState {
+    spec: CfSpec,
+    deadlines: Vec<f64>,
+    cost: f64,
+    done: bool,
+}
+
+/// Run TOLA online against a streaming market feed.
+///
+/// `jobs` is the arriving stream (arrival-ordered, like every coordinator
+/// entry point); `feed` supplies prices incrementally. Each job is
+/// scheduled using only already-ingested prices; task outcomes and
+/// counterfactual sweeps resolve once the feed covers their windows, and
+/// the run fails with a lookahead error if the feed ends while resolutions
+/// are still pending — jobs are never silently priced against data the
+/// stream did not deliver.
+///
+/// Over a fully pre-loaded feed ([`FeedMux::from_traces`]) the run is
+/// bit-identical to [`super::tola_run_view`] on the same market.
+pub fn tola_run_online(
+    jobs: &[ChainJob],
+    specs: &[CfSpec],
+    feed: FeedMux,
+    opts: &OnlineOptions,
+    evaluator: &Evaluator,
+) -> Result<OnlineReport> {
+    ensure!(!jobs.is_empty() && !specs.is_empty(), "online run needs jobs and specs");
+    let degenerate = feed.is_degenerate();
+    let dt = feed.slot_len();
+    let capacities = feed.capacities();
+    let n_offers = feed.len();
+    let routing = opts.routing;
+    let mut market = LiveMarket::new(feed)?;
+    let od_price_home = market.view.home().od_price;
+
+    // Identical sizing to the batch loop: lane/pool clamping near the
+    // horizon must match for bit-identity.
+    let horizon = jobs.iter().map(|j| j.deadline).fold(1.0, f64::max);
+    let d_max = jobs.iter().map(|j| j.window()).fold(1.0, f64::max);
+    let mut capacity = CapacityLedger::from_capacities(&capacities, dt, horizon + d_max + 1.0);
+    let mut offer_work = vec![0.0f64; n_offers];
+    let mut pool = (opts.pool_capacity > 0)
+        .then(|| SelfOwnedPool::new(opts.pool_capacity, horizon, 1.0 / SLOTS_PER_UNIT as f64));
+    let has_pool = pool.is_some();
+
+    let mut tola = Tola::new(specs.len(), d_max);
+    let mut regret = RegretTracker::new(specs.len(), d_max);
+    let mut rng = Pcg32::new(opts.seed ^ 0x701A);
+    let mut ledger = CostLedger::new();
+    let mut weight_trajectory = Vec::new();
+    let weight_sample_every = (jobs.len() / 200).max(1);
+
+    let mut snapshots = Vec::new();
+    let mut next_snapshot = if opts.snapshot_every > 0 {
+        opts.snapshot_every as u64
+    } else {
+        u64::MAX
+    };
+    let mut retired_workload = 0.0f64;
+
+    let mut heap = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut states: Vec<Option<JobState>> = jobs.iter().map(|_| None).collect();
+    for (idx, job) in jobs.iter().enumerate() {
+        heap.push(Event {
+            time: job.arrival,
+            seq,
+            kind: EventKind::TaskStart(idx, 0),
+        });
+        seq += 1;
+        heap.push(Event {
+            time: job.deadline,
+            seq,
+            kind: EventKind::Retire(idx),
+        });
+        seq += 1;
+    }
+
+    while let Some(Event { time, kind, .. }) = heap.pop() {
+        match kind {
+            EventKind::TaskStart(ji, ti) => {
+                let job = &jobs[ji];
+                if ti == 0 {
+                    // Arrival decisions (Algorithm 4 lines 8–9 + Algorithm
+                    // 2 lines 1–5): policy sample + deadline allocation.
+                    // No prices read — this is what "schedule using only
+                    // already-ingested prices" means for arrivals.
+                    let pick = tola.pick(&mut rng);
+                    let spec = specs[pick];
+                    let windows = match spec {
+                        CfSpec::Proposed(p) => dealloc(job, p.dealloc_beta(has_pool)),
+                        CfSpec::EvenNaive { .. } => even_windows(job),
+                        CfSpec::DeallocNaive(p) => dealloc(job, p.beta),
+                    };
+                    states[ji] = Some(JobState {
+                        spec,
+                        deadlines: windows_to_deadlines(job, &windows),
+                        cost: 0.0,
+                        done: false,
+                    });
+                }
+                if ti >= job.num_tasks() {
+                    let st = states[ji].as_mut().expect("state set at arrival");
+                    st.done = true;
+                    continue;
+                }
+                let (spec, deadline) = {
+                    let st = states[ji].as_ref().expect("state set at arrival");
+                    (st.spec, st.deadlines[ti].max(time))
+                };
+                let task = &job.tasks[ti];
+                let start = time.min(deadline);
+                let hat_s = (deadline - start).max(1e-12);
+                let (bid, r) = match (&mut pool, spec) {
+                    (None, s) => (spec_bid(&s), 0),
+                    (Some(pl), CfSpec::Proposed(p)) => {
+                        let r = match p.beta0 {
+                            Some(beta0) => {
+                                let n = pl.available_over(start, deadline);
+                                let r =
+                                    rule12(task.size, task.parallelism, hat_s, beta0, n);
+                                pl.reserve(r, start, deadline);
+                                r
+                            }
+                            None => 0,
+                        };
+                        (p.bid, r)
+                    }
+                    (Some(pl), s) => {
+                        let n = pl.available_over(start, deadline);
+                        let r = naive_allocation(task.parallelism, n);
+                        pl.reserve(r, start, deadline);
+                        (spec_bid(&s), r)
+                    }
+                };
+                // Gate: the execution walk reads prices over
+                // [start, deadline) — and, through its `t + ε` slot probe,
+                // may touch the slot *containing* the deadline — while a
+                // routed placement additionally reads the price at
+                // `start`. `start == deadline` reads nothing (immediate
+                // turning point).
+                let need = if start < deadline {
+                    slots_covering(deadline, dt)
+                } else if !degenerate {
+                    slots_covering(start, dt)
+                } else {
+                    0
+                };
+                if need > 0 {
+                    market.ensure_slots(need, time)?;
+                }
+                let (offer, out) = if degenerate {
+                    (
+                        0,
+                        execute_task(
+                            task.size,
+                            task.parallelism,
+                            start,
+                            deadline,
+                            r,
+                            bid,
+                            &market.view.home().trace,
+                            od_price_home,
+                        ),
+                    )
+                } else {
+                    execute_task_routed(
+                        task.size,
+                        task.parallelism,
+                        start,
+                        deadline,
+                        r,
+                        bid,
+                        &market.view,
+                        &mut capacity,
+                        routing,
+                    )
+                };
+                offer_work[offer] += out.spot_work + out.od_work;
+                ledger.charge(InstanceKind::SelfOwned, 1.0, out.so_work, 0.0);
+                ledger.charge(InstanceKind::Spot, 1.0, out.spot_work, 0.0);
+                ledger.cost_spot += out.spot_cost;
+                ledger.charge(InstanceKind::OnDemand, 1.0, out.od_work, 0.0);
+                ledger.cost_ondemand += out.od_cost;
+                states[ji].as_mut().unwrap().cost += out.spot_cost + out.od_cost;
+                heap.push(Event {
+                    time: out.finish,
+                    seq,
+                    kind: EventKind::TaskStart(ji, ti + 1),
+                });
+                seq += 1;
+            }
+            EventKind::Retire(ji) => {
+                // Identical retire batching to the batch loop (the drain
+                // order is what makes the two bit-identical); the
+                // counterfactual sweeps resample each job's whole window,
+                // so gate on the latest deadline in the batch before
+                // marshaling.
+                let mut batch: Vec<(f64, usize)> = vec![(time, ji)];
+                while matches!(
+                    heap.peek().map(|e| &e.kind),
+                    Some(EventKind::Retire(_))
+                ) {
+                    if let Some(Event { time: t2, kind: EventKind::Retire(j2), .. }) =
+                        heap.pop()
+                    {
+                        batch.push((t2, j2));
+                    }
+                }
+                let latest = batch.iter().map(|&(t, _)| t).fold(time, f64::max);
+                market.ensure_slots(slots_through(latest, dt), time)?;
+                let trace = &market.view.home().trace;
+                let all_costs: Vec<Vec<f64>> = if degenerate {
+                    let cfs: Vec<CounterfactualJob> = batch
+                        .iter()
+                        .map(|&(_, ji)| {
+                            let job = &jobs[ji];
+                            let (prices, dt) =
+                                trace.resample_window(job.arrival, job.deadline, S_MAX);
+                            let navail: Vec<f64> = match &pool {
+                                Some(pl) => (0..prices.len())
+                                    .map(|k| {
+                                        let t0 = job.arrival + k as f64 * dt;
+                                        pl.available_at(t0.min(horizon)) as f64
+                                    })
+                                    .collect(),
+                                None => vec![0.0; prices.len()],
+                            };
+                            CounterfactualJob::from_job(job, prices, dt, navail, od_price_home)
+                        })
+                        .collect();
+                    match evaluator {
+                        Evaluator::Native { threads } if cfs.len() > 1 => {
+                            sweep::sweep_batch_costs(&cfs, specs, has_pool, *threads)
+                        }
+                        _ => cfs
+                            .iter()
+                            .map(|cf| evaluate_specs(cf, specs, has_pool, evaluator))
+                            .collect(),
+                    }
+                } else {
+                    let sweep_offers = match routing {
+                        RoutingPolicy::Home => &market.view.offers()[..1],
+                        _ => market.view.offers(),
+                    };
+                    let cfs: Vec<Vec<CounterfactualJob>> = batch
+                        .iter()
+                        .map(|&(_, ji)| {
+                            let job = &jobs[ji];
+                            let (home_prices, dt) =
+                                trace.resample_window(job.arrival, job.deadline, S_MAX);
+                            let navail: Vec<f64> = match &pool {
+                                Some(pl) => (0..home_prices.len())
+                                    .map(|k| {
+                                        let t0 = job.arrival + k as f64 * dt;
+                                        pl.available_at(t0.min(horizon)) as f64
+                                    })
+                                    .collect(),
+                                None => vec![0.0; home_prices.len()],
+                            };
+                            sweep_offers
+                                .iter()
+                                .enumerate()
+                                .map(|(k, o)| {
+                                    let prices = if k == 0 {
+                                        home_prices.clone()
+                                    } else {
+                                        o.trace
+                                            .resample_window(job.arrival, job.deadline, S_MAX)
+                                            .0
+                                    };
+                                    CounterfactualJob::from_job(
+                                        job,
+                                        prices,
+                                        dt,
+                                        navail.clone(),
+                                        o.od_price,
+                                    )
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    let threads = match evaluator {
+                        Evaluator::Native { threads } => *threads,
+                        Evaluator::Pjrt(_) => std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1),
+                    };
+                    sweep::sweep_batch_costs_multi(&cfs, specs, has_pool, threads)
+                };
+                for (&(t, ji), costs) in batch.iter().zip(&all_costs) {
+                    let realized = states[ji].as_ref().map(|s| s.cost).unwrap_or(0.0);
+                    tola.update(costs, t.max(d_max * 1.001));
+                    regret.record(realized, costs);
+                    retired_workload += jobs[ji].total_work();
+                    if regret.jobs() % weight_sample_every as u64 == 0 {
+                        let wmax = tola
+                            .weights()
+                            .iter()
+                            .cloned()
+                            .fold(0.0f64, f64::max);
+                        weight_trajectory.push(wmax);
+                    }
+                    if regret.jobs() >= next_snapshot {
+                        let snap = regret.snapshot(0.05);
+                        snapshots.push(OnlineSnapshot {
+                            jobs: snap.jobs,
+                            sim_time: t,
+                            ingested_slots: market.mux.frontier_slot(),
+                            average_unit_cost: if retired_workload > 0.0 {
+                                ledger.total_cost() / retired_workload
+                            } else {
+                                0.0
+                            },
+                            average_regret: snap.average_regret,
+                            regret_bound: snap.bound,
+                            max_weight: tola
+                                .weights()
+                                .iter()
+                                .cloned()
+                                .fold(0.0f64, f64::max),
+                            best_policy: tola.best(),
+                        });
+                        next_snapshot =
+                            next_snapshot.saturating_add(opts.snapshot_every as u64);
+                    }
+                }
+            }
+        }
+    }
+
+    let total_workload: f64 = jobs.iter().map(|j| j.total_work()).sum();
+    let pool_utilization = if opts.pool_capacity > 0 {
+        ledger.work_selfowned / (opts.pool_capacity as f64 * horizon)
+    } else {
+        0.0
+    };
+    let report = LearningReport {
+        jobs: jobs.len(),
+        average_unit_cost: if total_workload > 0.0 {
+            ledger.total_cost() / total_workload
+        } else {
+            0.0
+        },
+        total_workload,
+        best_policy: tola.best(),
+        final_weights: tola.weights().to_vec(),
+        average_regret: regret.average_regret(),
+        regret_bound: regret.bound(0.05),
+        pool_utilization,
+        weight_trajectory,
+        offer_work,
+        ledger,
+    };
+    Ok(OnlineReport {
+        ingested_slots: market.mux.frontier_slot(),
+        snapshots,
+        report,
+    })
+}

@@ -5,6 +5,7 @@ pub mod tables;
 pub mod figures;
 pub mod perf;
 pub mod scenarios;
+pub mod feed;
 
 use crate::util::cli::Args;
 
@@ -25,6 +26,9 @@ COMMANDS
               vs batched; EXPERIMENTS.md §Perf)
   scenarios   Run the scenario registry (or a subset) across seeds and emit
               results/scenarios.json (see EXPERIMENTS.md §Scenarios)
+  feed        Stream a real price dump through the online coordinator loop
+              (ingestion stats, per-window snapshots, results/feed_run.json;
+              see EXPERIMENTS.md §Streaming)
   run         One TOLA learning run with progress output
   all         Run every table (tables 2–6) and figures
 
@@ -45,6 +49,19 @@ SCENARIO OPTIONS (`repro scenarios`; `--scenario` also configures `run`)
   --spec FILE     append a custom scenario spec (JSON) to the batch
   --smoke         reduced-size deterministic runs for CI (small chains,
                   48 jobs unless --jobs overrides)
+
+FEED OPTIONS (`repro feed`)
+  --trace PATH    price dump to stream (required)
+  --format F      ec2-json | csv (default: inferred from the extension)
+  --scenario NAME take workload/pool/policy set from a registry world
+                  (the market always comes from the feed)
+  --time-scale X  timestamps -> simulated units (default: 1/3600 when the
+                  dump carries ISO epoch-second timestamps, 1.0 for
+                  numeric time,price rows)
+  --price-scale X price normalization vs on-demand (default 1.0)
+  --az NAME       restrict a multi-series dump to one availability zone
+  --instance-type NAME  restrict to one instance type
+  --snapshot-every N    snapshot cadence in retired jobs (default ~10/run)
 ";
 
 /// CLI dispatch for `repro`.
@@ -79,6 +96,38 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
         "table6" => tables::run_table6(&cfg, &out_dir)?,
         "figures" => figures::run_all(&out_dir)?,
         "sweep" => perf::run_sweep_bench(&cfg, &out_dir)?,
+        "feed" => {
+            let trace_path = args
+                .get("trace")
+                .ok_or_else(|| anyhow::anyhow!("`repro feed` needs --trace PATH"))?
+                .to_string();
+            let format = args
+                .get("format")
+                .map(crate::feed::FeedFormat::from_str)
+                .transpose()?;
+            let time_scale = args
+                .get("time-scale")
+                .is_some()
+                .then(|| args.get_f64("time-scale", 1.0))
+                .transpose()?;
+            let snapshot_every = args
+                .get("snapshot-every")
+                .is_some()
+                .then(|| args.get_u64("snapshot-every", 0).map(|v| v as usize))
+                .transpose()?;
+            let opts = feed::FeedCliOptions {
+                trace_path,
+                format,
+                scenario: args.get("scenario").map(String::from),
+                time_scale,
+                price_scale: args.get_f64("price-scale", 1.0)?,
+                az: args.get("az").map(String::from),
+                instance_type: args.get("instance-type").map(String::from),
+                snapshot_every,
+                jobs_override: args.get("jobs").is_some().then_some(cfg.jobs),
+            };
+            feed::run_feed(&cfg, &opts, &out_dir)?
+        }
         "scenarios" if args.flag("list") => scenarios::list_scenarios(),
         "scenarios" => {
             let names = args.get("scenario").map(|s| {

@@ -1,0 +1,364 @@
+//! Append-only, slot-aligned price ingestion.
+//!
+//! A [`FeedBuffer`] is the streaming counterpart of a
+//! [`crate::market::PriceTrace`]: price *events* (strictly monotone
+//! timestamps) arrive one at a time and are materialized onto the standard
+//! slot grid with exactly the step-function semantics the batch CSV loader
+//! uses — a slot takes the last observation at or before its midpoint — so
+//! a buffer fed a trace's observations and then [`FeedBuffer::close`]d
+//! reproduces [`crate::market::replay::trace_from_csv`]'s slot prices
+//! bit for bit.
+//!
+//! The buffer feeds an [`IncrementalAvailabilityIndex`] as slots
+//! materialize (O(k·L) per k new slots, never an O(S·L) rebuild) and hands
+//! consumers a *prefix* view of the ingested history. Reading a slot at or
+//! past the ingested frontier is a hard error, not a clamp: the online
+//! coordinator leans on this to prove it never peeks at prices the feed
+//! has not delivered yet.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::market::PriceTrace;
+
+use super::index::IncrementalAvailabilityIndex;
+
+/// One price observation: the price takes effect at `time` and holds until
+/// the next event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PriceEvent {
+    pub time: f64,
+    pub price: f64,
+}
+
+/// Append-only slot-aligned price buffer with an incremental availability
+/// index.
+#[derive(Debug, Clone)]
+pub struct FeedBuffer {
+    slot_len: f64,
+    /// Retained slot prices; absolute slot `base_slot + i` has price
+    /// `prices[i]`.
+    prices: Vec<f64>,
+    base_slot: usize,
+    index: IncrementalAvailabilityIndex,
+    /// Maximum retained slots; `None` = unbounded (required for trace
+    /// materialization).
+    retention: Option<usize>,
+    /// Timestamp of the latest accepted event (events must be strictly
+    /// after it); direct slot appends advance it to the grid watermark.
+    last_event: Option<f64>,
+    /// Price in force after the latest event (extends forward as slots
+    /// materialize).
+    cur_price: f64,
+    /// No further events accepted once the final observation's slot has
+    /// been committed.
+    closed: bool,
+}
+
+impl FeedBuffer {
+    /// Empty buffer on a slot grid, indexing the §6.1 bid grid (the bids
+    /// the regret and availability paths actually query).
+    pub fn new(slot_len: f64) -> FeedBuffer {
+        FeedBuffer::with_bids(slot_len, crate::policy::grid_b())
+    }
+
+    /// Empty buffer indexing a caller-chosen bid set.
+    pub fn with_bids(slot_len: f64, bids: Vec<f64>) -> FeedBuffer {
+        assert!(slot_len > 0.0);
+        FeedBuffer {
+            slot_len,
+            prices: Vec::new(),
+            base_slot: 0,
+            index: IncrementalAvailabilityIndex::new(bids),
+            retention: None,
+            last_event: None,
+            cur_price: f64::NAN,
+            closed: false,
+        }
+    }
+
+    /// Bound retained slot history (the index is bounded alongside).
+    /// A bounded buffer cannot materialize a [`PriceTrace`].
+    pub fn with_retention(mut self, max_slots: usize) -> FeedBuffer {
+        assert!(max_slots > 0, "retention of zero slots retains nothing");
+        self.retention = Some(max_slots);
+        self.index = self.index.with_retention(max_slots);
+        self
+    }
+
+    /// Preloaded buffer over an already-realized trace (every slot
+    /// ingested, feed closed) — what "replay a batch trace through the
+    /// online path" means. No bid index: replay consumers read prices
+    /// through the trace prefix (use [`FeedBuffer::with_bids`] +
+    /// [`FeedBuffer::push_slots`] for an indexed preload).
+    pub fn from_trace(trace: &PriceTrace) -> FeedBuffer {
+        let mut b = FeedBuffer::with_bids(trace.slot_len(), Vec::new());
+        let prices: Vec<f64> = (0..trace.num_slots()).map(|s| trace.price_of_slot(s)).collect();
+        b.push_slots(&prices).expect("trace prices are valid slot prices");
+        b.closed = true;
+        b
+    }
+
+    pub fn slot_len(&self) -> f64 {
+        self.slot_len
+    }
+
+    /// Total determined slots since the stream origin (absolute frontier).
+    pub fn len_slots(&self) -> usize {
+        self.base_slot + self.prices.len()
+    }
+
+    /// First retained absolute slot (0 until bounded retention evicts).
+    pub fn base_slot(&self) -> usize {
+        self.base_slot
+    }
+
+    /// Prices are known for simulated time `[0, watermark_time())`.
+    pub fn watermark_time(&self) -> f64 {
+        self.len_slots() as f64 * self.slot_len
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// The incremental per-bid availability index over the ingested slots.
+    pub fn index(&self) -> &IncrementalAvailabilityIndex {
+        &self.index
+    }
+
+    /// Accept one price event. Timestamps must be strictly monotone —
+    /// loaders normalize out-of-order dumps *before* the buffer, so a
+    /// violation here is data corruption, not a reorder to paper over.
+    /// Returns the number of newly determined slots.
+    pub fn push_event(&mut self, event: PriceEvent) -> Result<usize> {
+        let PriceEvent { time, price } = event;
+        ensure!(!self.closed, "feed buffer is closed; no further events");
+        ensure!(
+            time.is_finite() && time >= 0.0,
+            "feed event at t={time}: timestamps must be finite and non-negative"
+        );
+        ensure!(
+            price.is_finite() && price > 0.0,
+            "feed event at t={time}: price {price} must be finite and positive"
+        );
+        if let Some(last) = self.last_event {
+            ensure!(
+                time > last,
+                "feed event at t={time} is not strictly after t={last}: \
+                 normalize (sort + dedupe) the source before ingestion"
+            );
+        }
+        // Slots whose midpoint is before `time` are now final: no later
+        // event (strictly after `time`) can be their last observation at or
+        // before the midpoint. The first event's price anchors the grid
+        // origin (loaders shift the first observation to t = 0).
+        let fill = if self.last_event.is_none() { price } else { self.cur_price };
+        let determined = ((time / self.slot_len) - 0.5).ceil().max(0.0) as usize;
+        let added = self.extend_to(determined, fill);
+        self.cur_price = price;
+        self.last_event = Some(time);
+        Ok(added)
+    }
+
+    /// Append already-slot-aligned prices directly (a feed that is on the
+    /// grid natively, or a preloaded trace). Advances the event clock to
+    /// the new watermark so interleaved events stay monotone.
+    pub fn push_slots(&mut self, prices: &[f64]) -> Result<()> {
+        ensure!(!self.closed, "feed buffer is closed; no further slots");
+        if prices.is_empty() {
+            return Ok(());
+        }
+        for &p in prices {
+            ensure!(
+                p > 0.0 && !p.is_nan(),
+                "feed slot price {p} must be positive (use +inf for never-available)"
+            );
+        }
+        for &p in prices {
+            self.prices.push(p);
+            self.index.append_one(p);
+        }
+        if let Some(&last) = prices.last() {
+            self.cur_price = last;
+        }
+        self.maybe_evict();
+        self.last_event = Some(self.watermark_time().max(self.last_event.unwrap_or(0.0)));
+        Ok(())
+    }
+
+    /// Commit the final observation's own slot (the batch CSV loader's
+    /// `n = ceil(t_last/dt + 0.5)` rule) and refuse further events.
+    /// Returns the number of newly determined slots.
+    pub fn close(&mut self) -> usize {
+        if self.closed {
+            return 0;
+        }
+        self.closed = true;
+        match self.last_event {
+            None => 0,
+            Some(t) => {
+                let target = ((t / self.slot_len + 0.5).ceil() as usize).max(1);
+                self.extend_to(target, self.cur_price)
+            }
+        }
+    }
+
+    fn extend_to(&mut self, target_slots: usize, fill: f64) -> usize {
+        let have = self.len_slots();
+        if target_slots <= have {
+            return 0;
+        }
+        let add = target_slots - have;
+        for _ in 0..add {
+            self.prices.push(fill);
+            self.index.append_one(fill);
+        }
+        self.maybe_evict();
+        add
+    }
+
+    fn maybe_evict(&mut self) {
+        let Some(max) = self.retention else { return };
+        if self.prices.len() > max + max / 2 {
+            let drop = self.prices.len() - max;
+            self.prices.drain(..drop);
+            self.base_slot += drop;
+        }
+    }
+
+    /// Price of an *ingested* absolute slot. Reading at or past the
+    /// frontier is the lookahead hard error the online coordinator relies
+    /// on; reading before the retained window is an eviction error.
+    pub fn price_of_slot(&self, slot: usize) -> Result<f64> {
+        if slot < self.base_slot {
+            bail!(
+                "feed slot {slot} evicted (retention starts at slot {})",
+                self.base_slot
+            );
+        }
+        if slot >= self.len_slots() {
+            bail!(
+                "lookahead: slot {slot} is past the ingested frontier \
+                 ({} slots, t < {:.4})",
+                self.len_slots(),
+                self.watermark_time()
+            );
+        }
+        Ok(self.prices[slot - self.base_slot])
+    }
+
+    /// Materialize the ingested prefix as an immutable [`PriceTrace`]
+    /// (what executors and counterfactual sweeps consume). Only defined
+    /// for unbounded buffers with at least one slot.
+    pub fn trace_prefix(&self) -> Result<PriceTrace> {
+        ensure!(
+            self.base_slot == 0,
+            "cannot materialize a trace: retention evicted slots [0, {})",
+            self.base_slot
+        );
+        ensure!(!self.prices.is_empty(), "cannot materialize an empty feed");
+        Ok(PriceTrace::from_prices(self.prices.clone(), self.slot_len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::replay::trace_from_csv;
+    use crate::market::SLOTS_PER_UNIT;
+
+    const DT: f64 = 1.0 / SLOTS_PER_UNIT as f64;
+
+    fn ev(t: f64, p: f64) -> PriceEvent {
+        PriceEvent { time: t, price: p }
+    }
+
+    #[test]
+    fn events_reproduce_the_batch_csv_step_function() {
+        // Same observations through both paths: identical slot prices.
+        let csv = "time,price\n0,0.2\n1,0.8\n3,0.5\n";
+        let batch = trace_from_csv(csv, 1.0, 1.0).unwrap();
+        let mut feed = FeedBuffer::new(DT);
+        for (t, p) in [(0.0, 0.2), (1.0, 0.8), (3.0, 0.5)] {
+            feed.push_event(ev(t, p)).unwrap();
+        }
+        feed.close();
+        assert_eq!(feed.len_slots(), batch.num_slots());
+        for s in 0..batch.num_slots() {
+            assert_eq!(feed.price_of_slot(s).unwrap(), batch.price_of_slot(s), "slot {s}");
+        }
+        let trace = feed.trace_prefix().unwrap();
+        assert_eq!(trace.num_slots(), batch.num_slots());
+        assert_eq!(trace.price_at(1.5), 0.8);
+    }
+
+    #[test]
+    fn watermark_advances_only_to_determined_slots() {
+        let mut feed = FeedBuffer::new(DT);
+        // First event at t=0 determines nothing yet (its own slot's
+        // midpoint is still ahead).
+        assert_eq!(feed.push_event(ev(0.0, 0.3)).unwrap(), 0);
+        assert_eq!(feed.len_slots(), 0);
+        // An event one unit later determines the 12 slots whose midpoints
+        // precede it, all at the first observation's price.
+        assert_eq!(feed.push_event(ev(1.0, 0.6)).unwrap(), 12);
+        assert_eq!(feed.len_slots(), 12);
+        assert_eq!(feed.price_of_slot(5).unwrap(), 0.3);
+        // Peeking past the frontier is a hard error, not a clamp.
+        let err = feed.price_of_slot(12).unwrap_err().to_string();
+        assert!(err.contains("lookahead"), "{err}");
+        // Closing commits the final observation's own slot.
+        assert_eq!(feed.close(), 1);
+        assert_eq!(feed.price_of_slot(12).unwrap(), 0.6);
+        assert!(feed.push_event(ev(2.0, 0.4)).is_err(), "closed feed");
+    }
+
+    #[test]
+    fn monotonicity_is_enforced() {
+        let mut feed = FeedBuffer::new(DT);
+        feed.push_event(ev(1.0, 0.2)).unwrap();
+        let err = feed.push_event(ev(1.0, 0.3)).unwrap_err().to_string();
+        assert!(err.contains("strictly after"), "{err}");
+        assert!(feed.push_event(ev(0.5, 0.3)).is_err());
+        assert!(feed.push_event(ev(f64::NAN, 0.3)).is_err());
+        assert!(feed.push_event(ev(2.0, -0.1)).is_err());
+        assert!(feed.push_event(ev(2.0, 0.3)).is_ok());
+    }
+
+    #[test]
+    fn preloaded_buffer_matches_its_trace() {
+        let trace = trace_from_csv("0,0.2\n2,0.7\n5,0.3\n", 1.0, 1.0).unwrap();
+        let feed = FeedBuffer::from_trace(&trace);
+        assert!(feed.is_closed());
+        assert_eq!(feed.len_slots(), trace.num_slots());
+        let back = feed.trace_prefix().unwrap();
+        for s in 0..trace.num_slots() {
+            assert_eq!(back.price_of_slot(s), trace.price_of_slot(s));
+        }
+    }
+
+    #[test]
+    fn retention_bounds_memory_and_blocks_trace_materialization() {
+        let mut feed = FeedBuffer::new(DT).with_retention(50);
+        let prices: Vec<f64> = (0..500).map(|i| 0.2 + 0.001 * i as f64).collect();
+        feed.push_slots(&prices).unwrap();
+        assert_eq!(feed.len_slots(), 500);
+        assert!(feed.base_slot() > 400);
+        assert!(feed.price_of_slot(499).is_ok());
+        let err = feed.price_of_slot(0).unwrap_err().to_string();
+        assert!(err.contains("evicted"), "{err}");
+        assert!(feed.trace_prefix().is_err());
+        // The index stays bounded too, and answers inside the window.
+        assert!(feed.index().base_slot() > 0);
+    }
+
+    #[test]
+    fn slots_then_events_keep_the_clock_monotone() {
+        let mut feed = FeedBuffer::new(DT);
+        feed.push_slots(&[0.2; 12]).unwrap(); // watermark t = 1
+        assert!(feed.push_event(ev(0.5, 0.4)).is_err(), "behind the watermark");
+        assert_eq!(feed.push_event(ev(2.0, 0.4)).unwrap(), 12);
+        // The run between watermark and the new event holds the last price.
+        assert_eq!(feed.price_of_slot(13).unwrap(), 0.2);
+    }
+}

@@ -1,0 +1,199 @@
+//! Incremental per-bid availability index over an append-only price stream.
+//!
+//! The batch [`crate::market::AvailabilityIndex`] rebuilds its prefix sums
+//! from scratch — O(S·L) for S slots and L bids — which is fine for an
+//! immutable trace but wrong for a live feed where a handful of slots
+//! arrive per tick. [`IncrementalAvailabilityIndex`] maintains the *same*
+//! per-bid cumulative win counts but extends them in place: appending `k`
+//! slots costs O(k·L) amortized, and on an unbounded index the stored
+//! `cum_wins` arrays are exactly equal — bit for bit — to what
+//! [`crate::market::AvailabilityIndex::build`] produces over the
+//! concatenated prices (the property the streaming tests pin).
+//!
+//! Bounded retention evicts whole leading runs of entries: counts stay
+//! *absolute* (wins among slots `[0, s)` since the stream origin), so
+//! range queries inside the retained window return the identical values
+//! the batch index would, while queries reaching into evicted history
+//! return `None` instead of a silently wrong count.
+
+/// Prefix-sum availability index that grows with the stream.
+#[derive(Debug, Clone)]
+pub struct IncrementalAvailabilityIndex {
+    /// Indexed bids, ascending and deduplicated (same canonical form as the
+    /// batch index).
+    bids: Vec<f64>,
+    /// Absolute slot index of `cum[i][0]`: `cum[i][j]` counts winning slots
+    /// among absolute slots `[0, base + j)`.
+    base: usize,
+    /// One cumulative array per bid, `len = retained_slots + 1`.
+    cum: Vec<Vec<u64>>,
+    /// Total slots ever appended (independent of eviction and of `bids`
+    /// being empty).
+    slots: usize,
+    /// Maximum retained slots; `None` = unbounded.
+    retention: Option<usize>,
+}
+
+impl IncrementalAvailabilityIndex {
+    /// Empty index over a bid grid (sorted + deduplicated, like the batch
+    /// index).
+    pub fn new(mut bids: Vec<f64>) -> IncrementalAvailabilityIndex {
+        bids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        bids.dedup();
+        let cum = bids.iter().map(|_| vec![0u64]).collect();
+        IncrementalAvailabilityIndex {
+            bids,
+            base: 0,
+            cum,
+            slots: 0,
+            retention: None,
+        }
+    }
+
+    /// Bound retained history to `max_slots` (eviction happens on append,
+    /// in amortized-O(1) chunks). `max_slots` must be positive.
+    pub fn with_retention(mut self, max_slots: usize) -> IncrementalAvailabilityIndex {
+        assert!(max_slots > 0, "retention of zero slots retains nothing");
+        self.retention = Some(max_slots);
+        self
+    }
+
+    pub fn bids(&self) -> &[f64] {
+        &self.bids
+    }
+
+    /// Total slots appended since the stream origin.
+    pub fn len_slots(&self) -> usize {
+        self.slots
+    }
+
+    /// First absolute slot still answerable (0 until eviction kicks in).
+    pub fn base_slot(&self) -> usize {
+        self.base
+    }
+
+    /// Append one slot price. O(L).
+    pub fn append_one(&mut self, price: f64) {
+        for (b, cum) in self.bids.iter().zip(self.cum.iter_mut()) {
+            let last = *cum.last().expect("cum never empty");
+            cum.push(last + (price <= *b) as u64);
+        }
+        self.slots += 1;
+        self.maybe_evict();
+    }
+
+    /// Append a run of slot prices. O(k·L) amortized.
+    pub fn append(&mut self, prices: &[f64]) {
+        for &p in prices {
+            self.append_one(p);
+        }
+    }
+
+    /// Evict leading entries once the retained window overshoots its bound
+    /// by half (chunked, so the per-append cost stays amortized O(1) per
+    /// bid rather than an O(S) drain on every slot).
+    fn maybe_evict(&mut self) {
+        let Some(max) = self.retention else { return };
+        let retained = self.slots - self.base;
+        if retained > max + max / 2 {
+            let drop = retained - max;
+            for cum in &mut self.cum {
+                cum.drain(..drop);
+            }
+            self.base += drop;
+        }
+    }
+
+    /// Winning slots in the inclusive absolute slot range `[s0, s1]` for an
+    /// indexed bid. `None` when the bid is not indexed or the range starts
+    /// before the retained window. Ranges past the ingested frontier clamp
+    /// to it, exactly as the batch index clamps to its trace end.
+    pub fn winning_slots(&self, s0: usize, s1: usize, bid: f64) -> Option<usize> {
+        let i = self.bids.iter().position(|&b| b == bid)?;
+        if s0 < self.base {
+            return None;
+        }
+        let cum = &self.cum[i];
+        let hi = (s1 + 1).saturating_sub(self.base).min(cum.len() - 1);
+        let lo = (s0 - self.base).min(hi);
+        Some((cum[hi] - cum[lo]) as usize)
+    }
+
+    /// Fraction of winning slots over the inclusive range `[s0, s1]` (same
+    /// contract as the batch index).
+    pub fn availability(&self, s0: usize, s1: usize, bid: f64) -> Option<f64> {
+        let total = s1.saturating_sub(s0) + 1;
+        self.winning_slots(s0, s1, bid)
+            .map(|w| w as f64 / total as f64)
+    }
+
+    /// The retained cumulative array for an indexed bid — on an unbounded
+    /// index this is exactly the batch index's `cum_wins` row, which the
+    /// streaming property tests compare for equality.
+    pub fn cum_wins(&self, bid: f64) -> Option<&[u64]> {
+        let i = self.bids.iter().position(|&b| b == bid)?;
+        Some(&self.cum[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::AvailabilityIndex;
+
+    fn bids() -> Vec<f64> {
+        vec![0.3, 0.18, 0.24, 0.3] // unsorted + dup on purpose
+    }
+
+    #[test]
+    fn canonicalizes_bids_like_batch() {
+        let idx = IncrementalAvailabilityIndex::new(bids());
+        assert_eq!(idx.bids(), &[0.18, 0.24, 0.3]);
+    }
+
+    #[test]
+    fn matches_batch_index_after_appends() {
+        let prices: Vec<f64> = (0..200)
+            .map(|i| 0.12 + 0.8 * ((i * 37 % 100) as f64 / 100.0))
+            .collect();
+        let mut idx = IncrementalAvailabilityIndex::new(bids());
+        idx.append(&prices[..77]);
+        idx.append(&prices[77..77]); // empty run is a no-op
+        idx.append(&prices[77..]);
+        let batch = AvailabilityIndex::build(&prices, bids());
+        assert_eq!(idx.len_slots(), 200);
+        for &b in idx.bids() {
+            assert_eq!(idx.cum_wins(b).unwrap(), batch.cum_wins(b).unwrap());
+            for (s0, s1) in [(0, 199), (13, 57), (42, 42), (150, 400)] {
+                assert_eq!(idx.winning_slots(s0, s1, b), batch.winning_slots(s0, s1, b));
+                assert_eq!(idx.availability(s0, s1, b), batch.availability(s0, s1, b));
+            }
+        }
+        assert_eq!(idx.winning_slots(0, 10, 0.5), None, "unindexed bid");
+    }
+
+    #[test]
+    fn retention_evicts_but_keeps_absolute_counts() {
+        let prices: Vec<f64> = (0..1000).map(|i| if i % 3 == 0 { 0.2 } else { 0.9 }).collect();
+        let mut idx = IncrementalAvailabilityIndex::new(vec![0.5]).with_retention(100);
+        idx.append(&prices);
+        assert_eq!(idx.len_slots(), 1000);
+        assert!(idx.base_slot() >= 900 - 50, "base {}", idx.base_slot());
+        assert!(idx.base_slot() <= 900, "retains at least 100: base {}", idx.base_slot());
+        // Inside the retained window: identical to the batch answer.
+        let batch = AvailabilityIndex::build(&prices, vec![0.5]);
+        let s0 = idx.base_slot();
+        assert_eq!(
+            idx.winning_slots(s0, 999, 0.5),
+            batch.winning_slots(s0, 999, 0.5)
+        );
+        // Evicted history answers None, never a wrong count.
+        assert_eq!(idx.winning_slots(0, 999, 0.5), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "retention of zero")]
+    fn zero_retention_rejected() {
+        let _ = IncrementalAvailabilityIndex::new(vec![0.2]).with_retention(0);
+    }
+}

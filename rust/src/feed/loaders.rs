@@ -1,0 +1,699 @@
+//! Loaders for the public EC2 spot-price-history dump formats.
+//!
+//! Two shapes cover what the ecosystem actually publishes:
+//!
+//! * **`ec2-json`** — the `aws ec2 describe-spot-price-history` output:
+//!   either the whole-document `{"SpotPriceHistory": [...]}` object or one
+//!   JSON record per line (the common `jq -c '.SpotPriceHistory[]'` dump),
+//!   each record carrying `Timestamp` (ISO-8601), `SpotPrice` (a decimal
+//!   *string*, sic), and optionally `AvailabilityZone` / `InstanceType`;
+//! * **`csv`** — the region/AZ CSV dump shape
+//!   (`Timestamp,AvailabilityZone,InstanceType,ProductDescription,SpotPrice`,
+//!   header optional when the columns are in canonical order), plus the
+//!   repo's own simple numeric `time,price` shape so
+//!   `examples/traces/spot_sample.csv` streams through the same front end.
+//!
+//! Real dumps are *not* clean event streams: records arrive newest-first,
+//! series interleave, and timestamps repeat. The loader normalizes all of
+//! that into the strictly-monotone step function [`FeedBuffer`] requires —
+//! stable-sorted by timestamp, duplicate timestamps collapsed (the
+//! last-listed observation wins), first observation shifted to `t = 0` —
+//! and refuses to silently mix distinct `(zone, instance type)` series:
+//! pick one with a [`FeedFilter`] or get an error naming what's present.
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::market::PriceTrace;
+use crate::util::json::Json;
+
+use super::buffer::{FeedBuffer, PriceEvent};
+
+/// Supported on-disk feed formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeedFormat {
+    /// `describe-spot-price-history` JSON (whole document or JSON-lines).
+    Ec2Json,
+    /// Region/AZ CSV dump, or the simple numeric `time,price` shape.
+    Csv,
+}
+
+impl FeedFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FeedFormat::Ec2Json => "ec2-json",
+            FeedFormat::Csv => "csv",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<FeedFormat> {
+        Ok(match s {
+            "ec2-json" => FeedFormat::Ec2Json,
+            "csv" => FeedFormat::Csv,
+            other => bail!("unknown feed format '{other}' (ec2-json|csv)"),
+        })
+    }
+
+    /// Infer from a file extension (`.json` / `.jsonl` → `ec2-json`,
+    /// anything else → `csv`).
+    pub fn infer(path: &str) -> FeedFormat {
+        let lower = path.to_ascii_lowercase();
+        if lower.ends_with(".json") || lower.ends_with(".jsonl") {
+            FeedFormat::Ec2Json
+        } else {
+            FeedFormat::Csv
+        }
+    }
+}
+
+/// Restrict a multi-series dump to one `(zone, instance type)` series.
+#[derive(Debug, Clone, Default)]
+pub struct FeedFilter {
+    pub availability_zone: Option<String>,
+    pub instance_type: Option<String>,
+}
+
+/// A normalized event stream plus ingestion statistics.
+#[derive(Debug, Clone)]
+pub struct FeedLoad {
+    /// Strictly-monotone events, first observation at `t = 0`, times and
+    /// prices already scaled.
+    pub events: Vec<PriceEvent>,
+    /// `zone/instance_type` of the surviving series (`-` when the dump
+    /// carries no series labels).
+    pub series: String,
+    /// Raw records read (before filtering and deduplication).
+    pub records: usize,
+    /// Records discarded because a later-listed record shares their
+    /// timestamp.
+    pub duplicates: usize,
+    /// Adjacent timestamp inversions in the raw order (how out-of-order
+    /// the dump was).
+    pub out_of_order: usize,
+    /// Raw timestamps were ISO-8601 (epoch seconds) rather than already
+    /// in simulated units — callers picking a default `time_scale` (the
+    /// CLI) branch on this.
+    pub iso_timestamps: bool,
+}
+
+/// One raw record before normalization.
+struct RawRecord {
+    time: f64,
+    price: f64,
+    zone: String,
+    instance_type: String,
+}
+
+impl RawRecord {
+    fn series(&self) -> String {
+        if self.zone.is_empty() && self.instance_type.is_empty() {
+            "-".into()
+        } else {
+            format!("{}/{}", self.zone, self.instance_type)
+        }
+    }
+}
+
+/// Load and normalize a feed. `time_scale` multiplies raw timestamps into
+/// simulated time units (ISO formats yield epoch *seconds*; e.g.
+/// `1/3600` makes one simulated unit an hour); `price_scale` normalizes
+/// prices against the on-demand price (the paper sets `p = 1`).
+pub fn load_events(
+    text: &str,
+    format: FeedFormat,
+    filter: &FeedFilter,
+    time_scale: f64,
+    price_scale: f64,
+) -> Result<FeedLoad> {
+    ensure!(
+        time_scale > 0.0 && price_scale > 0.0,
+        "feed: scales must be positive (time_scale={time_scale}, price_scale={price_scale})"
+    );
+    let (raw, iso_timestamps) = match format {
+        FeedFormat::Ec2Json => (parse_ec2_json(text)?, true),
+        FeedFormat::Csv => parse_csv(text)?,
+    };
+    let records = raw.len();
+    ensure!(records > 0, "feed: no records in input");
+
+    let kept: Vec<RawRecord> = raw
+        .into_iter()
+        .filter(|r| {
+            filter
+                .availability_zone
+                .as_ref()
+                .map_or(true, |z| &r.zone == z)
+                && filter
+                    .instance_type
+                    .as_ref()
+                    .map_or(true, |it| &r.instance_type == it)
+        })
+        .collect();
+    ensure!(
+        !kept.is_empty(),
+        "feed: filter (zone={:?}, instance_type={:?}) matched none of {records} records",
+        filter.availability_zone,
+        filter.instance_type
+    );
+
+    // One series or an explicit choice — never a silent interleave of two
+    // different markets' prices.
+    let mut series: Vec<String> = kept.iter().map(RawRecord::series).collect();
+    series.sort();
+    series.dedup();
+    ensure!(
+        series.len() == 1,
+        "feed: {} distinct (zone, instance type) series in input [{}]; \
+         select one with --az / --instance-type",
+        series.len(),
+        series.join(", ")
+    );
+
+    let out_of_order = kept.windows(2).filter(|w| w[1].time < w[0].time).count();
+    let ordered: Vec<(f64, f64)> = kept.iter().map(|r| (r.time, r.price)).collect();
+    let deduped = crate::market::replay::sort_dedup_by_time(ordered, |p| p.0);
+    let duplicates = kept.len() - deduped.len();
+
+    let t0 = deduped[0].0;
+    let events: Vec<PriceEvent> = deduped
+        .into_iter()
+        .map(|(t, p)| PriceEvent {
+            time: (t - t0) * time_scale,
+            price: p * price_scale,
+        })
+        .collect();
+    for e in &events {
+        ensure!(
+            e.price.is_finite() && e.price > 0.0,
+            "feed: non-positive price {} after scaling",
+            e.price
+        );
+    }
+    Ok(FeedLoad {
+        events,
+        series: series.pop().unwrap_or_else(|| "-".into()),
+        records,
+        duplicates,
+        out_of_order,
+        iso_timestamps,
+    })
+}
+
+/// Load a feed from a file path (format inferred from the extension when
+/// `format` is `None`).
+pub fn load_events_file(
+    path: &str,
+    format: Option<FeedFormat>,
+    filter: &FeedFilter,
+    time_scale: f64,
+    price_scale: f64,
+) -> Result<FeedLoad> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("feed '{path}'"))?;
+    let fmt = format.unwrap_or_else(|| FeedFormat::infer(path));
+    load_events(&text, fmt, filter, time_scale, price_scale)
+        .with_context(|| format!("feed '{path}' ({})", fmt.as_str()))
+}
+
+/// Materialize a normalized event stream as a batch [`PriceTrace`] on a
+/// slot grid — the bridge from the streaming loaders to every batch
+/// consumer (scenario worlds, the legacy coordinator).
+pub fn events_to_trace(events: &[PriceEvent], slot_len: f64) -> Result<PriceTrace> {
+    ensure!(!events.is_empty(), "feed: no events to materialize");
+    let mut buf = FeedBuffer::with_bids(slot_len, Vec::new());
+    for &e in events {
+        buf.push_event(e)?;
+    }
+    buf.close();
+    buf.trace_prefix()
+}
+
+fn parse_ec2_json(text: &str) -> Result<Vec<RawRecord>> {
+    // A whole-document parse succeeds for the `{"SpotPriceHistory": [...]}`
+    // shape (and a single bare record); JSON-lines dumps fail it with
+    // "trailing characters" and fall through to per-line parsing.
+    if let Ok(doc) = Json::parse(text) {
+        let records = match doc.get("SpotPriceHistory").and_then(Json::as_arr) {
+            Some(arr) => arr.iter().map(ec2_record).collect::<Result<Vec<_>>>()?,
+            None => vec![ec2_record(&doc)?],
+        };
+        return Ok(records);
+    }
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow!("feed json line {}: {e}", lineno + 1))?;
+        out.push(ec2_record(&j).with_context(|| format!("feed json line {}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+fn ec2_record(j: &Json) -> Result<RawRecord> {
+    let ts = j
+        .get("Timestamp")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("record missing string 'Timestamp'"))?;
+    let time = parse_iso8601(ts)?;
+    // The AWS API returns SpotPrice as a decimal *string*; tolerate a
+    // number too.
+    let price = match j.get("SpotPrice") {
+        Some(Json::Str(s)) => s
+            .trim()
+            .parse::<f64>()
+            .map_err(|_| anyhow!("bad SpotPrice '{s}'"))?,
+        Some(Json::Num(x)) => *x,
+        _ => bail!("record missing 'SpotPrice'"),
+    };
+    ensure!(
+        price.is_finite() && price > 0.0,
+        "record at {ts}: non-positive SpotPrice {price}"
+    );
+    Ok(RawRecord {
+        time,
+        price,
+        zone: j.opt_str("AvailabilityZone", "").to_string(),
+        instance_type: j.opt_str("InstanceType", "").to_string(),
+    })
+}
+
+/// Returns the records plus whether the shape carried ISO (epoch-second)
+/// timestamps.
+fn parse_csv(text: &str) -> Result<(Vec<RawRecord>, bool)> {
+    #[derive(Clone, Copy)]
+    enum Shape {
+        /// Numeric `time,price` (or price-only) rows.
+        Simple { time_col: Option<usize>, price_col: usize },
+        /// ISO `Timestamp` + labeled columns.
+        Dump {
+            time_col: usize,
+            zone_col: Option<usize>,
+            itype_col: Option<usize>,
+            price_col: usize,
+        },
+    }
+
+    let mut shape: Option<Shape> = None;
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if shape.is_none() {
+            // Header row: map columns by (normalized) name.
+            let norm: Vec<String> = fields
+                .iter()
+                .map(|f| {
+                    f.chars()
+                        .filter(char::is_ascii_alphanumeric)
+                        .collect::<String>()
+                        .to_ascii_lowercase()
+                })
+                .collect();
+            let col = |names: &[&str]| -> Option<usize> {
+                norm.iter().position(|n| names.contains(&n.as_str()))
+            };
+            if let (Some(tc), Some(pc)) = (col(&["timestamp"]), col(&["spotprice", "price"])) {
+                shape = Some(Shape::Dump {
+                    time_col: tc,
+                    zone_col: col(&["availabilityzone", "zone"]),
+                    itype_col: col(&["instancetype"]),
+                    price_col: pc,
+                });
+                continue;
+            }
+            if let (Some(tc), Some(pc)) = (col(&["time"]), col(&["price"])) {
+                shape = Some(Shape::Simple {
+                    time_col: Some(tc),
+                    price_col: pc,
+                });
+                continue;
+            }
+            // No header: infer from the first data row.
+            shape = Some(if fields.len() >= 4 && parse_iso8601(fields[0]).is_ok() {
+                // Canonical dump order: Timestamp, AZ, InstanceType,
+                // ProductDescription, SpotPrice.
+                Shape::Dump {
+                    time_col: 0,
+                    zone_col: Some(1),
+                    itype_col: Some(2),
+                    price_col: fields.len() - 1,
+                }
+            } else if fields.len() >= 2 && fields[0].parse::<f64>().is_ok() {
+                Shape::Simple {
+                    time_col: Some(0),
+                    price_col: 1,
+                }
+            } else if fields.len() == 1 && fields[0].parse::<f64>().is_ok() {
+                Shape::Simple {
+                    time_col: None,
+                    price_col: 0,
+                }
+            } else {
+                bail!(
+                    "feed csv line {}: unrecognized shape '{line}' (expected an \
+                     EC2 dump header, ISO rows, or numeric time,price rows)",
+                    lineno + 1
+                )
+            });
+            // The inferred row is data: fall through to parse it.
+        }
+        let field = |idx: usize| {
+            fields.get(idx).copied().ok_or_else(|| {
+                anyhow!("feed csv line {}: missing column {idx} in '{line}'", lineno + 1)
+            })
+        };
+        let rec = match shape.expect("set above") {
+            Shape::Simple { time_col, price_col } => {
+                let time = match time_col {
+                    // Slot-per-row shape: synthesize the grid time.
+                    None => out.len() as f64 / crate::market::SLOTS_PER_UNIT as f64,
+                    Some(tc) => field(tc)?.parse::<f64>().map_err(|_| {
+                        anyhow!("feed csv line {}: bad time '{}'", lineno + 1, fields[tc])
+                    })?,
+                };
+                // `parse::<f64>()` accepts "nan"/"inf"; the normalization
+                // sort would panic on NaN downstream.
+                ensure!(
+                    time.is_finite(),
+                    "feed csv line {}: non-finite time in '{line}'",
+                    lineno + 1
+                );
+                let p = field(price_col)?;
+                RawRecord {
+                    time,
+                    price: p.parse::<f64>().map_err(|_| {
+                        anyhow!("feed csv line {}: bad price '{p}'", lineno + 1)
+                    })?,
+                    zone: String::new(),
+                    instance_type: String::new(),
+                }
+            }
+            Shape::Dump {
+                time_col,
+                zone_col,
+                itype_col,
+                price_col,
+            } => {
+                let ts = field(time_col)?;
+                let p = field(price_col)?;
+                RawRecord {
+                    time: parse_iso8601(ts)
+                        .with_context(|| format!("feed csv line {}", lineno + 1))?,
+                    price: p.parse::<f64>().map_err(|_| {
+                        anyhow!("feed csv line {}: bad price '{p}'", lineno + 1)
+                    })?,
+                    zone: zone_col
+                        .and_then(|c| fields.get(c))
+                        .unwrap_or(&"")
+                        .to_string(),
+                    instance_type: itype_col
+                        .and_then(|c| fields.get(c))
+                        .unwrap_or(&"")
+                        .to_string(),
+                }
+            }
+        };
+        ensure!(
+            rec.price.is_finite() && rec.price > 0.0,
+            "feed csv line {}: non-positive price in '{line}'",
+            lineno + 1
+        );
+        out.push(rec);
+    }
+    let iso = matches!(shape, Some(Shape::Dump { .. }));
+    Ok((out, iso))
+}
+
+/// Parse an ISO-8601 timestamp (`2024-03-01T00:05:00.000Z`,
+/// `2024-03-01 00:05:00+00:00`, `20240301T000500Z` is *not* supported —
+/// dumps use the extended format) into Unix epoch seconds. A missing
+/// offset means UTC (what AWS emits).
+pub fn parse_iso8601(s: &str) -> Result<f64> {
+    let b = s.trim().as_bytes();
+    let digits = |lo: usize, hi: usize| -> Result<i64> {
+        ensure!(hi <= b.len(), "timestamp '{s}': truncated");
+        let mut v = 0i64;
+        for &c in &b[lo..hi] {
+            ensure!(c.is_ascii_digit(), "timestamp '{s}': expected digit");
+            v = v * 10 + (c - b'0') as i64;
+        }
+        Ok(v)
+    };
+    let sep = |at: usize, ok: &[u8]| -> Result<()> {
+        ensure!(
+            at < b.len() && ok.contains(&b[at]),
+            "timestamp '{s}': malformed at byte {at}"
+        );
+        Ok(())
+    };
+    let (y, mo, d) = (digits(0, 4)?, digits(5, 7)?, digits(8, 10)?);
+    sep(4, b"-")?;
+    sep(7, b"-")?;
+    sep(10, b"T ")?;
+    let (h, mi, sec) = (digits(11, 13)?, digits(14, 16)?, digits(17, 19)?);
+    sep(13, b":")?;
+    sep(16, b":")?;
+    ensure!(
+        (1..=12).contains(&mo) && (1..=31).contains(&d) && h < 24 && mi < 60 && sec <= 60,
+        "timestamp '{s}': field out of range"
+    );
+    let mut pos = 19;
+    let mut frac = 0.0f64;
+    if pos < b.len() && b[pos] == b'.' {
+        pos += 1;
+        let start = pos;
+        let mut scale = 0.1;
+        while pos < b.len() && b[pos].is_ascii_digit() {
+            frac += (b[pos] - b'0') as f64 * scale;
+            scale *= 0.1;
+            pos += 1;
+        }
+        ensure!(pos > start, "timestamp '{s}': empty fraction");
+    }
+    let offset_secs = match b.get(pos).copied() {
+        None => 0i64, // bare timestamp: UTC (the AWS convention)
+        Some(b'Z' | b'z') => {
+            pos += 1;
+            0
+        }
+        Some(sign @ (b'+' | b'-')) => {
+            let neg = sign == b'-';
+            pos += 1;
+            let oh = digits(pos, pos + 2)?;
+            pos += 2;
+            if b.get(pos) == Some(&b':') {
+                pos += 1;
+            }
+            let om = if pos < b.len() { digits(pos, pos + 2)? } else { 0 };
+            if pos < b.len() {
+                pos += 2;
+            }
+            ensure!(oh < 24 && om < 60, "timestamp '{s}': bad offset");
+            let o = oh * 3600 + om * 60;
+            if neg {
+                -o
+            } else {
+                o
+            }
+        }
+        Some(c) => bail!("timestamp '{s}': unexpected trailing byte '{}'", c as char),
+    };
+    ensure!(pos == b.len(), "timestamp '{s}': trailing characters");
+
+    // Howard Hinnant's days-from-civil: exact for the proleptic Gregorian
+    // calendar, no table lookups.
+    let yy = if mo <= 2 { y - 1 } else { y };
+    let era = if yy >= 0 { yy } else { yy - 399 } / 400;
+    let yoe = yy - era * 400;
+    let mp = (mo + 9) % 12;
+    let doy = (153 * mp + 2) / 5 + d - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    let days = era * 146097 + doe - 719_468;
+    Ok((days * 86_400 + h * 3600 + mi * 60 + sec - offset_secs) as f64 + frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iso8601_known_values() {
+        assert_eq!(parse_iso8601("1970-01-01T00:00:00Z").unwrap(), 0.0);
+        assert_eq!(parse_iso8601("1970-01-02T00:00:00").unwrap(), 86_400.0);
+        // 2024-03-01T00:00:00Z = 1709251200 (leap year, post-Feb).
+        assert_eq!(parse_iso8601("2024-03-01T00:00:00.000Z").unwrap(), 1_709_251_200.0);
+        // Offsets shift back to UTC; space separator accepted.
+        assert_eq!(
+            parse_iso8601("2024-03-01 02:00:00+02:00").unwrap(),
+            1_709_251_200.0
+        );
+        assert_eq!(
+            parse_iso8601("2024-02-29T23:30:00-00:30").unwrap(),
+            1_709_251_200.0
+        );
+        // Fractional seconds survive.
+        assert_eq!(parse_iso8601("1970-01-01T00:00:01.25Z").unwrap(), 1.25);
+        for bad in [
+            "2024-13-01T00:00:00Z",
+            "2024-03-01",
+            "not a time",
+            "2024-03-01T00:00:00ZZ",
+            "2024-03-01T00:00:00.Z",
+        ] {
+            assert!(parse_iso8601(bad).is_err(), "{bad}");
+        }
+    }
+
+    const JSONL: &str = r#"{"Timestamp":"2024-03-01T02:00:00Z","SpotPrice":"0.0450","AvailabilityZone":"us-east-1a","InstanceType":"m5.large","ProductDescription":"Linux/UNIX"}
+{"Timestamp":"2024-03-01T00:00:00Z","SpotPrice":"0.0300","AvailabilityZone":"us-east-1a","InstanceType":"m5.large","ProductDescription":"Linux/UNIX"}
+{"Timestamp":"2024-03-01T01:00:00Z","SpotPrice":"0.0380","AvailabilityZone":"us-east-1a","InstanceType":"m5.large","ProductDescription":"Linux/UNIX"}
+{"Timestamp":"2024-03-01T01:00:00Z","SpotPrice":"0.0390","AvailabilityZone":"us-east-1a","InstanceType":"m5.large","ProductDescription":"Linux/UNIX"}"#;
+
+    #[test]
+    fn jsonl_normalizes_order_and_duplicates() {
+        // Newest-first with a duplicate timestamp: sorted, deduped
+        // (last-listed wins), shifted to t0 = 0, scaled.
+        let load = load_events(JSONL, FeedFormat::Ec2Json, &FeedFilter::default(), 1.0 / 3600.0, 10.0)
+            .unwrap();
+        assert_eq!(load.records, 4);
+        assert_eq!(load.duplicates, 1);
+        assert!(load.out_of_order >= 1);
+        assert!(load.iso_timestamps);
+        assert_eq!(load.series, "us-east-1a/m5.large");
+        let e = &load.events;
+        assert_eq!(e.len(), 3);
+        assert_eq!(e[0].time, 0.0);
+        assert!((e[0].price - 0.30).abs() < 1e-12);
+        assert!((e[1].time - 1.0).abs() < 1e-12);
+        assert!((e[1].price - 0.39).abs() < 1e-12, "last duplicate wins: {}", e[1].price);
+        assert!((e[2].time - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn whole_document_shape_parses_too() {
+        let doc = format!(
+            r#"{{"SpotPriceHistory": [{}]}}"#,
+            JSONL.lines().collect::<Vec<_>>().join(",")
+        );
+        let load = load_events(&doc, FeedFormat::Ec2Json, &FeedFilter::default(), 1.0, 1.0).unwrap();
+        assert_eq!(load.records, 4);
+        assert_eq!(load.events.len(), 3);
+    }
+
+    #[test]
+    fn mixed_series_require_a_filter() {
+        let two = r#"{"Timestamp":"2024-03-01T00:00:00Z","SpotPrice":"0.03","AvailabilityZone":"us-east-1a","InstanceType":"m5.large"}
+{"Timestamp":"2024-03-01T01:00:00Z","SpotPrice":"0.09","AvailabilityZone":"us-east-1b","InstanceType":"m5.large"}"#;
+        let err = load_events(two, FeedFormat::Ec2Json, &FeedFilter::default(), 1.0, 1.0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("us-east-1b"), "{err}");
+        let one = load_events(
+            two,
+            FeedFormat::Ec2Json,
+            &FeedFilter {
+                availability_zone: Some("us-east-1b".into()),
+                instance_type: None,
+            },
+            1.0,
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(one.events.len(), 1);
+        assert_eq!(one.series, "us-east-1b/m5.large");
+        // A filter matching nothing errors instead of an empty feed.
+        assert!(load_events(
+            two,
+            FeedFormat::Ec2Json,
+            &FeedFilter {
+                availability_zone: Some("eu-west-1a".into()),
+                instance_type: None
+            },
+            1.0,
+            1.0,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn csv_dump_shape_with_header() {
+        let csv = "Timestamp,AvailabilityZone,InstanceType,ProductDescription,SpotPrice\n\
+                   2024-03-01T01:00:00Z,us-east-1a,m5.large,Linux/UNIX,0.045\n\
+                   2024-03-01T00:00:00Z,us-east-1a,m5.large,Linux/UNIX,0.030\n";
+        let load =
+            load_events(csv, FeedFormat::Csv, &FeedFilter::default(), 1.0 / 3600.0, 1.0).unwrap();
+        assert_eq!(load.events.len(), 2);
+        assert_eq!(load.out_of_order, 1);
+        assert!(load.iso_timestamps, "dump shape carries epoch timestamps");
+        assert_eq!(load.events[0].price, 0.030);
+        assert!((load.events[1].time - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_dump_shape_headerless_canonical_order() {
+        let csv = "2024-03-01T00:00:00Z,us-east-1a,m5.large,Linux/UNIX,0.030\n\
+                   2024-03-01T02:00:00Z,us-east-1a,m5.large,Linux/UNIX,0.060\n";
+        let load = load_events(csv, FeedFormat::Csv, &FeedFilter::default(), 1.0, 1.0).unwrap();
+        assert_eq!(load.events.len(), 2);
+        assert_eq!(load.series, "us-east-1a/m5.large");
+    }
+
+    #[test]
+    fn simple_numeric_csv_streams_through_the_same_front_end() {
+        let text = include_str!("../../../examples/traces/spot_sample.csv");
+        let load = load_events(text, FeedFormat::Csv, &FeedFilter::default(), 1.0, 1.0).unwrap();
+        assert!(load.events.len() > 100);
+        assert_eq!(load.series, "-");
+        assert_eq!(load.duplicates, 0);
+        assert!(!load.iso_timestamps, "numeric shape is already in units");
+        assert_eq!(load.events[0].time, 0.0);
+        // And it materializes to the same trace the batch loader builds.
+        let slot_len = 1.0 / crate::market::SLOTS_PER_UNIT as f64;
+        let streamed = events_to_trace(&load.events, slot_len).unwrap();
+        let batch = crate::market::replay::trace_from_csv(text, 1.0, 1.0).unwrap();
+        assert_eq!(streamed.num_slots(), batch.num_slots());
+        for s in 0..batch.num_slots() {
+            assert_eq!(streamed.price_of_slot(s), batch.price_of_slot(s), "slot {s}");
+        }
+    }
+
+    #[test]
+    fn bad_rows_error_with_line_numbers() {
+        let err = load_events(
+            "Timestamp,SpotPrice\n2024-03-01T00:00:00Z,zzz\n",
+            FeedFormat::Csv,
+            &FeedFilter::default(),
+            1.0,
+            1.0,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = load_events(
+            "{\"Timestamp\":\"2024-03-01T00:00:00Z\"}\n",
+            FeedFormat::Ec2Json,
+            &FeedFilter::default(),
+            1.0,
+            1.0,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("SpotPrice"), "{err}");
+        assert!(load_events("", FeedFormat::Csv, &FeedFilter::default(), 1.0, 1.0).is_err());
+        // NaN times error instead of panicking the normalization sort.
+        let err = load_events(
+            "time,price\n0,0.2\nnan,0.3\n",
+            FeedFormat::Csv,
+            &FeedFilter::default(),
+            1.0,
+            1.0,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("non-finite"), "{err}");
+    }
+}

@@ -1,0 +1,42 @@
+//! Streaming market feed: incremental price ingestion for a long-running
+//! coordinator.
+//!
+//! Every pre-existing market path is batch: `market::replay` loads a whole
+//! CSV, [`crate::market::PriceTrace`] freezes its prices, and the
+//! availability index is rebuilt with full prefix sums. This subsystem is
+//! the online counterpart the paper's *online* learning claim actually
+//! needs:
+//!
+//! * [`buffer`] — an append-only, slot-aligned [`FeedBuffer`]: strictly
+//!   monotone price events materialized onto the standard slot grid with
+//!   the batch loader's step-function semantics, bounded or unbounded
+//!   retention, and hard *lookahead errors* on any read past the ingested
+//!   frontier;
+//! * [`index`] — an [`IncrementalAvailabilityIndex`] extending per-bid
+//!   cumulative win counts in O(k·L) per k appended slots, exactly equal
+//!   to an O(S·L) batch rebuild (property-tested bit for bit);
+//! * [`loaders`] — the public EC2 spot-price-history dump formats
+//!   (`describe-spot-price-history` JSON / JSON-lines and the region/AZ
+//!   CSV dump), normalizing out-of-order and duplicate timestamps into a
+//!   clean step function;
+//! * [`mux`] — a [`FeedMux`] binding named feeds to
+//!   [`crate::market::MarketView`] offers and advancing them on one shared
+//!   slot grid (the frontier is the minimum across feeds).
+//!
+//! The consumer is [`crate::coordinator::online::tola_run_online`]: a
+//! coordinator loop that schedules jobs against only already-ingested
+//! prices and reproduces the batch run bit for bit when the feed is fully
+//! pre-loaded.
+
+pub mod buffer;
+pub mod index;
+pub mod loaders;
+pub mod mux;
+
+pub use buffer::{FeedBuffer, PriceEvent};
+pub use index::IncrementalAvailabilityIndex;
+pub use loaders::{
+    events_to_trace, load_events, load_events_file, parse_iso8601, FeedFilter, FeedFormat,
+    FeedLoad,
+};
+pub use mux::{FeedBinding, FeedMux};

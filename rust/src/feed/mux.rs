@@ -1,0 +1,320 @@
+//! Multiplexing named feeds onto a [`MarketView`]'s offers.
+//!
+//! A routed market consumes several price streams — one per
+//! `(region, instance_type)` offer — but the coordinator advances a single
+//! simulated clock. [`FeedMux`] binds each offer to its own
+//! [`FeedBuffer`] + pending event queue and advances them together on one
+//! shared slot grid: the mux's *frontier* is the minimum ingested slot
+//! across feeds, so a consumer gated on the frontier can never read a
+//! price any one of its markets has not delivered.
+
+use anyhow::{ensure, Result};
+
+use crate::market::{MarketOffer, MarketView, PriceTrace};
+
+use super::buffer::{FeedBuffer, PriceEvent};
+
+/// One feed bound to a named offer.
+#[derive(Debug, Clone)]
+pub struct FeedBinding {
+    pub region: String,
+    pub instance_type: String,
+    pub od_price: f64,
+    /// Per-slot concurrent spot cap; `None` = infinite.
+    pub capacity: Option<u32>,
+    /// Normalized (strictly-monotone) pending events.
+    pub events: Vec<PriceEvent>,
+}
+
+impl FeedBinding {
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.region, self.instance_type)
+    }
+}
+
+/// A set of named feeds advancing on one shared slot grid.
+#[derive(Debug, Clone)]
+pub struct FeedMux {
+    meta: Vec<FeedBinding>,
+    buffers: Vec<FeedBuffer>,
+    cursors: Vec<usize>,
+    slot_len: f64,
+}
+
+impl FeedMux {
+    /// Bind feeds to offers. Validation mirrors [`MarketView::new`] so a
+    /// bad mux fails at construction, not at the first materialization.
+    pub fn new(bindings: Vec<FeedBinding>, slot_len: f64) -> Result<FeedMux> {
+        ensure!(!bindings.is_empty(), "feed mux over an empty feed set");
+        ensure!(slot_len > 0.0, "feed mux: slot_len must be positive");
+        for (i, b) in bindings.iter().enumerate() {
+            ensure!(
+                b.od_price > 0.0,
+                "feed '{}': od_price must be positive",
+                b.label()
+            );
+            ensure!(
+                b.capacity != Some(0),
+                "feed '{}': capacity 0 is never placeable (omit it for infinite)",
+                b.label()
+            );
+            ensure!(
+                !bindings[..i].iter().any(|p| p.label() == b.label()),
+                "duplicate feed label '{}'",
+                b.label()
+            );
+            for w in b.events.windows(2) {
+                ensure!(
+                    w[1].time > w[0].time,
+                    "feed '{}': events not strictly monotone ({} after {}); \
+                     normalize the source first",
+                    b.label(),
+                    w[1].time,
+                    w[0].time
+                );
+            }
+        }
+        // No bid index on mux buffers: the online coordinator reads prices
+        // through materialized view prefixes, so maintaining per-bid win
+        // counts here would be O(L) dead work per ingested slot. Consumers
+        // that want the incremental index drive a [`FeedBuffer`] directly.
+        let buffers = bindings
+            .iter()
+            .map(|_| FeedBuffer::with_bids(slot_len, Vec::new()))
+            .collect();
+        let cursors = vec![0; bindings.len()];
+        Ok(FeedMux {
+            meta: bindings,
+            buffers,
+            cursors,
+            slot_len,
+        })
+    }
+
+    /// One-feed mux preloaded from a realized trace (the "replay a batch
+    /// world online" entry point; the whole history is ingested upfront).
+    pub fn single_from_trace(trace: &PriceTrace, od_price: f64) -> FeedMux {
+        FeedMux::from_traces(&[("default".into(), "default".into(), od_price, None, trace.clone())])
+    }
+
+    /// Preloaded multi-offer mux: `(region, instance_type, od_price,
+    /// capacity, trace)` per offer, every slot ingested upfront.
+    pub fn from_traces(offers: &[(String, String, f64, Option<u32>, PriceTrace)]) -> FeedMux {
+        assert!(!offers.is_empty());
+        let slot_len = offers[0].4.slot_len();
+        FeedMux {
+            meta: offers
+                .iter()
+                .map(|(r, it, od, cap, _)| FeedBinding {
+                    region: r.clone(),
+                    instance_type: it.clone(),
+                    od_price: *od,
+                    capacity: *cap,
+                    events: Vec::new(),
+                })
+                .collect(),
+            buffers: offers.iter().map(|(_, _, _, _, t)| FeedBuffer::from_trace(t)).collect(),
+            cursors: vec![0; offers.len()],
+            slot_len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+
+    pub fn slot_len(&self) -> f64 {
+        self.slot_len
+    }
+
+    /// One infinite-capacity feed: consumers may take the degenerate
+    /// single-market fast path (mirrors [`MarketView::is_degenerate`]).
+    pub fn is_degenerate(&self) -> bool {
+        self.meta.len() == 1 && self.meta[0].capacity.is_none()
+    }
+
+    pub fn capacities(&self) -> Vec<Option<u32>> {
+        self.meta.iter().map(|b| b.capacity).collect()
+    }
+
+    /// Shared frontier: slots every feed has determined.
+    pub fn frontier_slot(&self) -> usize {
+        self.buffers
+            .iter()
+            .map(FeedBuffer::len_slots)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Prices are known on every feed for `[0, frontier_time())`.
+    pub fn frontier_time(&self) -> f64 {
+        self.frontier_slot() as f64 * self.slot_len
+    }
+
+    /// The feed holding the frontier back (label, determined slots).
+    pub fn laggard(&self) -> (String, usize) {
+        self.meta
+            .iter()
+            .zip(&self.buffers)
+            .map(|(m, b)| (m.label(), b.len_slots()))
+            .min_by_key(|(_, n)| *n)
+            .expect("validated non-empty")
+    }
+
+    /// Drain pending events until every feed has determined at least
+    /// `slots` slots. A feed that runs out of events is closed (its final
+    /// observation committed); returns `false` when the frontier still
+    /// cannot reach `slots` — the caller decides whether that is a clean
+    /// end-of-feed or a lookahead violation.
+    pub fn advance_to_slot(&mut self, slots: usize) -> Result<bool> {
+        for k in 0..self.buffers.len() {
+            let buf = &mut self.buffers[k];
+            let events = &self.meta[k].events;
+            while buf.len_slots() < slots {
+                match events.get(self.cursors[k]) {
+                    Some(&e) => {
+                        buf.push_event(e)?;
+                        self.cursors[k] += 1;
+                    }
+                    None => {
+                        buf.close();
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(self.frontier_slot() >= slots)
+    }
+
+    /// Advance until every feed covers simulated time `t`.
+    pub fn advance_to_time(&mut self, t: f64) -> Result<bool> {
+        self.advance_to_slot((t / self.slot_len).ceil().max(0.0) as usize)
+    }
+
+    /// Every pending event ingested and every feed closed?
+    pub fn is_exhausted(&self) -> bool {
+        self.cursors
+            .iter()
+            .zip(&self.meta)
+            .all(|(&c, m)| c >= m.events.len())
+            && self.buffers.iter().all(FeedBuffer::is_closed)
+    }
+
+    /// Per-feed buffers (availability indices, watermarks).
+    pub fn buffers(&self) -> &[FeedBuffer] {
+        &self.buffers
+    }
+
+    pub fn bindings(&self) -> &[FeedBinding] {
+        &self.meta
+    }
+
+    /// Materialize the ingested prefixes as a capacity-aware
+    /// [`MarketView`]. Each offer's trace covers *its own* watermark (≥
+    /// the shared frontier); consumers gated on the frontier never read
+    /// past any of them.
+    pub fn view(&self) -> Result<MarketView> {
+        let offers = self
+            .meta
+            .iter()
+            .zip(&self.buffers)
+            .map(|(m, b)| {
+                Ok(MarketOffer {
+                    region: m.region.clone(),
+                    instance_type: m.instance_type.clone(),
+                    od_price: m.od_price,
+                    trace: b.trace_prefix().map_err(|e| {
+                        anyhow::anyhow!("feed '{}': {e}", m.label())
+                    })?,
+                    capacity: m.capacity,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        MarketView::new(offers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::SLOTS_PER_UNIT;
+
+    const DT: f64 = 1.0 / SLOTS_PER_UNIT as f64;
+
+    fn ev(t: f64, p: f64) -> PriceEvent {
+        PriceEvent { time: t, price: p }
+    }
+
+    fn binding(region: &str, od: f64, cap: Option<u32>, events: Vec<PriceEvent>) -> FeedBinding {
+        FeedBinding {
+            region: region.into(),
+            instance_type: "default".into(),
+            od_price: od,
+            capacity: cap,
+            events,
+        }
+    }
+
+    #[test]
+    fn frontier_is_the_minimum_across_feeds() {
+        let mut mux = FeedMux::new(
+            vec![
+                binding("fast", 1.0, None, vec![ev(0.0, 0.2), ev(4.0, 0.3)]),
+                binding("slow", 1.1, Some(8), vec![ev(0.0, 0.5), ev(2.0, 0.6), ev(4.0, 0.4)]),
+            ],
+            DT,
+        )
+        .unwrap();
+        assert!(!mux.is_degenerate());
+        assert_eq!(mux.frontier_slot(), 0);
+        assert!(mux.advance_to_time(1.5).unwrap());
+        // Both feeds have events past 1.5: frontier covers it.
+        assert!(mux.frontier_time() >= 1.5);
+        assert!(mux.advance_to_time(4.0).unwrap());
+        let v = mux.view().unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.offers()[1].capacity, Some(8));
+        // Beyond the last events: feeds close and the frontier stalls.
+        assert!(!mux.advance_to_time(10.0).unwrap());
+        assert!(mux.is_exhausted());
+        let (label, _) = mux.laggard();
+        assert!(label.contains('/'));
+    }
+
+    #[test]
+    fn preloaded_mux_is_exhausted_and_covers_its_trace() {
+        let trace = PriceTrace::from_prices(vec![0.2; 24], DT);
+        let mut mux = FeedMux::single_from_trace(&trace, 1.0);
+        assert!(mux.is_degenerate());
+        assert!(mux.is_exhausted());
+        assert_eq!(mux.frontier_slot(), 24);
+        assert!(mux.advance_to_time(2.0).unwrap());
+        assert!(!mux.advance_to_time(2.1).unwrap());
+        let v = mux.view().unwrap();
+        assert_eq!(v.home().trace.num_slots(), 24);
+    }
+
+    #[test]
+    fn validation_mirrors_market_view() {
+        assert!(FeedMux::new(vec![], DT).is_err());
+        assert!(FeedMux::new(vec![binding("a", 0.0, None, vec![])], DT).is_err());
+        assert!(FeedMux::new(vec![binding("a", 1.0, Some(0), vec![])], DT).is_err());
+        assert!(FeedMux::new(
+            vec![
+                binding("a", 1.0, None, vec![]),
+                binding("a", 1.0, None, vec![])
+            ],
+            DT
+        )
+        .is_err());
+        // Non-monotone events are the loader's job to fix; the mux refuses.
+        assert!(
+            FeedMux::new(vec![binding("a", 1.0, None, vec![ev(2.0, 0.2), ev(1.0, 0.3)])], DT)
+                .is_err()
+        );
+    }
+}

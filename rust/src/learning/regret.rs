@@ -5,6 +5,19 @@
 //! against the best *fixed* policy in hindsight together with the paper's
 //! high-probability bound `9·sqrt(2·d·log(n/δ) / N')`.
 
+/// A cheap point-in-time view of the tracker — what the online
+/// coordinator emits per reporting window without cloning the per-policy
+/// totals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RegretSnapshot {
+    /// Jobs recorded so far (N').
+    pub jobs: u64,
+    /// Average regret vs the best fixed policy in hindsight.
+    pub average_regret: f64,
+    /// The Prop. B.1 bound at the snapshot's confidence level.
+    pub bound: f64,
+}
+
 /// Accumulates realized and counterfactual costs.
 #[derive(Debug, Clone)]
 pub struct RegretTracker {
@@ -67,6 +80,17 @@ impl RegretTracker {
         (self.realized_total - self.best_fixed_total()) / self.jobs as f64
     }
 
+    /// O(L) point-in-time snapshot (jobs, average regret, bound) — the
+    /// per-window reporting path of the online loop; no allocation, no
+    /// clone of the per-policy totals.
+    pub fn snapshot(&self, delta: f64) -> RegretSnapshot {
+        RegretSnapshot {
+            jobs: self.jobs,
+            average_regret: self.average_regret(),
+            bound: self.bound(delta),
+        }
+    }
+
     /// The Prop. B.1 bound `9·sqrt(2·d·log(n/δ)/N')` at confidence `1−δ`.
     pub fn bound(&self, delta: f64) -> f64 {
         assert!((0.0..1.0).contains(&delta) && delta > 0.0);
@@ -94,6 +118,18 @@ mod tests {
         assert_eq!(r.best_fixed_total(), 10.0);
         assert!((r.average_regret() - 1.5).abs() < 1e-12);
         assert!(r.bound(0.05) > 0.0);
+    }
+
+    #[test]
+    fn snapshot_matches_the_accessors() {
+        let mut r = RegretTracker::new(3, 4.0);
+        for _ in 0..6 {
+            r.record(2.0, &[2.0, 1.0, 3.0]);
+        }
+        let s = r.snapshot(0.05);
+        assert_eq!(s.jobs, r.jobs());
+        assert_eq!(s.average_regret, r.average_regret());
+        assert_eq!(s.bound, r.bound(0.05));
     }
 
     #[test]

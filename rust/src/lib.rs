@@ -29,11 +29,18 @@
 //! * a **scenario engine** ([`scenario`]): declarative multi-market worlds
 //!   (multi-region processes, regime schedules, CSV trace replay), a
 //!   built-in registry, and a sharded deterministic batch runner;
+//! * a **streaming market feed** ([`feed`]): append-only slot-aligned
+//!   price ingestion with an incremental availability index, loaders for
+//!   the public EC2 spot-history dump formats, and a feed mux — consumed
+//!   by the online coordinator loop
+//!   ([`coordinator::online::tola_run_online`]), which schedules against
+//!   only already-ingested prices;
 //! * an **experiment harness** ([`experiments`]) regenerating every table and
 //!   figure of the paper's evaluation section.
 
 pub mod util;
 pub mod market;
+pub mod feed;
 pub mod workload;
 pub mod policy;
 pub mod sim;

@@ -28,13 +28,31 @@ use anyhow::{bail, ensure, Context, Result};
 use super::trace::PriceTrace;
 use super::SLOTS_PER_UNIT;
 
-/// Parse CSV text into a [`PriceTrace`] on the standard slot grid.
+/// Parse CSV text into a [`PriceTrace`] on the standard slot grid,
+/// rejecting out-of-order timestamps (the error names the offending
+/// line). See [`trace_from_csv_opts`] for the sort-and-dedupe variant.
 pub fn trace_from_csv(text: &str, time_scale: f64, price_scale: f64) -> Result<PriceTrace> {
+    trace_from_csv_opts(text, time_scale, price_scale, false)
+}
+
+/// Parse CSV text into a [`PriceTrace`]. With `sort_dedup = false`
+/// out-of-order timestamps are an error naming the offending line — a
+/// garbled history must never silently become a garbled step function.
+/// With `sort_dedup = true` (an explicit opt-in for dumps known to be
+/// unordered) rows are stably sorted by timestamp and duplicate
+/// timestamps collapsed, the last-listed observation winning.
+pub fn trace_from_csv_opts(
+    text: &str,
+    time_scale: f64,
+    price_scale: f64,
+    sort_dedup: bool,
+) -> Result<PriceTrace> {
     ensure!(
         time_scale > 0.0 && price_scale > 0.0,
         "replay csv: scales must be positive (time_scale={time_scale}, price_scale={price_scale})"
     );
-    let mut rows: Vec<(Option<f64>, f64)> = Vec::new();
+    // (time, price, 1-based source line) per data row.
+    let mut rows: Vec<(Option<f64>, f64, usize)> = Vec::new();
     let mut header_skipped = false;
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim();
@@ -53,7 +71,7 @@ pub fn trace_from_csv(text: &str, time_scale: f64, price_scale: f64) -> Result<P
             Some((_, p)) if !(p.is_finite() && p > 0.0) => {
                 bail!("replay csv line {}: non-positive price '{line}'", lineno + 1)
             }
-            Some(row) => rows.push(row),
+            Some((t, p)) => rows.push((t, p, lineno + 1)),
             // Exactly one leading non-numeric row is tolerated as the
             // header; any further unparsable row is data corruption.
             None if rows.is_empty() && !header_skipped => header_skipped = true,
@@ -63,26 +81,40 @@ pub fn trace_from_csv(text: &str, time_scale: f64, price_scale: f64) -> Result<P
     ensure!(!rows.is_empty(), "replay csv: no data rows");
 
     let slot_len = 1.0 / SLOTS_PER_UNIT as f64;
-    let timed = rows.iter().any(|(t, _)| t.is_some());
+    let timed = rows.iter().any(|(t, _, _)| t.is_some());
     if !timed {
-        let prices: Vec<f64> = rows.iter().map(|(_, p)| *p * price_scale).collect();
+        let prices: Vec<f64> = rows.iter().map(|(_, p, _)| *p * price_scale).collect();
         return Ok(PriceTrace::from_prices(prices, slot_len));
     }
     ensure!(
-        rows.iter().all(|(t, _)| t.is_some()),
+        rows.iter().all(|(t, _, _)| t.is_some()),
         "replay csv: mixed timed and untimed rows"
     );
-    let mut pts: Vec<(f64, f64)> = rows
+    let mut pts: Vec<(f64, f64, usize)> = rows
         .iter()
-        .map(|(t, p)| (t.unwrap() * time_scale, *p * price_scale))
+        .map(|(t, p, l)| (t.unwrap() * time_scale, *p * price_scale, *l))
         .collect();
-    for w in pts.windows(2) {
-        ensure!(
-            w[1].0 >= w[0].0,
-            "replay csv: timestamps must be non-decreasing ({} after {})",
-            w[1].0,
-            w[0].0
+    if let Some(bad) = pts.iter().find(|(t, _, _)| !t.is_finite()) {
+        bail!(
+            "replay csv line {}: non-finite timestamp {}",
+            bad.2,
+            bad.0
         );
+    }
+    if sort_dedup {
+        pts = sort_dedup_by_time(pts, |p| p.0);
+    } else {
+        for w in pts.windows(2) {
+            ensure!(
+                w[1].0 >= w[0].0,
+                "replay csv line {}: timestamp {} goes back in time (line {} has {}); \
+                 sort the file or opt into sort_dedup",
+                w[1].2,
+                w[1].0,
+                w[0].2,
+                w[0].0
+            );
+        }
     }
     let t0 = pts[0].0;
     for p in &mut pts {
@@ -104,10 +136,41 @@ pub fn trace_from_csv(text: &str, time_scale: f64, price_scale: f64) -> Result<P
     Ok(PriceTrace::from_prices(prices, slot_len))
 }
 
+/// Stable-sort observations by (finite) timestamp and collapse duplicate
+/// timestamps, the last-listed observation winning. The one shared
+/// implementation of the normalization invariant — used by the
+/// `sort_dedup` opt-in here and by the streaming feed loaders
+/// ([`crate::feed::load_events`]), so the two paths cannot drift.
+/// Callers validate timestamp finiteness first (NaN would panic the sort).
+pub(crate) fn sort_dedup_by_time<T>(mut pts: Vec<T>, time: impl Fn(&T) -> f64) -> Vec<T> {
+    // Stable sort keeps input order among equal timestamps, so "the
+    // last-listed observation wins" is deterministic.
+    pts.sort_by(|a, b| time(a).partial_cmp(&time(b)).unwrap());
+    let mut out: Vec<T> = Vec::with_capacity(pts.len());
+    for p in pts {
+        match out.last_mut() {
+            Some(last) if time(last) == time(&p) => *last = p,
+            _ => out.push(p),
+        }
+    }
+    out
+}
+
 /// Load a CSV trace from a file path.
 pub fn trace_from_csv_file(path: &str, time_scale: f64, price_scale: f64) -> Result<PriceTrace> {
+    trace_from_csv_file_opts(path, time_scale, price_scale, false)
+}
+
+/// Load a CSV trace from a file path, optionally sorting-and-deduplicating
+/// unordered timestamps (see [`trace_from_csv_opts`]).
+pub fn trace_from_csv_file_opts(
+    path: &str,
+    time_scale: f64,
+    price_scale: f64,
+    sort_dedup: bool,
+) -> Result<PriceTrace> {
     let text = std::fs::read_to_string(path).with_context(|| format!("replay csv '{path}'"))?;
-    trace_from_csv(&text, time_scale, price_scale)
+    trace_from_csv_opts(&text, time_scale, price_scale, sort_dedup)
 }
 
 /// Tile a replayed trace so it covers at least `horizon` time units (short
@@ -186,6 +249,50 @@ mod tests {
         assert!(trace_from_csv("0,-0.5\n", 1.0, 1.0).is_err());
         assert!(trace_from_csv("5,0.2\n1,0.3\n", 1.0, 1.0).is_err()); // unsorted
         assert!(trace_from_csv("0.2\n", 0.0, 1.0).is_err()); // bad scale
+    }
+
+    #[test]
+    fn out_of_order_error_names_the_offending_line() {
+        let err = trace_from_csv("# c\ntime,price\n0,0.2\n5,0.3\n1,0.4\n", 1.0, 1.0)
+            .unwrap_err()
+            .to_string();
+        // Line 5 (`1,0.4`) steps back behind line 4 (`5,0.3`).
+        assert!(err.contains("line 5"), "{err}");
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("sort_dedup"), "{err}");
+    }
+
+    #[test]
+    fn sort_dedup_flag_normalizes_unordered_dumps() {
+        // Unordered with a duplicate timestamp: strict mode refuses,
+        // normalize mode sorts and lets the last-listed duplicate win.
+        let text = "5,0.3\n0,0.2\n5,0.9\n2,0.4\n";
+        assert!(trace_from_csv(text, 1.0, 1.0).is_err());
+        let t = trace_from_csv_opts(text, 1.0, 1.0, true).unwrap();
+        let sorted = trace_from_csv("0,0.2\n2,0.4\n5,0.9\n", 1.0, 1.0).unwrap();
+        assert_eq!(t.num_slots(), sorted.num_slots());
+        for s in 0..t.num_slots() {
+            assert_eq!(t.price_of_slot(s), sorted.price_of_slot(s), "slot {s}");
+        }
+        // Already-sorted input is unchanged by the flag.
+        let a = trace_from_csv("0,0.2\n2,0.4\n", 1.0, 1.0).unwrap();
+        let b = trace_from_csv_opts("0,0.2\n2,0.4\n", 1.0, 1.0, true).unwrap();
+        assert_eq!(a.num_slots(), b.num_slots());
+        assert_eq!(a.price_of_slot(1), b.price_of_slot(1));
+    }
+
+    #[test]
+    fn non_finite_timestamps_error_not_panic() {
+        // `parse::<f64>()` happily accepts "nan"/"inf"; both modes must
+        // return an error (the sort in normalize mode would panic on NaN).
+        for text in ["nan,0.2\n0,0.3\n", "0,0.2\ninf,0.3\n"] {
+            for sort in [false, true] {
+                let err = trace_from_csv_opts(text, 1.0, 1.0, sort)
+                    .unwrap_err()
+                    .to_string();
+                assert!(err.contains("timestamp"), "{sort}: {err}");
+            }
+        }
     }
 
     #[test]

@@ -26,7 +26,11 @@ pub struct AvailabilityIndex {
 }
 
 impl AvailabilityIndex {
-    fn build(prices: &[f64], mut bids: Vec<f64>) -> AvailabilityIndex {
+    /// Build the full prefix-sum table over `prices` for a bid set —
+    /// O(S·L). Public so the streaming layer can pin its incremental
+    /// index ([`crate::feed::IncrementalAvailabilityIndex`]) exactly equal
+    /// to a batch rebuild.
+    pub fn build(prices: &[f64], mut bids: Vec<f64>) -> AvailabilityIndex {
         bids.sort_by(|a, b| a.partial_cmp(b).unwrap());
         bids.dedup();
         let cum_wins = bids
@@ -64,6 +68,14 @@ impl AvailabilityIndex {
         let total = s1.saturating_sub(s0) + 1;
         self.winning_slots(s0, s1, bid)
             .map(|w| w as f64 / total as f64)
+    }
+
+    /// The raw cumulative win counts for an indexed bid (`cum[k]` = wins
+    /// among slots `[0, k)`) — the array the streaming equality tests
+    /// compare against the incremental index.
+    pub fn cum_wins(&self, bid: f64) -> Option<&[u64]> {
+        let i = self.bids.iter().position(|&b| b == bid)?;
+        Some(&self.cum_wins[i])
     }
 }
 
@@ -222,6 +234,23 @@ mod tests {
         assert_eq!(t.slot_of(0.5), 1);
         assert_eq!(t.slot_of(100.0), 5); // clamped
         assert_eq!(t.price_at(1.2), 0.1);
+    }
+
+    #[test]
+    fn slot_of_horizon_boundary_clamps_to_last_slot() {
+        // t == horizon falls exactly one past the last slot's index range;
+        // it must clamp to the final slot, never index one past the end.
+        let t = toy();
+        assert_eq!(t.horizon(), 3.0);
+        assert_eq!(t.slot_of(t.horizon()), 5);
+        assert_eq!(t.price_at(t.horizon()), 0.9);
+        // Just inside the final slot and just past the horizon agree.
+        assert_eq!(t.slot_of(t.horizon() - 1e-12), 5);
+        assert_eq!(t.slot_of(t.horizon() + 1e-12), 5);
+        // Degenerate one-slot trace: every time maps to slot 0.
+        let one = PriceTrace::from_prices(vec![0.4], 0.5);
+        assert_eq!(one.slot_of(one.horizon()), 0);
+        assert_eq!(one.slot_of(0.0), 0);
     }
 
     #[test]

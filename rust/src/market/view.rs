@@ -237,16 +237,24 @@ pub struct CapacityLedger {
 
 impl CapacityLedger {
     pub fn new(view: &MarketView, horizon: f64) -> CapacityLedger {
-        let slot_len = view.slot_len();
+        let caps: Vec<Option<u32>> = view.offers().iter().map(|o| o.capacity).collect();
+        CapacityLedger::from_capacities(&caps, view.slot_len(), horizon)
+    }
+
+    /// Build from bare per-offer capacities — for consumers (the streaming
+    /// feed) whose traces grow after the ledger is sized. Identical lane
+    /// sizing to [`CapacityLedger::new`], so reservations near the horizon
+    /// clamp the same way on both paths.
+    pub fn from_capacities(
+        capacities: &[Option<u32>],
+        slot_len: f64,
+        horizon: f64,
+    ) -> CapacityLedger {
         let slots = (horizon / slot_len).ceil() as usize + 1;
         CapacityLedger {
-            lanes: view
-                .offers()
+            lanes: capacities
                 .iter()
-                .map(|o| {
-                    o.capacity
-                        .map(|c| RangeAddMinTree::new(slots, c as i64))
-                })
+                .map(|c| c.map(|c| RangeAddMinTree::new(slots, c as i64)))
                 .collect(),
             slot_len,
         }

@@ -12,9 +12,9 @@
 //!   routing mode: home / arbitrage composite / capacity-aware routing),
 //!   a workload mix with arrival-rate schedules, a pool, and a policy
 //!   grid;
-//! * [`registry`] — ten built-in named worlds, from `paper-default` to
-//!   `multi-region-arbitrage` and the capacity-aware `capacity-crunch` /
-//!   `multi-region-routed`;
+//! * [`registry`] — eleven built-in named worlds, from `paper-default` to
+//!   `multi-region-arbitrage`, the capacity-aware `capacity-crunch` /
+//!   `multi-region-routed`, and the streamed-dump `ec2-feed-replay`;
 //! * [`runner`] — fans `scenarios × seeds` cells across the worker pool
 //!   with per-run seed derivation, so a batch is bit-identical under any
 //!   `--threads`;
@@ -29,10 +29,10 @@ pub mod report;
 pub use registry::{builtin_names, builtins, find};
 pub use report::{aggregate, report_json, ScenarioAggregate};
 pub use runner::{
-    build_market, build_market_view, build_workload, derive_run_seed, run_batch,
+    build_market, build_market_view, build_workload, cf_specs, derive_run_seed, run_batch,
     run_scenario_once, BatchOptions, ScenarioOutcome,
 };
 pub use spec::{
-    FlatOffer, InstanceTypeSpec, MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplaySpec,
-    RoutingSpec, ScenarioSpec, WorkloadSpec,
+    FlatOffer, InstanceTypeSpec, MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplayFormat,
+    ReplaySpec, RoutingSpec, ScenarioSpec, WorkloadSpec,
 };

@@ -7,8 +7,8 @@ use crate::market::SpotModel;
 use crate::workload::MixComponent;
 
 use super::spec::{
-    InstanceTypeSpec, MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplaySpec, RoutingSpec,
-    ScenarioSpec, WorkloadSpec,
+    InstanceTypeSpec, MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplayFormat, ReplaySpec,
+    RoutingSpec, ScenarioSpec, WorkloadSpec,
 };
 
 /// The sample spot-price history shipped with the repo
@@ -17,6 +17,16 @@ use super::spec::{
 /// registry works from any working directory; file-based replays use the
 /// spec's `path` field.
 pub const SAMPLE_TRACE_CSV: &str = include_str!("../../../examples/traces/spot_sample.csv");
+
+/// A small `aws ec2 describe-spot-price-history` JSON-lines dump
+/// (`examples/traces/ec2_sample.jsonl`): ~120 hours of m5.large/us-east-1a
+/// history with a surge regime, deliberately containing out-of-order and
+/// duplicate-timestamp records so the feed loaders' normalization is
+/// exercised by the registry itself.
+pub const EC2_SAMPLE_JSONL: &str = include_str!("../../../examples/traces/ec2_sample.jsonl");
+
+/// The m5.large on-demand price the sample dump is normalized against.
+pub const EC2_SAMPLE_OD_USD: f64 = 0.096;
 
 fn base(name: &str, description: &str, model: SpotModel) -> ScenarioSpec {
     ScenarioSpec {
@@ -76,6 +86,27 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         SpotModel::paper_default(),
     );
     replayed.market.regions[0].price = PriceSpec::Replay(ReplaySpec::inline(SAMPLE_TRACE_CSV));
+
+    // A real-format EC2 dump streamed through the feed loaders: hourly
+    // epoch timestamps scaled to one unit per hour, dollar prices
+    // normalized by the on-demand list price.
+    let mut ec2_replay = base(
+        "ec2-feed-replay",
+        "EC2 describe-spot-price-history JSON-lines dump \
+         (examples/traces/ec2_sample.jsonl) streamed through the feed \
+         loaders: out-of-order and duplicate records normalized, prices \
+         scaled by the m5.large on-demand price.",
+        SpotModel::paper_default(),
+    );
+    ec2_replay.market.regions[0].price = PriceSpec::Replay(ReplaySpec {
+        csv: Some(EC2_SAMPLE_JSONL.to_string()),
+        path: None,
+        time_scale: 1.0 / 3600.0,
+        price_scale: 1.0 / EC2_SAMPLE_OD_USD,
+        tile: true,
+        format: ReplayFormat::Ec2Json,
+        normalize: false,
+    });
 
     let multi_region = ScenarioSpec {
         name: "multi-region-arbitrage".into(),
@@ -244,6 +275,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         calm_surge,
         google,
         replayed,
+        ec2_replay,
         multi_region,
         capacity_crunch,
         multi_region_routed,
@@ -270,12 +302,13 @@ mod tests {
     #[test]
     fn registry_has_expected_worlds() {
         let names = builtin_names();
-        assert_eq!(names.len(), 10);
+        assert_eq!(names.len(), 11);
         for want in [
             "paper-default",
             "calm-surge-markov",
             "google-fixed",
             "replayed-trace",
+            "ec2-feed-replay",
             "multi-region-arbitrage",
             "capacity-crunch",
             "multi-region-routed",
@@ -320,6 +353,31 @@ mod tests {
     fn find_is_by_name() {
         assert!(find("pool-heavy").unwrap().pool_capacity > 0);
         assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn ec2_replay_world_normalizes_the_dump() {
+        let s = find("ec2-feed-replay").unwrap();
+        match &s.market.regions[0].price {
+            PriceSpec::Replay(r) => {
+                assert_eq!(r.format, ReplayFormat::Ec2Json);
+                assert!(!r.csv.as_deref().unwrap().contains("SpotPriceHistory"));
+                assert!(r.csv.as_deref().unwrap().contains("\"SpotPrice\""));
+            }
+            other => panic!("expected replay price spec, got {other:?}"),
+        }
+        // The dump realizes into a normalized trace: ~120 units of
+        // history, prices inside the scaled band, disorder absorbed.
+        let trace = crate::scenario::runner::build_market(&s, 10.0, 1).unwrap().0;
+        assert!(trace.horizon() > 100.0, "horizon {}", trace.horizon());
+        let lo = (0..trace.num_slots())
+            .map(|k| trace.price_of_slot(k))
+            .fold(f64::INFINITY, f64::min);
+        let hi = (0..trace.num_slots())
+            .map(|k| trace.price_of_slot(k))
+            .fold(0.0, f64::max);
+        assert!(lo > 0.1 && lo < 0.2, "lo {lo}");
+        assert!(hi > 0.5 && hi < 1.0, "hi {hi}");
     }
 
     #[test]

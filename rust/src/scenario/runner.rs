@@ -11,6 +11,7 @@
 use anyhow::{bail, Result};
 
 use crate::coordinator::{parallel_map, tola_run_view, Evaluator};
+use crate::feed;
 use crate::learning::counterfactual::CfSpec;
 use crate::market::{
     replay, MarketOffer, MarketView, PriceTrace, SpotPriceProcess, SLOTS_PER_UNIT,
@@ -20,7 +21,7 @@ use crate::policy::{benchmark_bids, grid_b, policy_set_full, policy_set_spot_onl
 use crate::util::rng::SplitMix64;
 use crate::workload::{transform, ArrivalSchedule, ChainJob, GeneratorConfig, MixStream};
 
-use super::spec::{PolicySetSpec, PriceSpec, RoutingSpec, ScenarioSpec};
+use super::spec::{PolicySetSpec, PriceSpec, ReplayFormat, RoutingSpec, ScenarioSpec};
 
 /// Batch-level options for [`run_batch`].
 #[derive(Debug, Clone)]
@@ -108,12 +109,49 @@ fn region_trace(price: &PriceSpec, horizon: f64, seed: u64) -> Result<PriceTrace
             Ok(PriceTrace::from_prices(prices, slot_len))
         }
         PriceSpec::Replay(r) => {
-            let trace = match (&r.csv, &r.path) {
-                (Some(text), _) => replay::trace_from_csv(text, r.time_scale, r.price_scale)?,
-                (None, Some(path)) => {
-                    replay::trace_from_csv_file(path, r.time_scale, r.price_scale)?
+            let trace = match r.format {
+                ReplayFormat::Simple => match (&r.csv, &r.path) {
+                    (Some(text), _) => replay::trace_from_csv_opts(
+                        text,
+                        r.time_scale,
+                        r.price_scale,
+                        r.normalize,
+                    )?,
+                    (None, Some(path)) => replay::trace_from_csv_file_opts(
+                        path,
+                        r.time_scale,
+                        r.price_scale,
+                        r.normalize,
+                    )?,
+                    (None, None) => bail!("replay spec has neither csv nor path"),
+                },
+                // EC2 dump shapes go through the streaming loaders (which
+                // normalize out-of-order records) and materialize onto the
+                // standard grid.
+                ec2 => {
+                    let fmt = match ec2 {
+                        ReplayFormat::Ec2Json => feed::FeedFormat::Ec2Json,
+                        _ => feed::FeedFormat::Csv,
+                    };
+                    let load = match (&r.csv, &r.path) {
+                        (Some(text), _) => feed::load_events(
+                            text,
+                            fmt,
+                            &feed::FeedFilter::default(),
+                            r.time_scale,
+                            r.price_scale,
+                        )?,
+                        (None, Some(path)) => feed::load_events_file(
+                            path,
+                            Some(fmt),
+                            &feed::FeedFilter::default(),
+                            r.time_scale,
+                            r.price_scale,
+                        )?,
+                        (None, None) => bail!("replay spec has neither csv nor path"),
+                    };
+                    feed::events_to_trace(&load.events, 1.0 / SLOTS_PER_UNIT as f64)?
                 }
-                (None, None) => bail!("replay spec has neither csv nor path"),
             };
             Ok(if r.tile {
                 replay::tile_to_horizon(&trace, horizon)
@@ -209,8 +247,10 @@ pub fn build_workload(spec: &ScenarioSpec, jobs: usize, seed: u64) -> Vec<ChainJ
     stream.take_jobs(jobs).iter().map(transform).collect()
 }
 
-/// Resolve the scenario's policy grid into counterfactual specs.
-fn cf_specs(spec: &ScenarioSpec) -> Vec<CfSpec> {
+/// Resolve the scenario's policy grid into counterfactual specs (shared
+/// with the `repro feed` driver, which takes its workload and policy set
+/// from a scenario but its market from the feed).
+pub fn cf_specs(spec: &ScenarioSpec) -> Vec<CfSpec> {
     let set = match spec.policy_set {
         PolicySetSpec::Auto if spec.pool_capacity > 0 => PolicySetSpec::Full,
         PolicySetSpec::Auto => PolicySetSpec::SpotOnly,

@@ -36,17 +36,59 @@ pub enum PriceSpec {
     Replay(ReplaySpec),
 }
 
-/// A CSV replay source: inline content or a file path (exactly one).
+/// On-disk shape of a replayed price history.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplayFormat {
+    /// The repo's numeric `time,price` (or price-per-slot) CSV.
+    #[default]
+    Simple,
+    /// `aws ec2 describe-spot-price-history` JSON / JSON-lines
+    /// ([`crate::feed::FeedFormat::Ec2Json`]).
+    Ec2Json,
+    /// The region/AZ CSV dump shape with ISO-8601 timestamps
+    /// ([`crate::feed::FeedFormat::Csv`]).
+    Ec2Csv,
+}
+
+impl ReplayFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReplayFormat::Simple => "simple",
+            ReplayFormat::Ec2Json => "ec2-json",
+            ReplayFormat::Ec2Csv => "ec2-csv",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<ReplayFormat> {
+        Ok(match s {
+            "simple" => ReplayFormat::Simple,
+            "ec2-json" => ReplayFormat::Ec2Json,
+            "ec2-csv" => ReplayFormat::Ec2Csv,
+            other => bail!("unknown replay format '{other}' (simple|ec2-json|ec2-csv)"),
+        })
+    }
+}
+
+/// A replayed price-history source: inline content or a file path
+/// (exactly one; the `csv` field holds the inline text whatever the
+/// format — the key predates the EC2 shapes).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReplaySpec {
     pub csv: Option<String>,
     pub path: Option<String>,
-    /// Multiplies CSV timestamps into simulated time units.
+    /// Multiplies timestamps into simulated time units (EC2 formats yield
+    /// epoch seconds, so e.g. `1/3600` makes a unit an hour).
     pub time_scale: f64,
-    /// Multiplies CSV prices (normalize against the on-demand price).
+    /// Multiplies prices (normalize against the on-demand price).
     pub price_scale: f64,
     /// Tile the trace to cover the workload horizon (short histories wrap).
     pub tile: bool,
+    /// On-disk shape; EC2 formats always normalize record order.
+    pub format: ReplayFormat,
+    /// `simple` format only: sort-and-dedupe out-of-order timestamps
+    /// instead of rejecting them (an explicit opt-in — see
+    /// [`crate::market::replay::trace_from_csv_opts`]).
+    pub normalize: bool,
 }
 
 impl ReplaySpec {
@@ -57,6 +99,8 @@ impl ReplaySpec {
             time_scale: 1.0,
             price_scale: 1.0,
             tile: true,
+            format: ReplayFormat::Simple,
+            normalize: false,
         }
     }
 }
@@ -474,6 +518,12 @@ fn validate_price(price: &PriceSpec, scenario: &str, offer: &str) -> Result<()> 
                 "{}: replay scales must be positive",
                 ctx()
             );
+            ensure!(
+                !(rp.normalize && rp.format != ReplayFormat::Simple),
+                "{}: 'normalize' applies to the simple format only \
+                 (the EC2 loaders always normalize record order)",
+                ctx()
+            );
         }
     }
     Ok(())
@@ -507,6 +557,14 @@ fn price_to_json(p: &PriceSpec) -> Json {
                 .set("time_scale", Json::Num(r.time_scale))
                 .set("price_scale", Json::Num(r.price_scale))
                 .set("tile", Json::Bool(r.tile));
+            // Defaults stay off-disk so pre-existing spec files round-trip
+            // byte-identically.
+            if r.format != ReplayFormat::Simple {
+                j.set("format", Json::Str(r.format.as_str().into()));
+            }
+            if r.normalize {
+                j.set("normalize", Json::Bool(true));
+            }
             if let Some(csv) = &r.csv {
                 j.set("csv", Json::Str(csv.clone()));
             }
@@ -553,6 +611,9 @@ fn price_from_json(j: &Json, ctx: &str) -> Result<PriceSpec> {
             time_scale: j.opt_f64("time_scale", 1.0),
             price_scale: j.opt_f64("price_scale", 1.0),
             tile: j.opt_bool("tile", true),
+            format: ReplayFormat::from_str(j.opt_str("format", "simple"))
+                .map_err(|e| anyhow::anyhow!("{ctx}: {e}"))?,
+            normalize: j.opt_bool("normalize", false),
         })),
         other => bail!("{ctx}: unknown price kind '{other}' (model|regimes|replay)"),
     }
@@ -841,6 +902,52 @@ mod tests {
         s.validate().unwrap();
         let back = ScenarioSpec::from_json(&s.to_json()).unwrap();
         assert_eq!(back, s);
+        // Default format/normalize stay off-disk (old spec files keep
+        // parsing and old writers keep diffing clean).
+        let pj = s.to_json().pretty();
+        assert!(!pj.contains("\"format\""), "{pj}");
+        assert!(!pj.contains("\"normalize\""), "{pj}");
+    }
+
+    #[test]
+    fn ec2_replay_format_roundtrips_and_validates() {
+        let mut s = sample();
+        let mut rp = ReplaySpec::inline("{\"Timestamp\":\"2024-03-01T00:00:00Z\",\"SpotPrice\":\"0.03\"}");
+        rp.format = ReplayFormat::Ec2Json;
+        rp.time_scale = 1.0 / 3600.0;
+        rp.price_scale = 10.0;
+        s.market = MarketSpec {
+            regions: vec![RegionSpec {
+                name: "streamed".into(),
+                od_price: 1.0,
+                price: PriceSpec::Replay(rp.clone()),
+                capacity: None,
+                instance_types: Vec::new(),
+            }],
+            routing: RoutingSpec::Home,
+        };
+        s.validate().unwrap();
+        let back = ScenarioSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        let re = ScenarioSpec::parse(&s.to_json().pretty()).unwrap();
+        assert_eq!(re, s);
+        // normalize + EC2 format contradict (EC2 loaders always normalize).
+        let mut bad = s.clone();
+        if let PriceSpec::Replay(r) = &mut bad.market.regions[0].price {
+            r.normalize = true;
+        }
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("normalize"), "{err}");
+        // Unknown format string errors.
+        let text = s.to_json().pretty().replace("ec2-json", "parquet");
+        assert!(ScenarioSpec::parse(&text).is_err());
+        // The simple-format normalize flag round-trips.
+        let mut s2 = sample();
+        let mut rp2 = ReplaySpec::inline("5,0.3\n0,0.2\n");
+        rp2.normalize = true;
+        s2.market.regions[0].price = PriceSpec::Replay(rp2);
+        s2.validate().unwrap();
+        assert_eq!(ScenarioSpec::from_json(&s2.to_json()).unwrap(), s2);
     }
 
     /// A capacity-and-instance-type market for the routed-world tests.

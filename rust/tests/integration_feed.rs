@@ -1,0 +1,387 @@
+//! Streaming-feed acceptance tests:
+//!
+//! * the incremental availability index is *exactly* equal (on `cum_wins`)
+//!   to a batch rebuild under arbitrary append splits;
+//! * `tola_run_online` over a fully pre-loaded feed — and over a live,
+//!   event-gated feed — reproduces the batch `tola_run`/`tola_run_view`
+//!   bit for bit, on degenerate and routed markets;
+//! * the no-lookahead guard turns a feed that ends mid-stream into a hard
+//!   error (the should-fail contract), never a silently clamped price.
+
+use dagcloud::coordinator::{
+    tola_run, tola_run_online, tola_run_view, Evaluator, LearningReport, OnlineOptions,
+};
+use dagcloud::feed::{
+    FeedBinding, FeedMux, IncrementalAvailabilityIndex, PriceEvent,
+};
+use dagcloud::learning::counterfactual::CfSpec;
+use dagcloud::market::{
+    AvailabilityIndex, MarketOffer, MarketView, PriceTrace, SpotModel, SLOTS_PER_UNIT,
+};
+use dagcloud::policy::routing::RoutingPolicy;
+use dagcloud::policy::{policy_set_full, policy_set_spot_only};
+use dagcloud::util::prop::{for_all, Config as PropConfig};
+use dagcloud::workload::{transform, ChainJob, GeneratorConfig, JobStream};
+
+const DT: f64 = 1.0 / SLOTS_PER_UNIT as f64;
+
+fn setup(n: usize, seed: u64) -> (Vec<ChainJob>, PriceTrace) {
+    let mut stream = JobStream::new(GeneratorConfig::small(), seed);
+    let jobs: Vec<ChainJob> = stream.take_jobs(n).iter().map(transform).collect();
+    let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+    let trace = PriceTrace::generate(SpotModel::paper_default(), horizon, seed + 1);
+    (jobs, trace)
+}
+
+fn spot_specs() -> Vec<CfSpec> {
+    policy_set_spot_only().into_iter().map(CfSpec::Proposed).collect()
+}
+
+/// Every field of the two reports, compared bitwise.
+fn assert_reports_identical(a: &LearningReport, b: &LearningReport, ctx: &str) {
+    assert_eq!(a.jobs, b.jobs, "{ctx}: jobs");
+    assert_eq!(a.average_unit_cost, b.average_unit_cost, "{ctx}: alpha");
+    assert_eq!(a.total_workload, b.total_workload, "{ctx}: workload");
+    assert_eq!(a.final_weights, b.final_weights, "{ctx}: weights");
+    assert_eq!(a.best_policy, b.best_policy, "{ctx}: best policy");
+    assert_eq!(a.average_regret, b.average_regret, "{ctx}: regret");
+    assert_eq!(a.regret_bound, b.regret_bound, "{ctx}: bound");
+    assert_eq!(a.pool_utilization, b.pool_utilization, "{ctx}: utilization");
+    assert_eq!(a.weight_trajectory, b.weight_trajectory, "{ctx}: trajectory");
+    assert_eq!(a.offer_work, b.offer_work, "{ctx}: offer work");
+    assert_eq!(a.ledger, b.ledger, "{ctx}: ledger");
+}
+
+/// The trace's slots re-expressed as a live event stream (one observation
+/// per slot boundary), so the online loop has to interleave ingestion with
+/// event resolution instead of starting fully loaded.
+fn trace_as_events(trace: &PriceTrace) -> Vec<PriceEvent> {
+    (0..trace.num_slots())
+        .map(|s| PriceEvent {
+            time: s as f64 * trace.slot_len(),
+            price: trace.price_of_slot(s),
+        })
+        .collect()
+}
+
+#[test]
+fn incremental_index_equals_batch_under_any_append_split() {
+    for_all(PropConfig::cases(200).seed(31), |rng| {
+        let n = rng.range_inclusive(1, 400) as usize;
+        let prices: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.chance(0.5) {
+                    rng.uniform(0.1, 0.3)
+                } else {
+                    rng.uniform(0.3, 1.0)
+                }
+            })
+            .collect();
+        let n_bids = rng.range_inclusive(1, 6) as usize;
+        let bids: Vec<f64> = (0..n_bids).map(|_| rng.uniform(0.1, 1.0)).collect();
+
+        // Split the price stream into arbitrary append runs.
+        let mut idx = IncrementalAvailabilityIndex::new(bids.clone());
+        let mut pos = 0usize;
+        while pos < n {
+            let k = rng.range_inclusive(1, (n - pos) as u64) as usize;
+            idx.append(&prices[pos..pos + k]);
+            pos += k;
+        }
+        let batch = AvailabilityIndex::build(&prices, bids.clone());
+
+        // Exact equality on the cumulative win counts, per bid.
+        for &b in idx.bids() {
+            let inc = idx.cum_wins(b).ok_or("bid missing in incremental")?;
+            let bat = batch.cum_wins(b).ok_or("bid missing in batch")?;
+            if inc != bat {
+                return Err(format!("cum_wins diverged for bid {b}: {inc:?} vs {bat:?}"));
+            }
+        }
+        // And identical query answers on random ranges (including ranges
+        // clamped past the end).
+        for _ in 0..10 {
+            let s0 = rng.range_inclusive(0, n as u64 + 5) as usize;
+            let s1 = rng.range_inclusive(0, n as u64 + 5) as usize;
+            let bid = bids[rng.range_inclusive(0, n_bids as u64 - 1) as usize];
+            if idx.winning_slots(s0, s1, bid) != batch.winning_slots(s0, s1, bid) {
+                return Err(format!("winning_slots({s0},{s1},{bid}) diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn online_over_preloaded_feed_is_bit_identical_to_batch() {
+    for (n_jobs, pool, seed) in [(50usize, 0u32, 11u64), (60, 150, 23), (40, 0, 47)] {
+        let (jobs, trace) = setup(n_jobs, seed);
+        let specs: Vec<CfSpec> = if pool > 0 {
+            policy_set_full().into_iter().map(CfSpec::Proposed).collect()
+        } else {
+            spot_specs()
+        };
+        let batch = tola_run(
+            &jobs,
+            &specs,
+            &trace,
+            pool,
+            1.0,
+            seed,
+            &Evaluator::Native { threads: 2 },
+        );
+        let mux = FeedMux::single_from_trace(&trace, 1.0);
+        let online = tola_run_online(
+            &jobs,
+            &specs,
+            mux,
+            &OnlineOptions {
+                routing: RoutingPolicy::Home,
+                pool_capacity: pool,
+                seed,
+                snapshot_every: 16,
+            },
+            &Evaluator::Native { threads: 2 },
+        )
+        .unwrap();
+        assert_reports_identical(
+            &online.report,
+            &batch,
+            &format!("preloaded n={n_jobs} pool={pool} seed={seed}"),
+        );
+        assert_eq!(online.ingested_slots, trace.num_slots());
+        assert!(!online.snapshots.is_empty());
+        let last = online.snapshots.last().unwrap();
+        assert!(last.jobs <= n_jobs as u64);
+        assert!(last.regret_bound > 0.0);
+    }
+}
+
+#[test]
+fn online_over_live_event_stream_is_bit_identical_to_batch() {
+    // The harder equivalence: the feed starts EMPTY and delivers one
+    // observation per slot, so the loop must interleave ingestion with
+    // event resolution (and rebuild its market view as the frontier
+    // advances). Results must still match the batch run bit for bit.
+    let (jobs, trace) = setup(40, 71);
+    let specs = spot_specs();
+    let batch = tola_run(
+        &jobs,
+        &specs,
+        &trace,
+        0,
+        1.0,
+        71,
+        &Evaluator::Native { threads: 2 },
+    );
+    let mux = FeedMux::new(
+        vec![FeedBinding {
+            region: "default".into(),
+            instance_type: "default".into(),
+            od_price: 1.0,
+            capacity: None,
+            events: trace_as_events(&trace),
+        }],
+        DT,
+    )
+    .unwrap();
+    let online = tola_run_online(
+        &jobs,
+        &specs,
+        mux,
+        &OnlineOptions {
+            routing: RoutingPolicy::Home,
+            pool_capacity: 0,
+            seed: 71,
+            snapshot_every: 10,
+        },
+        &Evaluator::Native { threads: 2 },
+    )
+    .unwrap();
+    assert_reports_identical(&online.report, &batch, "live degenerate");
+    // Snapshots are monotone in jobs and sim time.
+    for w in online.snapshots.windows(2) {
+        assert!(w[1].jobs > w[0].jobs);
+        assert!(w[1].sim_time >= w[0].sim_time);
+        assert!(w[1].ingested_slots >= w[0].ingested_slots);
+    }
+}
+
+#[test]
+fn online_routed_multi_offer_matches_batch_view_run() {
+    let (jobs, trace) = setup(60, 13);
+    let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
+    let n = (horizon * SLOTS_PER_UNIT as f64) as usize + 2;
+    let alt = PriceTrace::from_prices(
+        (0..n).map(|i| if i % 3 == 0 { 0.15 } else { 0.7 }).collect(),
+        DT,
+    );
+    let offers = vec![
+        MarketOffer {
+            region: "primary".into(),
+            instance_type: "default".into(),
+            od_price: 1.0,
+            trace: trace.clone(),
+            capacity: Some(8),
+        },
+        MarketOffer {
+            region: "overflow".into(),
+            instance_type: "default".into(),
+            od_price: 1.2,
+            trace: alt.clone(),
+            capacity: None,
+        },
+    ];
+    let view = MarketView::new(offers).unwrap();
+    let specs = spot_specs();
+    for routing in [RoutingPolicy::CheapestFeasible, RoutingPolicy::Spillover] {
+        let batch = tola_run_view(
+            &jobs,
+            &specs,
+            &view,
+            routing,
+            0,
+            29,
+            &Evaluator::Native { threads: 2 },
+        );
+        // Preloaded mux with the identical offers.
+        let mux = FeedMux::from_traces(&[
+            ("primary".into(), "default".into(), 1.0, Some(8), trace.clone()),
+            ("overflow".into(), "default".into(), 1.2, None, alt.clone()),
+        ]);
+        let online = tola_run_online(
+            &jobs,
+            &specs,
+            mux,
+            &OnlineOptions {
+                routing,
+                pool_capacity: 0,
+                seed: 29,
+                snapshot_every: 0,
+            },
+            &Evaluator::Native { threads: 2 },
+        )
+        .unwrap();
+        assert_reports_identical(&online.report, &batch, &format!("routed {routing:?}"));
+        assert_eq!(online.report.offer_work.len(), 2);
+        assert!(online.snapshots.is_empty(), "snapshot_every = 0 emits none");
+        // And the live-gated variant agrees as well.
+        let live = FeedMux::new(
+            vec![
+                FeedBinding {
+                    region: "primary".into(),
+                    instance_type: "default".into(),
+                    od_price: 1.0,
+                    capacity: Some(8),
+                    events: trace_as_events(&trace),
+                },
+                FeedBinding {
+                    region: "overflow".into(),
+                    instance_type: "default".into(),
+                    od_price: 1.2,
+                    capacity: None,
+                    events: trace_as_events(&alt),
+                },
+            ],
+            DT,
+        )
+        .unwrap();
+        let streamed = tola_run_online(
+            &jobs,
+            &specs,
+            live,
+            &OnlineOptions {
+                routing,
+                pool_capacity: 0,
+                seed: 29,
+                snapshot_every: 0,
+            },
+            &Evaluator::Native { threads: 2 },
+        )
+        .unwrap();
+        assert_reports_identical(&streamed.report, &batch, &format!("live routed {routing:?}"));
+    }
+}
+
+#[test]
+fn lookahead_guard_fails_hard_when_the_feed_ends_early() {
+    // The should-fail contract: a feed covering only part of the job
+    // horizon must error — never silently price jobs against clamped or
+    // imaginary slots.
+    let (jobs, trace) = setup(30, 5);
+    let specs = spot_specs();
+    let short_slots = trace.num_slots() / 3;
+    let short = PriceTrace::from_prices(
+        (0..short_slots).map(|s| trace.price_of_slot(s)).collect(),
+        DT,
+    );
+    let mux = FeedMux::single_from_trace(&short, 1.0);
+    let err = tola_run_online(
+        &jobs,
+        &specs,
+        mux,
+        &OnlineOptions {
+            routing: RoutingPolicy::Home,
+            pool_capacity: 0,
+            seed: 5,
+            snapshot_every: 0,
+        },
+        &Evaluator::Native { threads: 1 },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("lookahead"), "{err}");
+    assert!(err.contains("frontier"), "{err}");
+}
+
+#[test]
+fn online_handles_a_feed_with_margin_past_the_horizon() {
+    // A feed longer than the workload needs: the loop simply stops
+    // ingesting once the last retirement resolves; no error, identical
+    // results to the batch run on the same (longer) trace.
+    let (jobs, trace) = setup(25, 83);
+    let specs = spot_specs();
+    let batch = tola_run(
+        &jobs,
+        &specs,
+        &trace,
+        0,
+        1.0,
+        83,
+        &Evaluator::Native { threads: 1 },
+    );
+    let mut events = trace_as_events(&trace);
+    // Extend the stream well past the horizon.
+    let last_t = events.last().unwrap().time;
+    for k in 1..200 {
+        events.push(PriceEvent {
+            time: last_t + k as f64 * DT,
+            price: 0.5,
+        });
+    }
+    let mux = FeedMux::new(
+        vec![FeedBinding {
+            region: "default".into(),
+            instance_type: "default".into(),
+            od_price: 1.0,
+            capacity: None,
+            events,
+        }],
+        DT,
+    )
+    .unwrap();
+    let online = tola_run_online(
+        &jobs,
+        &specs,
+        mux,
+        &OnlineOptions {
+            routing: RoutingPolicy::Home,
+            pool_capacity: 0,
+            seed: 83,
+            snapshot_every: 5,
+        },
+        &Evaluator::Native { threads: 1 },
+    )
+    .unwrap();
+    assert_reports_identical(&online.report, &batch, "margin feed");
+}
