@@ -1,0 +1,138 @@
+//! Fleet-layer benches: what merging a fleet's worth of shard reports
+//! costs — report parsing + cell union, canonical renormalization +
+//! robustness scoring, and the manifest round-trip. The workload is
+//! synthetic (rows shaped like real `dagcloud.scenarios/v1` details with
+//! the full 175-policy cost surface) so the bench isolates the merge
+//! layer from the coordinators that produced the rows.
+
+use dagcloud::fleet::{merge_online, FleetAccumulator, OnlineSource, ShardManifest};
+use dagcloud::learning::counterfactual::CfSpec;
+use dagcloud::coordinator::OnlineSnapshot;
+use dagcloud::policy::policy_set_full;
+use dagcloud::scenario::{self, ScenarioOutcome};
+use dagcloud::util::bench::Bencher;
+use dagcloud::util::rng::Pcg32;
+
+fn synthetic_outcome(world: usize, rep: u64, labels: &[String], rng: &mut Pcg32) -> ScenarioOutcome {
+    let base = rng.uniform(0.2, 0.5);
+    ScenarioOutcome {
+        scenario: format!("world-{world:02}"),
+        replicate: rep,
+        run_seed: rng.next_u64(),
+        jobs: 400,
+        average_unit_cost: base,
+        average_regret: rng.uniform(0.0, 0.05),
+        regret_bound: rng.uniform(0.3, 0.6),
+        pool_utilization: 0.0,
+        so_share: 0.0,
+        spot_share: 0.8,
+        od_share: 0.2,
+        availability_lo: 0.4,
+        availability_hi: 0.9,
+        best_policy: labels[0].clone(),
+        offer_shares: Vec::new(),
+        policy_costs: labels
+            .iter()
+            .map(|l| (l.clone(), base + rng.uniform(0.0, 0.2)))
+            .collect(),
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_fleet ==\n");
+
+    // 10 worlds x 5 replicates, full 175-policy cost surface per row —
+    // a registry-scale fleet's row volume.
+    let labels: Vec<String> = policy_set_full()
+        .into_iter()
+        .map(|p| CfSpec::Proposed(p).label())
+        .collect();
+    let mut rng = Pcg32::new(0xF1EE7);
+    let mut rows: Vec<ScenarioOutcome> = Vec::with_capacity(50);
+    for w in 0..10usize {
+        for rep in 0..5u64 {
+            rows.push(synthetic_outcome(w, rep, &labels, &mut rng));
+        }
+    }
+
+    let rows = rows; // frozen
+    // Four shard documents, split round-robin like the manifest plans.
+    let shard_docs: Vec<String> = (0..4usize)
+        .map(|k| {
+            let shard: Vec<ScenarioOutcome> = rows
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % 4 == k)
+                .map(|(_, o)| o.clone())
+                .collect();
+            scenario::report_json(&shard, 5, 7, false).pretty()
+        })
+        .collect();
+    let total_bytes: usize = shard_docs.iter().map(String::len).sum();
+
+    b.bench_throughput(
+        "fleet/merge_4_shards_50_cells_175pol",
+        total_bytes as f64 / 1e6,
+        "MB/s",
+        || {
+            let mut acc = FleetAccumulator::new();
+            for doc in &shard_docs {
+                acc.absorb(&dagcloud::util::json::Json::parse(doc).unwrap())
+                    .unwrap();
+            }
+            acc.fleet_json(None).unwrap()
+        },
+    );
+
+    // The renormalization half alone (rows already in memory): canonical
+    // sort + aggregates + minimax scoring over 175 policies x 10 worlds.
+    let mut acc = FleetAccumulator::new();
+    for doc in &shard_docs {
+        acc.absorb(&dagcloud::util::json::Json::parse(doc).unwrap())
+            .unwrap();
+    }
+    b.bench("fleet/report_from_absorbed_rows", || {
+        acc.fleet_json(None).unwrap()
+    });
+    let sorted = acc.canonical_outcomes();
+    b.bench_throughput(
+        "fleet/robustness_score_50_cells_175pol",
+        (sorted.len() * labels.len()) as f64,
+        "cells*pol/s",
+        || dagcloud::fleet::score(&sorted),
+    );
+
+    // Manifest plan + JSON round-trip over the full registry.
+    let specs = scenario::builtins();
+    b.bench("fleet/manifest_plan_roundtrip_registry", || {
+        let m = ShardManifest::plan(&specs, 4, 3, 7, false, None).unwrap();
+        ShardManifest::from_json(&m.to_json()).unwrap()
+    });
+
+    // Online timeline merge: 8 coordinators x 100 snapshots.
+    let sources: Vec<OnlineSource> = (0..8)
+        .map(|k| OnlineSource {
+            source: format!("coordinator-{k}"),
+            snapshots: (1..=100u64)
+                .map(|i| OnlineSnapshot {
+                    jobs: i * 4,
+                    sim_time: i as f64 + 0.1 * k as f64,
+                    ingested_slots: (i * 16) as usize,
+                    average_unit_cost: 0.4,
+                    average_regret: 0.4 / i as f64,
+                    regret_bound: 1.0 / (i as f64).sqrt(),
+                    max_weight: 0.1,
+                    best_policy: 0,
+                })
+                .collect(),
+        })
+        .collect();
+    b.bench_throughput("fleet/online_merge_8x100_snapshots", 800.0, "snaps/s", || {
+        merge_online(&sources).unwrap()
+    });
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_fleet.json").ok();
+    println!("\nresults written to results/bench_fleet.json");
+}

@@ -64,6 +64,10 @@ pub struct LearningReport {
     /// Average regret vs best fixed policy and the Prop. B.1 bound at 95%.
     pub average_regret: f64,
     pub regret_bound: f64,
+    /// Per-policy mean counterfactual cost per job, in spec order — the
+    /// fixed-policy cost surface ([`crate::learning::regret::RegretTracker::per_policy_means`])
+    /// the fleet layer's cross-scenario robustness scoring consumes.
+    pub policy_mean_costs: Vec<f64>,
     /// Self-owned utilization (busy fraction).
     pub pool_utilization: f64,
     /// Trajectory of the max weight (sampled every `weight_sample_every`
@@ -442,6 +446,7 @@ pub fn tola_run_view(
         final_weights: tola.weights().to_vec(),
         average_regret: regret.average_regret(),
         regret_bound: regret.bound(0.05),
+        policy_mean_costs: regret.per_policy_means(),
         pool_utilization,
         weight_trajectory,
         offer_work,

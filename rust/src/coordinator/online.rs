@@ -544,6 +544,7 @@ pub fn tola_run_online(
         final_weights: tola.weights().to_vec(),
         average_regret: regret.average_regret(),
         regret_bound: regret.bound(0.05),
+        policy_mean_costs: regret.per_policy_means(),
         pool_utilization,
         weight_trajectory,
         offer_work,

@@ -1,0 +1,304 @@
+//! `repro fleet`: shard the scenario registry across many coordinators,
+//! merge their reports, and score cross-scenario policy robustness.
+//!
+//! The run writes, under `--out`:
+//!
+//! * `fleet_manifest.json` — the serialized shard plan
+//!   (`dagcloud.fleet-manifest/v1`); self-contained, so the same shards
+//!   can later be run by separate processes;
+//! * `fleet_shard_<k>.json` — one ordinary `dagcloud.scenarios/v1` report
+//!   per shard coordinator;
+//! * `fleet.json` — the merged `dagcloud.fleet/v1` document (canonical
+//!   row order, recomputed aggregates, robustness ranking, optional
+//!   merged online timeline).
+//!
+//! The merged bytes are invariant under `--shards` and merge order (see
+//! [`crate::fleet::merge`]); CI runs the `--shards 4` vs `--shards 1`
+//! comparison on every push. `--merge-only` skips the running half and
+//! merges existing shard reports — the entry point for shards that were
+//! produced elsewhere. `--online` folds `dagcloud.feed/v1` reports from
+//! `repro feed` coordinators into the same document.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::Config;
+use crate::fleet::{merge_online, FleetAccumulator, OnlineSource, ShardManifest};
+use crate::scenario::{self, BatchOptions};
+use crate::util::json::Json;
+
+use super::scenarios::{resolve_specs, SMOKE_JOBS};
+
+/// CLI-level options for the `fleet` subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct FleetCliOptions {
+    /// Restrict to these registry names (None = the full registry).
+    pub names: Option<Vec<String>>,
+    /// Additional custom spec file (JSON) appended to the batch.
+    pub spec_file: Option<String>,
+    /// Replicates per scenario.
+    pub seeds: u64,
+    /// Coordinators to deal the worlds across.
+    pub shards: usize,
+    /// Reduced-size runs (CI smoke).
+    pub smoke: bool,
+    /// Explicit `--jobs` override.
+    pub jobs_override: Option<usize>,
+    /// Merge these existing shard reports instead of running anything.
+    pub merge_only: Option<Vec<String>>,
+    /// `dagcloud.feed/v1` reports to merge as online snapshot sources.
+    pub online: Vec<String>,
+}
+
+pub fn run_fleet(cfg: &Config, opts: &FleetCliOptions, out_dir: &str) -> Result<()> {
+    let mut acc = FleetAccumulator::new();
+
+    match &opts.merge_only {
+        Some(paths) => {
+            ensure!(!paths.is_empty(), "--merge-only needs at least one report path");
+            println!("== fleet: merging {} shard report(s) ==", paths.len());
+            for path in paths {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("shard report '{path}': {e}"))?;
+                let doc = Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("shard report '{path}': {e}"))?;
+                acc.absorb(&doc)
+                    .map_err(|e| anyhow::anyhow!("shard report '{path}': {e}"))?;
+            }
+        }
+        None => {
+            let mut specs = resolve_specs(&opts.names, &opts.spec_file)?;
+            let jobs_override = match (opts.smoke, opts.jobs_override) {
+                (_, Some(j)) => {
+                    ensure!(j > 0, "--jobs must be positive");
+                    Some(j)
+                }
+                (true, None) => Some(SMOKE_JOBS),
+                (false, None) => None,
+            };
+            if opts.smoke {
+                for s in &mut specs {
+                    s.workload.small_tasks = true;
+                }
+            }
+            let manifest = ShardManifest::plan(
+                &specs,
+                opts.shards.max(1),
+                opts.seeds.max(1),
+                cfg.seed,
+                opts.smoke,
+                jobs_override,
+            )?;
+            let manifest_path = format!("{out_dir}/fleet_manifest.json");
+            std::fs::write(&manifest_path, manifest.to_json().pretty())?;
+            println!(
+                "== fleet: {} worlds x {} seeds across {} shard coordinator(s) \
+                 (base seed {}, threads {}{}) ==\n  manifest written to {manifest_path}",
+                manifest.worlds(),
+                manifest.seeds,
+                manifest.shards.len(),
+                manifest.base_seed,
+                cfg.effective_threads(),
+                if opts.smoke { ", smoke" } else { "" }
+            );
+
+            let t0 = std::time::Instant::now();
+            for shard in &manifest.shards {
+                // One coordinator per shard: the shard's cells fan across
+                // this process's worker pool; separate-process shards would
+                // run the identical batch from the manifest entry alone.
+                let outcomes = scenario::run_batch(
+                    &shard.scenarios,
+                    &BatchOptions {
+                        seeds: manifest.seeds,
+                        base_seed: manifest.base_seed,
+                        threads: cfg.effective_threads(),
+                        jobs_override: manifest.jobs_override,
+                    },
+                )?;
+                let doc =
+                    scenario::report_json(&outcomes, manifest.seeds, manifest.base_seed, opts.smoke);
+                let path = format!("{out_dir}/{}", shard.report);
+                std::fs::write(&path, doc.pretty())?;
+                println!(
+                    "  shard {}: {} world(s), {} cell(s) -> {path}",
+                    shard.shard,
+                    shard.scenarios.len(),
+                    outcomes.len()
+                );
+                // Absorb the *serialized* document, not the in-memory rows:
+                // the merge path is then identical for in-process shards and
+                // --merge-only reports from elsewhere (and the K=1 /K=4
+                // byte-identity holds by construction).
+                acc.absorb(&doc)?;
+            }
+            println!("  {} cells in {:.2}s", acc.len(), t0.elapsed().as_secs_f64());
+        }
+    }
+
+    let online = if opts.online.is_empty() {
+        None
+    } else {
+        let sources: Vec<OnlineSource> = opts
+            .online
+            .iter()
+            .map(|path| {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("online report '{path}': {e}"))?;
+                let doc = Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("online report '{path}': {e}"))?;
+                crate::fleet::online_source_from_feed_report(&doc, path)
+            })
+            .collect::<Result<_>>()?;
+        let merged = merge_online(&sources)?;
+        println!(
+            "  online: {} source(s), {} snapshot(s), {} jobs total",
+            merged.sources.len(),
+            merged.points.len(),
+            merged.total_jobs
+        );
+        Some(merged)
+    };
+
+    let fleet = acc.fleet_json(online.as_ref())?;
+    print_summary(&fleet);
+    let path = format!("{out_dir}/fleet.json");
+    std::fs::write(&path, fleet.pretty())?;
+    println!("  written to {path}");
+    Ok(())
+}
+
+/// Console summary: per-world aggregates plus the top of the robustness
+/// ranking.
+fn print_summary(fleet: &Json) {
+    println!(
+        "  {:<24} {:>6} {:>8} {:>8} {:>8}",
+        "world", "runs", "alpha", "regret", "bound"
+    );
+    for s in fleet
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+    {
+        println!(
+            "  {:<24} {:>6} {:>8.4} {:>8.4} {:>8.4}",
+            s.opt_str("name", "?"),
+            s.get("runs").and_then(Json::as_u64).unwrap_or(0),
+            s.get("alpha_mean").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            s.get("regret_mean").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            s.get("regret_bound_mean")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN),
+        );
+    }
+    if let Some(rob) = fleet.get("robustness") {
+        let policies = rob.get("policies").and_then(Json::as_arr).unwrap_or(&[]);
+        let ranked = rob.get("ranked").and_then(Json::as_u64).unwrap_or(0);
+        println!(
+            "  robustness: {} policies scored across {} world(s), {} ranked; least-bad:",
+            policies.len(),
+            rob.get("worlds").and_then(Json::as_u64).unwrap_or(0),
+            ranked
+        );
+        for p in policies.iter().filter(|p| p.get("rank").is_some()).take(5) {
+            println!(
+                "    #{} {:<36} worst {:.4} (in {}), mean {:.4}",
+                p.get("rank").and_then(Json::as_u64).unwrap_or(0),
+                p.opt_str("policy", "?"),
+                p.get("worst_regret_ratio")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(f64::NAN),
+                p.opt_str("worst_world", "?"),
+                p.get("mean_regret_ratio")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(f64::NAN),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config {
+            seed: 17,
+            threads: 2,
+            use_pjrt: false,
+            ..Config::default()
+        }
+    }
+
+    fn opts(shards: usize) -> FleetCliOptions {
+        FleetCliOptions {
+            names: Some(vec![
+                "paper-default".into(),
+                "bursty-arrivals".into(),
+                "deadline-tight".into(),
+            ]),
+            spec_file: None,
+            seeds: 2,
+            shards,
+            smoke: true,
+            jobs_override: Some(8),
+            merge_only: None,
+            online: Vec::new(),
+        }
+    }
+
+    fn tmp_dir(name: &str) -> String {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn fleet_report_bytes_are_invariant_under_shard_count() {
+        let d1 = tmp_dir("dagcloud_fleet_k1");
+        let d3 = tmp_dir("dagcloud_fleet_k3");
+        run_fleet(&cfg(), &opts(1), &d1).unwrap();
+        run_fleet(&cfg(), &opts(3), &d3).unwrap();
+        let a = std::fs::read_to_string(format!("{d1}/fleet.json")).unwrap();
+        let b = std::fs::read_to_string(format!("{d3}/fleet.json")).unwrap();
+        assert_eq!(a, b, "fleet.json differs between --shards 1 and --shards 3");
+        let j = Json::parse(&a).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "dagcloud.fleet/v1");
+        assert_eq!(j.get("cells").unwrap().as_u64().unwrap(), 6);
+        assert_eq!(j.get("worlds").unwrap().as_u64().unwrap(), 3);
+        // Every fixed policy is scored in all three (spot-only) worlds.
+        let rob = j.get("robustness").unwrap();
+        assert_eq!(rob.get("worlds").unwrap().as_u64().unwrap(), 3);
+        assert!(rob.get("ranked").unwrap().as_u64().unwrap() >= 25);
+        // One shard report per shard actually landed on disk.
+        assert!(std::path::Path::new(&format!("{d3}/fleet_shard_2.json")).exists());
+        assert!(std::path::Path::new(&format!("{d3}/fleet_manifest.json")).exists());
+    }
+
+    #[test]
+    fn merge_only_reproduces_the_in_process_merge() {
+        let dir = tmp_dir("dagcloud_fleet_mergeonly");
+        run_fleet(&cfg(), &opts(2), &dir).unwrap();
+        let direct = std::fs::read_to_string(format!("{dir}/fleet.json")).unwrap();
+        // Re-merge the written shard reports, in reverse order.
+        let merged_dir = tmp_dir("dagcloud_fleet_mergeonly_out");
+        let mut mo = opts(2);
+        mo.merge_only = Some(vec![
+            format!("{dir}/fleet_shard_1.json"),
+            format!("{dir}/fleet_shard_0.json"),
+        ]);
+        run_fleet(&cfg(), &mo, &merged_dir).unwrap();
+        let remerged = std::fs::read_to_string(format!("{merged_dir}/fleet.json")).unwrap();
+        assert_eq!(direct, remerged);
+    }
+
+    #[test]
+    fn unknown_world_and_empty_merge_error() {
+        let mut o = opts(2);
+        o.names = Some(vec!["not-a-world".into()]);
+        let err = run_fleet(&cfg(), &o, "/tmp").unwrap_err().to_string();
+        assert!(err.contains("unknown scenario"), "{err}");
+        let mut o = opts(2);
+        o.merge_only = Some(Vec::new());
+        assert!(run_fleet(&cfg(), &o, "/tmp").is_err());
+    }
+}

@@ -6,6 +6,7 @@ pub mod figures;
 pub mod perf;
 pub mod scenarios;
 pub mod feed;
+pub mod fleet;
 
 use crate::util::cli::Args;
 
@@ -29,6 +30,9 @@ COMMANDS
   feed        Stream a real price dump through the online coordinator loop
               (ingestion stats, per-window snapshots, results/feed_run.json;
               see EXPERIMENTS.md §Streaming)
+  fleet       Shard the scenario registry across coordinators, merge their
+              reports into results/fleet.json, and rank cross-scenario
+              policy robustness (see EXPERIMENTS.md §Fleet)
   run         One TOLA learning run with progress output
   all         Run every table (tables 2–6) and figures
 
@@ -50,6 +54,15 @@ SCENARIO OPTIONS (`repro scenarios`; `--scenario` also configures `run`)
   --smoke         reduced-size deterministic runs for CI (small chains,
                   48 jobs unless --jobs overrides)
 
+FLEET OPTIONS (`repro fleet`; also honors --scenario/--seeds/--spec/--smoke
+and --jobs with the `scenarios` semantics)
+  --shards K      coordinators to deal the worlds across (default 4); the
+                  merged fleet.json is byte-identical for every K
+  --merge-only L  comma-separated existing dagcloud.scenarios/v1 shard
+                  reports: merge them instead of running anything
+  --online L      comma-separated dagcloud.feed/v1 reports (repro feed)
+                  merged as online snapshot sources into fleet.json
+
 FEED OPTIONS (`repro feed`)
   --trace PATH    price dump to stream (required)
   --format F      ec2-json | csv (default: inferred from the extension)
@@ -63,6 +76,16 @@ FEED OPTIONS (`repro feed`)
   --instance-type NAME  restrict to one instance type
   --snapshot-every N    snapshot cadence in retired jobs (default ~10/run)
 ";
+
+/// Comma-separated list option (`--key a,b,c`), `None` when absent.
+fn csv_list(args: &Args, key: &str) -> Option<Vec<String>> {
+    args.get(key).map(|s| {
+        s.split(',')
+            .map(|x| x.trim().to_string())
+            .filter(|x| !x.is_empty())
+            .collect()
+    })
+}
 
 /// CLI dispatch for `repro`.
 pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
@@ -128,16 +151,23 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
             };
             feed::run_feed(&cfg, &opts, &out_dir)?
         }
+        "fleet" => {
+            let opts = fleet::FleetCliOptions {
+                names: csv_list(&args, "scenario"),
+                spec_file: args.get("spec").map(String::from),
+                seeds: args.get_u64("seeds", 3)?,
+                shards: args.get_u64("shards", 4)? as usize,
+                smoke: args.flag("smoke"),
+                jobs_override: args.get("jobs").is_some().then_some(cfg.jobs),
+                merge_only: csv_list(&args, "merge-only"),
+                online: csv_list(&args, "online").unwrap_or_default(),
+            };
+            fleet::run_fleet(&cfg, &opts, &out_dir)?
+        }
         "scenarios" if args.flag("list") => scenarios::list_scenarios(),
         "scenarios" => {
-            let names = args.get("scenario").map(|s| {
-                s.split(',')
-                    .map(|x| x.trim().to_string())
-                    .filter(|x| !x.is_empty())
-                    .collect()
-            });
             let opts = scenarios::ScenarioCliOptions {
-                names,
+                names: csv_list(&args, "scenario"),
                 seeds: args.get_u64("seeds", 3)?,
                 smoke: args.flag("smoke"),
                 spec_file: args.get("spec").map(String::from),

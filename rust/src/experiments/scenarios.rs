@@ -23,8 +23,48 @@ pub struct ScenarioCliOptions {
     pub jobs_override: Option<usize>,
 }
 
-/// Jobs per run under `--smoke` (unless `--jobs` says otherwise).
-const SMOKE_JOBS: usize = 48;
+/// Jobs per run under `--smoke` (unless `--jobs` says otherwise). Shared
+/// with `repro fleet` so a fleet smoke run covers the same cells.
+pub(crate) const SMOKE_JOBS: usize = 48;
+
+/// Resolve a batch's worlds: the named registry subset (or the full
+/// registry) plus an optional custom spec file, with duplicate names
+/// rejected (names key both the seed derivation and the report grouping —
+/// a duplicate would collide run seeds and merge two worlds into one
+/// aggregate row). Shared by `repro scenarios` and `repro fleet`.
+pub(crate) fn resolve_specs(
+    names: &Option<Vec<String>>,
+    spec_file: &Option<String>,
+) -> Result<Vec<ScenarioSpec>> {
+    let mut specs: Vec<ScenarioSpec> = match names {
+        None => scenario::builtins(),
+        Some(names) => names
+            .iter()
+            .map(|n| {
+                scenario::find(n).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scenario '{n}'; known: {}",
+                        scenario::builtin_names().join(", ")
+                    )
+                })
+            })
+            .collect::<Result<_>>()?,
+    };
+    if let Some(path) = spec_file {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("spec file '{path}': {e}"))?;
+        specs.push(ScenarioSpec::parse(&text)?);
+    }
+    anyhow::ensure!(!specs.is_empty(), "no scenarios selected");
+    for (i, s) in specs.iter().enumerate() {
+        anyhow::ensure!(
+            !specs[..i].iter().any(|o| o.name == s.name),
+            "duplicate scenario name '{}' in batch (rename the --spec world)",
+            s.name
+        );
+    }
+    Ok(specs)
+}
 
 /// `repro scenarios --list`: print every registry world with a one-line
 /// description (the only other way to discover world names is reading
@@ -41,36 +81,7 @@ pub fn list_scenarios() {
 }
 
 pub fn run_scenarios(cfg: &Config, opts: &ScenarioCliOptions, out_dir: &str) -> Result<()> {
-    let mut specs: Vec<ScenarioSpec> = match &opts.names {
-        None => scenario::builtins(),
-        Some(names) => names
-            .iter()
-            .map(|n| {
-                scenario::find(n).ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "unknown scenario '{n}'; known: {}",
-                        scenario::builtin_names().join(", ")
-                    )
-                })
-            })
-            .collect::<Result<_>>()?,
-    };
-    if let Some(path) = &opts.spec_file {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("spec file '{path}': {e}"))?;
-        specs.push(ScenarioSpec::parse(&text)?);
-    }
-    anyhow::ensure!(!specs.is_empty(), "no scenarios selected");
-    // Names key both the seed derivation and the report grouping: a
-    // duplicate would collide run seeds and merge two worlds into one
-    // aggregate row.
-    for (i, s) in specs.iter().enumerate() {
-        anyhow::ensure!(
-            !specs[..i].iter().any(|o| o.name == s.name),
-            "duplicate scenario name '{}' in batch (rename the --spec world)",
-            s.name
-        );
-    }
+    let mut specs = resolve_specs(&opts.names, &opts.spec_file)?;
 
     let jobs_override = match (opts.smoke, opts.jobs_override) {
         (_, Some(j)) => {

@@ -1,0 +1,234 @@
+//! The serialized shard manifest: which coordinator runs which worlds.
+//!
+//! `repro fleet` drives its shards as process-internal coordinators today,
+//! but the manifest (`dagcloud.fleet-manifest/v1`) is written to disk
+//! first and is fully self-contained — every shard entry embeds the
+//! complete [`ScenarioSpec`]s it must run plus the batch parameters and
+//! the report path it must write — so the same fleet can later be driven
+//! by separate processes (one per shard, any machine) and merged with
+//! `repro fleet --merge-only` without touching this code.
+//!
+//! Determinism: the plan is a pure function of `(specs, shards)` —
+//! scenarios are dealt round-robin in declared order — and the merged
+//! fleet report is independent of the sharding anyway (see
+//! [`super::merge`]), so the shard count is a throughput knob, never a
+//! results knob.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::scenario::ScenarioSpec;
+use crate::util::json::Json;
+
+/// One shard: the worlds one coordinator runs and where its report goes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPlan {
+    /// Shard index (dense, `0..shards`).
+    pub shard: usize,
+    /// Report file name, relative to the fleet's output directory.
+    pub report: String,
+    /// The complete specs this shard runs (self-contained: no registry
+    /// lookup needed on the running side).
+    pub scenarios: Vec<ScenarioSpec>,
+}
+
+/// The whole fleet plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardManifest {
+    pub base_seed: u64,
+    /// Replicates per scenario.
+    pub seeds: u64,
+    pub smoke: bool,
+    /// Per-run job override (smoke / `--jobs`).
+    pub jobs_override: Option<usize>,
+    pub shards: Vec<ShardPlan>,
+}
+
+impl ShardManifest {
+    /// Deal `specs` round-robin across (at most) `shards` coordinators.
+    /// Requesting more shards than worlds yields one shard per world.
+    pub fn plan(
+        specs: &[ScenarioSpec],
+        shards: usize,
+        seeds: u64,
+        base_seed: u64,
+        smoke: bool,
+        jobs_override: Option<usize>,
+    ) -> Result<ShardManifest> {
+        ensure!(shards >= 1, "fleet: --shards must be at least 1");
+        ensure!(!specs.is_empty(), "fleet: no scenarios to shard");
+        for (i, s) in specs.iter().enumerate() {
+            s.validate()?;
+            ensure!(
+                !specs[..i].iter().any(|o| o.name == s.name),
+                "fleet: duplicate scenario name '{}' (cells are keyed by name)",
+                s.name
+            );
+        }
+        let n = shards.min(specs.len());
+        let mut plans: Vec<ShardPlan> = (0..n)
+            .map(|k| ShardPlan {
+                shard: k,
+                report: format!("fleet_shard_{k}.json"),
+                scenarios: Vec::new(),
+            })
+            .collect();
+        for (i, s) in specs.iter().enumerate() {
+            plans[i % n].scenarios.push(s.clone());
+        }
+        Ok(ShardManifest {
+            base_seed,
+            seeds: seeds.max(1),
+            smoke,
+            jobs_override,
+            shards: plans,
+        })
+    }
+
+    /// Total worlds across all shards.
+    pub fn worlds(&self) -> usize {
+        self.shards.iter().map(|s| s.scenarios.len()).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("schema", Json::Str("dagcloud.fleet-manifest/v1".into()))
+            .set("base_seed", Json::Str(self.base_seed.to_string()))
+            .set("seeds", Json::Num(self.seeds as f64))
+            .set("smoke", Json::Bool(self.smoke));
+        if let Some(jobs) = self.jobs_override {
+            j.set("jobs_override", Json::Num(jobs as f64));
+        }
+        j.set(
+            "shards",
+            Json::Arr(
+                self.shards
+                    .iter()
+                    .map(|s| {
+                        let mut sj = Json::obj();
+                        sj.set("shard", Json::Num(s.shard as f64))
+                            .set("report", Json::Str(s.report.clone()))
+                            .set(
+                                "scenarios",
+                                Json::Arr(
+                                    s.scenarios.iter().map(ScenarioSpec::to_json).collect(),
+                                ),
+                            );
+                        sj
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardManifest> {
+        let schema = j.opt_str("schema", "");
+        ensure!(
+            schema == "dagcloud.fleet-manifest/v1",
+            "expected schema dagcloud.fleet-manifest/v1, found '{schema}'"
+        );
+        let base_seed = j
+            .get("base_seed")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("fleet manifest: missing string 'base_seed'"))?
+            .parse::<u64>()
+            .map_err(|e| anyhow!("fleet manifest: bad base_seed: {e}"))?;
+        let shards_j = j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("fleet manifest: missing 'shards' array"))?;
+        let mut shards = Vec::with_capacity(shards_j.len());
+        for (k, sj) in shards_j.iter().enumerate() {
+            let scen_j = sj
+                .get("scenarios")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("fleet manifest: shard {k} missing 'scenarios'"))?;
+            let scenarios = scen_j
+                .iter()
+                .map(ScenarioSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            for s in &scenarios {
+                s.validate()?;
+            }
+            shards.push(ShardPlan {
+                shard: sj.opt_u64("shard", k as u64) as usize,
+                report: sj
+                    .get("report")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("fleet manifest: shard {k} missing 'report'"))?
+                    .to_string(),
+                scenarios,
+            });
+        }
+        Ok(ShardManifest {
+            base_seed,
+            seeds: j
+                .get("seeds")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("fleet manifest: missing 'seeds'"))?,
+            smoke: j.opt_bool("smoke", false),
+            jobs_override: j.get("jobs_override").and_then(Json::as_u64).map(|v| v as usize),
+            shards,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::SpotModel;
+    use crate::scenario::{MarketSpec, PolicySetSpec, WorkloadSpec};
+
+    fn spec(name: &str) -> ScenarioSpec {
+        ScenarioSpec {
+            name: name.into(),
+            description: String::new(),
+            market: MarketSpec::single(SpotModel::paper_default(), 1.0),
+            workload: WorkloadSpec::uniform(2),
+            pool_capacity: 0,
+            policy_set: PolicySetSpec::Auto,
+            jobs: 40,
+        }
+    }
+
+    #[test]
+    fn round_robin_plan_covers_every_world_once() {
+        let specs: Vec<ScenarioSpec> =
+            ["a", "b", "c", "d", "e"].iter().map(|n| spec(n)).collect();
+        let m = ShardManifest::plan(&specs, 3, 2, 7, true, Some(16)).unwrap();
+        assert_eq!(m.shards.len(), 3);
+        assert_eq!(m.worlds(), 5);
+        let names: Vec<&str> = m
+            .shards
+            .iter()
+            .flat_map(|s| s.scenarios.iter().map(|x| x.name.as_str()))
+            .collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec!["a", "b", "c", "d", "e"]);
+        assert_eq!(m.shards[0].scenarios.len(), 2); // a, d
+        assert_eq!(m.shards[2].scenarios.len(), 1); // c
+        // More shards than worlds clamps.
+        let m = ShardManifest::plan(&specs[..2], 8, 1, 7, false, None).unwrap();
+        assert_eq!(m.shards.len(), 2);
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_validates() {
+        let specs = vec![spec("a"), spec("b")];
+        let m = ShardManifest::plan(&specs, 2, 3, 11, false, None).unwrap();
+        let j = m.to_json();
+        let back = ShardManifest::from_json(&j).unwrap();
+        assert_eq!(back, m);
+        assert!(!j.pretty().contains("jobs_override"), "None stays off-disk");
+        // Duplicate scenario names refuse to plan.
+        let err = ShardManifest::plan(&[spec("a"), spec("a")], 2, 1, 7, false, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate scenario name"), "{err}");
+        // Wrong schema refused.
+        let mut bad = m.to_json();
+        bad.set("schema", Json::Str("nope".into()));
+        assert!(ShardManifest::from_json(&bad).is_err());
+    }
+}

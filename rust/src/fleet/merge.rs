@@ -1,0 +1,457 @@
+//! Associative, order-independent merging of shard reports into the
+//! `dagcloud.fleet/v1` document.
+//!
+//! A shard report is an ordinary `dagcloud.scenarios/v1` document (the
+//! schema was kept aggregation-friendly for exactly this): its detail rows
+//! are keyed by `(scenario, replicate)` and round-trip losslessly through
+//! [`crate::scenario::outcomes_from_report`]. The merge is therefore a
+//! *set union of rows* followed by a canonical renormalization:
+//!
+//! 1. every absorbed row lands in one flat pool (duplicate cells are a
+//!    hard error — a cell must be run exactly once across the fleet);
+//! 2. at report time the pool is sorted by `(scenario, replicate)`;
+//! 3. aggregates, robustness scores, and the document itself are
+//!    recomputed from the sorted pool.
+//!
+//! Because steps 2–3 are pure functions of the row *set*, the fleet
+//! report's bytes cannot depend on how the cells were sharded, which
+//! shard finished first, or the order `absorb` was called in — the
+//! property `rust/tests/integration_fleet.rs` pins against arbitrary
+//! partitions and merge orders. (Float folds are order-sensitive in
+//! general; fixing the fold order via the canonical sort is what turns
+//! "equal up to reassociation" into "byte-identical".)
+//!
+//! The same accumulator also merges [`OnlineSnapshot`] streams from
+//! `coordinator::online` runs (or their serialized `dagcloud.feed/v1`
+//! reports) into one fleet-wide convergence timeline, sorted on
+//! `(sim_time, source)` with a cumulative fleet job count.
+
+use std::collections::BTreeSet;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::OnlineSnapshot;
+use crate::scenario::{
+    outcomes_from_report, scenario_sections_json, ReportMeta, ScenarioOutcome,
+};
+use crate::util::json::Json;
+
+use super::robustness;
+
+/// Accumulates shard reports; order of absorption never matters.
+#[derive(Debug, Default)]
+pub struct FleetAccumulator {
+    meta: Option<ReportMeta>,
+    outcomes: Vec<ScenarioOutcome>,
+    seen: BTreeSet<(String, u64)>,
+}
+
+impl FleetAccumulator {
+    pub fn new() -> FleetAccumulator {
+        FleetAccumulator::default()
+    }
+
+    /// Absorb one `dagcloud.scenarios/v1` shard document. Errors on schema
+    /// mismatch, metadata (seed count / base seed / smoke) disagreement
+    /// with previously absorbed shards, or a `(scenario, replicate)` cell
+    /// that some shard already contributed.
+    pub fn absorb(&mut self, doc: &Json) -> Result<()> {
+        let (rows, meta) = outcomes_from_report(doc)?;
+        match self.meta {
+            None => self.meta = Some(meta),
+            Some(m) => ensure!(
+                m == meta,
+                "shard metadata mismatch: fleet has (seeds {}, base_seed {}, smoke {}), \
+                 shard has (seeds {}, base_seed {}, smoke {})",
+                m.seeds,
+                m.base_seed,
+                m.smoke,
+                meta.seeds,
+                meta.base_seed,
+                meta.smoke
+            ),
+        }
+        for row in rows {
+            let key = (row.scenario.clone(), row.replicate);
+            ensure!(
+                self.seen.insert(key),
+                "duplicate fleet cell ('{}', replicate {}): a scenario×seed cell must be \
+                 run by exactly one shard",
+                row.scenario,
+                row.replicate
+            );
+            self.outcomes.push(row);
+        }
+        Ok(())
+    }
+
+    /// Cells absorbed so far.
+    pub fn len(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.outcomes.is_empty()
+    }
+
+    /// The absorbed rows in canonical `(scenario, replicate)` order.
+    pub fn canonical_outcomes(&self) -> Vec<ScenarioOutcome> {
+        let mut sorted = self.outcomes.clone();
+        sorted.sort_by(|a, b| {
+            a.scenario
+                .cmp(&b.scenario)
+                .then(a.replicate.cmp(&b.replicate))
+        });
+        sorted
+    }
+
+    /// Emit the merged `dagcloud.fleet/v1` document. Pass the fleet's
+    /// merged online timeline (if any coordinators streamed) to embed it
+    /// under `online`.
+    pub fn fleet_json(&self, online: Option<&MergedOnline>) -> Result<Json> {
+        let meta = self
+            .meta
+            .ok_or_else(|| anyhow!("fleet merge: no shard reports absorbed"))?;
+        let sorted = self.canonical_outcomes();
+        let rob = robustness::score(&sorted);
+        let worlds: BTreeSet<&str> = sorted.iter().map(|o| o.scenario.as_str()).collect();
+        let mut j = Json::obj();
+        j.set("schema", Json::Str("dagcloud.fleet/v1".into()))
+            .set("seeds", Json::Num(meta.seeds as f64))
+            .set("base_seed", Json::Str(meta.base_seed.to_string()))
+            .set("smoke", Json::Bool(meta.smoke))
+            .set("cells", Json::Num(sorted.len() as f64))
+            .set("worlds", Json::Num(worlds.len() as f64))
+            .set("scenarios", scenario_sections_json(&sorted))
+            .set("robustness", robustness::robustness_json(&rob));
+        if let Some(ol) = online {
+            if !ol.points.is_empty() {
+                j.set("online", ol.to_json());
+            }
+        }
+        Ok(j)
+    }
+}
+
+/// One coordinator's snapshot stream, tagged with a unique source label.
+#[derive(Debug, Clone)]
+pub struct OnlineSource {
+    pub source: String,
+    pub snapshots: Vec<OnlineSnapshot>,
+}
+
+/// One point of the merged fleet timeline.
+#[derive(Debug, Clone)]
+pub struct MergedOnlinePoint {
+    pub source: String,
+    pub sim_time: f64,
+    /// Source-local jobs retired at this snapshot.
+    pub jobs: u64,
+    /// Fleet-wide jobs retired by this simulated time: the sum of each
+    /// source's latest snapshot at or before this point.
+    pub fleet_jobs: u64,
+    /// Source-local feed frontier (slots ingested on every feed).
+    pub ingested_slots: usize,
+    pub average_unit_cost: f64,
+    pub average_regret: f64,
+    pub regret_bound: f64,
+    pub max_weight: f64,
+}
+
+/// The merged fleet convergence timeline.
+#[derive(Debug, Clone, Default)]
+pub struct MergedOnline {
+    /// Source labels in canonical (sorted) order.
+    pub sources: Vec<String>,
+    /// Points sorted by `(sim_time, source, jobs)`.
+    pub points: Vec<MergedOnlinePoint>,
+    /// Total jobs retired across all sources.
+    pub total_jobs: u64,
+}
+
+impl MergedOnline {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "sources",
+            Json::Arr(self.sources.iter().map(|s| Json::Str(s.clone())).collect()),
+        )
+        .set("total_jobs", Json::Num(self.total_jobs as f64))
+        .set(
+            "snapshots",
+            Json::Arr(
+                self.points
+                    .iter()
+                    .map(|p| {
+                        let mut pj = Json::obj();
+                        pj.set("source", Json::Str(p.source.clone()))
+                            .set("sim_time", Json::Num(p.sim_time))
+                            .set("jobs", Json::Num(p.jobs as f64))
+                            .set("fleet_jobs", Json::Num(p.fleet_jobs as f64))
+                            .set("ingested_slots", Json::Num(p.ingested_slots as f64))
+                            .set("average_unit_cost", Json::Num(p.average_unit_cost))
+                            .set("average_regret", Json::Num(p.average_regret))
+                            .set("regret_bound", Json::Num(p.regret_bound))
+                            .set("max_weight", Json::Num(p.max_weight));
+                        pj
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+}
+
+/// Merge snapshot streams from many coordinators into one timeline.
+///
+/// Sources must carry distinct labels and time-ordered snapshots (what
+/// [`crate::coordinator::tola_run_online`] emits). The merged order —
+/// `(sim_time, source, jobs)`, ties broken by the label — is a total
+/// order over the union, so the result is independent of the order the
+/// sources are passed in.
+pub fn merge_online(sources: &[OnlineSource]) -> Result<MergedOnline> {
+    let mut labels: Vec<&str> = sources.iter().map(|s| s.source.as_str()).collect();
+    labels.sort_unstable();
+    for w in labels.windows(2) {
+        ensure!(
+            w[0] != w[1],
+            "online merge: duplicate source label '{}'",
+            w[0]
+        );
+    }
+    for s in sources {
+        ensure!(
+            s.snapshots
+                .windows(2)
+                .all(|w| w[0].sim_time <= w[1].sim_time && w[0].jobs <= w[1].jobs),
+            "online merge: source '{}' snapshots are not time-ordered",
+            s.source
+        );
+    }
+    let mut tagged: Vec<(&str, &OnlineSnapshot)> = sources
+        .iter()
+        .flat_map(|s| s.snapshots.iter().map(move |snap| (s.source.as_str(), snap)))
+        .collect();
+    tagged.sort_by(|(sa, a), (sb, b)| {
+        a.sim_time
+            .total_cmp(&b.sim_time)
+            .then(sa.cmp(sb))
+            .then(a.jobs.cmp(&b.jobs))
+    });
+
+    // Walk the merged order accumulating each source's latest job count.
+    let mut last: std::collections::BTreeMap<&str, u64> = std::collections::BTreeMap::new();
+    let mut points = Vec::with_capacity(tagged.len());
+    for (src, snap) in tagged {
+        last.insert(src, snap.jobs);
+        points.push(MergedOnlinePoint {
+            source: src.to_string(),
+            sim_time: snap.sim_time,
+            jobs: snap.jobs,
+            fleet_jobs: last.values().sum(),
+            ingested_slots: snap.ingested_slots,
+            average_unit_cost: snap.average_unit_cost,
+            average_regret: snap.average_regret,
+            regret_bound: snap.regret_bound,
+            max_weight: snap.max_weight,
+        });
+    }
+    let total_jobs = sources
+        .iter()
+        .map(|s| s.snapshots.last().map(|x| x.jobs).unwrap_or(0))
+        .sum();
+    Ok(MergedOnline {
+        sources: labels.into_iter().map(String::from).collect(),
+        points,
+        total_jobs,
+    })
+}
+
+/// Parse a `dagcloud.feed/v1` document (what `repro feed` writes) into an
+/// [`OnlineSource`] so separately-run coordinators merge into the fleet
+/// report. The snapshot rows carry no policy index, so `best_policy` is
+/// not reconstructed (the merged timeline does not use it).
+pub fn online_source_from_feed_report(doc: &Json, source: &str) -> Result<OnlineSource> {
+    let schema = doc.opt_str("schema", "");
+    ensure!(
+        schema == "dagcloud.feed/v1",
+        "online source '{source}': expected schema dagcloud.feed/v1, found '{schema}'"
+    );
+    let arr = doc
+        .get("snapshots")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("online source '{source}': missing 'snapshots' array"))?;
+    let mut snapshots = Vec::with_capacity(arr.len());
+    for (i, s) in arr.iter().enumerate() {
+        let num = |key: &str| -> Result<f64> {
+            s.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("online source '{source}': snapshot {i} missing '{key}'"))
+        };
+        snapshots.push(OnlineSnapshot {
+            jobs: num("jobs")? as u64,
+            sim_time: num("sim_time")?,
+            ingested_slots: num("ingested_slots")? as usize,
+            average_unit_cost: num("average_unit_cost")?,
+            average_regret: num("average_regret")?,
+            regret_bound: num("regret_bound")?,
+            max_weight: num("max_weight")?,
+            best_policy: 0,
+        });
+    }
+    if snapshots.is_empty() {
+        bail!("online source '{source}': no snapshots to merge");
+    }
+    Ok(OnlineSource {
+        source: source.to_string(),
+        snapshots,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::report_json;
+
+    fn outcome(name: &str, rep: u64, alpha: f64) -> ScenarioOutcome {
+        ScenarioOutcome {
+            scenario: name.into(),
+            replicate: rep,
+            run_seed: 100 + rep,
+            jobs: 10,
+            average_unit_cost: alpha,
+            average_regret: 0.01,
+            regret_bound: 0.5,
+            pool_utilization: 0.0,
+            so_share: 0.0,
+            spot_share: 0.8,
+            od_share: 0.2,
+            availability_lo: 0.4,
+            availability_hi: 0.9,
+            best_policy: "p1".into(),
+            offer_shares: Vec::new(),
+            policy_costs: vec![("p1".into(), alpha), ("p2".into(), alpha + 0.1)],
+        }
+    }
+
+    fn snap(jobs: u64, t: f64) -> OnlineSnapshot {
+        OnlineSnapshot {
+            jobs,
+            sim_time: t,
+            ingested_slots: (t * 16.0) as usize,
+            average_unit_cost: 0.3,
+            average_regret: 0.02,
+            regret_bound: 0.4,
+            max_weight: 0.2,
+            best_policy: 0,
+        }
+    }
+
+    #[test]
+    fn two_shards_merge_to_the_single_shard_bytes() {
+        let all = vec![
+            outcome("a", 0, 0.2),
+            outcome("a", 1, 0.25),
+            outcome("b", 0, 0.4),
+        ];
+        let single = {
+            let mut acc = FleetAccumulator::new();
+            acc.absorb(&report_json(&all, 2, 7, true)).unwrap();
+            acc.fleet_json(None).unwrap().pretty()
+        };
+        let sharded = {
+            let mut acc = FleetAccumulator::new();
+            // Split mid-scenario and absorb in reverse order.
+            acc.absorb(&report_json(&all[2..], 2, 7, true)).unwrap();
+            acc.absorb(&report_json(&all[..2], 2, 7, true)).unwrap();
+            acc.fleet_json(None).unwrap().pretty()
+        };
+        assert_eq!(single, sharded);
+        let j = Json::parse(&single).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "dagcloud.fleet/v1");
+        assert_eq!(j.get("cells").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(j.get("worlds").unwrap().as_u64().unwrap(), 2);
+        assert!(j.get("robustness").unwrap().get("policies").is_some());
+    }
+
+    #[test]
+    fn duplicate_cells_and_meta_mismatch_error() {
+        let rows = vec![outcome("a", 0, 0.2)];
+        let mut acc = FleetAccumulator::new();
+        acc.absorb(&report_json(&rows, 1, 7, true)).unwrap();
+        let err = acc
+            .absorb(&report_json(&rows, 1, 7, true))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate fleet cell"), "{err}");
+
+        let mut acc = FleetAccumulator::new();
+        acc.absorb(&report_json(&rows, 1, 7, true)).unwrap();
+        let other = vec![outcome("b", 0, 0.2)];
+        let err = acc
+            .absorb(&report_json(&other, 1, 8, true))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("metadata mismatch"), "{err}");
+
+        assert!(FleetAccumulator::new().fleet_json(None).is_err());
+    }
+
+    #[test]
+    fn online_merge_is_source_order_independent_and_cumulative() {
+        let a = OnlineSource {
+            source: "coord-a".into(),
+            snapshots: vec![snap(4, 1.0), snap(8, 2.0)],
+        };
+        let b = OnlineSource {
+            source: "coord-b".into(),
+            snapshots: vec![snap(5, 1.5), snap(9, 2.5)],
+        };
+        let ab = merge_online(&[a.clone(), b.clone()]).unwrap();
+        let ba = merge_online(&[b, a]).unwrap();
+        assert_eq!(ab.to_json().pretty(), ba.to_json().pretty());
+        assert_eq!(ab.total_jobs, 17);
+        let fleet: Vec<u64> = ab.points.iter().map(|p| p.fleet_jobs).collect();
+        assert_eq!(fleet, vec![4, 9, 13, 17]);
+        // Tie on sim_time breaks by label, deterministically.
+        let t1 = OnlineSource {
+            source: "x".into(),
+            snapshots: vec![snap(1, 1.0)],
+        };
+        let t2 = OnlineSource {
+            source: "y".into(),
+            snapshots: vec![snap(2, 1.0)],
+        };
+        let m = merge_online(&[t2.clone(), t1.clone()]).unwrap();
+        assert_eq!(m.points[0].source, "x");
+        // Duplicate labels are refused.
+        let err = merge_online(&[t1.clone(), t1]).unwrap_err().to_string();
+        assert!(err.contains("duplicate source"), "{err}");
+    }
+
+    #[test]
+    fn feed_report_parses_into_an_online_source() {
+        let mut doc = Json::obj();
+        doc.set("schema", Json::Str("dagcloud.feed/v1".into())).set(
+            "snapshots",
+            Json::Arr(vec![{
+                let mut s = Json::obj();
+                s.set("jobs", Json::Num(6.0))
+                    .set("sim_time", Json::Num(3.5))
+                    .set("ingested_slots", Json::Num(56.0))
+                    .set("average_unit_cost", Json::Num(0.31))
+                    .set("average_regret", Json::Num(0.02))
+                    .set("regret_bound", Json::Num(0.4))
+                    .set("max_weight", Json::Num(0.11));
+                s
+            }]),
+        );
+        let src = online_source_from_feed_report(&doc, "results/feed_run.json").unwrap();
+        assert_eq!(src.snapshots.len(), 1);
+        assert_eq!(src.snapshots[0].jobs, 6);
+        assert_eq!(src.snapshots[0].ingested_slots, 56);
+        // Wrong schema refused.
+        doc.set("schema", Json::Str("dagcloud.scenarios/v1".into()));
+        assert!(online_source_from_feed_report(&doc, "x").is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! The fleet layer: many coordinators, one report.
+//!
+//! The paper evaluates its policies across many market regimes (§6), and
+//! its online-learning framing is convergence *across repeated
+//! interactions with varying markets* — at platform scale that means a
+//! fleet of coordinators, not one process. This module is the scale step
+//! above [`crate::scenario`]:
+//!
+//! * [`manifest`] — a serialized [`ShardManifest`]
+//!   (`dagcloud.fleet-manifest/v1`) dealing worlds round-robin to shards;
+//!   each entry is self-contained (full embedded specs), so shards can be
+//!   driven by separate processes later and merged with
+//!   `repro fleet --merge-only`;
+//! * [`merge`] — the [`FleetAccumulator`]: an associative,
+//!   order-independent union of `dagcloud.scenarios/v1` shard reports
+//!   into one `dagcloud.fleet/v1` document. Rows are keyed by
+//!   `(scenario, replicate)`; the merged report is re-derived from the
+//!   canonically sorted row set, so its bytes are invariant under shard
+//!   count, shard partition, and merge order (property-tested in
+//!   `rust/tests/integration_fleet.rs`). [`merge_online`] folds
+//!   [`crate::coordinator::OnlineSnapshot`] streams (or serialized
+//!   `dagcloud.feed/v1` reports) into a fleet-wide convergence timeline;
+//! * [`robustness`] — cross-scenario policy-robustness scoring: per
+//!   fixed policy, the worst-case and mean regret (normalized by the
+//!   run-level Prop. B.1 bound) across all worlds, plus a least-bad
+//!   (minimax) ranking.
+//!
+//! The CLI front-end is `repro fleet --shards K` (see
+//! `rust/src/experiments/fleet.rs`); every report schema is documented
+//! field-by-field in `docs/SCHEMAS.md`.
+
+pub mod manifest;
+pub mod merge;
+pub mod robustness;
+
+pub use manifest::{ShardManifest, ShardPlan};
+pub use merge::{
+    merge_online, online_source_from_feed_report, FleetAccumulator, MergedOnline,
+    MergedOnlinePoint, OnlineSource,
+};
+pub use robustness::{robustness_json, score, PolicyScore, Robustness};

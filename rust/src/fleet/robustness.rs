@@ -1,0 +1,262 @@
+//! Cross-scenario policy-robustness scoring.
+//!
+//! The paper's regret bound (Prop. B.1) is per-world: it says how fast the
+//! learner closes on the best *fixed* policy of one market. A fleet run
+//! answers the cross-world question the ROADMAP calls "scenario-level
+//! regret comparisons": **which fixed policy is least bad across every
+//! world at once?** For each policy label scored by the scenario cells
+//! ([`ScenarioOutcome::policy_costs`]) this module computes, per world,
+//! the mean fixed-policy regret normalized by the run-level Prop. B.1
+//! bound, then aggregates the worst-case and mean ratios across worlds
+//! and ranks the policies minimax (worst-case first).
+//!
+//! Determinism contract: given outcomes in canonical `(scenario,
+//! replicate)` order, every accumulation below folds in a fixed order, so
+//! the scores — and therefore the fleet report bytes — are independent of
+//! how the cells were sharded or the shard reports merged (pinned by
+//! `rust/tests/integration_fleet.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::scenario::ScenarioOutcome;
+use crate::util::json::Json;
+
+/// One policy's cross-world robustness summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyScore {
+    /// The policy label (the grammar scenario reports key on).
+    pub policy: String,
+    /// Worlds in which this policy was scored.
+    pub worlds: usize,
+    /// Max over worlds of the world-mean regret/bound ratio.
+    pub worst_regret_ratio: f64,
+    /// Mean over covered worlds of the world-mean regret/bound ratio.
+    pub mean_regret_ratio: f64,
+    /// The world realizing `worst_regret_ratio`.
+    pub worst_world: String,
+    /// 1-based least-bad rank; `None` for policies not scored in every
+    /// world (their worst case is not comparable).
+    pub rank: Option<usize>,
+}
+
+/// The cross-world scoring result: the per-policy scores in ranking
+/// order plus the world count the coverage/rank notion was computed
+/// against (the same count [`robustness_json`] emits, so the two can
+/// never drift apart).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Robustness {
+    /// Worlds with at least one scorable run (per-policy costs present,
+    /// positive bound) — the denominator of "fully covered".
+    pub worlds: usize,
+    /// Ranking order: fully-covered policies first in least-bad
+    /// (minimax) order, then partially-covered ones by coverage.
+    pub scores: Vec<PolicyScore>,
+}
+
+/// Score every policy label appearing in the outcomes' `policy_costs`.
+///
+/// Per run, a fixed policy's regret is its mean counterfactual cost per
+/// job minus the run's cheapest fixed policy's; the ratio divides by the
+/// run's Prop. B.1 bound so worlds with different job counts and horizons
+/// compare on one scale. Runs without per-policy costs (rows from
+/// pre-fleet reports) or with a non-positive bound are skipped.
+///
+/// `outcomes` must be canonically sorted (`(scenario, replicate)`), as
+/// [`super::merge::FleetAccumulator`] guarantees.
+pub fn score(outcomes: &[ScenarioOutcome]) -> Robustness {
+    // world -> policy -> (ratio sum, run count), worlds in sorted order.
+    let mut per_world: BTreeMap<&str, BTreeMap<&str, (f64, u64)>> = BTreeMap::new();
+    for o in outcomes {
+        if o.policy_costs.is_empty() || !(o.regret_bound > 0.0) {
+            continue;
+        }
+        let min = o
+            .policy_costs
+            .iter()
+            .map(|(_, c)| *c)
+            .fold(f64::INFINITY, f64::min);
+        let world = per_world.entry(o.scenario.as_str()).or_default();
+        for (label, cost) in &o.policy_costs {
+            let ratio = (cost - min) / o.regret_bound;
+            let e = world.entry(label.as_str()).or_insert((0.0, 0));
+            e.0 += ratio;
+            e.1 += 1;
+        }
+    }
+    let total_worlds = per_world.len();
+
+    // policy -> per-world mean ratios, worlds iterated in sorted order so
+    // the cross-world folds are order-fixed.
+    let mut acc: BTreeMap<&str, PolicyScore> = BTreeMap::new();
+    for (&world, policies) in &per_world {
+        for (&label, &(sum, runs)) in policies {
+            let world_mean = sum / runs as f64;
+            let s = acc.entry(label).or_insert_with(|| PolicyScore {
+                policy: label.to_string(),
+                worlds: 0,
+                worst_regret_ratio: f64::NEG_INFINITY,
+                mean_regret_ratio: 0.0,
+                worst_world: String::new(),
+                rank: None,
+            });
+            s.worlds += 1;
+            s.mean_regret_ratio += world_mean; // finalized below
+            if world_mean > s.worst_regret_ratio {
+                s.worst_regret_ratio = world_mean;
+                s.worst_world = world.to_string();
+            }
+        }
+    }
+    let mut scores: Vec<PolicyScore> = acc
+        .into_values()
+        .map(|mut s| {
+            s.mean_regret_ratio /= s.worlds as f64;
+            s
+        })
+        .collect();
+
+    // Least-bad (minimax) order for fully-covered policies; partial
+    // coverage sorts after, by coverage then the same keys. Ties break on
+    // the label so the order is total.
+    scores.sort_by(|a, b| {
+        let full_a = a.worlds == total_worlds;
+        let full_b = b.worlds == total_worlds;
+        full_b
+            .cmp(&full_a)
+            .then(b.worlds.cmp(&a.worlds))
+            .then(a.worst_regret_ratio.total_cmp(&b.worst_regret_ratio))
+            .then(a.mean_regret_ratio.total_cmp(&b.mean_regret_ratio))
+            .then(a.policy.cmp(&b.policy))
+    });
+    let mut rank = 0usize;
+    for s in &mut scores {
+        if s.worlds == total_worlds && total_worlds > 0 {
+            rank += 1;
+            s.rank = Some(rank);
+        }
+    }
+    Robustness {
+        worlds: total_worlds,
+        scores,
+    }
+}
+
+/// Serialize the scoring result as the fleet report's `robustness`
+/// section.
+pub fn robustness_json(r: &Robustness) -> Json {
+    let mut j = Json::obj();
+    j.set("worlds", Json::Num(r.worlds as f64))
+        .set(
+            "ranked",
+            Json::Num(r.scores.iter().filter(|s| s.rank.is_some()).count() as f64),
+        )
+        .set(
+            "policies",
+            Json::Arr(
+                r.scores
+                    .iter()
+                    .map(|s| {
+                        let mut sj = Json::obj();
+                        sj.set("policy", Json::Str(s.policy.clone()))
+                            .set("worlds", Json::Num(s.worlds as f64))
+                            .set("worst_regret_ratio", Json::Num(s.worst_regret_ratio))
+                            .set("mean_regret_ratio", Json::Num(s.mean_regret_ratio))
+                            .set("worst_world", Json::Str(s.worst_world.clone()));
+                        if let Some(r) = s.rank {
+                            sj.set("rank", Json::Num(r as f64));
+                        }
+                        sj
+                    })
+                    .collect(),
+            ),
+        );
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(world: &str, rep: u64, costs: &[(&str, f64)], bound: f64) -> ScenarioOutcome {
+        ScenarioOutcome {
+            scenario: world.into(),
+            replicate: rep,
+            run_seed: rep,
+            jobs: 10,
+            average_unit_cost: 0.3,
+            average_regret: 0.01,
+            regret_bound: bound,
+            pool_utilization: 0.0,
+            so_share: 0.0,
+            spot_share: 0.8,
+            od_share: 0.2,
+            availability_lo: 0.4,
+            availability_hi: 0.9,
+            best_policy: costs.first().map(|(l, _)| l.to_string()).unwrap_or_default(),
+            offer_shares: Vec::new(),
+            policy_costs: costs.iter().map(|(l, c)| (l.to_string(), *c)).collect(),
+        }
+    }
+
+    #[test]
+    fn minimax_ranking_picks_the_least_bad_policy() {
+        // p1 is best in w1 but terrible in w2; p2 is mediocre everywhere.
+        let outs = vec![
+            outcome("w1", 0, &[("p1", 0.10), ("p2", 0.20)], 0.5),
+            outcome("w2", 0, &[("p1", 0.90), ("p2", 0.30)], 0.5),
+        ];
+        let r = score(&outs);
+        assert_eq!(r.worlds, 2);
+        let scores = r.scores;
+        assert_eq!(scores.len(), 2);
+        assert_eq!(scores[0].policy, "p2", "least-bad is p2");
+        assert_eq!(scores[0].rank, Some(1));
+        assert_eq!(scores[0].worst_world, "w1");
+        assert!((scores[0].worst_regret_ratio - 0.1 / 0.5).abs() < 1e-12);
+        assert_eq!(scores[1].policy, "p1");
+        assert_eq!(scores[1].worst_world, "w2");
+        assert!((scores[1].worst_regret_ratio - 0.6 / 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replicates_average_and_partial_coverage_is_unranked() {
+        let outs = vec![
+            outcome("w1", 0, &[("p1", 0.1), ("p2", 0.3)], 1.0),
+            outcome("w1", 1, &[("p1", 0.1), ("p2", 0.5)], 1.0),
+            // p3 exists only in w2: scored but unranked.
+            outcome("w2", 0, &[("p1", 0.2), ("p2", 0.2), ("p3", 0.4)], 1.0),
+        ];
+        let scores = score(&outs).scores;
+        let p2 = scores.iter().find(|s| s.policy == "p2").unwrap();
+        // w1 ratios: (0.2 + 0.4)/2 = 0.3; w2: 0.0 -> worst 0.3, mean 0.15.
+        assert!((p2.worst_regret_ratio - 0.3).abs() < 1e-12);
+        assert!((p2.mean_regret_ratio - 0.15).abs() < 1e-12);
+        let p3 = scores.iter().find(|s| s.policy == "p3").unwrap();
+        assert_eq!(p3.rank, None);
+        assert_eq!(p3.worlds, 1);
+        // Ranked policies come first.
+        assert!(scores[0].rank.is_some() && scores[1].rank.is_some());
+        assert_eq!(scores[2].policy, "p3");
+    }
+
+    #[test]
+    fn rows_without_costs_or_bound_are_skipped() {
+        let mut no_costs = outcome("w1", 0, &[], 1.0);
+        no_costs.policy_costs.clear();
+        let no_bound = outcome("w2", 0, &[("p1", 0.1)], 0.0);
+        let r = score(&[no_costs, no_bound]);
+        assert!(r.scores.is_empty());
+        assert_eq!(r.worlds, 0);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let outs = vec![outcome("w1", 0, &[("p1", 0.1), ("p2", 0.2)], 1.0)];
+        let j = robustness_json(&score(&outs));
+        assert_eq!(j.get("worlds").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("ranked").unwrap().as_u64().unwrap(), 2);
+        let arr = j.get("policies").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].get("policy").unwrap().as_str().unwrap(), "p1");
+        assert_eq!(arr[0].get("rank").unwrap().as_u64().unwrap(), 1);
+    }
+}

@@ -62,6 +62,20 @@ impl RegretTracker {
             .fold(f64::INFINITY, f64::min)
     }
 
+    /// Per-policy mean counterfactual cost per job (`Σ c_π / N'`) — the
+    /// fixed-policy cost surface the fleet layer's cross-scenario
+    /// robustness scoring compares across worlds. Zeros before any job is
+    /// recorded.
+    pub fn per_policy_means(&self) -> Vec<f64> {
+        if self.jobs == 0 {
+            return vec![0.0; self.per_policy_total.len()];
+        }
+        self.per_policy_total
+            .iter()
+            .map(|&t| t / self.jobs as f64)
+            .collect()
+    }
+
     /// Index of π*.
     pub fn best_fixed_policy(&self) -> usize {
         self.per_policy_total
@@ -118,6 +132,16 @@ mod tests {
         assert_eq!(r.best_fixed_total(), 10.0);
         assert!((r.average_regret() - 1.5).abs() < 1e-12);
         assert!(r.bound(0.05) > 0.0);
+    }
+
+    #[test]
+    fn per_policy_means_divide_totals_by_jobs() {
+        let mut r = RegretTracker::new(3, 4.0);
+        assert_eq!(r.per_policy_means(), vec![0.0, 0.0, 0.0]);
+        for _ in 0..4 {
+            r.record(2.0, &[2.0, 1.0, 3.0]);
+        }
+        assert_eq!(r.per_policy_means(), vec![2.0, 1.0, 3.0]);
     }
 
     #[test]

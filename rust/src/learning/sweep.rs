@@ -12,7 +12,8 @@
 //!    windows, task deadlines, slot-ownership ranges, and per-window pool
 //!    minima are computed once per distinct β', not once per policy.
 //! 2. **Per-bid market tables** — spot availability depends on the bid
-//!    only, and a grid holds ≤ [`NB_MAX`] distinct bids. One O(S) pass per
+//!    only, and a grid holds ≤ [`NB_MAX`](super::counterfactual::NB_MAX)
+//!    distinct bids. One O(S) pass per
 //!    distinct bid builds prefix sums of winning time and winning
 //!    price-mass over the resampled window.
 //! 3. **Closed-form slot walk** — Def. 3.1's turning-point test uses the

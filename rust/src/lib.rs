@@ -35,8 +35,17 @@
 //!   by the online coordinator loop
 //!   ([`coordinator::online::tola_run_online`]), which schedules against
 //!   only already-ingested prices;
+//! * a **fleet layer** ([`fleet`]): a shard manifest dealing worlds to
+//!   many coordinators, an associative order-independent merge of their
+//!   reports into one `dagcloud.fleet/v1` document, and cross-scenario
+//!   policy-robustness scoring (least-bad fixed policy across all
+//!   worlds);
 //! * an **experiment harness** ([`experiments`]) regenerating every table and
 //!   figure of the paper's evaluation section.
+//!
+//! `ARCHITECTURE.md` (repo root) walks the data flow between these
+//! subsystems and the determinism invariants each layer pins;
+//! `docs/SCHEMAS.md` documents every report schema field by field.
 
 pub mod util;
 pub mod market;
@@ -48,6 +57,7 @@ pub mod learning;
 pub mod runtime;
 pub mod coordinator;
 pub mod scenario;
+pub mod fleet;
 pub mod experiments;
 
 /// Crate-wide result type.

@@ -12,9 +12,10 @@
 //!   routing mode: home / arbitrage composite / capacity-aware routing),
 //!   a workload mix with arrival-rate schedules, a pool, and a policy
 //!   grid;
-//! * [`registry`] — eleven built-in named worlds, from `paper-default` to
+//! * [`registry`] — twelve built-in named worlds, from `paper-default` to
 //!   `multi-region-arbitrage`, the capacity-aware `capacity-crunch` /
-//!   `multi-region-routed`, and the streamed-dump `ec2-feed-replay`;
+//!   `multi-region-routed`, and the streamed-dump `ec2-feed-replay` /
+//!   `ec2-az-select` (per-series selection out of a multi-series dump);
 //! * [`runner`] — fans `scenarios × seeds` cells across the worker pool
 //!   with per-run seed derivation, so a batch is bit-identical under any
 //!   `--threads`;
@@ -27,7 +28,10 @@ pub mod runner;
 pub mod report;
 
 pub use registry::{builtin_names, builtins, find};
-pub use report::{aggregate, report_json, ScenarioAggregate};
+pub use report::{
+    aggregate, outcome_from_json, outcomes_from_report, report_json, scenario_sections_json,
+    ReportMeta, ScenarioAggregate,
+};
 pub use runner::{
     build_market, build_market_view, build_workload, cf_specs, derive_run_seed, run_batch,
     run_scenario_once, BatchOptions, ScenarioOutcome,

@@ -1,7 +1,8 @@
-//! The built-in scenario registry: ~10 named worlds spanning the market and
-//! workload regimes the platform must handle, from the paper's §6.1 default
-//! to replayed real-style traces, multi-region arbitrage, and the
-//! capacity-aware routed markets.
+//! The built-in scenario registry: twelve named worlds spanning the market
+//! and workload regimes the platform must handle, from the paper's §6.1
+//! default to replayed real-format EC2 dumps (single- and multi-series),
+//! multi-region arbitrage, and the capacity-aware routed markets.
+//! `repro scenarios --list` prints the same catalogue from the CLI.
 
 use crate::market::SpotModel;
 use crate::workload::MixComponent;
@@ -27,6 +28,14 @@ pub const EC2_SAMPLE_JSONL: &str = include_str!("../../../examples/traces/ec2_sa
 
 /// The m5.large on-demand price the sample dump is normalized against.
 pub const EC2_SAMPLE_OD_USD: f64 = 0.096;
+
+/// A two-series `describe-spot-price-history` JSON-lines dump
+/// (`examples/traces/ec2_multi.jsonl`): us-east-1a (calm with a surge
+/// regime) and us-east-1b (steadier, pricier) m5.large histories
+/// interleaved with deliberate disorder and duplicate timestamps. Loading
+/// it without a series filter is an error naming both candidates — the
+/// `ec2-az-select` world picks one with the spec-level `az` filter.
+pub const EC2_MULTI_JSONL: &str = include_str!("../../../examples/traces/ec2_multi.jsonl");
 
 fn base(name: &str, description: &str, model: SpotModel) -> ScenarioSpec {
     ScenarioSpec {
@@ -106,6 +115,31 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         tile: true,
         format: ReplayFormat::Ec2Json,
         normalize: false,
+        az: None,
+        instance_type: None,
+    });
+
+    // The per-series selection path: a dump carrying two availability-zone
+    // series, restricted to one by the spec's `az` filter (without it the
+    // loaders refuse, listing both candidates).
+    let mut ec2_az_select = base(
+        "ec2-az-select",
+        "Two-series EC2 dump (examples/traces/ec2_multi.jsonl: us-east-1a \
+         calm-with-surge + us-east-1b steady) restricted to us-east-1a by \
+         the replay spec's az filter; prices scaled by the m5.large \
+         on-demand price.",
+        SpotModel::paper_default(),
+    );
+    ec2_az_select.market.regions[0].price = PriceSpec::Replay(ReplaySpec {
+        csv: Some(EC2_MULTI_JSONL.to_string()),
+        path: None,
+        time_scale: 1.0 / 3600.0,
+        price_scale: 1.0 / EC2_SAMPLE_OD_USD,
+        tile: true,
+        format: ReplayFormat::Ec2Json,
+        normalize: false,
+        az: Some("us-east-1a".into()),
+        instance_type: Some("m5.large".into()),
     });
 
     let multi_region = ScenarioSpec {
@@ -276,6 +310,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         google,
         replayed,
         ec2_replay,
+        ec2_az_select,
         multi_region,
         capacity_crunch,
         multi_region_routed,
@@ -302,13 +337,14 @@ mod tests {
     #[test]
     fn registry_has_expected_worlds() {
         let names = builtin_names();
-        assert_eq!(names.len(), 11);
+        assert_eq!(names.len(), 12);
         for want in [
             "paper-default",
             "calm-surge-markov",
             "google-fixed",
             "replayed-trace",
             "ec2-feed-replay",
+            "ec2-az-select",
             "multi-region-arbitrage",
             "capacity-crunch",
             "multi-region-routed",
@@ -378,6 +414,41 @@ mod tests {
             .fold(0.0, f64::max);
         assert!(lo > 0.1 && lo < 0.2, "lo {lo}");
         assert!(hi > 0.5 && hi < 1.0, "hi {hi}");
+    }
+
+    #[test]
+    fn az_select_world_filters_one_series_out_of_two() {
+        let s = find("ec2-az-select").unwrap();
+        match &s.market.regions[0].price {
+            PriceSpec::Replay(r) => {
+                assert_eq!(r.az.as_deref(), Some("us-east-1a"));
+                assert_eq!(r.instance_type.as_deref(), Some("m5.large"));
+                assert!(r.csv.as_deref().unwrap().contains("us-east-1b"));
+            }
+            other => panic!("expected replay price spec, got {other:?}"),
+        }
+        // With the filter the world realizes (1a band: calm ~0.2 with a
+        // surge toward ~0.78 normalized)...
+        let trace = crate::scenario::runner::build_market(&s, 10.0, 1).unwrap().0;
+        assert!(trace.horizon() > 100.0, "horizon {}", trace.horizon());
+        let lo = (0..trace.num_slots())
+            .map(|k| trace.price_of_slot(k))
+            .fold(f64::INFINITY, f64::min);
+        let hi = (0..trace.num_slots())
+            .map(|k| trace.price_of_slot(k))
+            .fold(0.0, f64::max);
+        assert!(lo > 0.1 && lo < 0.25, "lo {lo}");
+        assert!(hi > 0.4 && hi < 0.9, "hi {hi}");
+        // ...without it the loaders refuse, naming both series.
+        let mut unfiltered = s.clone();
+        if let PriceSpec::Replay(r) = &mut unfiltered.market.regions[0].price {
+            r.az = None;
+            r.instance_type = None;
+        }
+        let err = crate::scenario::runner::build_market(&unfiltered, 10.0, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("us-east-1a") && err.contains("us-east-1b"), "{err}");
     }
 
     #[test]

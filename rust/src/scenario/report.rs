@@ -3,7 +3,14 @@
 //!
 //! The report is a pure function of the outcomes — no timestamps, no
 //! environment — so byte-identical batches produce byte-identical JSON
-//! (the determinism contract `repro scenarios` is tested against).
+//! (the determinism contract `repro scenarios` is tested against). The
+//! schema (`dagcloud.scenarios/v1`, documented field-by-field in
+//! `docs/SCHEMAS.md`) is aggregation-friendly on purpose: every detail row
+//! is keyed by `(scenario, replicate)` and round-trips losslessly through
+//! [`outcomes_from_report`], which is what lets the fleet layer
+//! ([`crate::fleet`]) merge shard reports back into one document.
+
+use anyhow::{anyhow, ensure, Result};
 
 use crate::util::json::Json;
 use crate::util::stats::Welford;
@@ -92,12 +99,170 @@ fn run_to_json(o: &ScenarioOutcome) -> Json {
         }
         j.set("offer_shares", shares);
     }
+    if !o.policy_costs.is_empty() {
+        let mut costs = Json::obj();
+        for (label, cost) in &o.policy_costs {
+            costs.set(label, Json::Num(*cost));
+        }
+        j.set("policy_costs", costs);
+    }
     j
+}
+
+/// Parse one detail row back into a [`ScenarioOutcome`]. Lossless for
+/// every field the fleet merge and robustness scoring read: JSON numbers
+/// serialize via shortest-round-trip `f64` formatting, so
+/// `parse(serialize(o))` reproduces the exact bits. Map-backed fields
+/// (`offer_shares`, `policy_costs`) come back in label order — the same
+/// order serialization emits — so re-serializing a parsed row is
+/// byte-identical to the original row.
+pub fn outcome_from_json(scenario: &str, j: &Json) -> Result<ScenarioOutcome> {
+    let field = |key: &str| -> Result<f64> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("report row ('{scenario}'): missing number '{key}'"))
+    };
+    let pairs = |key: &str| -> Result<Vec<(String, f64)>> {
+        match j.get(key) {
+            None => Ok(Vec::new()),
+            Some(Json::Obj(m)) => m
+                .iter()
+                .map(|(k, v)| {
+                    v.as_f64()
+                        .map(|x| (k.clone(), x))
+                        .ok_or_else(|| anyhow!("report row ('{scenario}'): bad '{key}.{k}'"))
+                })
+                .collect(),
+            Some(_) => Err(anyhow!("report row ('{scenario}'): '{key}' must be an object")),
+        }
+    };
+    let run_seed = j
+        .get("run_seed")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("report row ('{scenario}'): missing string 'run_seed'"))?
+        .parse::<u64>()
+        .map_err(|e| anyhow!("report row ('{scenario}'): bad run_seed: {e}"))?;
+    Ok(ScenarioOutcome {
+        scenario: scenario.to_string(),
+        replicate: field("replicate")? as u64,
+        run_seed,
+        jobs: field("jobs")? as usize,
+        average_unit_cost: field("alpha")?,
+        average_regret: field("regret")?,
+        regret_bound: field("regret_bound")?,
+        pool_utilization: field("pool_utilization")?,
+        so_share: field("so_share")?,
+        spot_share: field("spot_share")?,
+        od_share: field("od_share")?,
+        availability_lo: field("availability_lo")?,
+        availability_hi: field("availability_hi")?,
+        best_policy: j
+            .get("best_policy")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("report row ('{scenario}'): missing 'best_policy'"))?
+            .to_string(),
+        offer_shares: pairs("offer_shares")?,
+        policy_costs: pairs("policy_costs")?,
+    })
+}
+
+/// Batch-level metadata a `dagcloud.scenarios/v1` document records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReportMeta {
+    pub seeds: u64,
+    pub base_seed: u64,
+    pub smoke: bool,
+}
+
+/// Parse a whole `dagcloud.scenarios/v1` document back into its outcome
+/// rows plus batch metadata — the inverse of [`report_json`] (aggregates
+/// are recomputed, not parsed: they are a pure function of the rows).
+pub fn outcomes_from_report(j: &Json) -> Result<(Vec<ScenarioOutcome>, ReportMeta)> {
+    let schema = j.opt_str("schema", "");
+    ensure!(
+        schema == "dagcloud.scenarios/v1",
+        "expected schema dagcloud.scenarios/v1, found '{schema}'"
+    );
+    let meta = ReportMeta {
+        seeds: j
+            .get("seeds")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("report: missing 'seeds'"))?,
+        base_seed: j
+            .get("base_seed")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("report: missing string 'base_seed'"))?
+            .parse::<u64>()
+            .map_err(|e| anyhow!("report: bad base_seed: {e}"))?,
+        smoke: j
+            .get("smoke")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow!("report: missing 'smoke'"))?,
+    };
+    let mut out = Vec::new();
+    let sections = j
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("report: missing 'scenarios' array"))?;
+    for s in sections {
+        let name = s
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("report: scenario section missing 'name'"))?;
+        let details = s
+            .get("details")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("report ('{name}'): missing 'details' array"))?;
+        for d in details {
+            out.push(outcome_from_json(name, d)?);
+        }
+    }
+    Ok((out, meta))
+}
+
+/// The per-scenario sections array (aggregate fields plus detail rows),
+/// grouped in first-seen outcome order. Shared by [`report_json`] and the
+/// fleet merge ([`crate::fleet::merge`]), which feeds it canonically
+/// sorted outcomes so the sections are partition- and order-independent.
+pub fn scenario_sections_json(outcomes: &[ScenarioOutcome]) -> Json {
+    let aggs = aggregate(outcomes);
+    Json::Arr(
+        aggs.iter()
+            .map(|a| {
+                let mut sj = Json::obj();
+                sj.set("name", Json::Str(a.scenario.clone()))
+                    .set("runs", Json::Num(a.runs as f64))
+                    .set("alpha_mean", Json::Num(a.alpha_mean))
+                    .set("alpha_std", Json::Num(a.alpha_std))
+                    .set("regret_mean", Json::Num(a.regret_mean))
+                    .set("regret_bound_mean", Json::Num(a.regret_bound_mean))
+                    .set(
+                        "pool_utilization_mean",
+                        Json::Num(a.pool_utilization_mean),
+                    )
+                    .set("so_share_mean", Json::Num(a.so_share_mean))
+                    .set("spot_share_mean", Json::Num(a.spot_share_mean))
+                    .set("od_share_mean", Json::Num(a.od_share_mean))
+                    .set("availability_lo_mean", Json::Num(a.availability_lo_mean))
+                    .set("availability_hi_mean", Json::Num(a.availability_hi_mean))
+                    .set(
+                        "details",
+                        Json::Arr(
+                            outcomes
+                                .iter()
+                                .filter(|o| o.scenario == a.scenario)
+                                .map(run_to_json)
+                                .collect(),
+                        ),
+                    );
+                sj
+            })
+            .collect(),
+    )
 }
 
 /// The full report document.
 pub fn report_json(outcomes: &[ScenarioOutcome], seeds: u64, base_seed: u64, smoke: bool) -> Json {
-    let aggs = aggregate(outcomes);
     let mut j = Json::obj();
     // base_seed is a full-range u64 like the per-run seeds: stringified so
     // the recorded value replays the batch exactly (f64 loses bits > 2^53).
@@ -105,42 +270,7 @@ pub fn report_json(outcomes: &[ScenarioOutcome], seeds: u64, base_seed: u64, smo
         .set("seeds", Json::Num(seeds as f64))
         .set("base_seed", Json::Str(base_seed.to_string()))
         .set("smoke", Json::Bool(smoke))
-        .set(
-            "scenarios",
-            Json::Arr(
-                aggs.iter()
-                    .map(|a| {
-                        let mut sj = Json::obj();
-                        sj.set("name", Json::Str(a.scenario.clone()))
-                            .set("runs", Json::Num(a.runs as f64))
-                            .set("alpha_mean", Json::Num(a.alpha_mean))
-                            .set("alpha_std", Json::Num(a.alpha_std))
-                            .set("regret_mean", Json::Num(a.regret_mean))
-                            .set("regret_bound_mean", Json::Num(a.regret_bound_mean))
-                            .set(
-                                "pool_utilization_mean",
-                                Json::Num(a.pool_utilization_mean),
-                            )
-                            .set("so_share_mean", Json::Num(a.so_share_mean))
-                            .set("spot_share_mean", Json::Num(a.spot_share_mean))
-                            .set("od_share_mean", Json::Num(a.od_share_mean))
-                            .set("availability_lo_mean", Json::Num(a.availability_lo_mean))
-                            .set("availability_hi_mean", Json::Num(a.availability_hi_mean))
-                            .set(
-                                "details",
-                                Json::Arr(
-                                    outcomes
-                                        .iter()
-                                        .filter(|o| o.scenario == a.scenario)
-                                        .map(run_to_json)
-                                        .collect(),
-                                ),
-                            );
-                        sj
-                    })
-                    .collect(),
-            ),
-        );
+        .set("scenarios", scenario_sections_json(outcomes));
     j
 }
 
@@ -165,6 +295,10 @@ mod tests {
             availability_hi: 0.9,
             best_policy: "proposed(β=1.000,β₀=-,b=0.24)".into(),
             offer_shares: Vec::new(),
+            policy_costs: vec![
+                ("proposed(β=1.000,β₀=-,b=0.24)".into(), alpha),
+                ("proposed(β=0.769,β₀=-,b=0.18)".into(), alpha + 0.05),
+            ],
         }
     }
 
@@ -194,6 +328,32 @@ mod tests {
         assert!(aggs[0].alpha_std > 0.0);
         assert_eq!(aggs[1].scenario, "b");
         assert_eq!(aggs[1].runs, 1);
+    }
+
+    #[test]
+    fn detail_rows_roundtrip_losslessly() {
+        let mut routed = outcome("w", 3, 0.123456789012345);
+        routed.run_seed = u64::MAX - 7; // > 2^53: must survive via string
+        routed.offer_shares =
+            vec![("a/default".into(), 0.625), ("b/default".into(), 0.375)];
+        let j = run_to_json(&routed);
+        let back = outcome_from_json("w", &j).unwrap();
+        // Bit-exact numeric fields and identical re-serialization.
+        assert_eq!(back.run_seed, routed.run_seed);
+        assert_eq!(back.average_unit_cost, routed.average_unit_cost);
+        assert_eq!(back.policy_costs.len(), 2);
+        assert_eq!(run_to_json(&back).pretty(), j.pretty());
+        // Whole-document inverse.
+        let outs = vec![outcome("a", 0, 0.2), outcome("b", 0, 0.3)];
+        let doc = report_json(&outs, 1, 7, true);
+        let (rows, meta) = outcomes_from_report(&doc).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(meta, ReportMeta { seeds: 1, base_seed: 7, smoke: true });
+        assert_eq!(report_json(&rows, 1, 7, true).pretty(), doc.pretty());
+        // Wrong schema is refused.
+        let mut bad = doc.clone();
+        bad.set("schema", Json::Str("dagcloud.fleet/v1".into()));
+        assert!(outcomes_from_report(&bad).is_err());
     }
 
     #[test]

@@ -89,6 +89,12 @@ pub struct ReplaySpec {
     /// instead of rejecting them (an explicit opt-in — see
     /// [`crate::market::replay::trace_from_csv_opts`]).
     pub normalize: bool,
+    /// EC2 formats only: restrict a multi-series dump to one availability
+    /// zone (the loaders refuse to silently interleave distinct series; a
+    /// multi-series dump without a filter errors listing the candidates).
+    pub az: Option<String>,
+    /// EC2 formats only: restrict a multi-series dump to one instance type.
+    pub instance_type: Option<String>,
 }
 
 impl ReplaySpec {
@@ -101,6 +107,8 @@ impl ReplaySpec {
             tile: true,
             format: ReplayFormat::Simple,
             normalize: false,
+            az: None,
+            instance_type: None,
         }
     }
 }
@@ -524,6 +532,13 @@ fn validate_price(price: &PriceSpec, scenario: &str, offer: &str) -> Result<()> 
                  (the EC2 loaders always normalize record order)",
                 ctx()
             );
+            ensure!(
+                !(rp.format == ReplayFormat::Simple
+                    && (rp.az.is_some() || rp.instance_type.is_some())),
+                "{}: 'az'/'instance_type' filters apply to the EC2 formats only \
+                 (the simple time,price shape carries no series labels)",
+                ctx()
+            );
         }
     }
     Ok(())
@@ -564,6 +579,12 @@ fn price_to_json(p: &PriceSpec) -> Json {
             }
             if r.normalize {
                 j.set("normalize", Json::Bool(true));
+            }
+            if let Some(az) = &r.az {
+                j.set("az", Json::Str(az.clone()));
+            }
+            if let Some(it) = &r.instance_type {
+                j.set("instance_type", Json::Str(it.clone()));
             }
             if let Some(csv) = &r.csv {
                 j.set("csv", Json::Str(csv.clone()));
@@ -614,6 +635,11 @@ fn price_from_json(j: &Json, ctx: &str) -> Result<PriceSpec> {
             format: ReplayFormat::from_str(j.opt_str("format", "simple"))
                 .map_err(|e| anyhow::anyhow!("{ctx}: {e}"))?,
             normalize: j.opt_bool("normalize", false),
+            az: j.get("az").and_then(Json::as_str).map(str::to_string),
+            instance_type: j
+                .get("instance_type")
+                .and_then(Json::as_str)
+                .map(str::to_string),
         })),
         other => bail!("{ctx}: unknown price kind '{other}' (model|regimes|replay)"),
     }
@@ -950,6 +976,44 @@ mod tests {
         assert_eq!(ScenarioSpec::from_json(&s2.to_json()).unwrap(), s2);
     }
 
+    #[test]
+    fn replay_series_filters_roundtrip_and_validate() {
+        // az/instance_type filters round-trip on EC2 formats...
+        let mut s = sample();
+        let mut rp = ReplaySpec::inline(
+            "{\"Timestamp\":\"2024-03-01T00:00:00Z\",\"SpotPrice\":\"0.03\",\
+             \"AvailabilityZone\":\"us-east-1a\",\"InstanceType\":\"m5.large\"}",
+        );
+        rp.format = ReplayFormat::Ec2Json;
+        rp.az = Some("us-east-1a".into());
+        rp.instance_type = Some("m5.large".into());
+        s.market = MarketSpec {
+            regions: vec![RegionSpec {
+                name: "filtered".into(),
+                od_price: 1.0,
+                price: PriceSpec::Replay(rp.clone()),
+                capacity: None,
+                instance_types: Vec::new(),
+            }],
+            routing: RoutingSpec::Home,
+        };
+        s.validate().unwrap();
+        assert_eq!(ScenarioSpec::from_json(&s.to_json()).unwrap(), s);
+        let re = ScenarioSpec::parse(&s.to_json().pretty()).unwrap();
+        assert_eq!(re, s);
+        // ...stay off-disk when absent (old spec files keep diffing clean)...
+        let plain = sample().to_json().pretty();
+        assert!(!plain.contains("\"az\""), "{plain}");
+        assert!(!plain.contains("\"instance_type\""), "{plain}");
+        // ...and are rejected on the simple format, which has no series.
+        let mut bad = s.clone();
+        if let PriceSpec::Replay(r) = &mut bad.market.regions[0].price {
+            r.format = ReplayFormat::Simple;
+        }
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("EC2 formats only"), "{err}");
+    }
+
     /// A capacity-and-instance-type market for the routed-world tests.
     fn routed_sample() -> ScenarioSpec {
         let mut s = sample();
@@ -1130,10 +1194,7 @@ mod tests {
         let mut s = sample();
         s.market.regions[0].price = PriceSpec::Replay(ReplaySpec {
             csv: None,
-            path: None,
-            time_scale: 1.0,
-            price_scale: 1.0,
-            tile: true,
+            ..ReplaySpec::inline("")
         });
         assert!(s.validate().is_err());
 

@@ -244,8 +244,8 @@ pub struct RoutedChainOutcome {
 /// Execute a whole chain job against a [`MarketView`] under windows +
 /// Def. 3.1/3.2 allocation, routing each task at its realized start.
 /// The one-offer infinite-capacity case reproduces [`execute_chain`] with
-/// a `Windows` strategy exactly (both run through the same
-/// [`execute_windows_with`] loop).
+/// a `Windows` strategy exactly (both run through the same private
+/// `execute_windows_with` loop).
 #[allow(clippy::too_many_arguments)]
 pub fn execute_chain_routed(
     job: &ChainJob,

@@ -46,6 +46,7 @@ fn assert_reports_identical(a: &LearningReport, b: &LearningReport, ctx: &str) {
     assert_eq!(a.best_policy, b.best_policy, "{ctx}: best policy");
     assert_eq!(a.average_regret, b.average_regret, "{ctx}: regret");
     assert_eq!(a.regret_bound, b.regret_bound, "{ctx}: bound");
+    assert_eq!(a.policy_mean_costs, b.policy_mean_costs, "{ctx}: policy costs");
     assert_eq!(a.pool_utilization, b.pool_utilization, "{ctx}: utilization");
     assert_eq!(a.weight_trajectory, b.weight_trajectory, "{ctx}: trajectory");
     assert_eq!(a.offer_work, b.offer_work, "{ctx}: offer work");

@@ -1,0 +1,222 @@
+//! Fleet-layer acceptance tests: the merged `dagcloud.fleet/v1` report is
+//! byte-identical for any sharding of the scenario×seed cells and any
+//! merge order (the golden reference being the single-runner report over
+//! the same cell set), the robustness ranking is stable under detail-row
+//! reordering, and `OnlineSnapshot` streams from many coordinators merge
+//! into one order-independent timeline.
+
+use dagcloud::coordinator::OnlineSnapshot;
+use dagcloud::fleet::{merge_online, FleetAccumulator, OnlineSource};
+use dagcloud::scenario::{self, BatchOptions, ScenarioOutcome, ScenarioSpec};
+use dagcloud::util::json::Json;
+use dagcloud::util::prop::{for_all, Config as PropConfig};
+
+/// A small three-world batch (spot-only grids keep cells fast) whose
+/// outcomes serve as the shared cell set for the sharding properties.
+fn batch_outcomes() -> Vec<ScenarioOutcome> {
+    let mut specs: Vec<ScenarioSpec> = ["paper-default", "bursty-arrivals", "deadline-tight"]
+        .iter()
+        .map(|n| scenario::find(n).unwrap())
+        .collect();
+    for s in &mut specs {
+        s.workload.small_tasks = true;
+    }
+    scenario::run_batch(
+        &specs,
+        &BatchOptions {
+            seeds: 2,
+            base_seed: 23,
+            threads: 4,
+            jobs_override: Some(8),
+        },
+    )
+    .unwrap()
+}
+
+fn fleet_bytes_of_shards(shards: &[Vec<ScenarioOutcome>]) -> String {
+    let mut acc = FleetAccumulator::new();
+    for shard in shards {
+        acc.absorb(&scenario::report_json(shard, 2, 23, true)).unwrap();
+    }
+    acc.fleet_json(None).unwrap().pretty()
+}
+
+/// The acceptance property: for ANY partition of the cells into shard
+/// reports, absorbed in ANY order, with detail rows in ANY order inside
+/// each shard report, the merged fleet report is byte-identical to the
+/// single-runner (one-shard) report — robustness ranking included.
+#[test]
+fn fleet_merge_is_invariant_to_sharding_merge_order_and_row_order() {
+    let all = batch_outcomes();
+    assert_eq!(all.len(), 6);
+    let reference = fleet_bytes_of_shards(&[all.clone()]);
+    // Sanity: the reference carries a full robustness ranking.
+    let j = Json::parse(&reference).unwrap();
+    assert_eq!(
+        j.get("robustness").unwrap().get("ranked").unwrap().as_u64().unwrap(),
+        25,
+        "every spot-only policy should rank across all 3 worlds"
+    );
+
+    for_all(PropConfig::cases(12).seed(0xF1EE7), |rng| {
+        // Random partition into 1..=4 shards (some possibly empty —
+        // empty shards are simply never serialized).
+        let k = rng.range_inclusive(1, 4) as usize;
+        let mut shards: Vec<Vec<ScenarioOutcome>> = vec![Vec::new(); k];
+        for o in &all {
+            shards[rng.below(k as u64) as usize].push(o.clone());
+        }
+        let mut shards: Vec<Vec<ScenarioOutcome>> =
+            shards.into_iter().filter(|s| !s.is_empty()).collect();
+        // Random row order inside each shard, random merge order.
+        for s in &mut shards {
+            rng.shuffle(s);
+        }
+        rng.shuffle(&mut shards);
+        let merged = fleet_bytes_of_shards(&shards);
+        if merged != reference {
+            return Err(format!(
+                "fleet report differs for a {}-shard partition",
+                shards.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn duplicate_cell_across_shards_is_a_hard_error() {
+    let all = batch_outcomes();
+    let mut acc = FleetAccumulator::new();
+    acc.absorb(&scenario::report_json(&all, 2, 23, true)).unwrap();
+    let err = acc
+        .absorb(&scenario::report_json(&all[..1], 2, 23, true))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("duplicate fleet cell"), "{err}");
+}
+
+/// The robustness section is a pure function of the cell *set*: feeding
+/// the scoring the same rows through differently-ordered shard documents
+/// must reproduce the identical ranking array (not just the same winner).
+#[test]
+fn robustness_ranking_is_stable_under_report_row_reordering() {
+    let all = batch_outcomes();
+    let ranking_of = |rows: &[ScenarioOutcome]| -> String {
+        let mut acc = FleetAccumulator::new();
+        acc.absorb(&scenario::report_json(rows, 2, 23, true)).unwrap();
+        acc.fleet_json(None)
+            .unwrap()
+            .get("robustness")
+            .unwrap()
+            .pretty()
+    };
+    let reference = ranking_of(&all);
+    let mut reversed = all.clone();
+    reversed.reverse();
+    assert_eq!(ranking_of(&reversed), reference);
+    // Interleave worlds: sort by replicate first, name second.
+    let mut interleaved = all.clone();
+    interleaved.sort_by(|a, b| {
+        a.replicate
+            .cmp(&b.replicate)
+            .then(b.scenario.cmp(&a.scenario))
+    });
+    assert_eq!(ranking_of(&interleaved), reference);
+}
+
+fn snap(jobs: u64, t: f64, alpha: f64) -> OnlineSnapshot {
+    OnlineSnapshot {
+        jobs,
+        sim_time: t,
+        ingested_slots: (t * 16.0) as usize,
+        average_unit_cost: alpha,
+        average_regret: 0.05 / (jobs.max(1) as f64),
+        regret_bound: 1.0 / (jobs.max(1) as f64).sqrt(),
+        max_weight: 0.1,
+        best_policy: 0,
+    }
+}
+
+/// `OnlineSnapshot` streams from many coordinators merge into one
+/// timeline whose bytes are independent of the source order, with a
+/// cumulative fleet-wide job count.
+#[test]
+fn online_snapshot_streams_merge_order_independently() {
+    let sources: Vec<OnlineSource> = (0..3)
+        .map(|k| OnlineSource {
+            source: format!("coordinator-{k}"),
+            snapshots: (1..=4)
+                .map(|i| snap(i * 2, i as f64 + 0.25 * k as f64, 0.4 - 0.01 * i as f64))
+                .collect(),
+        })
+        .collect();
+    let reference = merge_online(&sources).unwrap();
+    assert_eq!(reference.total_jobs, 24);
+    assert_eq!(reference.points.len(), 12);
+    // fleet_jobs is monotone along the merged timeline and ends at the
+    // fleet total.
+    for w in reference.points.windows(2) {
+        assert!(w[0].fleet_jobs <= w[1].fleet_jobs);
+        assert!(w[0].sim_time <= w[1].sim_time);
+    }
+    assert_eq!(reference.points.last().unwrap().fleet_jobs, 24);
+
+    let reference_bytes = reference.to_json().pretty();
+    for_all(PropConfig::cases(8).seed(0x0A11E), |rng| {
+        let mut shuffled = sources.clone();
+        rng.shuffle(&mut shuffled);
+        let merged = merge_online(&shuffled).unwrap().to_json().pretty();
+        if merged != reference_bytes {
+            return Err("online merge depends on source order".into());
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end: a real `tola_run_online` snapshot stream (the thing
+/// `repro feed` serializes) round-trips through the feed/v1 document shape
+/// into the fleet merge.
+#[test]
+fn real_online_snapshots_flow_into_the_fleet_merge() {
+    use dagcloud::coordinator::{tola_run_online, Evaluator, OnlineOptions};
+    use dagcloud::feed::FeedMux;
+    use dagcloud::learning::counterfactual::CfSpec;
+    use dagcloud::market::{PriceTrace, SpotModel};
+    use dagcloud::policy::policy_set_spot_only;
+    use dagcloud::workload::{transform, GeneratorConfig, JobStream};
+
+    let mut stream = JobStream::new(GeneratorConfig::small(), 3);
+    let jobs: Vec<_> = stream.take_jobs(24).iter().map(transform).collect();
+    let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 2.0;
+    let trace = PriceTrace::generate(SpotModel::paper_default(), horizon, 5);
+    let specs: Vec<CfSpec> = policy_set_spot_only().into_iter().map(CfSpec::Proposed).collect();
+    let run = |seed| {
+        tola_run_online(
+            &jobs,
+            &specs,
+            FeedMux::single_from_trace(&trace, 1.0),
+            &OnlineOptions {
+                seed,
+                snapshot_every: 6,
+                ..OnlineOptions::default()
+            },
+            &Evaluator::Native { threads: 2 },
+        )
+        .unwrap()
+    };
+    let a = run(7);
+    let b = run(8);
+    assert!(!a.snapshots.is_empty() && !b.snapshots.is_empty());
+    let merged = merge_online(&[
+        OnlineSource { source: "a".into(), snapshots: a.snapshots.clone() },
+        OnlineSource { source: "b".into(), snapshots: b.snapshots.clone() },
+    ])
+    .unwrap();
+    assert_eq!(
+        merged.total_jobs,
+        a.snapshots.last().unwrap().jobs + b.snapshots.last().unwrap().jobs
+    );
+    let j = merged.to_json();
+    assert_eq!(j.get("sources").unwrap().as_arr().unwrap().len(), 2);
+}
