@@ -35,6 +35,11 @@ fn synthetic_outcome(world: usize, rep: u64, labels: &[String], rng: &mut Pcg32)
             .iter()
             .map(|l| (l.clone(), base + rng.uniform(0.0, 0.2)))
             .collect(),
+        tags: if world % 2 == 0 {
+            vec!["calm".into()]
+        } else {
+            vec!["calm".into(), "surge".into()]
+        },
     }
 }
 

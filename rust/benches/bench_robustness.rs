@@ -1,0 +1,83 @@
+//! Robustness-engine benches: what deriving a world population costs
+//! (trace realization + block resampling + CSV re-serialization per
+//! world), and what the tail-risk scoring + promotion gate cost at
+//! 1000-world population scale. The scoring workload is synthetic rows,
+//! so the bench isolates the scoring layer from the runs that would
+//! produce them.
+
+use dagcloud::fleet;
+use dagcloud::robustness::{derive_population, evaluate_gate, DeriveParams, GateConfig};
+use dagcloud::scenario::{self, ScenarioOutcome};
+use dagcloud::util::bench::Bencher;
+use dagcloud::util::rng::Pcg32;
+
+fn synthetic_outcome(world: usize, labels: &[String], rng: &mut Pcg32) -> ScenarioOutcome {
+    let base = rng.uniform(0.2, 0.5);
+    ScenarioOutcome {
+        scenario: format!("world-{world:04}"),
+        replicate: 0,
+        run_seed: rng.next_u64(),
+        jobs: 400,
+        average_unit_cost: base,
+        average_regret: rng.uniform(0.0, 0.05),
+        regret_bound: rng.uniform(0.3, 0.6),
+        pool_utilization: 0.0,
+        so_share: 0.0,
+        spot_share: 0.8,
+        od_share: 0.2,
+        availability_lo: 0.4,
+        availability_hi: 0.9,
+        best_policy: labels[0].clone(),
+        offer_shares: Vec::new(),
+        policy_costs: labels
+            .iter()
+            .map(|l| (l.clone(), base + rng.uniform(0.0, 0.2)))
+            .collect(),
+        tags: match world % 3 {
+            0 => vec!["calm".into()],
+            1 => vec!["calm".into(), "surge".into()],
+            _ => vec!["fault".into()],
+        },
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_robustness ==\n");
+
+    // Derivation: 64 worlds from two bases (the CI smoke shape). Each
+    // derived world realizes every offer trace, resamples it, and
+    // re-serializes it as an inline replay CSV.
+    let bases = vec![
+        scenario::find("paper-default").unwrap(),
+        scenario::find("capacity-crunch").unwrap(),
+    ];
+    let params = DeriveParams::default();
+    b.bench_throughput("robustness/derive_64_worlds_2_bases", 64.0, "worlds/s", || {
+        derive_population(&bases, 64, 7, &params).unwrap()
+    });
+
+    // Scoring at population scale: 1000 worlds x 25 policies, quantiles
+    // + CVaR + difficulty weighting.
+    let labels: Vec<String> = (0..25).map(|i| format!("policy-{i:02}")).collect();
+    let mut rng = Pcg32::new(0xB0057);
+    let rows: Vec<ScenarioOutcome> = (0..1000)
+        .map(|w| synthetic_outcome(w, &labels, &mut rng))
+        .collect();
+    b.bench_throughput(
+        "robustness/score_1000_worlds_25pol",
+        (rows.len() * labels.len()) as f64,
+        "cells*pol/s",
+        || fleet::score(&rows),
+    );
+    b.bench_throughput(
+        "robustness/gate_1000_worlds_25pol",
+        rows.len() as f64,
+        "worlds/s",
+        || evaluate_gate(&rows, &GateConfig::default()),
+    );
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_robustness.json").ok();
+    println!("\nresults written to results/bench_robustness.json");
+}

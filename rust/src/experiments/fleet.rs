@@ -23,7 +23,7 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::Config;
 use crate::fleet::{merge_online, FleetAccumulator, OnlineSource, ShardManifest};
-use crate::scenario::{self, BatchOptions};
+use crate::scenario::{self, BatchOptions, ScenarioSpec};
 use crate::util::json::Json;
 
 use super::scenarios::{resolve_specs, SMOKE_JOBS};
@@ -80,58 +80,17 @@ pub fn run_fleet(cfg: &Config, opts: &FleetCliOptions, out_dir: &str) -> Result<
                     s.workload.small_tasks = true;
                 }
             }
-            let manifest = ShardManifest::plan(
+            run_sharded(
+                &mut acc,
+                "fleet",
                 &specs,
-                opts.shards.max(1),
-                opts.seeds.max(1),
-                cfg.seed,
+                cfg,
+                opts.shards,
+                opts.seeds,
                 opts.smoke,
                 jobs_override,
+                out_dir,
             )?;
-            let manifest_path = format!("{out_dir}/fleet_manifest.json");
-            std::fs::write(&manifest_path, manifest.to_json().pretty())?;
-            println!(
-                "== fleet: {} worlds x {} seeds across {} shard coordinator(s) \
-                 (base seed {}, threads {}{}) ==\n  manifest written to {manifest_path}",
-                manifest.worlds(),
-                manifest.seeds,
-                manifest.shards.len(),
-                manifest.base_seed,
-                cfg.effective_threads(),
-                if opts.smoke { ", smoke" } else { "" }
-            );
-
-            let t0 = std::time::Instant::now();
-            for shard in &manifest.shards {
-                // One coordinator per shard: the shard's cells fan across
-                // this process's worker pool; separate-process shards would
-                // run the identical batch from the manifest entry alone.
-                let outcomes = scenario::run_batch(
-                    &shard.scenarios,
-                    &BatchOptions {
-                        seeds: manifest.seeds,
-                        base_seed: manifest.base_seed,
-                        threads: cfg.effective_threads(),
-                        jobs_override: manifest.jobs_override,
-                    },
-                )?;
-                let doc =
-                    scenario::report_json(&outcomes, manifest.seeds, manifest.base_seed, opts.smoke);
-                let path = format!("{out_dir}/{}", shard.report);
-                std::fs::write(&path, doc.pretty())?;
-                println!(
-                    "  shard {}: {} world(s), {} cell(s) -> {path}",
-                    shard.shard,
-                    shard.scenarios.len(),
-                    outcomes.len()
-                );
-                // Absorb the *serialized* document, not the in-memory rows:
-                // the merge path is then identical for in-process shards and
-                // --merge-only reports from elsewhere (and the K=1 /K=4
-                // byte-identity holds by construction).
-                acc.absorb(&doc)?;
-            }
-            println!("  {} cells in {:.2}s", acc.len(), t0.elapsed().as_secs_f64());
         }
     }
 
@@ -164,6 +123,74 @@ pub fn run_fleet(cfg: &Config, opts: &FleetCliOptions, out_dir: &str) -> Result<
     let path = format!("{out_dir}/fleet.json");
     std::fs::write(&path, fleet.pretty())?;
     println!("  written to {path}");
+    Ok(())
+}
+
+/// Plan, run, and absorb one sharded batch: write `fleet_manifest.json`
+/// and one `dagcloud.scenarios/v1` shard report per coordinator under
+/// `out_dir`, absorbing each *serialized* report into `acc` — the merge
+/// path is then identical for in-process shards and `--merge-only`
+/// reports from elsewhere, so the shard count can never leak into the
+/// merged bytes. Shared by `repro fleet` and `repro robustness`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_sharded(
+    acc: &mut FleetAccumulator,
+    label: &str,
+    specs: &[ScenarioSpec],
+    cfg: &Config,
+    shards: usize,
+    seeds: u64,
+    smoke: bool,
+    jobs_override: Option<usize>,
+    out_dir: &str,
+) -> Result<()> {
+    let manifest = ShardManifest::plan(
+        specs,
+        shards.max(1),
+        seeds.max(1),
+        cfg.seed,
+        smoke,
+        jobs_override,
+    )?;
+    let manifest_path = format!("{out_dir}/fleet_manifest.json");
+    std::fs::write(&manifest_path, manifest.to_json().pretty())?;
+    println!(
+        "== {label}: {} worlds x {} seeds across {} shard coordinator(s) \
+         (base seed {}, threads {}{}) ==\n  manifest written to {manifest_path}",
+        manifest.worlds(),
+        manifest.seeds,
+        manifest.shards.len(),
+        manifest.base_seed,
+        cfg.effective_threads(),
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let t0 = std::time::Instant::now();
+    for shard in &manifest.shards {
+        // One coordinator per shard: the shard's cells fan across this
+        // process's worker pool; separate-process shards would run the
+        // identical batch from the manifest entry alone.
+        let outcomes = scenario::run_batch(
+            &shard.scenarios,
+            &BatchOptions {
+                seeds: manifest.seeds,
+                base_seed: manifest.base_seed,
+                threads: cfg.effective_threads(),
+                jobs_override: manifest.jobs_override,
+            },
+        )?;
+        let doc = scenario::report_json(&outcomes, manifest.seeds, manifest.base_seed, smoke);
+        let path = format!("{out_dir}/{}", shard.report);
+        std::fs::write(&path, doc.pretty())?;
+        println!(
+            "  shard {}: {} world(s), {} cell(s) -> {path}",
+            shard.shard,
+            shard.scenarios.len(),
+            outcomes.len()
+        );
+        acc.absorb(&doc)?;
+    }
+    println!("  {} cells in {:.2}s", acc.len(), t0.elapsed().as_secs_f64());
     Ok(())
 }
 

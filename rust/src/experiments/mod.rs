@@ -7,6 +7,7 @@ pub mod perf;
 pub mod scenarios;
 pub mod feed;
 pub mod fleet;
+pub mod robustness;
 
 use crate::util::cli::Args;
 
@@ -33,6 +34,10 @@ COMMANDS
   fleet       Shard the scenario registry across coordinators, merge their
               reports into results/fleet.json, and rank cross-scenario
               policy robustness (see EXPERIMENTS.md §Fleet)
+  robustness  Derive a world population from registry bases (bootstrap /
+              oversample / spike / capdrop / gap operators), run it as a
+              sharded fleet, and gate policies on cross-regime tail risk
+              (results/robustness.json; see EXPERIMENTS.md §Robustness)
   run         One TOLA learning run with progress output
   all         Run every table (tables 2–6) and figures
 
@@ -47,7 +52,8 @@ OPTIONS
   --config FILE   load a JSON config (CLI flags override)
 
 SCENARIO OPTIONS (`repro scenarios`; `--scenario` also configures `run`)
-  --list          print the registry worlds with one-line descriptions
+  --list          print the registry worlds with regime tags and one-line
+                  descriptions (add --derive N for the derivation census)
   --scenario LIST comma-separated registry names (default: all built-ins)
   --seeds N       replicates per scenario (default 3)
   --spec FILE     append a custom scenario spec (JSON) to the batch
@@ -62,6 +68,14 @@ and --jobs with the `scenarios` semantics)
                   reports: merge them instead of running anything
   --online L      comma-separated dagcloud.feed/v1 reports (repro feed)
                   merged as online snapshot sources into fleet.json
+
+ROBUSTNESS OPTIONS (`repro robustness`; also honors --seeds/--smoke/--jobs)
+  --base LIST     base registry worlds to derive from (default: all)
+  --derive N      derived worlds on top of the bases (default 64)
+  --shards K      coordinators (default 4); fleet.json and robustness.json
+                  are byte-identical for every K
+  --gate-threshold X  per-regime mean regret/bound ceiling (default 0.25)
+  --block-slots N bootstrap block length in slots (default 24)
 
 FEED OPTIONS (`repro feed`)
   --trace PATH    price dump to stream (required)
@@ -164,7 +178,27 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
             };
             fleet::run_fleet(&cfg, &opts, &out_dir)?
         }
-        "scenarios" if args.flag("list") => scenarios::list_scenarios(),
+        "robustness" => {
+            let opts = robustness::RobustnessCliOptions {
+                bases: csv_list(&args, "base"),
+                derive: args.get_u64("derive", 64)? as usize,
+                seeds: args.get_u64("seeds", 1)?,
+                shards: args.get_u64("shards", 4)? as usize,
+                smoke: args.flag("smoke"),
+                jobs_override: args.get("jobs").is_some().then_some(cfg.jobs),
+                gate_threshold: args.get_f64("gate-threshold", 0.25)?,
+                block_slots: args.get_u64("block-slots", 24)? as usize,
+            };
+            robustness::run_robustness(&cfg, &opts, &out_dir)?
+        }
+        "scenarios" if args.flag("list") => {
+            let derive = args
+                .get("derive")
+                .is_some()
+                .then(|| args.get_u64("derive", 64).map(|v| v as usize))
+                .transpose()?;
+            scenarios::list_scenarios(derive)
+        }
         "scenarios" => {
             let opts = scenarios::ScenarioCliOptions {
                 names: csv_list(&args, "scenario"),

@@ -1,0 +1,201 @@
+//! `repro robustness`: derive a world population from registry bases,
+//! run it as a sharded fleet, and gate policies on cross-regime tail
+//! risk.
+//!
+//! The run writes, under `--out`:
+//!
+//! * `fleet_manifest.json` / `fleet_shard_<k>.json` / `fleet.json` — the
+//!   ordinary fleet artifacts over `bases + derived` worlds (the derived
+//!   population is computed *once*, before sharding, so the merged bytes
+//!   stay invariant under `--shards`);
+//! * `robustness.json` — the `dagcloud.robustness/v1` promotion-gate
+//!   verdict table ([`crate::robustness::gate`]).
+//!
+//! Everything downstream of derivation reuses the fleet path unchanged:
+//! a derived world is just a `ScenarioSpec` with an inline replay
+//! market, so shard dealing, report merging, and byte-determinism come
+//! for free (property-tested in `rust/tests/integration_robustness.rs`).
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::Config;
+use crate::fleet::FleetAccumulator;
+use crate::robustness::{
+    derive_population, evaluate_gate, gate_json, render_gate_table, DeriveParams, GateConfig,
+};
+
+use super::fleet::run_sharded;
+use super::scenarios::{resolve_specs, SMOKE_JOBS};
+
+/// CLI-level options for the `robustness` subcommand.
+#[derive(Debug, Clone)]
+pub struct RobustnessCliOptions {
+    /// Base registry worlds to derive from (None = the full registry).
+    pub bases: Option<Vec<String>>,
+    /// Derived worlds to add on top of the bases.
+    pub derive: usize,
+    /// Replicates per world (the population supplies the variance, so 1
+    /// is the default).
+    pub seeds: u64,
+    /// Coordinators to deal the worlds across.
+    pub shards: usize,
+    /// Reduced-size runs (CI smoke).
+    pub smoke: bool,
+    /// Explicit `--jobs` override.
+    pub jobs_override: Option<usize>,
+    /// Promotion-gate threshold (`--gate-threshold`).
+    pub gate_threshold: f64,
+    /// Bootstrap block length in slots (`--block-slots`).
+    pub block_slots: usize,
+}
+
+impl Default for RobustnessCliOptions {
+    fn default() -> RobustnessCliOptions {
+        RobustnessCliOptions {
+            bases: None,
+            derive: 64,
+            seeds: 1,
+            shards: 4,
+            smoke: false,
+            jobs_override: None,
+            gate_threshold: GateConfig::default().threshold,
+            block_slots: DeriveParams::default().block_slots,
+        }
+    }
+}
+
+/// Console rows of the verdict table before eliding to the JSON file.
+const TABLE_HEAD: usize = 14;
+
+pub fn run_robustness(cfg: &Config, opts: &RobustnessCliOptions, out_dir: &str) -> Result<()> {
+    let mut bases = resolve_specs(&opts.bases, &None)?;
+    if opts.smoke {
+        // Before deriving, so derived worlds inherit the small chains.
+        for s in &mut bases {
+            s.workload.small_tasks = true;
+        }
+    }
+    let params = DeriveParams {
+        block_slots: opts.block_slots,
+        ..DeriveParams::default()
+    };
+    let derived = derive_population(&bases, opts.derive, cfg.seed, &params)?;
+    println!(
+        "== robustness: {} base world(s) + {} derived (seed {}) ==",
+        bases.len(),
+        derived.len(),
+        cfg.seed
+    );
+    let mut specs = bases;
+    specs.extend(derived);
+
+    let jobs_override = match (opts.smoke, opts.jobs_override) {
+        (_, Some(j)) => {
+            ensure!(j > 0, "--jobs must be positive");
+            Some(j)
+        }
+        (true, None) => Some(SMOKE_JOBS),
+        (false, None) => None,
+    };
+
+    let mut acc = FleetAccumulator::new();
+    run_sharded(
+        &mut acc,
+        "robustness",
+        &specs,
+        cfg,
+        opts.shards,
+        opts.seeds,
+        opts.smoke,
+        jobs_override,
+        out_dir,
+    )?;
+
+    let fleet = acc.fleet_json(None)?;
+    let fleet_path = format!("{out_dir}/fleet.json");
+    std::fs::write(&fleet_path, fleet.pretty())?;
+
+    let report = evaluate_gate(
+        &acc.canonical_outcomes(),
+        &GateConfig {
+            threshold: opts.gate_threshold,
+        },
+    );
+    let table = render_gate_table(&report);
+    for (i, line) in table.lines().enumerate() {
+        if i < TABLE_HEAD {
+            println!("  {line}");
+        } else {
+            println!(
+                "  ... {} more policies (full table in robustness.json)",
+                report.verdicts.len() + 2 - i
+            );
+            break;
+        }
+    }
+    let gate_path = format!("{out_dir}/robustness.json");
+    std::fs::write(&gate_path, gate_json(&report).pretty())?;
+    println!("  written to {fleet_path} and {gate_path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn cfg() -> Config {
+        Config {
+            seed: 31,
+            threads: 2,
+            use_pjrt: false,
+            ..Config::default()
+        }
+    }
+
+    fn opts(shards: usize) -> RobustnessCliOptions {
+        RobustnessCliOptions {
+            bases: Some(vec!["paper-default".into()]),
+            derive: 4,
+            shards,
+            smoke: true,
+            jobs_override: Some(8),
+            ..RobustnessCliOptions::default()
+        }
+    }
+
+    fn tmp_dir(name: &str) -> String {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn robustness_outputs_are_invariant_under_shard_count() {
+        let d1 = tmp_dir("dagcloud_robustness_k1");
+        let d2 = tmp_dir("dagcloud_robustness_k2");
+        run_robustness(&cfg(), &opts(1), &d1).unwrap();
+        run_robustness(&cfg(), &opts(2), &d2).unwrap();
+        for f in ["fleet.json", "robustness.json"] {
+            let a = std::fs::read_to_string(format!("{d1}/{f}")).unwrap();
+            let b = std::fs::read_to_string(format!("{d2}/{f}")).unwrap();
+            assert_eq!(a, b, "{f} differs between --shards 1 and --shards 2");
+        }
+        let j =
+            Json::parse(&std::fs::read_to_string(format!("{d1}/robustness.json")).unwrap())
+                .unwrap();
+        assert_eq!(
+            j.get("schema").unwrap().as_str().unwrap(),
+            "dagcloud.robustness/v1"
+        );
+        // 1 base + 4 derived worlds.
+        assert_eq!(j.get("worlds").unwrap().as_u64().unwrap(), 5);
+        let regimes = j.get("regimes").unwrap().as_arr().unwrap();
+        assert!(
+            regimes
+                .iter()
+                .any(|r| r.opt_str("tag", "") == "fault"),
+            "derived fault worlds must appear as a regime"
+        );
+    }
+}

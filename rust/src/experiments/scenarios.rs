@@ -66,16 +66,33 @@ pub(crate) fn resolve_specs(
     Ok(specs)
 }
 
-/// `repro scenarios --list`: print every registry world with a one-line
-/// description (the only other way to discover world names is reading
-/// `registry.rs`).
-pub fn list_scenarios() {
+/// `repro scenarios --list`: print every registry world with its regime
+/// tags and a one-line description (the only other way to discover world
+/// names is reading `registry.rs`). With `--derive N`, additionally
+/// print how many derived worlds each robustness operator would
+/// contribute ([`crate::robustness::derivation_plan`]).
+pub fn list_scenarios(derive: Option<usize>) {
     let worlds = scenario::builtins();
     println!("{} built-in scenario worlds:\n", worlds.len());
-    for s in worlds {
+    for s in &worlds {
         // Descriptions are wrapped in the source; collapse to one line.
         let one_line = s.description.split_whitespace().collect::<Vec<_>>().join(" ");
-        println!("  {:<24} {one_line}", s.name);
+        println!("  {:<24} [{}] {one_line}", s.name, s.tags.join(","));
+    }
+    if let Some(total) = derive {
+        let plan = crate::robustness::derivation_plan(&worlds, total);
+        let mut per_op: std::collections::BTreeMap<&str, usize> =
+            std::collections::BTreeMap::new();
+        for (_, op, n) in &plan {
+            *per_op.entry(op).or_default() += n;
+        }
+        println!(
+            "\n--derive {total} deals across {} (base, operator) pairs; per operator:",
+            plan.len()
+        );
+        for (op, n) in per_op {
+            println!("  {op:<12} {n:>5}");
+        }
     }
     println!("\nrun one with: repro scenarios --scenario NAME  (or repro run --scenario NAME)");
 }

@@ -188,6 +188,7 @@ mod tests {
             pool_capacity: 0,
             policy_set: PolicySetSpec::Auto,
             jobs: 40,
+            tags: Vec::new(),
         }
     }
 

@@ -331,6 +331,7 @@ mod tests {
             best_policy: "p1".into(),
             offer_shares: Vec::new(),
             policy_costs: vec![("p1".into(), alpha), ("p2".into(), alpha + 0.1)],
+            tags: Vec::new(),
         }
     }
 

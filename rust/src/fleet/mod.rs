@@ -21,9 +21,12 @@
 //!   [`crate::coordinator::OnlineSnapshot`] streams (or serialized
 //!   `dagcloud.feed/v1` reports) into a fleet-wide convergence timeline;
 //! * [`robustness`] — cross-scenario policy-robustness scoring: per
-//!   fixed policy, the worst-case and mean regret (normalized by the
-//!   run-level Prop. B.1 bound) across all worlds, plus a least-bad
-//!   (minimax) ranking.
+//!   fixed policy, the worst-case and difficulty-weighted mean regret
+//!   (normalized by the run-level Prop. B.1 bound) across all worlds,
+//!   tail-risk quantiles (P10/P50/P90) and CVaR₉₀ over the per-world
+//!   ratios, plus a least-bad (minimax) ranking. The per-world stats
+//!   table ([`robustness::world_table`]) is shared with the cross-regime
+//!   promotion gate in [`crate::robustness`].
 //!
 //! The CLI front-end is `repro fleet --shards K` (see
 //! `rust/src/experiments/fleet.rs`); every report schema is documented
@@ -38,4 +41,4 @@ pub use merge::{
     merge_online, online_source_from_feed_report, FleetAccumulator, MergedOnline,
     MergedOnlinePoint, OnlineSource,
 };
-pub use robustness::{robustness_json, score, PolicyScore, Robustness};
+pub use robustness::{robustness_json, score, world_table, PolicyScore, Robustness, WorldStat};

@@ -7,8 +7,16 @@
 //! world at once?** For each policy label scored by the scenario cells
 //! ([`ScenarioOutcome::policy_costs`]) this module computes, per world,
 //! the mean fixed-policy regret normalized by the run-level Prop. B.1
-//! bound, then aggregates the worst-case and mean ratios across worlds
-//! and ranks the policies minimax (worst-case first).
+//! bound, then aggregates across worlds:
+//!
+//! * the **worst-case** ratio (minimax ranking key),
+//! * a **difficulty-weighted mean** — each world weighs in proportion to
+//!   its bound-normalized policy-cost spread, so trivially-easy worlds
+//!   (where every policy costs the same) cannot mask a regression,
+//! * **tail-risk order statistics** over the per-world ratios: the
+//!   P10/P50/P90 quantiles and CVaR₉₀ (the mean of the worst 10% of
+//!   worlds), which is what large derived populations
+//!   ([`crate::robustness::derive`]) are scored on.
 //!
 //! Determinism contract: given outcomes in canonical `(scenario,
 //! replicate)` order, every accumulation below folds in a fixed order, so
@@ -16,10 +24,88 @@
 //! how the cells were sharded or the shard reports merged (pinned by
 //! `rust/tests/integration_fleet.rs`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::scenario::ScenarioOutcome;
 use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+/// One world's scoring inputs, distilled from its scenario cells: the
+/// per-policy mean regret/bound ratio, the world's difficulty weight, and
+/// its regime tags. Shared between [`score`] here and the cross-regime
+/// promotion gate ([`crate::robustness::gate`]) so the two can never
+/// disagree on how a ratio is computed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorldStat {
+    pub world: String,
+    /// Union of the world's row tags, sorted (rows of one world share the
+    /// spec's tags, but the union keeps mixed legacy rows well-defined).
+    pub tags: Vec<String>,
+    /// Bound-normalized difficulty: mean over the world's runs of
+    /// `(max policy cost − min policy cost) / bound` — how much the policy
+    /// grid spreads in this world, on the Prop. B.1 scale. Zero for worlds
+    /// where every policy costs the same (they carry no ranking signal).
+    pub difficulty: f64,
+    /// Per-policy mean regret/bound ratio across the world's runs.
+    pub policy_mean_ratio: BTreeMap<String, f64>,
+}
+
+/// Distill outcomes into per-world scoring stats, worlds in sorted order.
+/// Runs without per-policy costs (rows from pre-fleet reports) or with a
+/// non-positive bound are skipped.
+pub fn world_table(outcomes: &[ScenarioOutcome]) -> Vec<WorldStat> {
+    // world -> (policy -> (ratio sum, runs), spread sum, runs, tags)
+    struct Acc<'a> {
+        per_policy: BTreeMap<&'a str, (f64, u64)>,
+        spread_sum: f64,
+        runs: u64,
+        tags: BTreeSet<&'a str>,
+    }
+    let mut per_world: BTreeMap<&str, Acc> = BTreeMap::new();
+    for o in outcomes {
+        if o.policy_costs.is_empty() || !(o.regret_bound > 0.0) {
+            continue;
+        }
+        let min = o
+            .policy_costs
+            .iter()
+            .map(|(_, c)| *c)
+            .fold(f64::INFINITY, f64::min);
+        let max = o
+            .policy_costs
+            .iter()
+            .map(|(_, c)| *c)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let acc = per_world.entry(o.scenario.as_str()).or_insert_with(|| Acc {
+            per_policy: BTreeMap::new(),
+            spread_sum: 0.0,
+            runs: 0,
+            tags: BTreeSet::new(),
+        });
+        acc.spread_sum += (max - min) / o.regret_bound;
+        acc.runs += 1;
+        acc.tags.extend(o.tags.iter().map(String::as_str));
+        for (label, cost) in &o.policy_costs {
+            let ratio = (cost - min) / o.regret_bound;
+            let e = acc.per_policy.entry(label.as_str()).or_insert((0.0, 0));
+            e.0 += ratio;
+            e.1 += 1;
+        }
+    }
+    per_world
+        .into_iter()
+        .map(|(world, acc)| WorldStat {
+            world: world.to_string(),
+            tags: acc.tags.into_iter().map(String::from).collect(),
+            difficulty: acc.spread_sum / acc.runs as f64,
+            policy_mean_ratio: acc
+                .per_policy
+                .into_iter()
+                .map(|(l, (sum, runs))| (l.to_string(), sum / runs as f64))
+                .collect(),
+        })
+        .collect()
+}
 
 /// One policy's cross-world robustness summary.
 #[derive(Debug, Clone, PartialEq)]
@@ -30,10 +116,22 @@ pub struct PolicyScore {
     pub worlds: usize,
     /// Max over worlds of the world-mean regret/bound ratio.
     pub worst_regret_ratio: f64,
-    /// Mean over covered worlds of the world-mean regret/bound ratio.
+    /// Difficulty-weighted mean over covered worlds of the world-mean
+    /// regret/bound ratio (uniform fallback when every covered world has
+    /// zero difficulty).
     pub mean_regret_ratio: f64,
+    /// P10 / P50 / P90 of the per-world mean ratios (linear interpolation).
+    pub ratio_p10: f64,
+    pub ratio_p50: f64,
+    pub ratio_p90: f64,
+    /// CVaR₉₀: mean of the worst `ceil(worlds/10)` per-world ratios — the
+    /// expected ratio given the world landed in the worst decile.
+    pub cvar90: f64,
     /// The world realizing `worst_regret_ratio`.
     pub worst_world: String,
+    /// Worlds this policy was *not* scored in (empty when fully covered) —
+    /// the cells a partial-coverage policy misses.
+    pub missing_worlds: Vec<String>,
     /// 1-based least-bad rank; `None` for policies not scored in every
     /// world (their worst case is not comparable).
     pub rank: Option<usize>,
@@ -64,54 +162,64 @@ pub struct Robustness {
 /// `outcomes` must be canonically sorted (`(scenario, replicate)`), as
 /// [`super::merge::FleetAccumulator`] guarantees.
 pub fn score(outcomes: &[ScenarioOutcome]) -> Robustness {
-    // world -> policy -> (ratio sum, run count), worlds in sorted order.
-    let mut per_world: BTreeMap<&str, BTreeMap<&str, (f64, u64)>> = BTreeMap::new();
-    for o in outcomes {
-        if o.policy_costs.is_empty() || !(o.regret_bound > 0.0) {
-            continue;
-        }
-        let min = o
-            .policy_costs
-            .iter()
-            .map(|(_, c)| *c)
-            .fold(f64::INFINITY, f64::min);
-        let world = per_world.entry(o.scenario.as_str()).or_default();
-        for (label, cost) in &o.policy_costs {
-            let ratio = (cost - min) / o.regret_bound;
-            let e = world.entry(label.as_str()).or_insert((0.0, 0));
-            e.0 += ratio;
-            e.1 += 1;
-        }
-    }
-    let total_worlds = per_world.len();
+    let table = world_table(outcomes);
+    let total_worlds = table.len();
 
-    // policy -> per-world mean ratios, worlds iterated in sorted order so
-    // the cross-world folds are order-fixed.
-    let mut acc: BTreeMap<&str, PolicyScore> = BTreeMap::new();
-    for (&world, policies) in &per_world {
-        for (&label, &(sum, runs)) in policies {
-            let world_mean = sum / runs as f64;
-            let s = acc.entry(label).or_insert_with(|| PolicyScore {
-                policy: label.to_string(),
-                worlds: 0,
-                worst_regret_ratio: f64::NEG_INFINITY,
-                mean_regret_ratio: 0.0,
-                worst_world: String::new(),
-                rank: None,
-            });
-            s.worlds += 1;
-            s.mean_regret_ratio += world_mean; // finalized below
-            if world_mean > s.worst_regret_ratio {
-                s.worst_regret_ratio = world_mean;
-                s.worst_world = world.to_string();
-            }
+    // policy -> per-world (ratio, difficulty) pairs, worlds iterated in
+    // sorted order so the cross-world folds are order-fixed.
+    let mut per_policy: BTreeMap<&str, Vec<(&str, f64, f64)>> = BTreeMap::new();
+    for w in &table {
+        for (label, &ratio) in &w.policy_mean_ratio {
+            per_policy
+                .entry(label.as_str())
+                .or_default()
+                .push((w.world.as_str(), ratio, w.difficulty));
         }
     }
-    let mut scores: Vec<PolicyScore> = acc
-        .into_values()
-        .map(|mut s| {
-            s.mean_regret_ratio /= s.worlds as f64;
-            s
+
+    let mut scores: Vec<PolicyScore> = per_policy
+        .into_iter()
+        .map(|(label, rows)| {
+            let ratios: Vec<f64> = rows.iter().map(|(_, r, _)| *r).collect();
+            let mut worst = f64::NEG_INFINITY;
+            let mut worst_world = "";
+            for (w, r, _) in &rows {
+                if *r > worst {
+                    worst = *r;
+                    worst_world = w;
+                }
+            }
+            let total_difficulty: f64 = rows.iter().map(|(_, _, d)| *d).sum();
+            let mean = if total_difficulty > 0.0 {
+                rows.iter().map(|(_, r, d)| r * d).sum::<f64>() / total_difficulty
+            } else {
+                ratios.iter().sum::<f64>() / ratios.len() as f64
+            };
+            // Worst decile: at least one world, sorted descending so the
+            // fold order is fixed.
+            let mut tail = ratios.clone();
+            tail.sort_by(|a, b| b.total_cmp(a));
+            let k = (ratios.len() + 9) / 10; // ceil(n/10), at least 1
+            let cvar90 = tail[..k].iter().sum::<f64>() / k as f64;
+            let covered: BTreeSet<&str> = rows.iter().map(|(w, _, _)| *w).collect();
+            let missing_worlds: Vec<String> = table
+                .iter()
+                .filter(|w| !covered.contains(w.world.as_str()))
+                .map(|w| w.world.clone())
+                .collect();
+            PolicyScore {
+                policy: label.to_string(),
+                worlds: rows.len(),
+                worst_regret_ratio: worst,
+                mean_regret_ratio: mean,
+                ratio_p10: percentile(&ratios, 10.0),
+                ratio_p50: percentile(&ratios, 50.0),
+                ratio_p90: percentile(&ratios, 90.0),
+                cvar90,
+                worst_world: worst_world.to_string(),
+                missing_worlds,
+                rank: None,
+            }
         })
         .collect();
 
@@ -142,7 +250,11 @@ pub fn score(outcomes: &[ScenarioOutcome]) -> Robustness {
 }
 
 /// Serialize the scoring result as the fleet report's `robustness`
-/// section.
+/// section. The quantile/CVaR keys are additive within
+/// `dagcloud.fleet/v1` (schema policy rule: optional keys may be added
+/// without a version bump); `missing_worlds` appears only on
+/// partial-coverage policies, so fully-covered entries keep a stable
+/// shape.
 pub fn robustness_json(r: &Robustness) -> Json {
     let mut j = Json::obj();
     j.set("worlds", Json::Num(r.worlds as f64))
@@ -161,7 +273,22 @@ pub fn robustness_json(r: &Robustness) -> Json {
                             .set("worlds", Json::Num(s.worlds as f64))
                             .set("worst_regret_ratio", Json::Num(s.worst_regret_ratio))
                             .set("mean_regret_ratio", Json::Num(s.mean_regret_ratio))
+                            .set("ratio_p10", Json::Num(s.ratio_p10))
+                            .set("ratio_p50", Json::Num(s.ratio_p50))
+                            .set("ratio_p90", Json::Num(s.ratio_p90))
+                            .set("cvar90", Json::Num(s.cvar90))
                             .set("worst_world", Json::Str(s.worst_world.clone()));
+                        if !s.missing_worlds.is_empty() {
+                            sj.set(
+                                "missing_worlds",
+                                Json::Arr(
+                                    s.missing_worlds
+                                        .iter()
+                                        .map(|w| Json::Str(w.clone()))
+                                        .collect(),
+                                ),
+                            );
+                        }
                         if let Some(r) = s.rank {
                             sj.set("rank", Json::Num(r as f64));
                         }
@@ -195,6 +322,7 @@ mod tests {
             best_policy: costs.first().map(|(l, _)| l.to_string()).unwrap_or_default(),
             offer_shares: Vec::new(),
             policy_costs: costs.iter().map(|(l, c)| (l.to_string(), *c)).collect(),
+            tags: Vec::new(),
         }
     }
 
@@ -216,10 +344,11 @@ mod tests {
         assert_eq!(scores[1].policy, "p1");
         assert_eq!(scores[1].worst_world, "w2");
         assert!((scores[1].worst_regret_ratio - 0.6 / 0.5).abs() < 1e-12);
+        assert!(scores[0].missing_worlds.is_empty());
     }
 
     #[test]
-    fn replicates_average_and_partial_coverage_is_unranked() {
+    fn replicates_average_and_partial_coverage_lists_missing_cells() {
         let outs = vec![
             outcome("w1", 0, &[("p1", 0.1), ("p2", 0.3)], 1.0),
             outcome("w1", 1, &[("p1", 0.1), ("p2", 0.5)], 1.0),
@@ -228,15 +357,81 @@ mod tests {
         ];
         let scores = score(&outs).scores;
         let p2 = scores.iter().find(|s| s.policy == "p2").unwrap();
-        // w1 ratios: (0.2 + 0.4)/2 = 0.3; w2: 0.0 -> worst 0.3, mean 0.15.
+        // w1 ratios: (0.2 + 0.4)/2 = 0.3; w2: 0.0 -> worst 0.3. The mean
+        // is difficulty-weighted: w1 spread ratio (0.2 + 0.4)/2 = 0.3, w2
+        // spread 0.2 -> mean = (0.3*0.3 + 0.0*0.2)/0.5 = 0.18.
         assert!((p2.worst_regret_ratio - 0.3).abs() < 1e-12);
-        assert!((p2.mean_regret_ratio - 0.15).abs() < 1e-12);
+        assert!((p2.mean_regret_ratio - 0.18).abs() < 1e-12);
         let p3 = scores.iter().find(|s| s.policy == "p3").unwrap();
         assert_eq!(p3.rank, None);
         assert_eq!(p3.worlds, 1);
+        assert_eq!(p3.missing_worlds, vec!["w1".to_string()]);
         // Ranked policies come first.
         assert!(scores[0].rank.is_some() && scores[1].rank.is_some());
         assert_eq!(scores[2].policy, "p3");
+    }
+
+    #[test]
+    fn difficulty_weighting_discounts_trivially_easy_worlds() {
+        // w-easy: all policies identical (spread 0 -> difficulty 0).
+        // w-hard: p2 is clearly worse. Uniform weighting would halve p2's
+        // mean; difficulty weighting keeps the hard world's full signal.
+        let outs = vec![
+            outcome("w-easy", 0, &[("p1", 0.2), ("p2", 0.2)], 1.0),
+            outcome("w-hard", 0, &[("p1", 0.1), ("p2", 0.5)], 1.0),
+        ];
+        let scores = score(&outs).scores;
+        let p2 = scores.iter().find(|s| s.policy == "p2").unwrap();
+        assert!((p2.mean_regret_ratio - 0.4).abs() < 1e-12, "easy world masked the regression");
+        // All-zero difficulty falls back to the uniform mean.
+        let outs = vec![
+            outcome("w1", 0, &[("p1", 0.2), ("p2", 0.2)], 1.0),
+            outcome("w2", 0, &[("p1", 0.3), ("p2", 0.3)], 1.0),
+        ];
+        let scores = score(&outs).scores;
+        assert_eq!(scores[0].mean_regret_ratio, 0.0);
+    }
+
+    #[test]
+    fn quantiles_and_cvar_summarize_the_tail() {
+        // 10 worlds; p1's ratio in world k is k/10 (p0 is the floor).
+        let mut outs = Vec::new();
+        for k in 0..10 {
+            outs.push(outcome(
+                &format!("w{k:02}"),
+                0,
+                &[("p0", 0.0), ("p1", k as f64 / 10.0)],
+                1.0,
+            ));
+        }
+        let scores = score(&outs).scores;
+        let p1 = scores.iter().find(|s| s.policy == "p1").unwrap();
+        assert_eq!(p1.worlds, 10);
+        assert!((p1.worst_regret_ratio - 0.9).abs() < 1e-12);
+        // Linear-interpolation percentiles over {0.0, 0.1, .., 0.9}.
+        assert!((p1.ratio_p50 - 0.45).abs() < 1e-12);
+        assert!((p1.ratio_p10 - 0.09).abs() < 1e-12);
+        assert!((p1.ratio_p90 - 0.81).abs() < 1e-12);
+        // Worst decile of 10 worlds is the single worst world.
+        assert!((p1.cvar90 - 0.9).abs() < 1e-12);
+        // The floor policy is flat: every statistic collapses to 0.
+        let p0 = scores.iter().find(|s| s.policy == "p0").unwrap();
+        assert_eq!(p0.cvar90, 0.0);
+        assert_eq!(p0.ratio_p90, 0.0);
+    }
+
+    #[test]
+    fn world_table_collects_tags_and_difficulty() {
+        let mut a = outcome("w1", 0, &[("p1", 0.1), ("p2", 0.3)], 0.5);
+        a.tags = vec!["calm".into(), "surge".into()];
+        let mut b = outcome("w1", 1, &[("p1", 0.1), ("p2", 0.3)], 0.5);
+        b.tags = vec!["calm".into()];
+        let table = world_table(&[a, b]);
+        assert_eq!(table.len(), 1);
+        assert_eq!(table[0].world, "w1");
+        assert_eq!(table[0].tags, vec!["calm".to_string(), "surge".to_string()]);
+        assert!((table[0].difficulty - 0.4).abs() < 1e-12, "spread 0.2/bound 0.5");
+        assert!((table[0].policy_mean_ratio["p2"] - 0.4).abs() < 1e-12);
     }
 
     #[test]
@@ -258,5 +453,10 @@ mod tests {
         let arr = j.get("policies").unwrap().as_arr().unwrap();
         assert_eq!(arr[0].get("policy").unwrap().as_str().unwrap(), "p1");
         assert_eq!(arr[0].get("rank").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(arr[0].get("cvar90").unwrap().as_f64().unwrap(), 0.0);
+        assert!(arr[0].get("ratio_p10").is_some());
+        assert!(arr[0].get("ratio_p90").is_some());
+        // Fully-covered policies carry no missing_worlds key.
+        assert!(arr[0].get("missing_worlds").is_none());
     }
 }

@@ -40,6 +40,11 @@
 //!   reports into one `dagcloud.fleet/v1` document, and cross-scenario
 //!   policy-robustness scoring (least-bad fixed policy across all
 //!   worlds);
+//! * a **robustness engine** ([`robustness`]): deterministic derivation
+//!   operators (block bootstrap, regime oversampling, price spikes,
+//!   capacity dropout, feed gaps) growing large world populations from
+//!   registry bases, regime tagging, and a cross-regime promotion gate
+//!   over the fleet layer's tail-risk scores (`dagcloud.robustness/v1`);
 //! * an **experiment harness** ([`experiments`]) regenerating every table and
 //!   figure of the paper's evaluation section.
 //!
@@ -58,6 +63,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod scenario;
 pub mod fleet;
+pub mod robustness;
 pub mod experiments;
 
 /// Crate-wide result type.

@@ -1,0 +1,647 @@
+//! Deterministic derivation operators: grow world populations from bases.
+//!
+//! Each operator maps `(base world, seed, index)` to a complete, valid
+//! [`ScenarioSpec`]. Trace-resampling operators realize every flattened
+//! offer of the base at a fixed reference horizon (the same per-offer
+//! seed shape the runner uses), transform the realized prices, and embed
+//! the result as an inline single-column replay CSV — so a derived world
+//! is self-contained bytes inside the shard manifest and replays
+//! identically on any shard, thread count, or machine.
+//!
+//! Determinism contract: the derivation seed is a pure function of
+//! `(user seed, base name, operator id, index)` (the same FNV-1a →
+//! SplitMix64 idiom as [`crate::scenario::derive_run_seed`]); every
+//! random draw comes from one [`Pcg32`] stream seeded by it; prices are
+//! serialized with Rust's shortest-roundtrip float formatting. Same
+//! inputs → byte-identical derived spec (property-tested in
+//! `rust/tests/integration_robustness.rs`).
+
+use anyhow::{ensure, Result};
+
+use crate::feed::{self, PriceEvent};
+use crate::market::{PriceTrace, SLOTS_PER_UNIT};
+use crate::scenario::runner::region_trace;
+use crate::scenario::{MarketSpec, PriceSpec, ReplaySpec, RoutingSpec, ScenarioSpec};
+use crate::util::rng::{Pcg32, SplitMix64};
+
+use super::tag::{classify_trace, world_tags, SURGE_THRESHOLD};
+
+/// One derivation operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operator {
+    /// Resample multi-slot blocks of the realized trace (with
+    /// replacement). Blocks preserve intra-block autocorrelation; block
+    /// start fractions are shared across offers so cross-offer structure
+    /// survives approximately.
+    BlockBootstrap,
+    /// Block bootstrap biased toward the base trace's *minority* regime
+    /// (calm or surge blocks, whichever is rarer) — amplifies the regime
+    /// the base rarely shows so the gate sees it often.
+    RegimeOversample,
+    /// Multiply a few random windows of the realized trace by a spike
+    /// factor: sudden surge stress. Tagged `fault`.
+    PriceSpike,
+    /// Shrink every finite per-offer spot capacity: contention stress.
+    /// Applicable only to capacity-aware worlds (arbitrage routing
+    /// requires infinite capacities). Tagged `fault`.
+    CapacityDropout,
+    /// Replay the realized trace through [`crate::feed::FeedBuffer`] with
+    /// event gaps punched out — the previous price holds across each gap,
+    /// the step-function semantics of a stalled feed. Tagged `fault`.
+    FeedGap,
+}
+
+impl Operator {
+    /// Every operator, in canonical dealing order.
+    pub fn all() -> &'static [Operator] {
+        &[
+            Operator::BlockBootstrap,
+            Operator::RegimeOversample,
+            Operator::PriceSpike,
+            Operator::CapacityDropout,
+            Operator::FeedGap,
+        ]
+    }
+
+    /// Stable short id — part of derived-world names and the derivation
+    /// seed, so renaming an operator is a determinism break.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Operator::BlockBootstrap => "boot",
+            Operator::RegimeOversample => "oversample",
+            Operator::PriceSpike => "spike",
+            Operator::CapacityDropout => "capdrop",
+            Operator::FeedGap => "gap",
+        }
+    }
+
+    /// Can this operator derive anything meaningful from `base`?
+    pub fn applicable(&self, base: &ScenarioSpec) -> bool {
+        match self {
+            Operator::CapacityDropout => {
+                base.market.routing != RoutingSpec::Arbitrage
+                    && base
+                        .market
+                        .flattened_offers()
+                        .iter()
+                        .any(|o| o.capacity.is_some())
+            }
+            _ => true,
+        }
+    }
+}
+
+/// Knobs shared by every operator. The defaults are what `repro
+/// robustness` uses; the CLI exposes `--block-slots`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeriveParams {
+    /// Bootstrap block length in slots (default 24 = two simulated units
+    /// on the 1/12 grid — long enough to hold a surge onset together).
+    pub block_slots: usize,
+    /// Horizon (simulated units) at which base traces are realized before
+    /// resampling. Derived replay specs tile past it at run time.
+    pub reference_horizon: f64,
+    /// Price multiplier inside spike windows.
+    pub spike_factor: f64,
+    /// Spike windows per derived world.
+    pub spikes: usize,
+    /// Spike window length in simulated units.
+    pub spike_units: f64,
+    /// Feed-gap windows per derived world.
+    pub gaps: usize,
+    /// Feed-gap length in simulated units.
+    pub gap_units: f64,
+    /// Probability an oversampled block is drawn from the minority-regime
+    /// pool (the rest draw from all blocks).
+    pub oversample_bias: f64,
+}
+
+impl Default for DeriveParams {
+    fn default() -> DeriveParams {
+        DeriveParams {
+            block_slots: 24,
+            reference_horizon: 48.0,
+            spike_factor: 2.5,
+            spikes: 3,
+            spike_units: 2.0,
+            gaps: 2,
+            gap_units: 4.0,
+            oversample_bias: 0.75,
+        }
+    }
+}
+
+impl DeriveParams {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.block_slots >= 1, "derive: block_slots must be >= 1");
+        ensure!(
+            self.reference_horizon > 0.0,
+            "derive: reference_horizon must be positive"
+        );
+        ensure!(
+            self.spike_factor.is_finite() && self.spike_factor > 0.0,
+            "derive: spike_factor must be positive"
+        );
+        ensure!(
+            self.spike_units > 0.0 && self.gap_units > 0.0,
+            "derive: window lengths must be positive"
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.oversample_bias),
+            "derive: oversample_bias must be in [0, 1]"
+        );
+        Ok(())
+    }
+}
+
+/// Deterministic derivation seed: FNV-1a over `base \0 op` folded with
+/// the user seed and the per-pair index through SplitMix64 — the same
+/// idiom as [`crate::scenario::derive_run_seed`], so nearby indices give
+/// unrelated streams.
+pub fn derivation_seed(seed: u64, base: &str, op: &str, index: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in base.bytes().chain(std::iter::once(0u8)).chain(op.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut sm = SplitMix64::new(
+        h ^ seed.rotate_left(17) ^ index.wrapping_mul(0xA24B_AED4_963E_E407),
+    );
+    sm.next_u64()
+}
+
+/// Serialize a realized trace as the repo's single-column replay CSV
+/// (one price per slot on the 1/12 grid). Rust's float `Display` is
+/// shortest-roundtrip, so the bytes are a pure function of the prices.
+fn trace_to_csv(trace: &PriceTrace) -> String {
+    let mut s = String::with_capacity(trace.num_slots() * 8);
+    for i in 0..trace.num_slots() {
+        s.push_str(&format!("{}\n", trace.price_of_slot(i)));
+    }
+    s
+}
+
+/// Rebuild a market with each flattened offer's price spec replaced, in
+/// flattened-offer order.
+fn replace_offer_prices(market: &MarketSpec, prices: Vec<PriceSpec>) -> MarketSpec {
+    let mut out = market.clone();
+    let mut it = prices.into_iter();
+    for r in &mut out.regions {
+        r.price = it.next().expect("offer count mismatch");
+        for t in &mut r.instance_types {
+            t.price = it.next().expect("offer count mismatch");
+        }
+    }
+    debug_assert!(it.next().is_none(), "offer count mismatch");
+    out
+}
+
+/// Realize every flattened offer's base trace at the reference horizon,
+/// with the runner's per-offer seed shape so offer `k` of the derived
+/// world resamples what offer `k` of a real run would see.
+fn realize_offers(base: &ScenarioSpec, horizon: f64, dseed: u64) -> Result<Vec<PriceTrace>> {
+    base.market
+        .flattened_offers()
+        .iter()
+        .enumerate()
+        .map(|(k, o)| region_trace(&o.price, horizon, dseed ^ ((k as u64 + 1) << 8)))
+        .collect()
+}
+
+/// Resample `base` into blocks chosen by shared start fractions. Each
+/// fraction maps to a start slot within this trace's valid range, so
+/// offers of different lengths stay aligned in *relative* time.
+fn resample_blocks(base: &[f64], block: usize, fracs: &[f64]) -> Vec<f64> {
+    let n = base.len();
+    let bs = block.min(n).max(1);
+    let max_start = n - bs;
+    let mut out = Vec::with_capacity(n);
+    for f in fracs {
+        if out.len() >= n {
+            break;
+        }
+        let start = ((f * (max_start as f64 + 1.0)) as usize).min(max_start);
+        let take = bs.min(n - out.len());
+        out.extend_from_slice(&base[start..start + take]);
+    }
+    out
+}
+
+/// Block index pools by regime: (calm blocks, surge blocks), classified
+/// by block mean price against [`SURGE_THRESHOLD`].
+fn regime_pools(base: &[f64], block: usize) -> (Vec<usize>, Vec<usize>) {
+    let n = base.len();
+    let bs = block.min(n).max(1);
+    let mut calm = Vec::new();
+    let mut surge = Vec::new();
+    let mut b = 0usize;
+    let mut s = 0usize;
+    while s < n {
+        let end = (s + bs).min(n);
+        let mean: f64 = base[s..end].iter().sum::<f64>() / (end - s) as f64;
+        if mean >= SURGE_THRESHOLD {
+            surge.push(b);
+        } else {
+            calm.push(b);
+        }
+        b += 1;
+        s = end;
+    }
+    (calm, surge)
+}
+
+/// Oversample toward the minority regime using shared draw decisions:
+/// each `(minority?, fraction)` pair picks a block index from the chosen
+/// pool. Falls back to plain bootstrap when the base never leaves one
+/// regime.
+fn oversample_blocks(base: &[f64], block: usize, picks: &[(bool, f64)]) -> Vec<f64> {
+    let n = base.len();
+    let bs = block.min(n).max(1);
+    let (calm, surge) = regime_pools(base, bs);
+    let minority: &[usize] = if calm.is_empty() || surge.is_empty() {
+        &[]
+    } else if surge.len() <= calm.len() {
+        &surge
+    } else {
+        &calm
+    };
+    let total_blocks = (n + bs - 1) / bs;
+    let mut out = Vec::with_capacity(n);
+    for (want_minority, f) in picks {
+        if out.len() >= n {
+            break;
+        }
+        let b = if *want_minority && !minority.is_empty() {
+            minority[((f * minority.len() as f64) as usize).min(minority.len() - 1)]
+        } else {
+            ((f * total_blocks as f64) as usize).min(total_blocks - 1)
+        };
+        let s = b * bs;
+        let end = (s + bs).min(n);
+        let take = (end - s).min(n - out.len());
+        out.extend_from_slice(&base[s..s + take]);
+    }
+    out
+}
+
+/// Derive one world. `index` is the per-`(base, operator)` replica
+/// counter; `seed` is the population seed shared by the whole derivation.
+pub fn derive_world(
+    base: &ScenarioSpec,
+    op: Operator,
+    index: u64,
+    seed: u64,
+    p: &DeriveParams,
+) -> Result<ScenarioSpec> {
+    p.validate()?;
+    base.validate()?;
+    ensure!(
+        op.applicable(base),
+        "derive: operator '{}' is not applicable to world '{}'",
+        op.id(),
+        base.name
+    );
+    let dseed = derivation_seed(seed, &base.name, op.id(), index);
+    let mut rng = Pcg32::new(dseed);
+    let slot_len = 1.0 / SLOTS_PER_UNIT as f64;
+
+    let mut derived = base.clone();
+    derived.name = format!("{}~{}-{:03}", base.name, op.id(), index);
+    derived.description = format!(
+        "derived from '{}' by {} (replica {index})",
+        base.name,
+        op.id()
+    );
+
+    let mut tags: Vec<String> = Vec::new();
+    match op {
+        Operator::CapacityDropout => {
+            // Shrink every finite capacity by an independent keep
+            // fraction; at least one instance always survives.
+            let shrink = |cap: &mut Option<u32>, rng: &mut Pcg32| {
+                if let Some(c) = cap {
+                    let keep = rng.uniform(0.3, 0.8);
+                    *c = ((*c as f64 * keep).floor() as u32).max(1);
+                }
+            };
+            for r in &mut derived.market.regions {
+                shrink(&mut r.capacity, &mut rng);
+                for t in &mut r.instance_types {
+                    shrink(&mut t.capacity, &mut rng);
+                }
+            }
+            tags.extend(world_tags(base)?);
+            tags.push("fault".into());
+        }
+        Operator::BlockBootstrap | Operator::RegimeOversample => {
+            let traces = realize_offers(base, p.reference_horizon, dseed)?;
+            let max_blocks = traces
+                .iter()
+                .map(|t| {
+                    let n = t.num_slots();
+                    let bs = p.block_slots.min(n).max(1);
+                    (n + bs - 1) / bs
+                })
+                .max()
+                .unwrap_or(0);
+            ensure!(max_blocks > 0, "derive: world '{}' realized no slots", base.name);
+            // One shared draw per output block keeps offers aligned.
+            let picks: Vec<(bool, f64)> = (0..max_blocks)
+                .map(|_| (rng.f64() < p.oversample_bias, rng.f64()))
+                .collect();
+            let prices: Vec<PriceSpec> = traces
+                .iter()
+                .map(|t| {
+                    let src: Vec<f64> =
+                        (0..t.num_slots()).map(|i| t.price_of_slot(i)).collect();
+                    let out = match op {
+                        Operator::BlockBootstrap => {
+                            let fracs: Vec<f64> =
+                                picks.iter().map(|(_, f)| *f).collect();
+                            resample_blocks(&src, p.block_slots, &fracs)
+                        }
+                        _ => oversample_blocks(&src, p.block_slots, &picks),
+                    };
+                    let derived_trace = PriceTrace::from_prices(out, slot_len);
+                    tags.extend(
+                        classify_trace(&derived_trace).iter().map(|t| t.to_string()),
+                    );
+                    PriceSpec::Replay(ReplaySpec::inline(&trace_to_csv(&derived_trace)))
+                })
+                .collect();
+            derived.market = replace_offer_prices(&base.market, prices);
+        }
+        Operator::PriceSpike => {
+            let traces = realize_offers(base, p.reference_horizon, dseed)?;
+            let spike_slots = ((p.spike_units * SLOTS_PER_UNIT as f64).round() as usize).max(1);
+            // Shared window fractions and jittered factors across offers:
+            // a spike is a market event, not a per-offer one.
+            let windows: Vec<(f64, f64)> = (0..p.spikes)
+                .map(|_| (rng.f64(), p.spike_factor * rng.uniform(0.8, 1.2)))
+                .collect();
+            let prices: Vec<PriceSpec> = traces
+                .iter()
+                .map(|t| {
+                    let mut src: Vec<f64> =
+                        (0..t.num_slots()).map(|i| t.price_of_slot(i)).collect();
+                    let n = src.len();
+                    for (f, factor) in &windows {
+                        let start =
+                            ((f * n as f64) as usize).min(n.saturating_sub(1));
+                        for v in src.iter_mut().skip(start).take(spike_slots) {
+                            *v *= factor;
+                        }
+                    }
+                    let derived_trace = PriceTrace::from_prices(src, slot_len);
+                    tags.extend(
+                        classify_trace(&derived_trace).iter().map(|t| t.to_string()),
+                    );
+                    PriceSpec::Replay(ReplaySpec::inline(&trace_to_csv(&derived_trace)))
+                })
+                .collect();
+            derived.market = replace_offer_prices(&base.market, prices);
+            tags.push("fault".into());
+        }
+        Operator::FeedGap => {
+            let traces = realize_offers(base, p.reference_horizon, dseed)?;
+            let gap_slots = ((p.gap_units * SLOTS_PER_UNIT as f64).round() as usize).max(1);
+            let starts: Vec<f64> = (0..p.gaps).map(|_| rng.f64()).collect();
+            let prices: Vec<PriceSpec> = traces
+                .iter()
+                .map(|t| {
+                    let n = t.num_slots();
+                    let in_gap = |slot: usize| {
+                        starts.iter().any(|f| {
+                            let s = ((f * n as f64) as usize).min(n.saturating_sub(1));
+                            slot > 0 && slot >= s && slot < s + gap_slots
+                        })
+                    };
+                    // Slot 0 always survives so the buffer has an origin
+                    // price; inside a gap the previous price holds — the
+                    // feed layer's step-function semantics, exercised for
+                    // real through FeedBuffer.
+                    let events: Vec<PriceEvent> = (0..n)
+                        .filter(|&i| !in_gap(i))
+                        .map(|i| PriceEvent {
+                            time: i as f64 * slot_len,
+                            price: t.price_of_slot(i),
+                        })
+                        .collect();
+                    let derived_trace = feed::events_to_trace(&events, slot_len)?;
+                    tags.extend(
+                        classify_trace(&derived_trace).iter().map(|t| t.to_string()),
+                    );
+                    Ok(PriceSpec::Replay(ReplaySpec::inline(&trace_to_csv(
+                        &derived_trace,
+                    ))))
+                })
+                .collect::<Result<_>>()?;
+            derived.market = replace_offer_prices(&base.market, prices);
+            tags.push("fault".into());
+        }
+    }
+
+    tags.sort_unstable();
+    tags.dedup();
+    derived.tags = tags;
+    derived.validate()?;
+    Ok(derived)
+}
+
+/// Derive a population of `total` worlds by dealing replicas round-robin
+/// over every `(base, applicable operator)` pair in declared order. Pure
+/// function of `(bases, total, seed, params)` — byte-identical specs on
+/// every call.
+pub fn derive_population(
+    bases: &[ScenarioSpec],
+    total: usize,
+    seed: u64,
+    p: &DeriveParams,
+) -> Result<Vec<ScenarioSpec>> {
+    ensure!(!bases.is_empty(), "derive: no base worlds");
+    p.validate()?;
+    let pairs: Vec<(usize, Operator)> = pair_list(bases);
+    ensure!(!pairs.is_empty(), "derive: no applicable (base, operator) pairs");
+    let mut local = vec![0u64; pairs.len()];
+    let mut out = Vec::with_capacity(total);
+    for i in 0..total {
+        let slot = i % pairs.len();
+        let (bi, op) = pairs[slot];
+        out.push(derive_world(&bases[bi], op, local[slot], seed, p)?);
+        local[slot] += 1;
+    }
+    Ok(out)
+}
+
+/// The `(base, operator)` dealing order: bases in declared order, each
+/// crossed with every applicable operator in canonical order.
+fn pair_list(bases: &[ScenarioSpec]) -> Vec<(usize, Operator)> {
+    let mut pairs = Vec::new();
+    for (bi, b) in bases.iter().enumerate() {
+        for op in Operator::all() {
+            if op.applicable(b) {
+                pairs.push((bi, *op));
+            }
+        }
+    }
+    pairs
+}
+
+/// How many worlds each `(base, operator)` pair would receive when
+/// deriving `total` worlds — what `repro scenarios --list --derive N`
+/// prints. Same dealing as [`derive_population`], without deriving.
+pub fn derivation_plan(bases: &[ScenarioSpec], total: usize) -> Vec<(String, &'static str, usize)> {
+    let pairs = pair_list(bases);
+    let mut counts = vec![0usize; pairs.len()];
+    if !pairs.is_empty() {
+        for i in 0..total {
+            counts[i % pairs.len()] += 1;
+        }
+    }
+    pairs
+        .into_iter()
+        .zip(counts)
+        .map(|((bi, op), n)| (bases[bi].name.clone(), op.id(), n))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::registry;
+
+    fn base(name: &str) -> ScenarioSpec {
+        registry::find(name).unwrap()
+    }
+
+    #[test]
+    fn derivation_is_a_pure_function_of_its_inputs() {
+        let b = base("paper-default");
+        let p = DeriveParams::default();
+        let a1 = derive_world(&b, Operator::BlockBootstrap, 3, 42, &p).unwrap();
+        let a2 = derive_world(&b, Operator::BlockBootstrap, 3, 42, &p).unwrap();
+        assert_eq!(a1, a2);
+        assert_eq!(a1.to_json().pretty(), a2.to_json().pretty());
+        assert_eq!(a1.name, "paper-default~boot-003");
+        // Different index or seed -> different resample.
+        let b1 = derive_world(&b, Operator::BlockBootstrap, 4, 42, &p).unwrap();
+        let c1 = derive_world(&b, Operator::BlockBootstrap, 3, 43, &p).unwrap();
+        assert_ne!(a1.market, b1.market);
+        assert_ne!(a1.market, c1.market);
+    }
+
+    #[test]
+    fn derived_worlds_are_valid_inline_replays() {
+        let b = base("calm-surge-markov");
+        let p = DeriveParams::default();
+        for op in [
+            Operator::BlockBootstrap,
+            Operator::RegimeOversample,
+            Operator::PriceSpike,
+            Operator::FeedGap,
+        ] {
+            let d = derive_world(&b, op, 0, 7, &p).unwrap();
+            d.validate().unwrap();
+            for o in d.market.flattened_offers() {
+                match o.price {
+                    PriceSpec::Replay(r) => assert!(r.csv.is_some(), "inline csv"),
+                    other => panic!("{}: expected replay, got {other:?}", op.id()),
+                }
+            }
+            assert!(!d.tags.is_empty(), "{}: derived world untagged", op.id());
+        }
+    }
+
+    #[test]
+    fn bootstrap_preserves_price_support() {
+        let b = base("paper-default");
+        let p = DeriveParams::default();
+        let dseed = derivation_seed(9, &b.name, "boot", 0);
+        let src = realize_offers(&b, p.reference_horizon, dseed).unwrap();
+        let (lo, hi) = (0..src[0].num_slots())
+            .map(|i| src[0].price_of_slot(i))
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), v| {
+                (l.min(v), h.max(v))
+            });
+        let d = derive_world(&b, Operator::BlockBootstrap, 0, 9, &p).unwrap();
+        let trace = region_trace(&d.market.regions[0].price, p.reference_horizon, 0).unwrap();
+        for i in 0..trace.num_slots() {
+            let v = trace.price_of_slot(i);
+            assert!(v >= lo - 1e-12 && v <= hi + 1e-12, "resampled price off-support");
+        }
+    }
+
+    #[test]
+    fn capacity_dropout_applies_only_to_capacity_aware_worlds() {
+        assert!(Operator::CapacityDropout.applicable(&base("capacity-crunch")));
+        assert!(!Operator::CapacityDropout.applicable(&base("paper-default")));
+        assert!(!Operator::CapacityDropout.applicable(&base("multi-region-arbitrage")));
+        let b = base("capacity-crunch");
+        let d = derive_world(&b, Operator::CapacityDropout, 0, 5, &DeriveParams::default())
+            .unwrap();
+        for (orig, derived) in b
+            .market
+            .flattened_offers()
+            .iter()
+            .zip(d.market.flattened_offers())
+        {
+            match (orig.capacity, derived.capacity) {
+                (Some(o), Some(n)) => assert!(n >= 1 && n <= o, "cap {o} -> {n}"),
+                (None, None) => {}
+                other => panic!("capacity shape changed: {other:?}"),
+            }
+            // Price processes untouched.
+            assert_eq!(orig.price, derived.price);
+        }
+        assert!(d.tags.iter().any(|t| t == "fault"));
+    }
+
+    #[test]
+    fn fault_operators_tag_fault_and_spikes_raise_prices() {
+        let b = base("paper-default");
+        let p = DeriveParams::default();
+        let spiked = derive_world(&b, Operator::PriceSpike, 0, 11, &p).unwrap();
+        assert!(spiked.tags.iter().any(|t| t == "fault"));
+        let gapped = derive_world(&b, Operator::FeedGap, 0, 11, &p).unwrap();
+        assert!(gapped.tags.iter().any(|t| t == "fault"));
+        // Spike windows multiply the realized base prices by >= 2x
+        // (spike_factor 2.5 jittered by [0.8, 1.2]); every other slot is
+        // bit-identical after the CSV round-trip.
+        let dseed = derivation_seed(11, &b.name, "spike", 0);
+        let src = &realize_offers(&b, p.reference_horizon, dseed).unwrap()[0];
+        let spiked_trace =
+            region_trace(&spiked.market.regions[0].price, p.reference_horizon, 0).unwrap();
+        assert_eq!(spiked_trace.num_slots(), src.num_slots());
+        let mut spiked_slots = 0usize;
+        for i in 0..src.num_slots() {
+            let (s, v) = (src.price_of_slot(i), spiked_trace.price_of_slot(i));
+            if v > s * 1.5 {
+                spiked_slots += 1;
+            } else {
+                assert_eq!(s, v, "slot {i} neither spiked nor preserved");
+            }
+        }
+        assert!(spiked_slots >= 1, "no slot was spiked");
+    }
+
+    #[test]
+    fn population_deals_round_robin_with_unique_names() {
+        let bases = vec![base("paper-default"), base("capacity-crunch")];
+        let pop = derive_population(&bases, 19, 123, &DeriveParams::default()).unwrap();
+        assert_eq!(pop.len(), 19);
+        let mut names: Vec<&str> = pop.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 19, "derived names must be unique");
+        // paper-default skips capdrop (no finite caps): 4 ops; crunch: 5.
+        let plan = derivation_plan(&bases, 19);
+        assert_eq!(plan.len(), 9);
+        assert_eq!(plan.iter().map(|(_, _, n)| n).sum::<usize>(), 19);
+        assert!(plan
+            .iter()
+            .all(|(b, op, _)| !(b == "paper-default" && *op == "capdrop")));
+        // The population is itself reproducible.
+        let pop2 = derive_population(&bases, 19, 123, &DeriveParams::default()).unwrap();
+        assert_eq!(pop, pop2);
+    }
+}

@@ -1,0 +1,439 @@
+//! The cross-regime promotion gate.
+//!
+//! The fleet layer's robustness section ranks policies by worst-case and
+//! tail statistics pooled over *all* worlds — but a pooled mean can hide
+//! a regime-shaped hole: a policy that is excellent in the many calm
+//! worlds and terrible in the few surge ones still looks fine on
+//! average. The gate closes that hole: group worlds by regime tag
+//! ([`crate::scenario::ScenarioSpec::tags`], `untagged` as the catch-all
+//! group), compute each policy's difficulty-weighted mean regret/bound
+//! ratio *per regime*, and promote a policy only if it is fully covered
+//! and clears the threshold in **every** regime. The verdict records the
+//! pooled-mean result too, so "passes on mean, demoted by the gate" is
+//! visible in the report rather than silently corrected.
+//!
+//! Every statistic reuses [`crate::fleet::robustness::world_table`] —
+//! the gate and the fleet ranking cannot disagree on a ratio.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::fleet::robustness::{world_table, WorldStat};
+use crate::scenario::ScenarioOutcome;
+use crate::util::json::Json;
+
+/// Regime group name for worlds with no tags.
+pub const UNTAGGED: &str = "untagged";
+
+/// Gate knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GateConfig {
+    /// Max bound-normalized mean regret ratio a policy may show in any
+    /// regime and still be promoted. The default 0.25 means: within a
+    /// regime, the policy's average fixed-policy regret stays below a
+    /// quarter of the Prop. B.1 online-learning budget.
+    pub threshold: f64,
+}
+
+impl Default for GateConfig {
+    fn default() -> GateConfig {
+        GateConfig { threshold: 0.25 }
+    }
+}
+
+/// One policy's standing inside one regime group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegimeScore {
+    pub tag: String,
+    /// Worlds in this regime group.
+    pub worlds: usize,
+    /// Worlds in this group the policy was scored in.
+    pub covered: usize,
+    /// Difficulty-weighted mean regret/bound ratio over the covered
+    /// worlds of this group (0.0 when the policy covers none of them —
+    /// `pass` is false in that case regardless).
+    pub mean_ratio: f64,
+    /// Full group coverage and `mean_ratio <= threshold`.
+    pub pass: bool,
+}
+
+/// One policy's gate verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateVerdict {
+    pub policy: String,
+    /// Scored in every world of the population.
+    pub covered: bool,
+    /// Worlds the policy was not scored in.
+    pub missing_worlds: usize,
+    /// Difficulty-weighted mean ratio pooled over all covered worlds —
+    /// the statistic a gate-less ranking would use.
+    pub overall_mean_ratio: f64,
+    /// Whether the pooled mean alone clears the threshold.
+    pub mean_pass: bool,
+    /// The gate's decision: covered and passing in every regime.
+    pub promoted: bool,
+    /// Per-regime standing, in the report's regime order.
+    pub regimes: Vec<RegimeScore>,
+    /// Regimes that blocked promotion (empty iff promoted or uncovered
+    /// with no regime failures).
+    pub failing_regimes: Vec<String>,
+}
+
+/// The whole gate run: every policy's verdict plus the regime census.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateReport {
+    pub threshold: f64,
+    /// Worlds with at least one scorable run.
+    pub worlds: usize,
+    /// `(tag, world count)` census in sorted tag order.
+    pub regimes: Vec<(String, usize)>,
+    /// Promoted policy count.
+    pub promoted: usize,
+    /// Verdicts: promoted first, then by pooled mean.
+    pub verdicts: Vec<GateVerdict>,
+}
+
+fn weighted_mean(rows: &[(f64, f64)]) -> f64 {
+    if rows.is_empty() {
+        return 0.0;
+    }
+    let total_d: f64 = rows.iter().map(|(_, d)| *d).sum();
+    if total_d > 0.0 {
+        rows.iter().map(|(r, d)| r * d).sum::<f64>() / total_d
+    } else {
+        rows.iter().map(|(r, _)| *r).sum::<f64>() / rows.len() as f64
+    }
+}
+
+/// Regime groups over the world table: sorted tag -> world indices. A
+/// world belongs to every group its tags name; untagged worlds form the
+/// [`UNTAGGED`] group.
+fn regime_groups(table: &[WorldStat]) -> BTreeMap<String, Vec<usize>> {
+    let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (i, w) in table.iter().enumerate() {
+        if w.tags.is_empty() {
+            groups.entry(UNTAGGED.to_string()).or_default().push(i);
+        } else {
+            for t in &w.tags {
+                groups.entry(t.clone()).or_default().push(i);
+            }
+        }
+    }
+    groups
+}
+
+/// Run the gate over canonical fleet outcomes.
+pub fn evaluate_gate(outcomes: &[ScenarioOutcome], cfg: &GateConfig) -> GateReport {
+    let table = world_table(outcomes);
+    let groups = regime_groups(&table);
+    let policies: BTreeSet<&str> = table
+        .iter()
+        .flat_map(|w| w.policy_mean_ratio.keys().map(String::as_str))
+        .collect();
+
+    let mut verdicts: Vec<GateVerdict> = policies
+        .into_iter()
+        .map(|policy| {
+            let all_rows: Vec<(f64, f64)> = table
+                .iter()
+                .filter_map(|w| {
+                    w.policy_mean_ratio.get(policy).map(|r| (*r, w.difficulty))
+                })
+                .collect();
+            let covered_worlds = all_rows.len();
+            let overall = weighted_mean(&all_rows);
+            let regimes: Vec<RegimeScore> = groups
+                .iter()
+                .map(|(tag, idxs)| {
+                    let rows: Vec<(f64, f64)> = idxs
+                        .iter()
+                        .filter_map(|&i| {
+                            table[i]
+                                .policy_mean_ratio
+                                .get(policy)
+                                .map(|r| (*r, table[i].difficulty))
+                        })
+                        .collect();
+                    let mean = weighted_mean(&rows);
+                    RegimeScore {
+                        tag: tag.clone(),
+                        worlds: idxs.len(),
+                        covered: rows.len(),
+                        mean_ratio: mean,
+                        pass: rows.len() == idxs.len() && mean <= cfg.threshold,
+                    }
+                })
+                .collect();
+            let covered = covered_worlds == table.len() && !table.is_empty();
+            let failing_regimes: Vec<String> = regimes
+                .iter()
+                .filter(|r| !r.pass)
+                .map(|r| r.tag.clone())
+                .collect();
+            GateVerdict {
+                policy: policy.to_string(),
+                covered,
+                missing_worlds: table.len() - covered_worlds,
+                overall_mean_ratio: overall,
+                mean_pass: overall <= cfg.threshold,
+                promoted: covered && failing_regimes.is_empty(),
+                regimes,
+                failing_regimes,
+            }
+        })
+        .collect();
+
+    verdicts.sort_by(|a, b| {
+        b.promoted
+            .cmp(&a.promoted)
+            .then(b.covered.cmp(&a.covered))
+            .then(a.overall_mean_ratio.total_cmp(&b.overall_mean_ratio))
+            .then(a.policy.cmp(&b.policy))
+    });
+
+    GateReport {
+        threshold: cfg.threshold,
+        worlds: table.len(),
+        regimes: groups.into_iter().map(|(t, v)| (t, v.len())).collect(),
+        promoted: verdicts.iter().filter(|v| v.promoted).count(),
+        verdicts,
+    }
+}
+
+/// Serialize the gate run as the standalone `dagcloud.robustness/v1`
+/// document (see `docs/SCHEMAS.md`).
+pub fn gate_json(r: &GateReport) -> Json {
+    let mut j = Json::obj();
+    j.set("schema", Json::Str("dagcloud.robustness/v1".into()))
+        .set("threshold", Json::Num(r.threshold))
+        .set("worlds", Json::Num(r.worlds as f64))
+        .set("promoted", Json::Num(r.promoted as f64))
+        .set(
+            "regimes",
+            Json::Arr(
+                r.regimes
+                    .iter()
+                    .map(|(t, n)| {
+                        let mut rj = Json::obj();
+                        rj.set("tag", Json::Str(t.clone()))
+                            .set("worlds", Json::Num(*n as f64));
+                        rj
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "policies",
+            Json::Arr(
+                r.verdicts
+                    .iter()
+                    .map(|v| {
+                        let mut vj = Json::obj();
+                        vj.set("policy", Json::Str(v.policy.clone()))
+                            .set("covered", Json::Bool(v.covered))
+                            .set("overall_mean_ratio", Json::Num(v.overall_mean_ratio))
+                            .set("mean_pass", Json::Bool(v.mean_pass))
+                            .set("promoted", Json::Bool(v.promoted))
+                            .set(
+                                "regimes",
+                                Json::Arr(
+                                    v.regimes
+                                        .iter()
+                                        .map(|s| {
+                                            let mut sj = Json::obj();
+                                            sj.set("tag", Json::Str(s.tag.clone()))
+                                                .set("worlds", Json::Num(s.worlds as f64))
+                                                .set("covered", Json::Num(s.covered as f64))
+                                                .set("mean_ratio", Json::Num(s.mean_ratio))
+                                                .set("pass", Json::Bool(s.pass));
+                                            sj
+                                        })
+                                        .collect(),
+                                ),
+                            );
+                        if v.missing_worlds > 0 {
+                            vj.set("missing_worlds", Json::Num(v.missing_worlds as f64));
+                        }
+                        if !v.failing_regimes.is_empty() {
+                            vj.set(
+                                "failing_regimes",
+                                Json::Arr(
+                                    v.failing_regimes
+                                        .iter()
+                                        .map(|t| Json::Str(t.clone()))
+                                        .collect(),
+                                ),
+                            );
+                        }
+                        vj
+                    })
+                    .collect(),
+            ),
+        );
+    j
+}
+
+/// Render the verdict table `repro robustness` prints: one row per
+/// policy, one mean-ratio column per regime, and the gate decision.
+pub fn render_gate_table(r: &GateReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "promotion gate: threshold {:.3}, {} worlds, {} regimes, {} promoted\n",
+        r.threshold,
+        r.worlds,
+        r.regimes.len(),
+        r.promoted
+    ));
+    let mut header = format!("{:<42} {:>8}", "policy", "overall");
+    for (tag, n) in &r.regimes {
+        header.push_str(&format!(" {:>12}", format!("{tag}({n})")));
+    }
+    header.push_str("  verdict");
+    out.push_str(&header);
+    out.push('\n');
+    for v in &r.verdicts {
+        let mut row = format!("{:<42} {:>8.4}", v.policy, v.overall_mean_ratio);
+        for s in &v.regimes {
+            if s.covered == 0 {
+                row.push_str(&format!(" {:>12}", "-"));
+            } else {
+                row.push_str(&format!(" {:>12.4}", s.mean_ratio));
+            }
+        }
+        let verdict = if v.promoted {
+            "PROMOTED".to_string()
+        } else if !v.covered {
+            format!("unranked ({} worlds missing)", v.missing_worlds)
+        } else {
+            format!("demoted ({})", v.failing_regimes.join(", "))
+        };
+        row.push_str("  ");
+        row.push_str(&verdict);
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(
+        world: &str,
+        tags: &[&str],
+        costs: &[(&str, f64)],
+        bound: f64,
+    ) -> ScenarioOutcome {
+        ScenarioOutcome {
+            scenario: world.into(),
+            replicate: 0,
+            run_seed: 0,
+            jobs: 10,
+            average_unit_cost: 0.3,
+            average_regret: 0.01,
+            regret_bound: bound,
+            pool_utilization: 0.0,
+            so_share: 0.0,
+            spot_share: 0.8,
+            od_share: 0.2,
+            availability_lo: 0.4,
+            availability_hi: 0.9,
+            best_policy: costs.first().map(|(l, _)| l.to_string()).unwrap_or_default(),
+            offer_shares: Vec::new(),
+            policy_costs: costs.iter().map(|(l, c)| (l.to_string(), *c)).collect(),
+            tags: tags.iter().map(|t| t.to_string()).collect(),
+        }
+    }
+
+    /// The worked example in EXPERIMENTS.md §Robustness: pA is excellent
+    /// in the three calm worlds and terrible in the one surge world, so
+    /// it clears the pooled mean but the gate demotes it; pB is mediocre
+    /// everywhere and is promoted. pC (bad in calm, fine in surge) gives
+    /// the calm worlds a policy-cost spread, hence difficulty weight —
+    /// without it the surge world's spread dominates the pooled mean and
+    /// pA's surge hole would not be hidden in the first place.
+    #[test]
+    fn gate_demotes_a_policy_that_passes_on_the_pooled_mean() {
+        let outs = vec![
+            outcome("c1", &["calm"], &[("pA", 0.00), ("pB", 0.10), ("pC", 0.80)], 1.0),
+            outcome("c2", &["calm"], &[("pA", 0.00), ("pB", 0.10), ("pC", 0.80)], 1.0),
+            outcome("c3", &["calm"], &[("pA", 0.00), ("pB", 0.10), ("pC", 0.80)], 1.0),
+            outcome("s1", &["surge"], &[("pA", 0.90), ("pB", 0.20), ("pC", 0.20)], 1.0),
+        ];
+        let r = evaluate_gate(&outs, &GateConfig { threshold: 0.25 });
+        assert_eq!(r.worlds, 4);
+        assert_eq!(r.regimes, vec![("calm".into(), 3), ("surge".into(), 1)]);
+        // Per-world ratios are (cost - min)/bound; world difficulty is the
+        // policy-cost spread: calm worlds 0.8, the surge world 0.7.
+        let pa = r.verdicts.iter().find(|v| v.policy == "pA").unwrap();
+        // Pooled: (3*0.8*0.0 + 0.7*0.7)/3.1 ~= 0.158 <= 0.25 — passes.
+        assert!(pa.mean_pass, "pooled mean hides the surge hole: {}", pa.overall_mean_ratio);
+        assert!((pa.overall_mean_ratio - 0.49 / 3.1).abs() < 1e-12);
+        assert!(!pa.promoted);
+        assert_eq!(pa.failing_regimes, vec!["surge".to_string()]);
+        let surge = pa.regimes.iter().find(|g| g.tag == "surge").unwrap();
+        assert!((surge.mean_ratio - 0.7).abs() < 1e-12);
+        let pb = r.verdicts.iter().find(|v| v.policy == "pB").unwrap();
+        assert!(pb.promoted);
+        let pc = r.verdicts.iter().find(|v| v.policy == "pC").unwrap();
+        assert!(!pc.promoted);
+        assert_eq!(pc.failing_regimes, vec!["calm".to_string()]);
+        assert_eq!(r.promoted, 1);
+        // Promoted policies sort first, then pooled mean: pB, pA, pC.
+        let order: Vec<&str> = r.verdicts.iter().map(|v| v.policy.as_str()).collect();
+        assert_eq!(order, vec!["pB", "pA", "pC"]);
+    }
+
+    #[test]
+    fn untagged_worlds_form_their_own_regime() {
+        let outs = vec![
+            outcome("w1", &[], &[("p", 0.1), ("q", 0.3)], 1.0),
+            outcome("w2", &["calm"], &[("p", 0.1), ("q", 0.3)], 1.0),
+        ];
+        let r = evaluate_gate(&outs, &GateConfig::default());
+        assert_eq!(
+            r.regimes,
+            vec![("calm".into(), 1), (UNTAGGED.into(), 1)]
+        );
+    }
+
+    #[test]
+    fn partial_coverage_blocks_promotion_and_is_reported() {
+        let outs = vec![
+            outcome("w1", &["calm"], &[("p", 0.0), ("q", 0.0)], 1.0),
+            outcome("w2", &["surge"], &[("p", 0.0)], 1.0),
+        ];
+        let r = evaluate_gate(&outs, &GateConfig::default());
+        let q = r.verdicts.iter().find(|v| v.policy == "q").unwrap();
+        assert!(!q.covered && !q.promoted);
+        assert_eq!(q.missing_worlds, 1);
+        assert_eq!(q.failing_regimes, vec!["surge".to_string()]);
+        let table = render_gate_table(&r);
+        assert!(table.contains("unranked (1 worlds missing)"), "{table}");
+        assert!(table.contains("PROMOTED"), "{table}");
+    }
+
+    #[test]
+    fn gate_json_shape_is_stable() {
+        let outs = vec![outcome("w1", &["calm"], &[("p", 0.0), ("q", 0.5)], 1.0)];
+        let j = gate_json(&evaluate_gate(&outs, &GateConfig::default()));
+        assert_eq!(
+            j.get("schema").unwrap().as_str().unwrap(),
+            "dagcloud.robustness/v1"
+        );
+        assert_eq!(j.get("worlds").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("promoted").unwrap().as_u64().unwrap(), 1);
+        let pols = j.get("policies").unwrap().as_arr().unwrap();
+        assert_eq!(pols[0].get("policy").unwrap().as_str().unwrap(), "p");
+        assert_eq!(pols[0].get("promoted").unwrap().as_bool().unwrap(), true);
+        assert!(pols[0].get("failing_regimes").is_none());
+        let q = &pols[1];
+        assert_eq!(q.get("promoted").unwrap().as_bool().unwrap(), false);
+        assert_eq!(
+            q.get("failing_regimes").unwrap().as_arr().unwrap()[0]
+                .as_str()
+                .unwrap(),
+            "calm"
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! The robustness engine: resampled worlds, tail-risk scoring, and the
+//! cross-regime promotion gate.
+//!
+//! The paper's evaluation (§6) scores policies in a handful of
+//! hand-picked markets; its online-learning claim, however, is about
+//! *distributions* of markets. This subsystem stress-tests that claim by
+//! growing large world populations from the registry bases and asking
+//! which fixed policies stay cheap in the tail, not just on average:
+//!
+//! * [`derive`] — deterministic derivation operators: block bootstrap of
+//!   realized price traces (multi-slot blocks preserve autocorrelation),
+//!   regime oversampling (rare calm/surge blocks get amplified),
+//!   injected price spikes, capacity dropout on finite-capacity offers,
+//!   and feed-event gaps replayed through [`crate::feed::FeedBuffer`].
+//!   Each derived world is a pure function of `(base world, operator,
+//!   seed, index)` and is a complete [`crate::scenario::ScenarioSpec`],
+//!   so the population
+//!   flows through the unchanged [`crate::fleet::ShardManifest`] →
+//!   [`crate::fleet::FleetAccumulator`] path and inherits the fleet
+//!   layer's byte-invariance under shard count and merge order;
+//! * [`tag`] — regime tagging: explicit spec tags win, otherwise the
+//!   world's price structure is classified calm/surge;
+//! * [`gate`] — the promotion gate over the fleet layer's tail-risk
+//!   scores ([`crate::fleet::robustness`]): a policy is *robust* only if
+//!   its bound-normalized mean regret clears the threshold in **every**
+//!   regime tag — a policy that looks fine on the pooled mean but folds
+//!   in surge worlds is demoted. The verdict table serializes as
+//!   `dagcloud.robustness/v1` (see `docs/SCHEMAS.md`).
+//!
+//! CLI front-end: `repro robustness --base WORLD --derive N` (see
+//! `rust/src/experiments/robustness.rs`).
+
+pub mod derive;
+pub mod gate;
+pub mod tag;
+
+pub use derive::{
+    derivation_plan, derivation_seed, derive_population, derive_world, DeriveParams, Operator,
+};
+pub use gate::{evaluate_gate, gate_json, render_gate_table, GateConfig, GateReport, GateVerdict};
+pub use tag::{classify_model, classify_trace, world_tags, SURGE_THRESHOLD};

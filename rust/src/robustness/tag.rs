@@ -1,0 +1,188 @@
+//! Regime tagging: classify worlds calm / surge for the promotion gate.
+//!
+//! Explicit [`ScenarioSpec::tags`] always win — the registry hand-tags
+//! its worlds, and derivation operators tag what they produce. This
+//! module supplies the fallback for untagged specs (e.g. user-supplied
+//! files): a structural classification of the world's price processes.
+//! The classification is a pure function of the spec, never of a
+//! realized run, so tagging cannot perturb report bytes.
+
+use anyhow::Result;
+
+use crate::market::{PriceTrace, SpotModel};
+use crate::scenario::runner::region_trace;
+use crate::scenario::{PriceSpec, ScenarioSpec};
+
+/// Normalized-price threshold separating calm from surge regimes. The
+/// registry's calm processes sit near the paper's 0.13 mean and its surge
+/// bands near 0.55, so the midpoint-ish 0.4 splits them with margin.
+pub const SURGE_THRESHOLD: f64 = 0.4;
+
+/// Horizon (simulated units) at which replayed traces are materialized
+/// for classification — long enough to see the sample traces' surge
+/// windows, short enough to stay cheap.
+const CLASSIFY_HORIZON: f64 = 48.0;
+
+/// Slots per classification block (one simulated unit on the 1/12 grid).
+const BLOCK: usize = 12;
+
+/// Regime tags a synthetic price model can realize.
+pub fn classify_model(m: &SpotModel) -> Vec<&'static str> {
+    match m {
+        SpotModel::BoundedExp { mean, .. } => {
+            if *mean >= SURGE_THRESHOLD {
+                vec!["surge"]
+            } else {
+                vec!["calm"]
+            }
+        }
+        SpotModel::Markov {
+            calm_mean,
+            surge_mean,
+            ..
+        } => {
+            let mut tags = Vec::new();
+            if *calm_mean < SURGE_THRESHOLD || *surge_mean < SURGE_THRESHOLD {
+                tags.push("calm");
+            }
+            if *calm_mean >= SURGE_THRESHOLD || *surge_mean >= SURGE_THRESHOLD {
+                tags.push("surge");
+            }
+            tags
+        }
+        SpotModel::GoogleFixed { price, .. } => {
+            if *price >= SURGE_THRESHOLD {
+                vec!["surge"]
+            } else {
+                vec!["calm"]
+            }
+        }
+    }
+}
+
+/// Regime tags realized by a concrete trace: block (one-unit) mean prices
+/// below the threshold yield `calm`, at or above it `surge`.
+pub fn classify_trace(trace: &PriceTrace) -> Vec<&'static str> {
+    let n = trace.num_slots();
+    let mut calm = false;
+    let mut surge = false;
+    let mut s = 0;
+    while s < n {
+        let end = (s + BLOCK).min(n);
+        let mean: f64 =
+            (s..end).map(|i| trace.price_of_slot(i)).sum::<f64>() / (end - s) as f64;
+        if mean >= SURGE_THRESHOLD {
+            surge = true;
+        } else {
+            calm = true;
+        }
+        s = end;
+    }
+    let mut tags = Vec::new();
+    if calm {
+        tags.push("calm");
+    }
+    if surge {
+        tags.push("surge");
+    }
+    tags
+}
+
+/// The world's regime tags: the spec's explicit tags if present,
+/// otherwise a structural classification over every flattened offer's
+/// price process (sorted, deduplicated). Replayed offers are materialized
+/// at a short horizon (replay realization ignores the seed).
+pub fn world_tags(spec: &ScenarioSpec) -> Result<Vec<String>> {
+    if !spec.tags.is_empty() {
+        return Ok(spec.tags.clone());
+    }
+    let mut tags: Vec<&'static str> = Vec::new();
+    for offer in spec.market.flattened_offers() {
+        let offer_tags = match &offer.price {
+            PriceSpec::Model(m) => classify_model(m),
+            PriceSpec::Regimes(segments) => {
+                let mut t = Vec::new();
+                for (_, m) in segments {
+                    t.extend(classify_model(m));
+                }
+                t
+            }
+            PriceSpec::Replay(_) => {
+                classify_trace(&region_trace(&offer.price, CLASSIFY_HORIZON, 0)?)
+            }
+        };
+        tags.extend(offer_tags);
+    }
+    tags.sort_unstable();
+    tags.dedup();
+    Ok(tags.into_iter().map(String::from).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::registry;
+
+    #[test]
+    fn models_classify_by_mean_price() {
+        assert_eq!(classify_model(&SpotModel::paper_default()), vec!["calm"]);
+        assert_eq!(
+            classify_model(&SpotModel::BoundedExp { mean: 0.55, lo: 0.12, hi: 1.0 }),
+            vec!["surge"]
+        );
+        assert_eq!(
+            classify_model(&SpotModel::Markov {
+                calm_mean: 0.13,
+                surge_mean: 0.6,
+                lo: 0.12,
+                hi: 1.0,
+                p_calm_to_surge: 0.05,
+                p_surge_to_calm: 0.2,
+            }),
+            vec!["calm", "surge"]
+        );
+        assert_eq!(
+            classify_model(&SpotModel::GoogleFixed { price: 0.2, availability: 0.9 }),
+            vec!["calm"]
+        );
+    }
+
+    #[test]
+    fn traces_classify_by_block_means() {
+        let calm = PriceTrace::from_prices(vec![0.13; 36], 1.0 / 12.0);
+        assert_eq!(classify_trace(&calm), vec!["calm"]);
+        let mut prices = vec![0.13; 24];
+        prices.extend(vec![0.8; 12]);
+        let mixed = PriceTrace::from_prices(prices, 1.0 / 12.0);
+        assert_eq!(classify_trace(&mixed), vec!["calm", "surge"]);
+    }
+
+    #[test]
+    fn explicit_spec_tags_win_and_untagged_specs_fall_back_to_structure() {
+        // Registry worlds carry explicit tags.
+        let world = registry::find("calm-surge-markov").unwrap();
+        assert_eq!(world_tags(&world).unwrap(), world.tags);
+        // Stripping the tags falls back to the structural classification,
+        // which agrees for the Markov world.
+        let mut stripped = world;
+        stripped.tags.clear();
+        assert_eq!(
+            world_tags(&stripped).unwrap(),
+            vec!["calm".to_string(), "surge".to_string()]
+        );
+        let mut calm_only = registry::find("paper-default").unwrap();
+        calm_only.tags.clear();
+        assert_eq!(world_tags(&calm_only).unwrap(), vec!["calm".to_string()]);
+    }
+
+    #[test]
+    fn replayed_worlds_classify_from_the_materialized_trace() {
+        let mut replayed = registry::find("replayed-trace").unwrap();
+        replayed.tags.clear();
+        // The sample CSV has calm stretches and two surge windows.
+        assert_eq!(
+            world_tags(&replayed).unwrap(),
+            vec!["calm".to_string(), "surge".to_string()]
+        );
+    }
+}

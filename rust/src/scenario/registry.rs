@@ -46,7 +46,14 @@ fn base(name: &str, description: &str, model: SpotModel) -> ScenarioSpec {
         pool_capacity: 0,
         policy_set: PolicySetSpec::Auto,
         jobs: 400,
+        // Every builtin is at least a calm-regime world; worlds whose
+        // price process visits a surge regime add "surge" below.
+        tags: tags(&["calm"]),
     }
+}
+
+fn tags(ts: &[&str]) -> Vec<String> {
+    ts.iter().map(|t| t.to_string()).collect()
 }
 
 /// All built-in scenarios, in canonical order.
@@ -64,7 +71,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         SpotModel::paper_default(),
     );
 
-    let calm_surge = base(
+    let mut calm_surge = base(
         "calm-surge-markov",
         "Markov-modulated spot prices alternating calm and surge states \
          (price autocorrelation the i.i.d. §6.1 process lacks).",
@@ -77,6 +84,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
             p_surge_to_calm: 0.15,
         },
     );
+    calm_surge.tags = tags(&["calm", "surge"]);
 
     let google = base(
         "google-fixed",
@@ -95,6 +103,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         SpotModel::paper_default(),
     );
     replayed.market.regions[0].price = PriceSpec::Replay(ReplaySpec::inline(SAMPLE_TRACE_CSV));
+    replayed.tags = tags(&["calm", "surge"]);
 
     // A real-format EC2 dump streamed through the feed loaders: hourly
     // epoch timestamps scaled to one unit per hour, dollar prices
@@ -118,6 +127,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         az: None,
         instance_type: None,
     });
+    ec2_replay.tags = tags(&["calm", "surge"]);
 
     // The per-series selection path: a dump carrying two availability-zone
     // series, restricted to one by the spec's `az` filter (without it the
@@ -141,6 +151,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         az: Some("us-east-1a".into()),
         instance_type: Some("m5.large".into()),
     });
+    ec2_az_select.tags = tags(&["calm", "surge"]);
 
     let multi_region = ScenarioSpec {
         name: "multi-region-arbitrage".into(),
@@ -171,6 +182,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         pool_capacity: 0,
         policy_set: PolicySetSpec::Auto,
         jobs: 400,
+        tags: tags(&["calm", "surge"]),
     };
 
     // A tightly-capped cheap primary region spilling into a pricier
@@ -210,6 +222,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         pool_capacity: 0,
         policy_set: PolicySetSpec::Auto,
         jobs: 400,
+        tags: tags(&["calm"]),
     };
 
     // Non-arbitrage routing across regions *and* instance types: every
@@ -258,6 +271,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         pool_capacity: 0,
         policy_set: PolicySetSpec::Auto,
         jobs: 400,
+        tags: tags(&["calm", "surge"]),
     };
 
     let mut bursty = base(
@@ -383,6 +397,28 @@ mod tests {
         for s in builtins() {
             s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
         }
+    }
+
+    #[test]
+    fn every_builtin_carries_regime_tags() {
+        for s in builtins() {
+            assert!(!s.tags.is_empty(), "'{}' has no regime tags", s.name);
+            assert!(s.tags.contains(&"calm".to_string()), "'{}'", s.name);
+        }
+        // Worlds whose price process visits a surge regime are tagged so.
+        for name in [
+            "calm-surge-markov",
+            "replayed-trace",
+            "ec2-feed-replay",
+            "ec2-az-select",
+            "multi-region-arbitrage",
+            "multi-region-routed",
+        ] {
+            let s = find(name).unwrap();
+            assert!(s.tags.contains(&"surge".to_string()), "'{name}'");
+        }
+        // Single-regime worlds are calm-only.
+        assert_eq!(find("paper-default").unwrap().tags, vec!["calm"]);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! [`outcomes_from_report`], which is what lets the fleet layer
 //! ([`crate::fleet`]) merge shard reports back into one document.
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::util::json::Json;
 use crate::util::stats::Welford;
@@ -106,6 +106,14 @@ fn run_to_json(o: &ScenarioOutcome) -> Json {
         }
         j.set("policy_costs", costs);
     }
+    // Regime tags: same off-disk-when-empty idiom, so untagged rows keep
+    // the pre-robustness byte shape.
+    if !o.tags.is_empty() {
+        j.set(
+            "tags",
+            Json::Arr(o.tags.iter().map(|t| Json::Str(t.clone())).collect()),
+        );
+    }
     j
 }
 
@@ -163,6 +171,18 @@ pub fn outcome_from_json(scenario: &str, j: &Json) -> Result<ScenarioOutcome> {
             .to_string(),
         offer_shares: pairs("offer_shares")?,
         policy_costs: pairs("policy_costs")?,
+        tags: match j.get("tags") {
+            None => Vec::new(),
+            Some(Json::Arr(arr)) => arr
+                .iter()
+                .map(|t| {
+                    t.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("report row ('{scenario}'): tags must be strings"))
+                })
+                .collect::<Result<_>>()?,
+            Some(_) => bail!("report row ('{scenario}'): 'tags' must be an array"),
+        },
     })
 }
 
@@ -299,6 +319,7 @@ mod tests {
                 ("proposed(β=1.000,β₀=-,b=0.24)".into(), alpha),
                 ("proposed(β=0.769,β₀=-,b=0.18)".into(), alpha + 0.05),
             ],
+            tags: Vec::new(),
         }
     }
 
@@ -311,6 +332,27 @@ mod tests {
         let j = run_to_json(&routed);
         let shares = j.get("offer_shares").unwrap();
         assert_eq!(shares.get("us-east/default").unwrap().as_f64().unwrap(), 0.7);
+    }
+
+    #[test]
+    fn tags_only_serialized_when_present_and_roundtrip() {
+        // Untagged rows keep the legacy byte shape.
+        let plain = run_to_json(&outcome("a", 0, 0.2));
+        assert!(plain.get("tags").is_none());
+        // Tagged rows round-trip losslessly and re-serialize identically.
+        let mut tagged = outcome("b", 0, 0.3);
+        tagged.tags = vec!["calm".into(), "fault".into()];
+        let j = run_to_json(&tagged);
+        let back = outcome_from_json("b", &j).unwrap();
+        assert_eq!(back.tags, tagged.tags);
+        assert_eq!(run_to_json(&back).pretty(), j.pretty());
+        // Malformed tags error instead of silently dropping.
+        let mut bad = j.clone();
+        bad.set("tags", Json::Num(1.0));
+        assert!(outcome_from_json("b", &bad).is_err());
+        let mut bad2 = j.clone();
+        bad2.set("tags", Json::Arr(vec![Json::Num(1.0)]));
+        assert!(outcome_from_json("b", &bad2).is_err());
     }
 
     #[test]

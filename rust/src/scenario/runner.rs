@@ -68,6 +68,11 @@ pub struct ScenarioOutcome {
     /// worlds (serialized per report row, see
     /// [`crate::scenario::report`]).
     pub policy_costs: Vec<(String, f64)>,
+    /// The spec's regime tags, copied verbatim so the fleet layer can
+    /// group worlds for the cross-regime promotion gate
+    /// ([`crate::robustness::gate`]). Empty for untagged worlds — and
+    /// omitted from report rows, keeping legacy rows byte-identical.
+    pub tags: Vec<String>,
 }
 
 /// Deterministic per-run seed: FNV-1a over the scenario name folded with
@@ -85,8 +90,10 @@ pub fn derive_run_seed(base_seed: u64, scenario: &str, replicate: u64) -> u64 {
     sm.next_u64()
 }
 
-/// Build one region's realized [`PriceTrace`] for the horizon.
-fn region_trace(price: &PriceSpec, horizon: f64, seed: u64) -> Result<PriceTrace> {
+/// Build one region's realized [`PriceTrace`] for the horizon. Public so
+/// the robustness derivation operators ([`crate::robustness::derive`]) can
+/// materialize base-world traces before resampling them.
+pub fn region_trace(price: &PriceSpec, horizon: f64, seed: u64) -> Result<PriceTrace> {
     match price {
         PriceSpec::Model(m) => Ok(PriceTrace::generate(m.clone(), horizon, seed)),
         PriceSpec::Regimes(segments) => {
@@ -348,6 +355,7 @@ pub fn run_scenario_once(
             .map(|s| s.label())
             .zip(rep.policy_mean_costs.iter().copied())
             .collect(),
+        tags: spec.tags.clone(),
     })
 }
 
@@ -395,6 +403,7 @@ mod tests {
             pool_capacity: 0,
             policy_set: PolicySetSpec::Auto,
             jobs: 12,
+            tags: Vec::new(),
         }
     }
 

@@ -329,6 +329,11 @@ pub struct ScenarioSpec {
     pub policy_set: PolicySetSpec,
     /// Jobs per run (the runner's `--jobs` / `--smoke` flags override).
     pub jobs: usize,
+    /// Regime tags (e.g. `calm`, `surge`, `fault`) grouping worlds for the
+    /// cross-regime promotion gate ([`crate::robustness`]). Empty = untagged;
+    /// the empty default stays off-disk so pre-existing spec files
+    /// round-trip byte-identically.
+    pub tags: Vec<String>,
 }
 
 impl ScenarioSpec {
@@ -440,6 +445,14 @@ impl ScenarioSpec {
             "scenario '{}': rate phases need positive duration and multiplier",
             self.name
         );
+        for (ti, t) in self.tags.iter().enumerate() {
+            ensure!(!t.is_empty(), "scenario '{}': empty regime tag", self.name);
+            ensure!(
+                !self.tags[..ti].contains(t),
+                "scenario '{}': duplicate regime tag '{t}'",
+                self.name
+            );
+        }
         Ok(())
     }
 
@@ -469,6 +482,18 @@ impl ScenarioSpec {
             pool_capacity <= u32::MAX as u64,
             "scenario '{name}': pool_capacity {pool_capacity} exceeds u32"
         );
+        let mut tags = Vec::new();
+        if let Some(arr) = j.get("tags") {
+            let arr = arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("scenario '{name}': 'tags' must be an array"))?;
+            for t in arr {
+                let t = t
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("scenario '{name}': tags must be strings"))?;
+                tags.push(t.to_string());
+            }
+        }
         Ok(ScenarioSpec {
             description,
             market: market_from_json(market_j, &name)?,
@@ -476,6 +501,7 @@ impl ScenarioSpec {
             pool_capacity: pool_capacity as u32,
             policy_set: PolicySetSpec::from_str(j.opt_str("policy_set", "auto"))?,
             jobs: j.opt_u64("jobs", 400) as usize,
+            tags,
             name,
         })
     }
@@ -486,8 +512,16 @@ impl ScenarioSpec {
             .set("description", Json::Str(self.description.clone()))
             .set("jobs", Json::Num(self.jobs as f64))
             .set("pool_capacity", Json::Num(self.pool_capacity as f64))
-            .set("policy_set", Json::Str(self.policy_set.as_str().into()))
-            .set("market", market_to_json(&self.market))
+            .set("policy_set", Json::Str(self.policy_set.as_str().into()));
+        // The empty default stays off-disk (pre-tag spec files round-trip
+        // byte-identically).
+        if !self.tags.is_empty() {
+            j.set(
+                "tags",
+                Json::Arr(self.tags.iter().map(|t| Json::Str(t.clone())).collect()),
+            );
+        }
+        j.set("market", market_to_json(&self.market))
             .set("workload", workload_to_json(&self.workload));
         j
     }
@@ -897,6 +931,7 @@ mod tests {
             pool_capacity: 120,
             policy_set: PolicySetSpec::Auto,
             jobs: 250,
+            tags: Vec::new(),
         }
     }
 
@@ -910,6 +945,32 @@ mod tests {
         // And via text.
         let re = ScenarioSpec::parse(&j.pretty()).unwrap();
         assert_eq!(re, s);
+    }
+
+    #[test]
+    fn tags_roundtrip_and_stay_off_disk_when_empty() {
+        // Untagged specs serialize exactly as before the key existed.
+        let plain = sample().to_json().pretty();
+        assert!(!plain.contains("\"tags\""), "{plain}");
+        // Tagged specs round-trip.
+        let mut s = sample();
+        s.tags = vec!["calm".into(), "surge".into()];
+        s.validate().unwrap();
+        let back = ScenarioSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        let re = ScenarioSpec::parse(&s.to_json().pretty()).unwrap();
+        assert_eq!(re, s);
+        // Empty and duplicate tags are rejected.
+        let mut bad = sample();
+        bad.tags = vec!["".into()];
+        assert!(bad.validate().is_err());
+        let mut dup = sample();
+        dup.tags = vec!["calm".into(), "calm".into()];
+        assert!(dup.validate().is_err());
+        // Non-string tags error at parse time.
+        let mut j = sample().to_json();
+        j.set("tags", Json::Arr(vec![Json::Num(3.0)]));
+        assert!(ScenarioSpec::from_json(&j).is_err());
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Robustness-engine acceptance tests: derivation is a byte-deterministic
+//! pure function of `(bases, total, seed, params)` even at 1000-world
+//! population scale; a derived-population fleet run merges to identical
+//! bytes for any shard partition and thread count; and the promotion
+//! gate's verdict document is stable under report-row reordering.
+
+use dagcloud::fleet::FleetAccumulator;
+use dagcloud::robustness::{
+    derive_population, derive_world, derivation_plan, evaluate_gate, gate_json, DeriveParams,
+    GateConfig, Operator,
+};
+use dagcloud::scenario::{self, BatchOptions, ScenarioOutcome, ScenarioSpec};
+use dagcloud::util::prop::{for_all, Config as PropConfig};
+
+fn bases(names: &[&str]) -> Vec<ScenarioSpec> {
+    names.iter().map(|n| scenario::find(n).unwrap()).collect()
+}
+
+/// The ISSUE's scale acceptance: deriving >= 1000 worlds is deterministic
+/// byte-for-byte — every derived spec serializes to identical JSON on a
+/// second derivation, names are unique, and every spec validates.
+#[test]
+fn thousand_world_derivation_is_byte_deterministic() {
+    let b = bases(&["paper-default", "capacity-crunch"]);
+    let p = DeriveParams::default();
+    let pop1 = derive_population(&b, 1000, 99, &p).unwrap();
+    let pop2 = derive_population(&b, 1000, 99, &p).unwrap();
+    assert_eq!(pop1.len(), 1000);
+    for (a, c) in pop1.iter().zip(&pop2) {
+        assert_eq!(a.to_json().pretty(), c.to_json().pretty(), "world {}", a.name);
+    }
+    let mut names: Vec<&str> = pop1.iter().map(|s| s.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), 1000, "derived names collide");
+    for s in &pop1 {
+        s.validate().unwrap();
+    }
+    // The census the CLI prints covers exactly the dealt population.
+    let plan = derivation_plan(&b, 1000);
+    assert_eq!(plan.iter().map(|(_, _, n)| n).sum::<usize>(), 1000);
+    // A different seed derives a genuinely different population.
+    let other = derive_population(&b, 1000, 100, &p).unwrap();
+    assert!(
+        pop1.iter().zip(&other).any(|(a, c)| a.market != c.market),
+        "seed does not influence derivation"
+    );
+}
+
+/// Per-world determinism across call paths: deriving a single world
+/// directly equals the same world inside the dealt population.
+#[test]
+fn direct_and_population_derivation_agree() {
+    let b = bases(&["paper-default", "capacity-crunch"]);
+    let p = DeriveParams::default();
+    let pop = derive_population(&b, 18, 7, &p).unwrap();
+    // paper-default skips capdrop -> 4 + 5 = 9 pairs; world 0 of the
+    // population is (paper-default, boot) replica 0, world 9 replica 1.
+    let direct0 = derive_world(&b[0], Operator::BlockBootstrap, 0, 7, &p).unwrap();
+    let direct1 = derive_world(&b[0], Operator::BlockBootstrap, 1, 7, &p).unwrap();
+    assert_eq!(pop[0], direct0);
+    assert_eq!(pop[9], direct1);
+}
+
+fn run_cells(specs: &[ScenarioSpec], threads: usize) -> Vec<ScenarioOutcome> {
+    scenario::run_batch(
+        specs,
+        &BatchOptions {
+            seeds: 1,
+            base_seed: 41,
+            threads,
+            jobs_override: Some(8),
+        },
+    )
+    .unwrap()
+}
+
+fn fleet_and_gate_bytes(shards: &[Vec<ScenarioOutcome>]) -> (String, String) {
+    let mut acc = FleetAccumulator::new();
+    for shard in shards {
+        acc.absorb(&scenario::report_json(shard, 1, 41, true)).unwrap();
+    }
+    let fleet = acc.fleet_json(None).unwrap().pretty();
+    let gate = gate_json(&evaluate_gate(
+        &acc.canonical_outcomes(),
+        &GateConfig::default(),
+    ))
+    .pretty();
+    (fleet, gate)
+}
+
+/// A derived-population fleet run is byte-identical across thread counts
+/// and any shard partition / merge order — the derived worlds are plain
+/// specs, so the fleet layer's invariance carries over, now including the
+/// quantile/CVaR robustness section and the gate document.
+#[test]
+fn derived_population_fleet_is_invariant_under_shards_and_threads() {
+    let mut b = bases(&["paper-default", "calm-surge-markov"]);
+    for s in &mut b {
+        s.workload.small_tasks = true;
+    }
+    let mut specs = b.clone();
+    specs.extend(derive_population(&b, 6, 13, &DeriveParams::default()).unwrap());
+
+    let all = run_cells(&specs, 4);
+    assert_eq!(all.len(), 8, "2 bases + 6 derived, 1 seed each");
+    // Thread count must not leak into any cell.
+    let single_threaded = run_cells(&specs, 1);
+    assert_eq!(all, single_threaded);
+
+    let (fleet_ref, gate_ref) = fleet_and_gate_bytes(&[all.clone()]);
+    for_all(PropConfig::cases(8).seed(0xB0B5), |rng| {
+        let k = rng.range_inclusive(1, 4) as usize;
+        let mut shards: Vec<Vec<ScenarioOutcome>> = vec![Vec::new(); k];
+        for o in &all {
+            shards[rng.below(k as u64) as usize].push(o.clone());
+        }
+        let mut shards: Vec<Vec<ScenarioOutcome>> =
+            shards.into_iter().filter(|s| !s.is_empty()).collect();
+        for s in &mut shards {
+            rng.shuffle(s);
+        }
+        rng.shuffle(&mut shards);
+        let (fleet, gate) = fleet_and_gate_bytes(&shards);
+        if fleet != fleet_ref {
+            return Err(format!("fleet.json differs for a {}-shard partition", shards.len()));
+        }
+        if gate != gate_ref {
+            return Err(format!(
+                "robustness.json differs for a {}-shard partition",
+                shards.len()
+            ));
+        }
+        Ok(())
+    });
+
+    // The derived fault worlds must be visible to the gate as a regime.
+    let report = evaluate_gate(&all, &GateConfig::default());
+    assert!(
+        report.regimes.iter().any(|(t, _)| t == "fault"),
+        "expected a fault regime from spike/gap/capdrop derivations, got {:?}",
+        report.regimes
+    );
+    assert!(report.worlds == 8);
+}

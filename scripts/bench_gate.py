@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare the current run's BENCH_*.json files
+against the previous successful run's artifacts and fail on a hot-path
+slowdown beyond the threshold.
+
+Usage:
+    bench_gate.py --baseline DIR --current DIR [--threshold 0.15]
+
+Both directories hold BENCH_<name>.json files as produced by the Rust
+bench harness (an array of rows: {"name", "iters", "mean_ns", "p50_ns",
+"p95_ns", ...}). Rows are matched across runs by their "name" field,
+file by file; a row or file present on only one side is reported but
+never fails the gate (benches come and go; the gate only guards rows
+that exist on both sides).
+
+A missing or empty baseline directory passes with a notice — the first
+run on a branch, or an expired artifact, must not brick CI. CI noise is
+real on shared runners, so the default threshold is deliberately
+generous (15% on mean_ns); catching 2x regressions reliably beats
+flagging 5% ones noisily.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load_rows(path):
+    """BENCH file -> {bench name: mean_ns}, skipping malformed rows."""
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"  warning: unreadable bench file {path}: {e}")
+        return {}
+    rows = {}
+    if not isinstance(data, list):
+        print(f"  warning: {path} is not a bench row array")
+        return {}
+    for row in data:
+        name = row.get("name") if isinstance(row, dict) else None
+        mean = row.get("mean_ns") if isinstance(row, dict) else None
+        if isinstance(name, str) and isinstance(mean, (int, float)) and mean > 0:
+            rows[name] = float(mean)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="previous run's BENCH dir")
+    ap.add_argument("--current", required=True, help="this run's BENCH dir")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="max tolerated mean_ns increase (fraction, default 0.15)",
+    )
+    args = ap.parse_args()
+
+    base_dir = pathlib.Path(args.baseline)
+    cur_dir = pathlib.Path(args.current)
+    cur_files = sorted(cur_dir.glob("BENCH_*.json"))
+    if not cur_files:
+        print(f"no BENCH_*.json under {cur_dir}; nothing to gate")
+        return 1
+    if not base_dir.is_dir() or not any(base_dir.rglob("BENCH_*.json")):
+        print(f"no baseline artifacts under {base_dir}; passing (first run or expired)")
+        return 0
+
+    failures = []
+    compared = 0
+    for cur_file in cur_files:
+        base_file = base_dir / cur_file.name
+        if not base_file.exists():
+            # Artifact downloads may nest each artifact in its own
+            # directory; accept BENCH_foo/BENCH_foo.json too.
+            nested = base_dir / cur_file.stem / cur_file.name
+            if nested.exists():
+                base_file = nested
+            else:
+                print(f"  {cur_file.name}: no baseline counterpart (new bench file)")
+                continue
+        base_rows = load_rows(base_file)
+        cur_rows = load_rows(cur_file)
+        for name, cur_mean in sorted(cur_rows.items()):
+            if name not in base_rows:
+                print(f"  {cur_file.name}: '{name}' is new (no baseline row)")
+                continue
+            base_mean = base_rows[name]
+            ratio = cur_mean / base_mean - 1.0
+            compared += 1
+            marker = "OK "
+            if ratio > args.threshold:
+                marker = "FAIL"
+                failures.append((name, base_mean, cur_mean, ratio))
+            print(
+                f"  [{marker}] {name}: {base_mean:.0f} -> {cur_mean:.0f} ns "
+                f"({ratio:+.1%})"
+            )
+
+    print(f"compared {compared} bench row(s), threshold {args.threshold:.0%}")
+    if failures:
+        print(f"{len(failures)} hot-path regression(s) beyond the threshold:")
+        for name, base_mean, cur_mean, ratio in failures:
+            print(f"  {name}: {base_mean:.0f} -> {cur_mean:.0f} ns ({ratio:+.1%})")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
