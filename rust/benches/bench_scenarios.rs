@@ -52,6 +52,7 @@ fn main() {
         base_seed: 7,
         threads,
         jobs_override: Some(16),
+        telemetry: Default::default(),
     };
     b.bench_throughput(
         "scenario/registry_batch_16jobs",

@@ -1,0 +1,70 @@
+//! Telemetry overhead benches: what instrumentation costs when it is on,
+//! and — the number that justifies leaving the hooks in the hot loops —
+//! what it costs when it is off.
+
+use dagcloud::telemetry::{Histogram, LogLevel, SimEventKind, Telemetry, TelemetryOptions};
+use dagcloud::util::bench::Bencher;
+
+fn enabled() -> Telemetry {
+    Telemetry::new(TelemetryOptions {
+        events: true,
+        spans: true,
+        level: LogLevel::Quiet,
+    })
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_telemetry ==\n");
+
+    // --- span guards: the per-scope RAII cost ---
+    let t_on = enabled();
+    b.bench_throughput("telemetry/span_enabled", 1.0, "spans/s", || {
+        t_on.span("bench/scope")
+    });
+    let t_off = Telemetry::disabled();
+    b.bench_throughput("telemetry/span_disabled", 1.0, "spans/s", || {
+        t_off.span("bench/scope")
+    });
+
+    // --- event emission: the per-event cost inside the coordinator loop ---
+    let mut rec_on = t_on.recorder("bench#0");
+    let mut i = 0usize;
+    b.bench_throughput("telemetry/emit_enabled", 1.0, "events/s", || {
+        i = i.wrapping_add(1);
+        rec_on.emit(i as f64, SimEventKind::FrontierAdvanced { slots: i });
+    });
+    let mut rec_off = t_off.recorder("bench#0");
+    b.bench_throughput("telemetry/emit_disabled", 1.0, "events/s", || {
+        i = i.wrapping_add(1);
+        rec_off.emit(i as f64, SimEventKind::FrontierAdvanced { slots: i });
+    });
+
+    // --- histogram observe: the per-sample cost behind every span drop ---
+    let mut h = Histogram::new();
+    let mut ns = 1u64;
+    b.bench_throughput("telemetry/hist_observe", 1.0, "samples/s", || {
+        ns = ns.wrapping_mul(6364136223846793005).wrapping_add(1);
+        h.observe(ns >> 34);
+    });
+
+    // --- export: canonical sort + serialization of a populated log ---
+    let t_doc = enabled();
+    for src in 0..8 {
+        let mut r = t_doc.recorder(&format!("world#{src}"));
+        for k in 0..512u32 {
+            r.emit(k as f64 * 0.25, SimEventKind::SpecChosen { job: k as usize, spec: (k % 175) as usize });
+        }
+        t_doc.absorb(r);
+    }
+    b.bench("telemetry/deterministic_export_4096ev", || {
+        t_doc.deterministic_json().pretty()
+    });
+    b.bench("telemetry/chrome_trace_export", || {
+        t_on.chrome_trace_json().pretty()
+    });
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_telemetry.json").ok();
+    println!("\nresults written to results/bench_telemetry.json");
+}

@@ -51,6 +51,11 @@ pub struct Config {
     pub threads: usize,
     /// Use the PJRT kernel for counterfactual sweeps when artifacts exist.
     pub use_pjrt: bool,
+    /// Observability handle (event log / span profiler / status logger).
+    /// Run-level, not world-level: never serialized by [`Config::to_json`]
+    /// and never part of a run's identity — report bytes are identical
+    /// whatever its planes are set to.
+    pub telemetry: crate::telemetry::Telemetry,
 }
 
 impl Default for Config {
@@ -67,6 +72,7 @@ impl Default for Config {
             routing: RoutingPolicy::Home,
             threads: 0,
             use_pjrt: true,
+            telemetry: crate::telemetry::Telemetry::disabled(),
         }
     }
 }
@@ -175,6 +181,7 @@ impl Config {
             routing,
             threads: j.opt_u64("threads", d.threads as u64) as usize,
             use_pjrt: j.opt_bool("use_pjrt", d.use_pjrt),
+            telemetry: d.telemetry,
         })
     }
 
@@ -346,6 +353,7 @@ mod tests {
             routing: RoutingPolicy::Home,
             threads: 2,
             use_pjrt: false,
+            telemetry: crate::telemetry::Telemetry::disabled(),
         };
         let j = c.to_json();
         assert!(j.get("offers").is_none(), "degenerate config stays legacy-shaped");

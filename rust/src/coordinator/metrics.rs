@@ -1,9 +1,18 @@
 //! Run metrics: counters/gauges collected by the coordinator and dumped as
 //! JSON for EXPERIMENTS.md.
+//!
+//! The JSON layout keeps the two telemetry planes separate (the same
+//! contract as `dagcloud.telemetry/v1`): counters and gauges are
+//! deterministic simulation state and live under `"deterministic"`;
+//! elapsed wall time and latency histograms live under `"wall_clock"`. A
+//! report that wants reproducible bytes embeds the `deterministic`
+//! section only — it can no longer silently pick up `elapsed_secs` by
+//! embedding the whole object.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::telemetry::Histogram;
 use crate::util::json::Json;
 
 /// A lightweight metrics registry.
@@ -11,6 +20,7 @@ use crate::util::json::Json;
 pub struct Metrics {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
     started: Instant,
 }
 
@@ -25,6 +35,7 @@ impl Metrics {
         Metrics {
             counters: BTreeMap::new(),
             gauges: BTreeMap::new(),
+            histograms: BTreeMap::new(),
             started: Instant::now(),
         }
     }
@@ -37,6 +48,14 @@ impl Metrics {
         self.gauges.insert(name.to_string(), value);
     }
 
+    /// Record a wall-clock duration into the named log-scale histogram.
+    pub fn observe_ns(&mut self, name: &str, ns: u64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_default()
+            .observe(ns);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
@@ -45,12 +64,20 @@ impl Metrics {
         self.gauges.get(name).copied()
     }
 
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
     pub fn elapsed_secs(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }
 
+    /// `{"deterministic": {"counters", "gauges"},
+    ///   "wall_clock": {"elapsed_secs", "histograms"}}`.
+    ///
+    /// Only the `deterministic` section may ever be embedded in a
+    /// byte-reproducible report.
     pub fn to_json(&self) -> Json {
-        let mut j = Json::obj();
         let mut counters = Json::obj();
         for (k, v) in &self.counters {
             counters.set(k, Json::Num(*v as f64));
@@ -59,9 +86,19 @@ impl Metrics {
         for (k, v) in &self.gauges {
             gauges.set(k, Json::Num(*v));
         }
-        j.set("counters", counters)
-            .set("gauges", gauges)
-            .set("elapsed_secs", Json::Num(self.elapsed_secs()));
+        let mut det = Json::obj();
+        det.set("counters", counters).set("gauges", gauges);
+
+        let mut hists = Json::obj();
+        for (k, h) in &self.histograms {
+            hists.set(k, h.to_json());
+        }
+        let mut wall = Json::obj();
+        wall.set("elapsed_secs", Json::Num(self.elapsed_secs()))
+            .set("histograms", hists);
+
+        let mut j = Json::obj();
+        j.set("deterministic", det).set("wall_clock", wall);
         j
     }
 }
@@ -80,6 +117,41 @@ mod tests {
         assert_eq!(m.counter("missing"), 0);
         assert_eq!(m.gauge("alpha"), Some(0.25));
         let j = m.to_json();
-        assert_eq!(j.get("counters").unwrap().get("jobs").unwrap().as_f64(), Some(5.0));
+        let det = j.get("deterministic").unwrap();
+        assert_eq!(
+            det.get("counters").unwrap().get("jobs").unwrap().as_f64(),
+            Some(5.0)
+        );
+        assert_eq!(
+            det.get("gauges").unwrap().get("alpha").unwrap().as_f64(),
+            Some(0.25)
+        );
+    }
+
+    #[test]
+    fn wall_clock_is_quarantined() {
+        let mut m = Metrics::new();
+        m.incr("jobs", 1);
+        m.observe_ns("sweep", 1500);
+        let j = m.to_json();
+        // Nothing nondeterministic under "deterministic" ...
+        let det = j.get("deterministic").unwrap();
+        assert!(det.get("elapsed_secs").is_none());
+        assert!(det.get("histograms").is_none());
+        // ... and everything wall-clock under "wall_clock".
+        let wall = j.get("wall_clock").unwrap();
+        assert!(wall.get("elapsed_secs").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            wall.get("histograms")
+                .unwrap()
+                .get("sweep")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(m.histogram("sweep").unwrap().count(), 1);
+        assert!(m.histogram("missing").is_none());
     }
 }

@@ -18,7 +18,9 @@ pub mod online;
 pub use config::{Config, OfferConfig};
 pub use exec_pool::parallel_map;
 pub use metrics::Metrics;
-pub use online::{tola_run_online, OnlineOptions, OnlineReport, OnlineSnapshot};
+pub use online::{
+    tola_run_online, tola_run_online_traced, OnlineOptions, OnlineReport, OnlineSnapshot,
+};
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -36,7 +38,8 @@ use crate::policy::routing::RoutingPolicy;
 use crate::policy::selfowned::{naive_allocation, rule12};
 use crate::policy::Policy;
 use crate::runtime::ArtifactRuntime;
-use crate::sim::executor::{execute_task, execute_task_routed};
+use crate::sim::executor::{execute_task, execute_task_routed_decide};
+use crate::telemetry::{Recorder, SimEventKind, Telemetry};
 use crate::util::rng::Pcg32;
 use crate::workload::ChainJob;
 
@@ -140,6 +143,33 @@ pub fn tola_run(
     )
 }
 
+/// [`tola_run`] with telemetry recording (see [`tola_run_view_traced`]).
+#[allow(clippy::too_many_arguments)]
+pub fn tola_run_traced(
+    jobs: &[ChainJob],
+    specs: &[CfSpec],
+    trace: &PriceTrace,
+    pool_capacity: u32,
+    od_price: f64,
+    seed: u64,
+    evaluator: &Evaluator,
+    tele: &Telemetry,
+    rec: &mut Recorder,
+) -> LearningReport {
+    let view = MarketView::single(trace.clone(), od_price);
+    tola_run_view_traced(
+        jobs,
+        specs,
+        &view,
+        RoutingPolicy::Home,
+        pool_capacity,
+        seed,
+        evaluator,
+        tele,
+        rec,
+    )
+}
+
 /// Run TOLA (Algorithm 4) over a stream of chain jobs against a
 /// capacity-aware [`MarketView`].
 ///
@@ -166,6 +196,37 @@ pub fn tola_run_view(
     pool_capacity: u32,
     seed: u64,
     evaluator: &Evaluator,
+) -> LearningReport {
+    tola_run_view_traced(
+        jobs,
+        specs,
+        view,
+        routing,
+        pool_capacity,
+        seed,
+        evaluator,
+        &Telemetry::disabled(),
+        &mut Recorder::disabled(),
+    )
+}
+
+/// [`tola_run_view`] with telemetry: sim-time events (spec sampled, window
+/// opened, offer routed, capacity exhausted, sweep batch, parameter
+/// snapshot) land in `rec`, wall-clock sweep spans in `tele`. With both
+/// planes disabled every hook is a dead branch, and the learning results
+/// are bit-identical either way — telemetry only *observes* the loop
+/// (property-tested in `tests/integration_telemetry.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn tola_run_view_traced(
+    jobs: &[ChainJob],
+    specs: &[CfSpec],
+    view: &MarketView,
+    routing: RoutingPolicy,
+    pool_capacity: u32,
+    seed: u64,
+    evaluator: &Evaluator,
+    tele: &Telemetry,
+    rec: &mut Recorder,
 ) -> LearningReport {
     assert!(!jobs.is_empty() && !specs.is_empty());
     let degenerate = view.is_degenerate();
@@ -214,6 +275,7 @@ pub fn tola_run_view(
                     // Arrival: sample a policy and allocate deadlines
                     // (Algorithm 4 lines 8–9 + Algorithm 2 lines 1–5).
                     let pick = tola.pick(&mut rng);
+                    rec.emit(job.arrival, SimEventKind::SpecChosen { job: ji, spec: pick });
                     let spec = specs[pick];
                     let windows = match spec {
                         CfSpec::Proposed(p) => dealloc(job, p.dealloc_beta(has_pool)),
@@ -238,6 +300,7 @@ pub fn tola_run_view(
                 };
                 let task = &job.tasks[ti];
                 let start = time.min(deadline);
+                rec.emit(start, SimEventKind::WindowOpened { job: ji, task: ti, start, deadline });
                 let hat_s = (deadline - start).max(1e-12);
                 let (bid, r) = match (&mut pool, spec) {
                     (None, s) => (spec_bid(&s), 0),
@@ -276,7 +339,7 @@ pub fn tola_run_view(
                         ),
                     )
                 } else {
-                    execute_task_routed(
+                    let (d, out) = execute_task_routed_decide(
                         task.size,
                         task.parallelism,
                         start,
@@ -286,7 +349,23 @@ pub fn tola_run_view(
                         view,
                         &mut capacity,
                         routing,
-                    )
+                    );
+                    rec.emit(
+                        start,
+                        SimEventKind::OfferRouted {
+                            job: ji,
+                            task: ti,
+                            offer: d.offer,
+                            spilled: d.offer != 0,
+                        },
+                    );
+                    if !d.spot_capacity {
+                        rec.emit(
+                            start,
+                            SimEventKind::CapacityExhausted { job: ji, task: ti, offer: d.offer },
+                        );
+                    }
+                    (d.offer, out)
                 };
                 offer_work[offer] += out.spot_work + out.od_work;
                 ledger.charge(InstanceKind::SelfOwned, 1.0, out.so_work, 0.0);
@@ -320,6 +399,11 @@ pub fn tola_run_view(
                         batch.push((t2, j2));
                     }
                 }
+                rec.emit(
+                    time,
+                    SimEventKind::SweepBatch { retired: batch.len(), specs: specs.len() },
+                );
+                let sweep_span = tele.span("coordinator/sweep_batch");
                 let all_costs: Vec<Vec<f64>> = if degenerate {
                     let cfs: Vec<CounterfactualJob> = batch
                         .iter()
@@ -411,6 +495,7 @@ pub fn tola_run_view(
                     };
                     sweep::sweep_batch_costs_multi(&cfs, specs, has_pool, threads)
                 };
+                drop(sweep_span);
                 for (&(t, ji), costs) in batch.iter().zip(&all_costs) {
                     let realized = states[ji].as_ref().map(|s| s.cost).unwrap_or(0.0);
                     tola.update(costs, t.max(d_max * 1.001));
@@ -422,6 +507,16 @@ pub fn tola_run_view(
                             .cloned()
                             .fold(0.0f64, f64::max);
                         weight_trajectory.push(wmax);
+                        if rec.is_on() {
+                            rec.emit(
+                                t,
+                                SimEventKind::ParamSnapshot {
+                                    jobs: regret.jobs() as usize,
+                                    max_weight: wmax,
+                                    best_policy: specs[tola.best()].label(),
+                                },
+                            );
+                        }
                     }
                 }
             }
@@ -507,7 +602,7 @@ pub fn cli_main() -> i32 {
     match crate::experiments::dispatch(argv) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            crate::telemetry::Logger::default().error("repro", &format!("{e:#}"));
             1
         }
     }

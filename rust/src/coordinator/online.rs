@@ -37,7 +37,8 @@ use crate::policy::baselines::even_windows;
 use crate::policy::dealloc::{dealloc, windows_to_deadlines};
 use crate::policy::routing::RoutingPolicy;
 use crate::policy::selfowned::{naive_allocation, rule12};
-use crate::sim::executor::{execute_task, execute_task_routed};
+use crate::sim::executor::{execute_task, execute_task_routed_decide};
+use crate::telemetry::{Recorder, SimEventKind, Telemetry};
 use crate::util::rng::Pcg32;
 use crate::workload::ChainJob;
 
@@ -221,6 +222,30 @@ pub fn tola_run_online(
     opts: &OnlineOptions,
     evaluator: &Evaluator,
 ) -> Result<OnlineReport> {
+    tola_run_online_traced(
+        jobs,
+        specs,
+        feed,
+        opts,
+        evaluator,
+        &Telemetry::disabled(),
+        &mut Recorder::disabled(),
+    )
+}
+
+/// [`tola_run_online`] with telemetry: the batch-loop events plus
+/// `frontier_advanced` whenever an event's ingestion gate grows the shared
+/// feed frontier. Telemetry only observes — results are bit-identical
+/// with the planes on or off.
+pub fn tola_run_online_traced(
+    jobs: &[ChainJob],
+    specs: &[CfSpec],
+    feed: FeedMux,
+    opts: &OnlineOptions,
+    evaluator: &Evaluator,
+    tele: &Telemetry,
+    rec: &mut Recorder,
+) -> Result<OnlineReport> {
     ensure!(!jobs.is_empty() && !specs.is_empty(), "online run needs jobs and specs");
     let degenerate = feed.is_degenerate();
     let dt = feed.slot_len();
@@ -283,6 +308,7 @@ pub fn tola_run_online(
                     // No prices read — this is what "schedule using only
                     // already-ingested prices" means for arrivals.
                     let pick = tola.pick(&mut rng);
+                    rec.emit(job.arrival, SimEventKind::SpecChosen { job: ji, spec: pick });
                     let spec = specs[pick];
                     let windows = match spec {
                         CfSpec::Proposed(p) => dealloc(job, p.dealloc_beta(has_pool)),
@@ -307,6 +333,7 @@ pub fn tola_run_online(
                 };
                 let task = &job.tasks[ti];
                 let start = time.min(deadline);
+                rec.emit(start, SimEventKind::WindowOpened { job: ji, task: ti, start, deadline });
                 let hat_s = (deadline - start).max(1e-12);
                 let (bid, r) = match (&mut pool, spec) {
                     (None, s) => (spec_bid(&s), 0),
@@ -344,7 +371,12 @@ pub fn tola_run_online(
                     0
                 };
                 if need > 0 {
+                    let before = market.mux.frontier_slot();
                     market.ensure_slots(need, time)?;
+                    let after = market.mux.frontier_slot();
+                    if after > before {
+                        rec.emit(time, SimEventKind::FrontierAdvanced { slots: after });
+                    }
                 }
                 let (offer, out) = if degenerate {
                     (
@@ -361,7 +393,7 @@ pub fn tola_run_online(
                         ),
                     )
                 } else {
-                    execute_task_routed(
+                    let (d, out) = execute_task_routed_decide(
                         task.size,
                         task.parallelism,
                         start,
@@ -371,7 +403,23 @@ pub fn tola_run_online(
                         &market.view,
                         &mut capacity,
                         routing,
-                    )
+                    );
+                    rec.emit(
+                        start,
+                        SimEventKind::OfferRouted {
+                            job: ji,
+                            task: ti,
+                            offer: d.offer,
+                            spilled: d.offer != 0,
+                        },
+                    );
+                    if !d.spot_capacity {
+                        rec.emit(
+                            start,
+                            SimEventKind::CapacityExhausted { job: ji, task: ti, offer: d.offer },
+                        );
+                    }
+                    (d.offer, out)
                 };
                 offer_work[offer] += out.spot_work + out.od_work;
                 ledger.charge(InstanceKind::SelfOwned, 1.0, out.so_work, 0.0);
@@ -405,7 +453,17 @@ pub fn tola_run_online(
                     }
                 }
                 let latest = batch.iter().map(|&(t, _)| t).fold(time, f64::max);
+                let before = market.mux.frontier_slot();
                 market.ensure_slots(slots_through(latest, dt), time)?;
+                let after = market.mux.frontier_slot();
+                if after > before {
+                    rec.emit(time, SimEventKind::FrontierAdvanced { slots: after });
+                }
+                rec.emit(
+                    time,
+                    SimEventKind::SweepBatch { retired: batch.len(), specs: specs.len() },
+                );
+                let sweep_span = tele.span("coordinator/sweep_batch");
                 let trace = &market.view.home().trace;
                 let all_costs: Vec<Vec<f64>> = if degenerate {
                     let cfs: Vec<CounterfactualJob> = batch
@@ -485,6 +543,7 @@ pub fn tola_run_online(
                     };
                     sweep::sweep_batch_costs_multi(&cfs, specs, has_pool, threads)
                 };
+                drop(sweep_span);
                 for (&(t, ji), costs) in batch.iter().zip(&all_costs) {
                     let realized = states[ji].as_ref().map(|s| s.cost).unwrap_or(0.0);
                     tola.update(costs, t.max(d_max * 1.001));
@@ -497,6 +556,16 @@ pub fn tola_run_online(
                             .cloned()
                             .fold(0.0f64, f64::max);
                         weight_trajectory.push(wmax);
+                        if rec.is_on() {
+                            rec.emit(
+                                t,
+                                SimEventKind::ParamSnapshot {
+                                    jobs: regret.jobs() as usize,
+                                    max_weight: wmax,
+                                    best_policy: specs[tola.best()].label(),
+                                },
+                            );
+                        }
                     }
                     if regret.jobs() >= next_snapshot {
                         let snap = regret.snapshot(0.05);

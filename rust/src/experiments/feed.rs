@@ -9,7 +9,7 @@
 
 use anyhow::{ensure, Result};
 
-use crate::coordinator::{tola_run_online, Config, Evaluator, OnlineOptions};
+use crate::coordinator::{tola_run_online_traced, Config, Evaluator, OnlineOptions};
 use crate::feed::{FeedBinding, FeedFilter, FeedFormat, FeedMux};
 use crate::market::{SpotModel, SLOTS_PER_UNIT};
 use crate::policy::routing::RoutingPolicy;
@@ -66,18 +66,22 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
     let last = load.events.last().expect("loader guarantees ≥1 event").time;
     // The buffer commits the final observation's own slot on close.
     let feed_horizon = ((last / slot_len + 0.5).ceil()).max(1.0) * slot_len;
-    println!(
-        "== feed: {} ({}) ==\n  {} records -> {} events (series {}, {} duplicates, \
-         {} out-of-order), horizon {:.1} units ({} slots)",
-        opts.trace_path,
-        format.as_str(),
-        load.records,
-        load.events.len(),
-        load.series,
-        load.duplicates,
-        load.out_of_order,
-        feed_horizon,
-        (feed_horizon / slot_len).round() as usize
+    let log = *cfg.telemetry.logger();
+    log.info(
+        "feed",
+        &format!(
+            "{} ({}): {} records -> {} events (series {}, {} duplicates, \
+             {} out-of-order), horizon {:.1} units ({} slots)",
+            opts.trace_path,
+            format.as_str(),
+            load.records,
+            load.events.len(),
+            load.series,
+            load.duplicates,
+            load.out_of_order,
+            feed_horizon,
+            (feed_horizon / slot_len).round() as usize
+        ),
     );
 
     // Workload / pool / policy grid: a registry world or §6.1 defaults.
@@ -98,6 +102,7 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
             pool_capacity: 0,
             policy_set: PolicySetSpec::Auto,
             jobs: cfg.jobs,
+            tags: Vec::new(),
         },
     };
     let target_jobs = opts.jobs_override.unwrap_or(spec.jobs);
@@ -115,10 +120,13 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
          generated jobs; lower --jobs/--time-scale or use a longer dump"
     );
     if jobs.len() < target_jobs {
-        println!(
-            "  {} of {} jobs fit the feed horizon (the rest arrive after the stream ends)",
-            jobs.len(),
-            target_jobs
+        log.info(
+            "feed",
+            &format!(
+                "{} of {} jobs fit the feed horizon (the rest arrive after the stream ends)",
+                jobs.len(),
+                target_jobs
+            ),
         );
     }
 
@@ -143,7 +151,8 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
         snapshot_every,
     };
     let t0 = std::time::Instant::now();
-    let out = tola_run_online(
+    let mut rec = cfg.telemetry.recorder(&format!("{}#feed", spec.name));
+    let out = tola_run_online_traced(
         &jobs,
         &specs,
         mux,
@@ -151,7 +160,10 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
         &Evaluator::Native {
             threads: cfg.effective_threads(),
         },
+        &cfg.telemetry,
+        &mut rec,
     )?;
+    cfg.telemetry.absorb(rec);
     let dt_s = t0.elapsed().as_secs_f64();
 
     println!(
@@ -215,7 +227,7 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
         );
     let path = format!("{out_dir}/feed_run.json");
     std::fs::write(&path, j.pretty())?;
-    println!("  written to {path}");
+    log.info("feed", &format!("written to {path}"));
     Ok(())
 }
 

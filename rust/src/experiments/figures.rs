@@ -211,7 +211,7 @@ pub fn figure1(out_dir: &str) -> Result<()> {
 }
 
 /// Generate every figure's CSV into `out_dir`.
-pub fn run_all(out_dir: &str) -> Result<()> {
+pub fn run_all(log: &crate::telemetry::Logger, out_dir: &str) -> Result<()> {
     std::fs::create_dir_all(out_dir).ok();
     figure1(out_dir)?;
     write_segments(&format!("{out_dir}/figure2a.csv"), &figure2(3.5))?;
@@ -220,11 +220,14 @@ pub fn run_all(out_dir: &str) -> Result<()> {
     let f4 = figure4();
     write_segments(&format!("{out_dir}/figure3.csv"), &f3)?;
     write_segments(&format!("{out_dir}/figure4.csv"), &f4)?;
-    println!(
-        "figures written to {out_dir}/ — fig3 spot workload {:.4} (paper: 2), fig4 {:.4} (paper: 22/6 = {:.4})",
-        spot_workload(&f3, 0.5),
-        spot_workload(&f4, 0.5),
-        22.0 / 6.0
+    log.info(
+        "figures",
+        &format!(
+            "written to {out_dir}/ — fig3 spot workload {:.4} (paper: 2), fig4 {:.4} (paper: 22/6 = {:.4})",
+            spot_workload(&f3, 0.5),
+            spot_workload(&f4, 0.5),
+            22.0 / 6.0
+        ),
     );
     Ok(())
 }
@@ -290,7 +293,7 @@ mod tests {
     fn all_figures_write_files() {
         let dir = std::env::temp_dir().join("dagcloud_figs");
         std::fs::create_dir_all(&dir).unwrap();
-        run_all(dir.to_str().unwrap()).unwrap();
+        run_all(&crate::telemetry::Logger::default(), dir.to_str().unwrap()).unwrap();
         for f in [
             "figure1.csv",
             "figure2a.csv",

@@ -51,19 +51,28 @@ pub struct FleetCliOptions {
 
 pub fn run_fleet(cfg: &Config, opts: &FleetCliOptions, out_dir: &str) -> Result<()> {
     let mut acc = FleetAccumulator::new();
+    let log = *cfg.telemetry.logger();
 
     match &opts.merge_only {
         Some(paths) => {
             ensure!(!paths.is_empty(), "--merge-only needs at least one report path");
-            println!("== fleet: merging {} shard report(s) ==", paths.len());
+            log.info("fleet", &format!("merging {} shard report(s)", paths.len()));
+            let mut rec = cfg.telemetry.recorder("fleet/merge");
             for path in paths {
                 let text = std::fs::read_to_string(path)
                     .map_err(|e| anyhow::anyhow!("shard report '{path}': {e}"))?;
                 let doc = Json::parse(&text)
                     .map_err(|e| anyhow::anyhow!("shard report '{path}': {e}"))?;
+                let before = acc.len();
                 acc.absorb(&doc)
                     .map_err(|e| anyhow::anyhow!("shard report '{path}': {e}"))?;
+                log.debug("fleet", &format!("absorbed {path}"));
+                rec.emit(
+                    0.0,
+                    crate::telemetry::SimEventKind::ReportAbsorbed { rows: acc.len() - before },
+                );
             }
+            cfg.telemetry.absorb(rec);
         }
         None => {
             let mut specs = resolve_specs(&opts.names, &opts.spec_file)?;
@@ -109,11 +118,14 @@ pub fn run_fleet(cfg: &Config, opts: &FleetCliOptions, out_dir: &str) -> Result<
             })
             .collect::<Result<_>>()?;
         let merged = merge_online(&sources)?;
-        println!(
-            "  online: {} source(s), {} snapshot(s), {} jobs total",
-            merged.sources.len(),
-            merged.points.len(),
-            merged.total_jobs
+        log.info(
+            "fleet",
+            &format!(
+                "online: {} source(s), {} snapshot(s), {} jobs total",
+                merged.sources.len(),
+                merged.points.len(),
+                merged.total_jobs
+            ),
         );
         Some(merged)
     };
@@ -122,7 +134,7 @@ pub fn run_fleet(cfg: &Config, opts: &FleetCliOptions, out_dir: &str) -> Result<
     print_summary(&fleet);
     let path = format!("{out_dir}/fleet.json");
     std::fs::write(&path, fleet.pretty())?;
-    println!("  written to {path}");
+    log.info("fleet", &format!("written to {path}"));
     Ok(())
 }
 
@@ -154,17 +166,22 @@ pub(crate) fn run_sharded(
     )?;
     let manifest_path = format!("{out_dir}/fleet_manifest.json");
     std::fs::write(&manifest_path, manifest.to_json().pretty())?;
-    println!(
-        "== {label}: {} worlds x {} seeds across {} shard coordinator(s) \
-         (base seed {}, threads {}{}) ==\n  manifest written to {manifest_path}",
-        manifest.worlds(),
-        manifest.seeds,
-        manifest.shards.len(),
-        manifest.base_seed,
-        cfg.effective_threads(),
-        if smoke { ", smoke" } else { "" }
+    let log = *cfg.telemetry.logger();
+    log.info(
+        label,
+        &format!(
+            "{} worlds x {} seeds across {} shard coordinator(s) \
+             (base seed {}, threads {}{}); manifest written to {manifest_path}",
+            manifest.worlds(),
+            manifest.seeds,
+            manifest.shards.len(),
+            manifest.base_seed,
+            cfg.effective_threads(),
+            if smoke { ", smoke" } else { "" }
+        ),
     );
 
+    let mut rec = cfg.telemetry.recorder(&format!("{label}/merge"));
     let t0 = std::time::Instant::now();
     for shard in &manifest.shards {
         // One coordinator per shard: the shard's cells fan across this
@@ -177,20 +194,32 @@ pub(crate) fn run_sharded(
                 base_seed: manifest.base_seed,
                 threads: cfg.effective_threads(),
                 jobs_override: manifest.jobs_override,
+                telemetry: cfg.telemetry.clone(),
             },
         )?;
         let doc = scenario::report_json(&outcomes, manifest.seeds, manifest.base_seed, smoke);
         let path = format!("{out_dir}/{}", shard.report);
         std::fs::write(&path, doc.pretty())?;
-        println!(
-            "  shard {}: {} world(s), {} cell(s) -> {path}",
-            shard.shard,
-            shard.scenarios.len(),
-            outcomes.len()
+        log.info(
+            label,
+            &format!(
+                "shard {}: {} world(s), {} cell(s) -> {path}",
+                shard.shard,
+                shard.scenarios.len(),
+                outcomes.len()
+            ),
         );
         acc.absorb(&doc)?;
+        rec.emit(
+            0.0,
+            crate::telemetry::SimEventKind::ReportAbsorbed { rows: outcomes.len() },
+        );
     }
-    println!("  {} cells in {:.2}s", acc.len(), t0.elapsed().as_secs_f64());
+    cfg.telemetry.absorb(rec);
+    log.info(
+        label,
+        &format!("{} cells in {:.2}s", acc.len(), t0.elapsed().as_secs_f64()),
+    );
     Ok(())
 }
 

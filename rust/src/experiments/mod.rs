@@ -39,7 +39,19 @@ COMMANDS
               sharded fleet, and gate policies on cross-regime tail risk
               (results/robustness.json; see EXPERIMENTS.md §Robustness)
   run         One TOLA learning run with progress output
+  trace       Like `run`, with the wall-clock span profiler forced on; the
+              spans land in <out>/trace.json (Chrome trace-event JSON,
+              loadable in chrome://tracing or Perfetto)
   all         Run every table (tables 2–6) and figures
+
+TELEMETRY OPTIONS (every command)
+  --telemetry     record both telemetry planes and write <out>/telemetry.json
+                  (dagcloud.telemetry/v1); never changes report bytes
+  --trace         record wall-clock spans and write <out>/trace.json
+                  (on `repro feed`, --trace keeps its meaning as the input
+                  price dump path; use `--telemetry` there instead)
+  -v, --verbose   debug-level status lines on stderr
+  -q, --quiet     silence status lines (machine-readable output only)
 
 OPTIONS
   --jobs N        jobs per cell (default 2000; paper uses ~10000)
@@ -103,12 +115,34 @@ fn csv_list(args: &Args, key: &str) -> Option<Vec<String>> {
 
 /// CLI dispatch for `repro`.
 pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["no-pjrt", "verbose", "smoke", "list"]);
+    // `repro feed` predates the boolean --trace and uses it as a valued
+    // option (the input price dump), so only register the flag elsewhere.
+    let is_feed = argv.first().is_some_and(|s| s == "feed");
+    let mut flag_names = vec!["no-pjrt", "verbose", "smoke", "list", "telemetry", "quiet"];
+    if !is_feed {
+        flag_names.push("trace");
+    }
+    let args = Args::parse(argv, &flag_names);
     let cmd = args
         .positional
         .first()
         .map(|s| s.as_str())
         .unwrap_or("help");
+
+    let level = if args.flag("quiet") {
+        crate::telemetry::LogLevel::Quiet
+    } else if args.flag("verbose") {
+        crate::telemetry::LogLevel::Debug
+    } else {
+        crate::telemetry::LogLevel::Info
+    };
+    let events_on = args.flag("telemetry");
+    let trace_on = cmd == "trace" || (!is_feed && args.flag("trace"));
+    let tele = crate::telemetry::Telemetry::new(crate::telemetry::TelemetryOptions {
+        events: events_on,
+        spans: events_on || trace_on,
+        level,
+    });
 
     let mut cfg = match args.get("config") {
         Some(path) => crate::coordinator::Config::from_json_file(path)?,
@@ -122,6 +156,7 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
     if args.flag("no-pjrt") {
         cfg.use_pjrt = false;
     }
+    cfg.telemetry = tele.clone();
     let out_dir = args.get_str("out", "results");
     std::fs::create_dir_all(&out_dir).ok();
 
@@ -131,7 +166,7 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
         "table4" => tables::run_table4_5(&cfg, &out_dir)?,
         "table5" => tables::run_table4_5(&cfg, &out_dir)?,
         "table6" => tables::run_table6(&cfg, &out_dir)?,
-        "figures" => figures::run_all(&out_dir)?,
+        "figures" => figures::run_all(cfg.telemetry.logger(), &out_dir)?,
         "sweep" => perf::run_sweep_bench(&cfg, &out_dir)?,
         "feed" => {
             let trace_path = args
@@ -210,7 +245,7 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
             };
             scenarios::run_scenarios(&cfg, &opts, &out_dir)?
         }
-        "run" => {
+        "run" | "trace" => {
             // `--scenario NAME` configures the single run from a registry
             // world (its market model, pool, job mix type) via
             // Config::from_scenario; other CLI flags still apply on top.
@@ -259,6 +294,7 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
                     sc.seed = cfg.seed;
                     sc.threads = cfg.threads;
                     sc.use_pjrt = cfg.use_pjrt;
+                    sc.telemetry = cfg.telemetry.clone();
                     sc
                 }
                 None => cfg.clone(),
@@ -270,12 +306,24 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
             tables::run_table3(&cfg, &out_dir)?;
             tables::run_table4_5(&cfg, &out_dir)?;
             tables::run_table6(&cfg, &out_dir)?;
-            figures::run_all(&out_dir)?;
+            figures::run_all(cfg.telemetry.logger(), &out_dir)?;
         }
         "help" | "--help" | "-h" => print!("{HELP}"),
         other => {
             anyhow::bail!("unknown command '{other}'; see `repro help`");
         }
+    }
+
+    if tele.enabled() {
+        let path = format!("{out_dir}/telemetry.json");
+        std::fs::write(&path, tele.telemetry_json().pretty())?;
+        tele.logger().info("telemetry", &format!("wrote {path}"));
+    }
+    if trace_on {
+        let path = format!("{out_dir}/trace.json");
+        std::fs::write(&path, tele.chrome_trace_json().pretty())?;
+        tele.logger()
+            .info("telemetry", &format!("wrote {path} (chrome://tracing)"));
     }
     Ok(())
 }

@@ -22,7 +22,8 @@ use crate::util::json::Json;
 const BATCH: usize = 64;
 
 pub fn run_sweep_bench(cfg: &Config, out_dir: &str) -> Result<()> {
-    println!("== sweep: counterfactual engine throughput ==");
+    let log = *cfg.telemetry.logger();
+    log.info("sweep", "counterfactual engine throughput");
     let (jobs, trace) = super::tables::workload(cfg, 2);
     let take = jobs.len().min(BATCH);
     anyhow::ensure!(take > 0, "no jobs generated");
@@ -47,7 +48,7 @@ pub fn run_sweep_bench(cfg: &Config, out_dir: &str) -> Result<()> {
         .iter()
         .map(|&b| idx.availability(0, s_last, b).unwrap_or(0.0))
         .collect();
-    println!("   realized availability per bid: {avail:.3?}");
+    log.debug("sweep", &format!("realized availability per bid: {avail:.3?}"));
 
     // Naive oracle pass (single-threaded, one pass — it is the slow one).
     let t0 = Instant::now();
@@ -105,7 +106,7 @@ pub fn run_sweep_bench(cfg: &Config, out_dir: &str) -> Result<()> {
         .set("bids", Json::from_f64_slice(&bids))
         .set("availability", Json::from_f64_slice(&avail));
     std::fs::write(format!("{out_dir}/sweep_bench.json"), j.pretty())?;
-    println!("  written to {out_dir}/sweep_bench.json");
+    log.info("sweep", &format!("written to {out_dir}/sweep_bench.json"));
     Ok(())
 }
 

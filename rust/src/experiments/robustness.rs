@@ -80,11 +80,15 @@ pub fn run_robustness(cfg: &Config, opts: &RobustnessCliOptions, out_dir: &str) 
         ..DeriveParams::default()
     };
     let derived = derive_population(&bases, opts.derive, cfg.seed, &params)?;
-    println!(
-        "== robustness: {} base world(s) + {} derived (seed {}) ==",
-        bases.len(),
-        derived.len(),
-        cfg.seed
+    let log = *cfg.telemetry.logger();
+    log.info(
+        "robustness",
+        &format!(
+            "{} base world(s) + {} derived (seed {})",
+            bases.len(),
+            derived.len(),
+            cfg.seed
+        ),
     );
     let mut specs = bases;
     specs.extend(derived);
@@ -121,6 +125,22 @@ pub fn run_robustness(cfg: &Config, opts: &RobustnessCliOptions, out_dir: &str) 
             threshold: opts.gate_threshold,
         },
     );
+    let mut rec = cfg.telemetry.recorder("robustness/gate");
+    for v in &report.verdicts {
+        if v.promoted {
+            continue;
+        }
+        for regime in &v.failing_regimes {
+            rec.emit(
+                0.0,
+                crate::telemetry::SimEventKind::GateDemotion {
+                    policy: v.policy.clone(),
+                    regime: regime.clone(),
+                },
+            );
+        }
+    }
+    cfg.telemetry.absorb(rec);
     let table = render_gate_table(&report);
     for (i, line) in table.lines().enumerate() {
         if i < TABLE_HEAD {
@@ -135,7 +155,7 @@ pub fn run_robustness(cfg: &Config, opts: &RobustnessCliOptions, out_dir: &str) 
     }
     let gate_path = format!("{out_dir}/robustness.json");
     std::fs::write(&gate_path, gate_json(&report).pretty())?;
-    println!("  written to {fleet_path} and {gate_path}");
+    log.info("robustness", &format!("written to {fleet_path} and {gate_path}"));
     Ok(())
 }
 

@@ -122,14 +122,26 @@ pub fn run_scenarios(cfg: &Config, opts: &ScenarioCliOptions, out_dir: &str) -> 
         base_seed: cfg.seed,
         threads: cfg.effective_threads(),
         jobs_override,
+        telemetry: cfg.telemetry.clone(),
     };
-    println!(
-        "== scenarios: {} worlds x {} seeds (base seed {}, threads {}{}) ==",
-        specs.len(),
-        batch.seeds,
-        batch.base_seed,
-        batch.threads,
-        if opts.smoke { ", smoke" } else { "" }
+    let log = *cfg.telemetry.logger();
+    log.info(
+        "scenarios",
+        &format!(
+            "{} worlds x {} seeds (base seed {}, threads {}{})",
+            specs.len(),
+            batch.seeds,
+            batch.base_seed,
+            batch.threads,
+            if opts.smoke { ", smoke" } else { "" }
+        ),
+    );
+    log.debug(
+        "scenarios",
+        &format!(
+            "worlds: {}",
+            specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
+        ),
     );
     let t0 = std::time::Instant::now();
     let outcomes = scenario::run_batch(&specs, &batch)?;
@@ -151,12 +163,12 @@ pub fn run_scenarios(cfg: &Config, opts: &ScenarioCliOptions, out_dir: &str) -> 
             100.0 * a.od_share_mean
         );
     }
-    println!("  {} runs in {dt:.2}s", outcomes.len());
+    log.info("scenarios", &format!("{} runs in {dt:.2}s", outcomes.len()));
 
     let j = scenario::report_json(&outcomes, batch.seeds, batch.base_seed, opts.smoke);
     let path = format!("{out_dir}/scenarios.json");
     std::fs::write(&path, j.pretty())?;
-    println!("  written to {path}");
+    log.info("scenarios", &format!("written to {path}"));
     Ok(())
 }
 

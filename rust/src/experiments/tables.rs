@@ -6,7 +6,9 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{parallel_map, tola_run, tola_run_view, Config, Evaluator};
+use crate::coordinator::{
+    parallel_map, tola_run, tola_run_traced, tola_run_view_traced, Config, Evaluator,
+};
 use crate::learning::counterfactual::CfSpec;
 use crate::market::PriceTrace;
 use crate::policy::{benchmark_bids, policy_set_full, policy_set_spot_only, Policy};
@@ -46,8 +48,9 @@ fn fmt_pct(x: f64) -> String {
 /// Experiment 1 / Table 2: cost improvement of the proposed deadline
 /// allocation over Greedy and Even, spot + on-demand only.
 pub fn run_table2(cfg: &Config, out_dir: &str) -> Result<()> {
-    println!("== Table 2: cost improvement, spot + on-demand only ==");
-    println!("   ({} jobs/cell, seed {})", cfg.jobs, cfg.seed);
+    let log = *cfg.telemetry.logger();
+    log.info("table2", "cost improvement, spot + on-demand only");
+    log.info("table2", &format!("{} jobs/cell, seed {}", cfg.jobs, cfg.seed));
     let threads = cfg.effective_threads();
     let proposed_specs: Vec<StrategySpec> = policy_set_spot_only()
         .into_iter()
@@ -113,8 +116,9 @@ pub fn run_table2(cfg: &Config, out_dir: &str) -> Result<()> {
 /// Experiment 2 / Table 3: overall improvement with self-owned instances —
 /// full framework vs Even + naive self-owned.
 pub fn run_table3(cfg: &Config, out_dir: &str) -> Result<()> {
-    println!("== Table 3: overall cost improvement with self-owned instances ==");
-    println!("   ({} jobs/cell, seed {})", cfg.jobs, cfg.seed);
+    let log = *cfg.telemetry.logger();
+    log.info("table3", "overall cost improvement with self-owned instances");
+    log.info("table3", &format!("{} jobs/cell, seed {}", cfg.jobs, cfg.seed));
     let threads = cfg.effective_threads();
     let proposed_specs: Vec<StrategySpec> = policy_set_full()
         .into_iter()
@@ -167,8 +171,9 @@ pub fn run_table3(cfg: &Config, out_dir: &str) -> Result<()> {
 /// self-owned policy (both sides use Dealloc windows); also report the
 /// utilization ratio μ.
 pub fn run_table4_5(cfg: &Config, out_dir: &str) -> Result<()> {
-    println!("== Tables 4+5: self-owned policy (12) vs naive, same deadline allocation ==");
-    println!("   ({} jobs/cell, seed {})", cfg.jobs, cfg.seed);
+    let log = *cfg.telemetry.logger();
+    log.info("table4+5", "self-owned policy (12) vs naive, same deadline allocation");
+    log.info("table4+5", &format!("{} jobs/cell, seed {}", cfg.jobs, cfg.seed));
     let threads = cfg.effective_threads();
     let proposed_specs: Vec<StrategySpec> = policy_set_full()
         .into_iter()
@@ -244,7 +249,9 @@ fn make_evaluator(cfg: &Config) -> (Option<crate::runtime::ArtifactRuntime>, boo
     match crate::runtime::ArtifactRuntime::load_default() {
         Ok(rt) => (Some(rt), true),
         Err(e) => {
-            eprintln!("note: PJRT artifacts unavailable ({e}); using native sweeps");
+            cfg.telemetry
+                .logger()
+                .warn("pjrt", &format!("artifacts unavailable ({e}); using native sweeps"));
             (None, false)
         }
     }
@@ -253,11 +260,18 @@ fn make_evaluator(cfg: &Config) -> (Option<crate::runtime::ArtifactRuntime>, boo
 /// Experiment 4 / Table 6: TOLA online learning, job type 2, pool sizes
 /// {0} ∪ cfg.pool_sizes.
 pub fn run_table6(cfg: &Config, out_dir: &str) -> Result<()> {
-    println!("== Table 6: cost improvement under online learning (x2 = 2) ==");
-    println!("   ({} jobs/cell, seed {})", cfg.jobs, cfg.seed);
+    let log = *cfg.telemetry.logger();
+    log.info("table6", "cost improvement under online learning (x2 = 2)");
+    log.info("table6", &format!("{} jobs/cell, seed {}", cfg.jobs, cfg.seed));
     let threads = cfg.effective_threads();
     let (rt, pjrt_active) = make_evaluator(cfg);
-    println!("   counterfactual evaluator: {}", if pjrt_active { "PJRT kernel" } else { "native" });
+    log.info(
+        "table6",
+        &format!(
+            "counterfactual evaluator: {}",
+            if pjrt_active { "PJRT kernel" } else { "native" }
+        ),
+    );
 
     let (jobs, trace) = workload(cfg, 2);
     let mut pools: Vec<u64> = vec![0];
@@ -317,11 +331,15 @@ pub fn run_table6(cfg: &Config, out_dir: &str) -> Result<()> {
 
 /// `repro run`: one verbose TOLA learning run (the end-to-end demo).
 pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
-    println!(
-        "== TOLA learning run: {} jobs, type {}, pool {} ==",
-        cfg.jobs,
-        cfg.job_type,
-        cfg.pool_sizes.first().copied().unwrap_or(0)
+    let log = *cfg.telemetry.logger();
+    log.info(
+        "run",
+        &format!(
+            "TOLA learning run: {} jobs, type {}, pool {}",
+            cfg.jobs,
+            cfg.job_type,
+            cfg.pool_sizes.first().copied().unwrap_or(0)
+        ),
     );
     let threads = cfg.effective_threads();
     // Multi-market configs (extra offers and/or a home capacity) realize
@@ -330,7 +348,10 @@ pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
     // kernel only serves single-market sweeps, so routed runs go native.
     let multi = cfg.is_multi_market() || cfg.home_capacity.is_some();
     let (rt, pjrt_active) = if multi { (None, false) } else { make_evaluator(cfg) };
-    println!("   evaluator: {}", if pjrt_active { "PJRT kernel" } else { "native" });
+    log.info(
+        "run",
+        &format!("evaluator: {}", if pjrt_active { "PJRT kernel" } else { "native" }),
+    );
     let (jobs, trace) = workload(cfg, cfg.job_type);
     let pool = cfg.pool_sizes.first().copied().unwrap_or(0) as u32;
     let specs: Vec<CfSpec> = if pool == 0 {
@@ -345,20 +366,41 @@ pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
     let view = if multi {
         let horizon = jobs.iter().map(|j| j.deadline).fold(0.0, f64::max) + 1.0;
         let v = cfg.realize_view(trace.clone(), horizon)?;
-        println!(
-            "   market: {} offers, routing {}",
-            v.len(),
-            cfg.routing.as_str()
+        log.info(
+            "run",
+            &format!("market: {} offers, routing {}", v.len(), cfg.routing.as_str()),
         );
         Some(v)
     } else {
         None
     };
     let t0 = std::time::Instant::now();
+    let mut rec = cfg.telemetry.recorder("run#0");
     let rep = match &view {
-        Some(v) => tola_run_view(&jobs, &specs, v, cfg.routing, pool, cfg.seed, &evaluator),
-        None => tola_run(&jobs, &specs, &trace, pool, cfg.od_price, cfg.seed, &evaluator),
+        Some(v) => tola_run_view_traced(
+            &jobs,
+            &specs,
+            v,
+            cfg.routing,
+            pool,
+            cfg.seed,
+            &evaluator,
+            &cfg.telemetry,
+            &mut rec,
+        ),
+        None => tola_run_traced(
+            &jobs,
+            &specs,
+            &trace,
+            pool,
+            cfg.od_price,
+            cfg.seed,
+            &evaluator,
+            &cfg.telemetry,
+            &mut rec,
+        ),
     };
+    cfg.telemetry.absorb(rec);
     let dt = t0.elapsed().as_secs_f64();
 
     let best = match specs[rep.best_policy] {

@@ -45,6 +45,12 @@
 //!   capacity dropout, feed gaps) growing large world populations from
 //!   registry bases, regime tagging, and a cross-regime promotion gate
 //!   over the fleet layer's tail-risk scores (`dagcloud.robustness/v1`);
+//! * a **telemetry layer** ([`telemetry`]): a deterministic sim-time event
+//!   log (byte-identical across threads/shards, property-tested), a
+//!   wall-clock span profiler with log-scale latency histograms exported
+//!   as `dagcloud.telemetry/v1` + Chrome trace JSON, and the leveled
+//!   status logger behind `-v`/`--quiet` — all threaded through handles,
+//!   never globals, so report bytes are provably telemetry-independent;
 //! * an **experiment harness** ([`experiments`]) regenerating every table and
 //!   figure of the paper's evaluation section.
 //!
@@ -64,6 +70,7 @@ pub mod coordinator;
 pub mod scenario;
 pub mod fleet;
 pub mod robustness;
+pub mod telemetry;
 pub mod experiments;
 
 /// Crate-wide result type.

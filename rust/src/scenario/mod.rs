@@ -34,7 +34,7 @@ pub use report::{
 };
 pub use runner::{
     build_market, build_market_view, build_workload, cf_specs, derive_run_seed, run_batch,
-    run_scenario_once, BatchOptions, ScenarioOutcome,
+    run_scenario_once, run_scenario_once_traced, BatchOptions, ScenarioOutcome,
 };
 pub use spec::{
     FlatOffer, InstanceTypeSpec, MarketSpec, PolicySetSpec, PriceSpec, RegionSpec, ReplayFormat,

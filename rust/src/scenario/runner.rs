@@ -10,8 +10,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{parallel_map, tola_run_view, Evaluator};
+use crate::coordinator::{parallel_map, tola_run_view_traced, Evaluator};
 use crate::feed;
+use crate::telemetry::Telemetry;
 use crate::learning::counterfactual::CfSpec;
 use crate::market::{
     replay, MarketOffer, MarketView, PriceTrace, SpotPriceProcess, SLOTS_PER_UNIT,
@@ -34,6 +35,11 @@ pub struct BatchOptions {
     pub threads: usize,
     /// Override each scenario's job count (smoke / --jobs).
     pub jobs_override: Option<usize>,
+    /// Observability handle shared by every cell. Cells record into
+    /// per-cell sources (`"{scenario}#{replicate}"`) flushed through the
+    /// handle, so the canonical event log is independent of cell/thread
+    /// scheduling; outcomes are byte-identical with telemetry on or off.
+    pub telemetry: Telemetry,
 }
 
 /// The metrics one scenario run produces.
@@ -302,13 +308,34 @@ pub fn run_scenario_once(
     run_seed: u64,
     jobs_override: Option<usize>,
 ) -> Result<ScenarioOutcome> {
+    run_scenario_once_traced(
+        spec,
+        run_seed,
+        jobs_override,
+        &Telemetry::disabled(),
+        &format!("{}#0", spec.name),
+    )
+}
+
+/// [`run_scenario_once`] recording telemetry under the given event-log
+/// source (by convention `"{scenario}#{replicate}"`, which is unique per
+/// batch cell). The learning run itself is bit-identical either way.
+pub fn run_scenario_once_traced(
+    spec: &ScenarioSpec,
+    run_seed: u64,
+    jobs_override: Option<usize>,
+    tele: &Telemetry,
+    source: &str,
+) -> Result<ScenarioOutcome> {
     spec.validate()?;
     let n_jobs = jobs_override.unwrap_or(spec.jobs);
     let jobs = build_workload(spec, n_jobs, run_seed ^ 0x10AD);
     let horizon = jobs.iter().map(|j| j.deadline).fold(1.0, f64::max) + 1.0;
     let (view, routing) = build_market_view(spec, horizon, run_seed ^ 0x7ACE)?;
     let specs = cf_specs(spec);
-    let rep = tola_run_view(
+    let mut rec = tele.recorder(source);
+    let cell_span = tele.span("runner/cell");
+    let rep = tola_run_view_traced(
         &jobs,
         &specs,
         &view,
@@ -316,7 +343,11 @@ pub fn run_scenario_once(
         spec.pool_capacity,
         run_seed ^ 0x701A_2,
         &Evaluator::Native { threads: 1 },
+        tele,
+        &mut rec,
     );
+    drop(cell_span);
+    tele.absorb(rec);
 
     let grid = grid_b();
     let lo_bid = grid.first().copied().unwrap_or(0.18);
@@ -373,10 +404,12 @@ pub fn run_batch(specs: &[ScenarioSpec], opts: &BatchOptions) -> Result<Vec<Scen
     let results: Vec<Result<ScenarioOutcome>> = parallel_map(cells.len(), opts.threads, |k| {
         let (i, rep) = cells[k];
         let spec = &specs[i];
-        run_scenario_once(
+        run_scenario_once_traced(
             spec,
             derive_run_seed(opts.base_seed, &spec.name, rep),
             opts.jobs_override,
+            &opts.telemetry,
+            &format!("{}#{}", spec.name, rep),
         )
         .map(|mut o| {
             o.replicate = rep;
@@ -439,6 +472,7 @@ mod tests {
                     base_seed: 5,
                     threads,
                     jobs_override: Some(8),
+                    telemetry: Telemetry::disabled(),
                 },
             )
             .unwrap()

@@ -22,7 +22,7 @@
 use crate::market::{CapacityLedger, CostLedger, InstanceKind, MarketView, PriceTrace, SelfOwnedPool};
 use crate::policy::baselines::greedy_must_switch;
 use crate::policy::dealloc::WindowAllocation;
-use crate::policy::routing::{route, RoutingPolicy};
+use crate::policy::routing::{route, RouteDecision, RoutingPolicy};
 use crate::policy::selfowned::{naive_allocation, rule12};
 use crate::workload::ChainJob;
 
@@ -195,6 +195,7 @@ pub fn spot_units(delta: f64, r: u32) -> u32 {
 /// the walk is the exact never-available case and the deadline still
 /// holds). A one-offer infinite-capacity view reduces bit-identically to
 /// [`execute_task`] on that offer's trace under every routing policy.
+#[allow(clippy::too_many_arguments)]
 pub fn execute_task_routed(
     z: f64,
     delta: f64,
@@ -206,6 +207,27 @@ pub fn execute_task_routed(
     cap: &mut CapacityLedger,
     routing: RoutingPolicy,
 ) -> (usize, TaskOutcome) {
+    let (d, outcome) =
+        execute_task_routed_decide(z, delta, start, deadline, r, bid, view, cap, routing);
+    (d.offer, outcome)
+}
+
+/// [`execute_task_routed`], but returning the full [`RouteDecision`] so
+/// instrumented callers can observe capacity exhaustion (the
+/// `spot_capacity = false` all-on-demand fallback) instead of having the
+/// bit dropped with the decision.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_task_routed_decide(
+    z: f64,
+    delta: f64,
+    start: f64,
+    deadline: f64,
+    r: u32,
+    bid: f64,
+    view: &MarketView,
+    cap: &mut CapacityLedger,
+    routing: RoutingPolicy,
+) -> (RouteDecision, TaskOutcome) {
     let units = spot_units(delta, r);
     let d = route(routing, view, cap, units, start, deadline);
     let offer = &view.offers()[d.offer];
@@ -213,12 +235,12 @@ pub fn execute_task_routed(
         let ok = cap.reserve(d.offer, units, start, deadline);
         debug_assert!(ok, "router approved an offer the ledger refused");
         (
-            d.offer,
+            d,
             execute_task(z, delta, start, deadline, r, bid, &offer.trace, offer.od_price),
         )
     } else {
         (
-            d.offer,
+            d,
             execute_task(
                 z,
                 delta,

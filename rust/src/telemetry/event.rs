@@ -1,0 +1,299 @@
+//! Deterministic plane: the sim-time event log.
+//!
+//! Events are keyed by `(sim_time, source, seq)` and carry **only**
+//! simulation-derived data — no wall-clock timestamps, thread ids, or
+//! iteration counts that could differ between runs. Each scenario cell
+//! (or coordinator run) owns one [`Recorder`]; within a recorder `seq`
+//! is the emission order of the single-threaded coordinator loop, so the
+//! flattened, sorted log is a pure function of the run and byte-identical
+//! across `--threads`, shard counts, and merge order.
+
+use crate::util::json::Json;
+
+/// Per-source event cap. A recorder past the cap stops storing events and
+/// counts the overflow deterministically instead, so an enormous run
+/// degrades to a truncated-but-still-deterministic log rather than
+/// unbounded memory.
+pub const EVENT_CAP: usize = 262_144;
+
+/// A typed sim-time event. Fields are simulation state only.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SimEventKind {
+    /// The dealloc policy opened an execution window for a task.
+    WindowOpened { job: usize, task: usize, start: f64, deadline: f64 },
+    /// TOLA sampled a policy spec for an arriving job.
+    SpecChosen { job: usize, spec: usize },
+    /// The router placed a task window on an offer (`spilled` when the
+    /// offer differs from the home offer 0).
+    OfferRouted { job: usize, task: usize, offer: usize, spilled: bool },
+    /// Spot capacity was exhausted on every feasible offer; the window
+    /// ran all-on-demand.
+    CapacityExhausted { job: usize, task: usize, offer: usize },
+    /// A retirement burst entered the counterfactual sweep engine.
+    SweepBatch { retired: usize, specs: usize },
+    /// The online feed frontier advanced to cover more slots.
+    FrontierAdvanced { slots: usize },
+    /// Learned-parameter snapshot: max policy weight and current best
+    /// policy after `jobs` retirements.
+    ParamSnapshot { jobs: usize, max_weight: f64, best_policy: String },
+    /// The fleet accumulator absorbed a shard report with `rows` cells.
+    ReportAbsorbed { rows: usize },
+    /// The robustness gate demoted a policy for failing `regime`.
+    GateDemotion { policy: String, regime: String },
+}
+
+impl SimEventKind {
+    /// Stable kind tag used in the serialized log.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SimEventKind::WindowOpened { .. } => "window_opened",
+            SimEventKind::SpecChosen { .. } => "spec_chosen",
+            SimEventKind::OfferRouted { .. } => "offer_routed",
+            SimEventKind::CapacityExhausted { .. } => "capacity_exhausted",
+            SimEventKind::SweepBatch { .. } => "sweep_batch",
+            SimEventKind::FrontierAdvanced { .. } => "frontier_advanced",
+            SimEventKind::ParamSnapshot { .. } => "param_snapshot",
+            SimEventKind::ReportAbsorbed { .. } => "report_absorbed",
+            SimEventKind::GateDemotion { .. } => "gate_demotion",
+        }
+    }
+
+    fn fields(&self, j: &mut Json) {
+        match self {
+            SimEventKind::WindowOpened { job, task, start, deadline } => {
+                j.set("job", Json::Num(*job as f64))
+                    .set("task", Json::Num(*task as f64))
+                    .set("start", Json::Num(*start))
+                    .set("deadline", Json::Num(*deadline));
+            }
+            SimEventKind::SpecChosen { job, spec } => {
+                j.set("job", Json::Num(*job as f64))
+                    .set("spec", Json::Num(*spec as f64));
+            }
+            SimEventKind::OfferRouted { job, task, offer, spilled } => {
+                j.set("job", Json::Num(*job as f64))
+                    .set("task", Json::Num(*task as f64))
+                    .set("offer", Json::Num(*offer as f64))
+                    .set("spilled", Json::Bool(*spilled));
+            }
+            SimEventKind::CapacityExhausted { job, task, offer } => {
+                j.set("job", Json::Num(*job as f64))
+                    .set("task", Json::Num(*task as f64))
+                    .set("offer", Json::Num(*offer as f64));
+            }
+            SimEventKind::SweepBatch { retired, specs } => {
+                j.set("retired", Json::Num(*retired as f64))
+                    .set("specs", Json::Num(*specs as f64));
+            }
+            SimEventKind::FrontierAdvanced { slots } => {
+                j.set("slots", Json::Num(*slots as f64));
+            }
+            SimEventKind::ParamSnapshot { jobs, max_weight, best_policy } => {
+                j.set("jobs", Json::Num(*jobs as f64))
+                    .set("max_weight", Json::Num(*max_weight))
+                    .set("best_policy", Json::Str(best_policy.clone()));
+            }
+            SimEventKind::ReportAbsorbed { rows } => {
+                j.set("rows", Json::Num(*rows as f64));
+            }
+            SimEventKind::GateDemotion { policy, regime } => {
+                j.set("policy", Json::Str(policy.clone()))
+                    .set("regime", Json::Str(regime.clone()));
+            }
+        }
+    }
+}
+
+/// One event in a source's log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimEvent {
+    pub sim_time: f64,
+    pub seq: u64,
+    pub kind: SimEventKind,
+}
+
+impl SimEvent {
+    /// Serialize with the owning source name attached (keys sort as
+    /// `deadline, job, kind, seq, sim_time, source, ...` — `Json` objects
+    /// are BTreeMap-backed, so field order is canonical automatically).
+    pub fn to_json(&self, source: &str) -> Json {
+        let mut j = Json::obj();
+        j.set("sim_time", Json::Num(self.sim_time))
+            .set("source", Json::Str(source.to_string()))
+            .set("seq", Json::Num(self.seq as f64))
+            .set("kind", Json::Str(self.kind.tag().to_string()));
+        self.kind.fields(&mut j);
+        j
+    }
+}
+
+/// One source's completed event log, as flushed into the telemetry sinks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SourceLog {
+    pub source: String,
+    pub events: Vec<SimEvent>,
+    /// Events past [`EVENT_CAP`] that were counted but not stored.
+    pub dropped: u64,
+}
+
+/// Per-run event collector. Cheap to construct; `emit` is a no-op when
+/// the deterministic plane is off, so instrumented loops pay one branch.
+#[derive(Debug)]
+pub struct Recorder {
+    on: bool,
+    source: String,
+    seq: u64,
+    events: Vec<SimEvent>,
+    dropped: u64,
+}
+
+impl Recorder {
+    pub fn new(source: &str, on: bool) -> Recorder {
+        Recorder {
+            on,
+            source: source.to_string(),
+            seq: 0,
+            events: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    /// A recorder that records nothing (telemetry disabled).
+    pub fn disabled() -> Recorder {
+        Recorder::new("", false)
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.on
+    }
+
+    /// Record one event at `sim_time`. `seq` numbers every emission
+    /// (including capped ones) in loop order.
+    pub fn emit(&mut self, sim_time: f64, kind: SimEventKind) {
+        if !self.on {
+            return;
+        }
+        if self.events.len() < EVENT_CAP {
+            self.events.push(SimEvent { sim_time, seq: self.seq, kind });
+        } else {
+            self.dropped += 1;
+        }
+        self.seq += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Consume the recorder into its finished log.
+    pub fn into_log(self) -> SourceLog {
+        SourceLog {
+            source: self.source,
+            events: self.events,
+            dropped: self.dropped,
+        }
+    }
+}
+
+/// Flatten source logs into `(source, event)` rows sorted by the canonical
+/// `(sim_time, source, seq)` key. Sources are unique per run cell, so the
+/// key is total and the output is independent of flush order.
+pub fn canonical_rows(logs: &[SourceLog]) -> Vec<(&str, &SimEvent)> {
+    let mut rows: Vec<(&str, &SimEvent)> = logs
+        .iter()
+        .flat_map(|l| l.events.iter().map(move |e| (l.source.as_str(), e)))
+        .collect();
+    rows.sort_by(|a, b| {
+        a.1.sim_time
+            .total_cmp(&b.1.sim_time)
+            .then_with(|| a.0.cmp(b.0))
+            .then_with(|| a.1.seq.cmp(&b.1.seq))
+    });
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut r = Recorder::disabled();
+        r.emit(1.0, SimEventKind::SweepBatch { retired: 4, specs: 9 });
+        assert!(r.is_empty());
+        assert_eq!(r.into_log().dropped, 0);
+    }
+
+    #[test]
+    fn seq_numbers_emission_order() {
+        let mut r = Recorder::new("cell#0", true);
+        r.emit(2.0, SimEventKind::SpecChosen { job: 0, spec: 3 });
+        r.emit(1.0, SimEventKind::SpecChosen { job: 1, spec: 4 });
+        let log = r.into_log();
+        assert_eq!(log.events[0].seq, 0);
+        assert_eq!(log.events[1].seq, 1);
+        assert_eq!(log.source, "cell#0");
+    }
+
+    #[test]
+    fn canonical_rows_sort_by_time_source_seq() {
+        let a = SourceLog {
+            source: "b#0".into(),
+            events: vec![
+                SimEvent { sim_time: 1.0, seq: 0, kind: SimEventKind::FrontierAdvanced { slots: 1 } },
+                SimEvent { sim_time: 3.0, seq: 1, kind: SimEventKind::FrontierAdvanced { slots: 2 } },
+            ],
+            dropped: 0,
+        };
+        let b = SourceLog {
+            source: "a#0".into(),
+            events: vec![SimEvent {
+                sim_time: 1.0,
+                seq: 0,
+                kind: SimEventKind::FrontierAdvanced { slots: 7 },
+            }],
+            dropped: 0,
+        };
+        // Flush order b-after-a vs a-after-b must not matter.
+        let r1 = canonical_rows(&[a.clone(), b.clone()]);
+        let r2 = canonical_rows(&[b, a]);
+        let key = |rows: &Vec<(&str, &SimEvent)>| -> Vec<(String, f64, u64)> {
+            rows.iter()
+                .map(|(s, e)| (s.to_string(), e.sim_time, e.seq))
+                .collect()
+        };
+        assert_eq!(key(&r1), key(&r2));
+        assert_eq!(r1[0].0, "a#0"); // ties on sim_time break by source
+        assert_eq!(r1[1].0, "b#0");
+        assert_eq!(r1[2].1.sim_time, 3.0);
+    }
+
+    #[test]
+    fn cap_counts_overflow_deterministically() {
+        let mut r = Recorder::new("x", true);
+        for i in 0..(EVENT_CAP + 5) {
+            r.emit(i as f64, SimEventKind::FrontierAdvanced { slots: i });
+        }
+        let log = r.into_log();
+        assert_eq!(log.events.len(), EVENT_CAP);
+        assert_eq!(log.dropped, 5);
+    }
+
+    #[test]
+    fn event_json_carries_kind_tag_and_fields() {
+        let e = SimEvent {
+            sim_time: 4.5,
+            seq: 9,
+            kind: SimEventKind::OfferRouted { job: 2, task: 1, offer: 3, spilled: true },
+        };
+        let j = e.to_json("paper-default#1");
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("offer_routed"));
+        assert_eq!(j.get("source").unwrap().as_str(), Some("paper-default#1"));
+        assert_eq!(j.get("offer").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("spilled"), Some(&Json::Bool(true)));
+    }
+}

@@ -1,0 +1,150 @@
+//! Serialization of the two telemetry planes.
+//!
+//! `dagcloud.telemetry/v1` keeps them strictly separated: everything
+//! under `deterministic` is a pure function of the run (byte-identical
+//! across thread/shard counts), everything under `wall_clock` is
+//! profiling data that may differ between runs and must never be copied
+//! into another report. The Chrome trace export flattens the wall-clock
+//! span occurrences into the trace-event JSON consumed by
+//! `chrome://tracing` and Perfetto (`ph: "X"` complete events, µs
+//! timestamps).
+
+use crate::util::json::Json;
+
+use super::event::{canonical_rows, SourceLog};
+use super::span::SpanStats;
+
+/// Assemble the `dagcloud.telemetry/v1` document.
+pub fn telemetry_doc(logs: &[SourceLog], spans: &SpanStats) -> Json {
+    let rows = canonical_rows(logs);
+    let events: Vec<Json> = rows.iter().map(|(src, e)| e.to_json(src)).collect();
+    let dropped: u64 = logs.iter().map(|l| l.dropped).sum();
+
+    let mut det = Json::obj();
+    det.set("count", Json::Num(events.len() as f64))
+        .set("dropped", Json::Num(dropped as f64))
+        .set("sources", Json::Num(logs.len() as f64))
+        .set("events", Json::Arr(events));
+
+    let mut wall = Json::obj();
+    wall.set("spans", spans.to_json())
+        .set("trace_events", Json::Num(spans.trace_events().len() as f64))
+        .set("trace_dropped", Json::Num(spans.trace_dropped() as f64));
+
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Str("dagcloud.telemetry/v1".to_string()))
+        .set("deterministic", det)
+        .set("wall_clock", wall);
+    doc
+}
+
+/// Just the deterministic section (used by the byte-identity tests:
+/// comparing these bytes across `--threads`/shard counts must succeed,
+/// which would be false for the full document's wall-clock half).
+pub fn deterministic_doc(logs: &[SourceLog]) -> Json {
+    let rows = canonical_rows(logs);
+    let events: Vec<Json> = rows.iter().map(|(src, e)| e.to_json(src)).collect();
+    let dropped: u64 = logs.iter().map(|l| l.dropped).sum();
+    let mut det = Json::obj();
+    det.set("count", Json::Num(events.len() as f64))
+        .set("dropped", Json::Num(dropped as f64))
+        .set("sources", Json::Num(logs.len() as f64))
+        .set("events", Json::Arr(events));
+    det
+}
+
+/// Chrome trace-event JSON (the `{"traceEvents": [...]}` object form,
+/// which both `chrome://tracing` and Perfetto accept). One `ph: "X"`
+/// complete event per recorded span occurrence.
+pub fn chrome_trace(spans: &SpanStats) -> Json {
+    let events: Vec<Json> = spans
+        .trace_events()
+        .iter()
+        .map(|t| {
+            let mut e = Json::obj();
+            e.set("name", Json::Str(t.name.to_string()))
+                .set("cat", Json::Str("dagcloud".to_string()))
+                .set("ph", Json::Str("X".to_string()))
+                .set("ts", Json::Num(t.ts_us))
+                .set("dur", Json::Num(t.dur_us.max(0.001)))
+                .set("pid", Json::Num(1.0))
+                .set("tid", Json::Num(t.tid as f64));
+            e
+        })
+        .collect();
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", Json::Str("ms".to_string()));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::{SimEvent, SimEventKind};
+    use super::*;
+
+    fn sample_logs() -> Vec<SourceLog> {
+        vec![
+            SourceLog {
+                source: "b#0".into(),
+                events: vec![SimEvent {
+                    sim_time: 2.0,
+                    seq: 0,
+                    kind: SimEventKind::SweepBatch { retired: 3, specs: 5 },
+                }],
+                dropped: 1,
+            },
+            SourceLog {
+                source: "a#0".into(),
+                events: vec![SimEvent {
+                    sim_time: 2.0,
+                    seq: 0,
+                    kind: SimEventKind::SpecChosen { job: 0, spec: 1 },
+                }],
+                dropped: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn doc_bytes_are_independent_of_flush_order() {
+        let logs = sample_logs();
+        let mut rev = logs.clone();
+        rev.reverse();
+        // `sources` counts logs either way; event ordering is canonical.
+        assert_eq!(
+            deterministic_doc(&logs).pretty(),
+            deterministic_doc(&rev).pretty()
+        );
+    }
+
+    #[test]
+    fn doc_has_schema_and_both_planes() {
+        let doc = telemetry_doc(&sample_logs(), &SpanStats::default());
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some("dagcloud.telemetry/v1"));
+        let det = doc.get("deterministic").unwrap();
+        assert_eq!(det.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(det.get("dropped").unwrap().as_f64(), Some(1.0));
+        assert!(doc.get("wall_clock").unwrap().get("spans").is_some());
+    }
+
+    #[test]
+    fn chrome_trace_shape_is_loadable() {
+        let mut spans = SpanStats::default();
+        spans.record("sweep", 10.0, 2_000, 3);
+        let doc = chrome_trace(&spans);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("name").unwrap().as_str(), Some("sweep"));
+        assert_eq!(e.get("ts").unwrap().as_f64(), Some(10.0));
+        assert_eq!(e.get("dur").unwrap().as_f64(), Some(2.0));
+        assert_eq!(e.get("pid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(e.get("tid").unwrap().as_f64(), Some(3.0));
+        // Round-trips through the parser (valid JSON).
+        let text = doc.pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

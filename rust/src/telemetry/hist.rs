@@ -1,0 +1,162 @@
+//! Fixed log-scale latency histogram (power-of-two ns buckets).
+//!
+//! Wall-clock plane only: histogram contents are nondeterministic by
+//! nature and must never leak into scenario/fleet/robustness reports —
+//! they are serialized exclusively under the `wall_clock` section of
+//! `dagcloud.telemetry/v1` and `Metrics::to_json`.
+
+use crate::util::json::Json;
+
+/// Number of buckets. Bucket 0 holds exact zeros, bucket `b` in
+/// `1..BUCKETS-1` holds `[2^(b-1), 2^b)` ns, and the last bucket is the
+/// overflow catch-all `[2^(BUCKETS-2), u64::MAX]`. With 40 buckets the
+/// overflow threshold is 2^38 ns ≈ 275 s — far beyond any span we time.
+pub const BUCKETS: usize = 40;
+
+/// Bucket index for a nanosecond observation (see [`BUCKETS`]).
+pub fn bucket_index(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower bound of bucket `b` in ns.
+pub fn bucket_lo(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        1u64 << (b - 1)
+    }
+}
+
+/// Fixed-size log-scale histogram over nanosecond durations.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    pub fn observe(&mut self, ns: u64) {
+        self.counts[bucket_index(ns)] += 1;
+        self.count += 1;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bucket_count(&self, b: usize) -> u64 {
+        self.counts[b]
+    }
+
+    /// `{count, min_ns, max_ns, buckets: [[lo_ns, count], ...]}` with only
+    /// the nonzero buckets listed (ascending by lower bound).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("count", Json::Num(self.count as f64))
+            .set(
+                "min_ns",
+                Json::Num(if self.count == 0 { 0.0 } else { self.min_ns as f64 }),
+            )
+            .set("max_ns", Json::Num(self.max_ns as f64));
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(b, c)| {
+                Json::Arr(vec![Json::Num(bucket_lo(b) as f64), Json::Num(*c as f64)])
+            })
+            .collect();
+        j.set("buckets", Json::Arr(buckets));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_goes_to_bucket_zero() {
+        assert_eq!(bucket_index(0), 0);
+        let mut h = Histogram::new();
+        h.observe(0);
+        assert_eq!(h.bucket_count(0), 1);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn sub_bucket_values_land_in_first_real_bucket() {
+        // 1 ns is the smallest nonzero observation: bucket 1 = [1, 2).
+        assert_eq!(bucket_index(1), 1);
+        let mut h = Histogram::new();
+        h.observe(1);
+        assert_eq!(h.bucket_count(1), 1);
+    }
+
+    #[test]
+    fn exact_power_of_two_boundary_opens_the_next_bucket() {
+        // Bucket b covers [2^(b-1), 2^b): the boundary value belongs to
+        // the bucket it opens, not the one it closes.
+        assert_eq!(bucket_index(1023), 10); // [512, 1024)
+        assert_eq!(bucket_index(1024), 11); // [1024, 2048)
+        assert_eq!(bucket_index(1025), 11);
+    }
+
+    #[test]
+    fn overflow_clamps_to_last_bucket() {
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_index(1u64 << 63), BUCKETS - 1);
+        let mut h = Histogram::new();
+        h.observe(u64::MAX);
+        assert_eq!(h.bucket_count(BUCKETS - 1), 1);
+    }
+
+    #[test]
+    fn json_lists_only_nonzero_buckets() {
+        let mut h = Histogram::new();
+        h.observe(0);
+        h.observe(3);
+        h.observe(3);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("min_ns").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("max_ns").unwrap().as_f64(), Some(3.0));
+        let buckets = match j.get("buckets").unwrap() {
+            Json::Arr(v) => v.clone(),
+            _ => panic!("buckets must be an array"),
+        };
+        assert_eq!(buckets.len(), 2); // bucket 0 and bucket [2,4)
+        assert_eq!(buckets[1], Json::Arr(vec![Json::Num(2.0), Json::Num(2.0)]));
+    }
+
+    #[test]
+    fn empty_histogram_serializes_cleanly() {
+        let j = Histogram::new().to_json();
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("min_ns").unwrap().as_f64(), Some(0.0));
+    }
+}

@@ -1,0 +1,114 @@
+//! Leveled status logger (stderr only).
+//!
+//! Every human-facing progress line in the binary goes through [`Logger`]
+//! so `--quiet` can silence it and `-v` can widen it, while machine-readable
+//! results (tables, listings, JSON) keep printing to stdout untouched. The
+//! logger never writes to stdout, which is what makes
+//! `repro bench ... > out.json` safe: redirected output can only ever
+//! contain the report itself.
+
+/// Verbosity threshold. Ordered: `Quiet < Info < Debug`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    /// Progress chatter suppressed; warnings and errors still print.
+    Quiet,
+    /// Default: one-line progress per phase.
+    Info,
+    /// `-v`: per-cell / per-shard detail.
+    Debug,
+}
+
+impl Default for LogLevel {
+    fn default() -> Self {
+        LogLevel::Info
+    }
+}
+
+/// A copyable handle gating status output by [`LogLevel`].
+///
+/// All output goes to **stderr**, prefixed `[component]`. `warn`/`error`
+/// ignore the level: operational problems must never be silenced by
+/// `--quiet`.
+#[derive(Debug, Clone, Copy)]
+pub struct Logger {
+    level: LogLevel,
+}
+
+impl Default for Logger {
+    fn default() -> Self {
+        Logger { level: LogLevel::Info }
+    }
+}
+
+impl Logger {
+    pub fn new(level: LogLevel) -> Logger {
+        Logger { level }
+    }
+
+    /// Level from `DAGCLOUD_LOG` (`quiet`|`info`|`debug`), defaulting to
+    /// `Info`. Used by contexts that have no CLI flags of their own (the
+    /// bench harness binaries).
+    pub fn from_env() -> Logger {
+        let level = match std::env::var("DAGCLOUD_LOG").as_deref() {
+            Ok("quiet") => LogLevel::Quiet,
+            Ok("debug") => LogLevel::Debug,
+            _ => LogLevel::Info,
+        };
+        Logger { level }
+    }
+
+    pub fn level(&self) -> LogLevel {
+        self.level
+    }
+
+    /// Progress line, shown at `Info` and above.
+    pub fn info(&self, component: &str, msg: &str) {
+        if self.level >= LogLevel::Info {
+            eprintln!("[{component}] {msg}");
+        }
+    }
+
+    /// Detail line, shown only at `Debug` (`-v`).
+    pub fn debug(&self, component: &str, msg: &str) {
+        if self.level >= LogLevel::Debug {
+            eprintln!("[{component}] {msg}");
+        }
+    }
+
+    /// Warning: printed at every level, including `Quiet`.
+    pub fn warn(&self, component: &str, msg: &str) {
+        eprintln!("[{component}] warning: {msg}");
+    }
+
+    /// Error: printed at every level, including `Quiet`.
+    pub fn error(&self, component: &str, msg: &str) {
+        eprintln!("[{component}] error: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(LogLevel::Quiet < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+    }
+
+    #[test]
+    fn default_is_info() {
+        assert_eq!(Logger::default().level(), LogLevel::Info);
+    }
+
+    #[test]
+    fn logging_never_panics_at_any_level() {
+        for level in [LogLevel::Quiet, LogLevel::Info, LogLevel::Debug] {
+            let log = Logger::new(level);
+            log.info("test", "info line");
+            log.debug("test", "debug line");
+            log.warn("test", "warn line");
+            log.error("test", "error line");
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! Observability layer: deterministic sim-time tracing + wall-clock
+//! profiling, with a hard wall between the two planes.
+//!
+//! # Two planes, one contract
+//!
+//! - **Deterministic plane** ([`event`]): typed sim-time events emitted by
+//!   the coordinator loops, router, sweep engine, fleet merge, and
+//!   robustness gate. Events carry only simulation state and are keyed by
+//!   `(sim_time, source, seq)`. Per-run-cell sources (`"{world}#{rep}"`)
+//!   are pure functions of the run — byte-identical across `--threads`
+//!   and shard counts; harness-level sources (`"fleet/merge"`,
+//!   `"robustness/gate"`) are pure functions of the CLI invocation
+//!   (property-tested in `tests/integration_telemetry.rs`).
+//! - **Wall-clock plane** ([`span`], [`hist`]): RAII span guards feeding
+//!   per-span totals, log-scale latency histograms, and a Chrome
+//!   trace-event export. Inherently nondeterministic, and therefore
+//!   quarantined: it is serialized only into `results/telemetry.json`
+//!   (`dagcloud.telemetry/v1`, [`export`]) and `results/trace.json`, never
+//!   into a scenario/fleet/robustness report.
+//!
+//! The headline invariant — enforced by test, not convention — is that
+//! enabling telemetry changes **zero bytes** of `scenarios.json`,
+//! `fleet.json`, and `robustness.json`.
+//!
+//! # No global state
+//!
+//! There is no global collector: a [`Telemetry`] handle is threaded
+//! through `Config` → runner → fleet explicitly. Handles are cheap clones
+//! sharing one sink (`Arc`), recorders are per-run-cell and merged on
+//! flush, and `exec_pool` is untouched, so the worker-pool determinism
+//! argument is exactly what it was before this module existed.
+
+pub mod event;
+pub mod export;
+pub mod hist;
+pub mod log;
+pub mod span;
+
+pub use event::{Recorder, SimEvent, SimEventKind, SourceLog};
+pub use hist::Histogram;
+pub use log::{LogLevel, Logger};
+pub use span::SpanGuard;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use span::SpanStats;
+
+/// Which planes to enable on a fresh handle.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TelemetryOptions {
+    /// Deterministic sim-time event log (`--telemetry`).
+    pub events: bool,
+    /// Wall-clock span profiler (`--telemetry` / `--trace`).
+    pub spans: bool,
+    /// Status-logger verbosity (`-v` / `--quiet`).
+    pub level: LogLevel,
+}
+
+/// Shared sink state behind a [`Telemetry`] handle.
+#[derive(Debug)]
+struct Planes {
+    events_on: bool,
+    spans_on: bool,
+    epoch: Instant,
+    sinks: Mutex<Vec<SourceLog>>,
+    spans: Arc<Mutex<SpanStats>>,
+}
+
+/// The telemetry handle threaded through `Config`/runner/fleet.
+///
+/// Clones share the same sinks, so a handle can be captured by parallel
+/// scenario cells and flushed from each; with both planes disabled (the
+/// default) every operation is a cheap no-op and the handle carries only
+/// the status [`Logger`].
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    log: Logger,
+    planes: Option<Arc<Planes>>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::disabled()
+    }
+}
+
+impl Telemetry {
+    /// Both planes off; Info-level logger. The state every run starts in
+    /// unless `--telemetry`/`--trace` is given.
+    pub fn disabled() -> Telemetry {
+        Telemetry { log: Logger::default(), planes: None }
+    }
+
+    pub fn new(opts: TelemetryOptions) -> Telemetry {
+        let planes = (opts.events || opts.spans).then(|| {
+            Arc::new(Planes {
+                events_on: opts.events,
+                spans_on: opts.spans,
+                epoch: Instant::now(),
+                sinks: Mutex::new(Vec::new()),
+                spans: Arc::new(Mutex::new(SpanStats::default())),
+            })
+        });
+        Telemetry { log: Logger::new(opts.level), planes }
+    }
+
+    /// A disabled-planes handle with the given logger level.
+    pub fn with_level(level: LogLevel) -> Telemetry {
+        Telemetry { log: Logger::new(level), planes: None }
+    }
+
+    pub fn logger(&self) -> &Logger {
+        &self.log
+    }
+
+    pub fn events_enabled(&self) -> bool {
+        self.planes.as_ref().is_some_and(|p| p.events_on)
+    }
+
+    pub fn spans_enabled(&self) -> bool {
+        self.planes.as_ref().is_some_and(|p| p.spans_on)
+    }
+
+    /// Either plane live (decides whether `telemetry.json` is written).
+    pub fn enabled(&self) -> bool {
+        self.planes.is_some()
+    }
+
+    /// A recorder for one run cell. `source` must be unique per cell
+    /// within a batch (`"{scenario}#{replicate}"` by convention) so the
+    /// canonical `(sim_time, source, seq)` sort is total.
+    pub fn recorder(&self, source: &str) -> Recorder {
+        Recorder::new(source, self.events_enabled())
+    }
+
+    /// Flush a finished recorder into the shared sink. Empty recorders
+    /// from disabled runs are dropped silently.
+    pub fn absorb(&self, rec: Recorder) {
+        if !rec.is_on() {
+            return;
+        }
+        if let Some(p) = &self.planes {
+            if let Ok(mut sinks) = p.sinks.lock() {
+                sinks.push(rec.into_log());
+            }
+        }
+    }
+
+    /// Start a wall-clock span. No-op guard when the span plane is off.
+    pub fn span(&self, name: &'static str) -> SpanGuard {
+        match &self.planes {
+            Some(p) if p.spans_on => {
+                SpanGuard::new(Some(p.spans.clone()), p.epoch, name)
+            }
+            _ => SpanGuard::disabled(),
+        }
+    }
+
+    /// The full `dagcloud.telemetry/v1` document (both planes).
+    pub fn telemetry_json(&self) -> Json {
+        match &self.planes {
+            Some(p) => {
+                let sinks = p.sinks.lock().map(|s| s.clone()).unwrap_or_default();
+                let spans = p.spans.lock().map(|s| s.clone()).unwrap_or_default();
+                export::telemetry_doc(&sinks, &spans)
+            }
+            None => export::telemetry_doc(&[], &SpanStats::default()),
+        }
+    }
+
+    /// Just the deterministic event-log section (byte-stable across
+    /// thread/shard counts — what the determinism property tests compare).
+    pub fn deterministic_json(&self) -> Json {
+        match &self.planes {
+            Some(p) => {
+                let sinks = p.sinks.lock().map(|s| s.clone()).unwrap_or_default();
+                export::deterministic_doc(&sinks)
+            }
+            None => export::deterministic_doc(&[]),
+        }
+    }
+
+    /// Chrome trace-event JSON for `chrome://tracing` / Perfetto.
+    pub fn chrome_trace_json(&self) -> Json {
+        match &self.planes {
+            Some(p) => {
+                let spans = p.spans.lock().map(|s| s.clone()).unwrap_or_default();
+                export::chrome_trace(&spans)
+            }
+            None => export::chrome_trace(&SpanStats::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let t = Telemetry::disabled();
+        assert!(!t.enabled());
+        assert!(!t.events_enabled());
+        assert!(!t.spans_enabled());
+        let mut r = t.recorder("x#0");
+        r.emit(1.0, SimEventKind::FrontierAdvanced { slots: 3 });
+        assert!(r.is_empty());
+        t.absorb(r);
+        drop(t.span("noop"));
+        let det = t.deterministic_json();
+        assert_eq!(det.get("count").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn events_flow_into_the_deterministic_doc() {
+        let t = Telemetry::new(TelemetryOptions {
+            events: true,
+            spans: false,
+            level: LogLevel::Info,
+        });
+        let mut r = t.recorder("w#0");
+        r.emit(1.0, SimEventKind::SpecChosen { job: 0, spec: 4 });
+        r.emit(2.0, SimEventKind::SweepBatch { retired: 1, specs: 9 });
+        t.absorb(r);
+        let det = t.deterministic_json();
+        assert_eq!(det.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(det.get("sources").unwrap().as_f64(), Some(1.0));
+        // Span plane stayed off.
+        assert!(!t.spans_enabled());
+        let full = t.telemetry_json();
+        assert_eq!(
+            full.get("wall_clock").unwrap().get("trace_events").unwrap().as_f64(),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn clones_share_one_sink() {
+        let t = Telemetry::new(TelemetryOptions {
+            events: true,
+            spans: true,
+            level: LogLevel::Quiet,
+        });
+        let t2 = t.clone();
+        let mut r = t2.recorder("a#0");
+        r.emit(0.5, SimEventKind::FrontierAdvanced { slots: 8 });
+        t2.absorb(r);
+        {
+            let _g = t2.span("shared");
+        }
+        let det = t.deterministic_json();
+        assert_eq!(det.get("count").unwrap().as_f64(), Some(1.0));
+        let full = t.telemetry_json();
+        assert_eq!(
+            full.get("wall_clock")
+                .unwrap()
+                .get("spans")
+                .unwrap()
+                .get("shared")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_f64(),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn chrome_trace_json_is_valid_even_when_empty() {
+        let t = Telemetry::disabled();
+        let doc = t.chrome_trace_json();
+        assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+        assert!(Json::parse(&doc.pretty()).is_ok());
+    }
+}

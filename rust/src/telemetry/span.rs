@@ -1,0 +1,214 @@
+//! Wall-clock plane: scoped-span profiler.
+//!
+//! [`SpanGuard`] is an RAII timer: construct it around a region, and on
+//! drop it folds the elapsed wall time into per-name aggregates (count,
+//! total ns, log-scale latency histogram) plus a bounded list of raw
+//! trace events for the Chrome trace export. Everything here is
+//! nondeterministic by nature and is quarantined in the `wall_clock`
+//! section of `dagcloud.telemetry/v1` — never in a scenario/fleet/
+//! robustness report.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::hist::Histogram;
+
+/// Raw trace events kept for the Chrome export. Aggregates keep counting
+/// past the cap; only the per-event list is truncated.
+pub const TRACE_CAP: usize = 100_000;
+
+/// Per-name span aggregate.
+#[derive(Debug, Clone)]
+pub struct SpanAgg {
+    pub count: u64,
+    pub total_ns: u64,
+    pub hist: Histogram,
+}
+
+impl SpanAgg {
+    fn new() -> SpanAgg {
+        SpanAgg { count: 0, total_ns: 0, hist: Histogram::new() }
+    }
+}
+
+/// One completed span occurrence, for the Chrome trace-event export.
+/// Timestamps are µs since the telemetry handle's epoch.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    /// Small display-only thread index parsed from the OS thread id, so
+    /// overlapping spans from the worker pool land on distinct tracks in
+    /// Perfetto. Display only — never serialized outside the trace file.
+    pub tid: u64,
+}
+
+/// All wall-clock span state for one telemetry handle.
+#[derive(Debug, Clone, Default)]
+pub struct SpanStats {
+    agg: BTreeMap<&'static str, SpanAgg>,
+    trace: Vec<TraceEvent>,
+    trace_dropped: u64,
+}
+
+impl SpanStats {
+    pub fn record(&mut self, name: &'static str, ts_us: f64, dur_ns: u64, tid: u64) {
+        let a = self.agg.entry(name).or_insert_with(SpanAgg::new);
+        a.count += 1;
+        a.total_ns += dur_ns;
+        a.hist.observe(dur_ns);
+        if self.trace.len() < TRACE_CAP {
+            self.trace.push(TraceEvent {
+                name,
+                ts_us,
+                dur_us: dur_ns as f64 / 1_000.0,
+                tid,
+            });
+        } else {
+            self.trace_dropped += 1;
+        }
+    }
+
+    pub fn aggregates(&self) -> &BTreeMap<&'static str, SpanAgg> {
+        &self.agg
+    }
+
+    pub fn trace_events(&self) -> &[TraceEvent] {
+        &self.trace
+    }
+
+    pub fn trace_dropped(&self) -> u64 {
+        self.trace_dropped
+    }
+
+    /// `{name: {count, total_ns, mean_ns, hist}}` — span names are
+    /// `&'static str`, so the BTreeMap (and the JSON) is canonically
+    /// ordered by name.
+    pub fn to_json(&self) -> Json {
+        let mut spans = Json::obj();
+        for (name, a) in &self.agg {
+            let mut j = Json::obj();
+            j.set("count", Json::Num(a.count as f64))
+                .set("total_ns", Json::Num(a.total_ns as f64))
+                .set(
+                    "mean_ns",
+                    Json::Num(if a.count == 0 {
+                        0.0
+                    } else {
+                        a.total_ns as f64 / a.count as f64
+                    }),
+                )
+                .set("hist", a.hist.to_json());
+            spans.set(name, j);
+        }
+        spans
+    }
+}
+
+/// Small display thread index from the OS thread id (`ThreadId(17)` →
+/// 17). Purely cosmetic: it spreads concurrent spans across Perfetto
+/// tracks and appears only in the Chrome trace file.
+fn display_tid() -> u64 {
+    let s = format!("{:?}", std::thread::current().id());
+    s.chars()
+        .filter(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or(0)
+}
+
+/// RAII wall-clock timer. When the handle's span plane is off the guard
+/// holds `None` and drop is a no-op.
+#[derive(Debug)]
+pub struct SpanGuard {
+    stats: Option<Arc<Mutex<SpanStats>>>,
+    epoch: Instant,
+    name: &'static str,
+    start: Instant,
+}
+
+impl SpanGuard {
+    pub(super) fn new(
+        stats: Option<Arc<Mutex<SpanStats>>>,
+        epoch: Instant,
+        name: &'static str,
+    ) -> SpanGuard {
+        SpanGuard { stats, epoch, name, start: Instant::now() }
+    }
+
+    /// A guard that times nothing (span plane disabled).
+    pub fn disabled() -> SpanGuard {
+        SpanGuard::new(None, Instant::now(), "")
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(stats) = self.stats.take() {
+            let dur_ns = self.start.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64;
+            let ts_us = self.start.duration_since(self.epoch).as_secs_f64() * 1e6;
+            if let Ok(mut s) = stats.lock() {
+                s.record(self.name, ts_us, dur_ns, display_tid());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_guard_is_a_noop() {
+        let g = SpanGuard::disabled();
+        drop(g);
+    }
+
+    #[test]
+    fn guard_records_into_aggregate_and_trace() {
+        let stats = Arc::new(Mutex::new(SpanStats::default()));
+        let epoch = Instant::now();
+        {
+            let _g = SpanGuard::new(Some(stats.clone()), epoch, "sweep");
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        }
+        {
+            let _g = SpanGuard::new(Some(stats.clone()), epoch, "sweep");
+        }
+        let s = stats.lock().unwrap();
+        let a = &s.aggregates()["sweep"];
+        assert_eq!(a.count, 2);
+        assert_eq!(a.hist.count(), 2);
+        assert_eq!(s.trace_events().len(), 2);
+        assert_eq!(s.trace_events()[0].name, "sweep");
+        assert!(s.trace_events()[0].dur_us >= 0.0);
+    }
+
+    #[test]
+    fn trace_cap_preserves_aggregates() {
+        let mut s = SpanStats::default();
+        for i in 0..(TRACE_CAP + 3) {
+            s.record("hot", i as f64, 10, 0);
+        }
+        assert_eq!(s.trace_events().len(), TRACE_CAP);
+        assert_eq!(s.trace_dropped(), 3);
+        assert_eq!(s.aggregates()["hot"].count, (TRACE_CAP + 3) as u64);
+    }
+
+    #[test]
+    fn span_json_has_mean_and_hist() {
+        let mut s = SpanStats::default();
+        s.record("merge", 0.0, 100, 0);
+        s.record("merge", 5.0, 300, 0);
+        let j = s.to_json();
+        let m = j.get("merge").unwrap();
+        assert_eq!(m.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(m.get("total_ns").unwrap().as_f64(), Some(400.0));
+        assert_eq!(m.get("mean_ns").unwrap().as_f64(), Some(200.0));
+        assert_eq!(m.get("hist").unwrap().get("count").unwrap().as_f64(), Some(2.0));
+    }
+}

@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 
 use super::json::Json;
 use super::stats::{mean, percentile};
+use crate::telemetry::Logger;
 
 /// One benchmark result.
 #[derive(Debug, Clone)]
@@ -57,6 +58,9 @@ pub struct Bencher {
     budget: Duration,
     min_iters: u64,
     max_iters: u64,
+    /// Result lines go through the status logger (stderr), so redirecting
+    /// stdout to capture a JSON report can never pick up progress text.
+    log: Logger,
 }
 
 impl Default for Bencher {
@@ -75,6 +79,7 @@ impl Bencher {
             budget: if fast { Duration::from_millis(300) } else { Duration::from_secs(2) },
             min_iters: 5,
             max_iters: 1_000_000,
+            log: Logger::from_env(),
         }
     }
 
@@ -113,13 +118,16 @@ impl Bencher {
             p95_ns: percentile(&samples, 95.0),
             throughput: None,
         };
-        println!(
-            "{:<52} time: [{} {} {}]  ({} iters)",
-            result.name,
-            fmt_ns(result.p50_ns),
-            fmt_ns(result.mean_ns),
-            fmt_ns(result.p95_ns),
-            result.iters
+        self.log.info(
+            "bench",
+            &format!(
+                "{:<52} time: [{} {} {}]  ({} iters)",
+                result.name,
+                fmt_ns(result.p50_ns),
+                fmt_ns(result.mean_ns),
+                fmt_ns(result.p95_ns),
+                result.iters
+            ),
         );
         self.results.push(result);
         self.results.last().unwrap()
@@ -138,7 +146,8 @@ impl Bencher {
         let last = self.results.last_mut().unwrap();
         let per_s = items_per_iter / (last.mean_ns / 1e9);
         last.throughput = Some((per_s, unit.to_string()));
-        println!("{:<52} thrpt: {:.1} {}", "", per_s, unit);
+        self.log
+            .info("bench", &format!("{:<52} thrpt: {:.1} {}", "", per_s, unit));
     }
 
     /// Write all results as a JSON report.

@@ -1,9 +1,13 @@
 //! Tiny argument parser (clap is unavailable offline).
 //!
-//! Supports `command --flag`, `--key value`, `--key=value` and positional
-//! arguments, with typed getters and an auto-generated usage string.
+//! Supports `command --flag`, `--key value`, `--key=value`, a small set of
+//! single-dash aliases (`-v`, `-q`) and positional arguments, with typed
+//! getters and an auto-generated usage string.
 
 use std::collections::BTreeMap;
+
+/// Single-dash shorthands mapped onto their long flag names before parsing.
+const SHORT_ALIASES: &[(&str, &str)] = &[("-v", "verbose"), ("-q", "quiet")];
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -20,7 +24,9 @@ impl Args {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();
         while let Some(arg) = iter.next() {
-            if let Some(stripped) = arg.strip_prefix("--") {
+            if let Some((_, long)) = SHORT_ALIASES.iter().find(|(s, _)| *s == arg) {
+                out.flags.push(long.to_string());
+            } else if let Some(stripped) = arg.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if flag_names.contains(&stripped) {
@@ -127,6 +133,15 @@ mod tests {
         assert_eq!(a.get_f64("x", 0.0).unwrap(), 1.5);
         assert_eq!(a.get_f64("missing", 9.0).unwrap(), 9.0);
         assert!(a.get_u64("bad", 0).is_err());
+    }
+
+    #[test]
+    fn short_aliases() {
+        let a = Args::parse(argv(&["run", "-v", "--jobs", "5", "-q"]), &[]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.get_u64("jobs", 0).unwrap(), 5);
+        assert_eq!(a.positional, vec!["run"]);
     }
 
     #[test]

@@ -28,6 +28,7 @@ fn batch_outcomes() -> Vec<ScenarioOutcome> {
             base_seed: 23,
             threads: 4,
             jobs_override: Some(8),
+            telemetry: Default::default(),
         },
     )
     .unwrap()

@@ -70,6 +70,7 @@ fn run_cells(specs: &[ScenarioSpec], threads: usize) -> Vec<ScenarioOutcome> {
             base_seed: 41,
             threads,
             jobs_override: Some(8),
+            telemetry: Default::default(),
         },
     )
     .unwrap()

@@ -75,6 +75,7 @@ fn report_json_is_byte_identical_across_thread_counts() {
                     base_seed,
                     threads,
                     jobs_override: Some(10),
+                    telemetry: Default::default(),
                 },
             )
             .map_err(|e| e.to_string())?;
@@ -175,6 +176,7 @@ fn one_offer_view_report_is_byte_identical_to_single_trace_path() {
                 base_seed: 99,
                 threads: 2,
                 jobs_override: Some(12),
+                telemetry: Default::default(),
             },
         )
         .unwrap();
@@ -203,6 +205,7 @@ fn capacity_and_routing_worlds_are_deterministic_and_route() {
                 base_seed: 31,
                 threads,
                 jobs_override: Some(16),
+                telemetry: Default::default(),
             },
         )
         .unwrap();

@@ -1,0 +1,298 @@
+//! Telemetry headline properties, end to end:
+//!
+//! * enabling telemetry changes **zero bytes** of `scenarios.json`,
+//!   `fleet.json`, `robustness.json`, and `feed_run.json`;
+//! * the deterministic event log is byte-identical across `--threads`,
+//!   and its per-cell half is byte-identical across `--shards`;
+//! * the exported log is canonically ordered by `(sim_time, source, seq)`;
+//! * the wall-clock plane (spans, Chrome trace) stays quarantined in the
+//!   telemetry document.
+
+use dagcloud::coordinator::Config;
+use dagcloud::experiments::feed::{run_feed, FeedCliOptions};
+use dagcloud::experiments::fleet::{run_fleet, FleetCliOptions};
+use dagcloud::experiments::robustness::{run_robustness, RobustnessCliOptions};
+use dagcloud::scenario::{self, BatchOptions, ScenarioSpec};
+use dagcloud::telemetry::{LogLevel, Telemetry, TelemetryOptions};
+use dagcloud::util::json::Json;
+
+/// Both planes on, logger silenced (tests should not chat on stderr).
+fn tele() -> Telemetry {
+    Telemetry::new(TelemetryOptions {
+        events: true,
+        spans: true,
+        level: LogLevel::Quiet,
+    })
+}
+
+fn smoke_specs(names: &[&str]) -> Vec<ScenarioSpec> {
+    names
+        .iter()
+        .map(|n| {
+            let mut s = scenario::find(n).expect(n);
+            s.workload.small_tasks = true;
+            s
+        })
+        .collect()
+}
+
+fn tmp_dir(name: &str) -> String {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+fn read(dir: &str, file: &str) -> String {
+    std::fs::read_to_string(format!("{dir}/{file}")).unwrap()
+}
+
+/// The per-cell half of a handle's event log (sources named `world#rep`),
+/// serialized canonically. Harness-level sources (`fleet/merge`,
+/// `robustness/gate`) are excluded: their row counts legitimately depend
+/// on the shard plan.
+fn cell_events(t: &Telemetry) -> String {
+    let det = t.deterministic_json();
+    let rows: Vec<Json> = det
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("source").unwrap().as_str().unwrap().contains('#'))
+        .cloned()
+        .collect();
+    Json::Arr(rows).pretty()
+}
+
+#[test]
+fn scenario_report_bytes_are_unchanged_by_telemetry() {
+    let specs = smoke_specs(&["paper-default", "bursty-arrivals", "deadline-tight"]);
+    let run = |telemetry: Telemetry| {
+        let outs = scenario::run_batch(
+            &specs,
+            &BatchOptions {
+                seeds: 2,
+                base_seed: 7,
+                threads: 4,
+                jobs_override: Some(8),
+                telemetry,
+            },
+        )
+        .unwrap();
+        scenario::report_json(&outs, 2, 7, true).pretty()
+    };
+
+    let off = run(Telemetry::disabled());
+    let t = tele();
+    let on = run(t.clone());
+    assert_eq!(off, on, "telemetry perturbed scenarios.json bytes");
+
+    // The run was actually observed: one source per cell, events in it,
+    // and wall-clock spans on the other side of the wall.
+    let det = t.deterministic_json();
+    assert_eq!(det.get("sources").unwrap().as_f64(), Some(6.0));
+    assert!(det.get("count").unwrap().as_f64().unwrap() > 0.0);
+    let full = t.telemetry_json();
+    assert_eq!(
+        full.get("schema").unwrap().as_str(),
+        Some("dagcloud.telemetry/v1")
+    );
+    let spans = full.get("wall_clock").unwrap().get("spans").unwrap();
+    assert!(spans.get("runner/cell").is_some(), "runner span missing");
+    // Chrome trace export is valid, non-empty JSON.
+    let trace = t.chrome_trace_json();
+    assert!(!trace.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    assert!(Json::parse(&trace.pretty()).is_ok());
+}
+
+#[test]
+fn event_log_bytes_are_identical_across_thread_counts() {
+    let specs = smoke_specs(&["paper-default", "replayed-trace"]);
+    let log_at = |threads: usize| {
+        let t = tele();
+        scenario::run_batch(
+            &specs,
+            &BatchOptions {
+                seeds: 2,
+                base_seed: 11,
+                threads,
+                jobs_override: Some(8),
+                telemetry: t.clone(),
+            },
+        )
+        .unwrap();
+        t.deterministic_json().pretty()
+    };
+    let one = log_at(1);
+    let eight = log_at(8);
+    assert_eq!(one, eight, "event log differs between --threads 1 and 8");
+    for kind in ["window_opened", "spec_chosen", "sweep_batch", "param_snapshot"] {
+        assert!(one.contains(kind), "no {kind} events recorded");
+    }
+}
+
+#[test]
+fn exported_event_log_is_canonically_ordered() {
+    let specs = smoke_specs(&["paper-default", "bursty-arrivals"]);
+    let t = tele();
+    scenario::run_batch(
+        &specs,
+        &BatchOptions {
+            seeds: 1,
+            base_seed: 3,
+            threads: 4,
+            jobs_override: Some(8),
+            telemetry: t.clone(),
+        },
+    )
+    .unwrap();
+    let det = t.deterministic_json();
+    let events = det.get("events").unwrap().as_arr().unwrap();
+    assert!(events.len() > 1);
+    let key = |e: &Json| {
+        (
+            e.get("sim_time").unwrap().as_f64().unwrap(),
+            e.get("source").unwrap().as_str().unwrap().to_string(),
+            e.get("seq").unwrap().as_f64().unwrap(),
+        )
+    };
+    for w in events.windows(2) {
+        let (ta, sa, qa) = key(&w[0]);
+        let (tb, sb, qb) = key(&w[1]);
+        assert!(
+            (ta, sa.as_str(), qa) <= (tb, sb.as_str(), qb),
+            "events out of canonical order: ({ta},{sa},{qa}) then ({tb},{sb},{qb})"
+        );
+    }
+}
+
+#[test]
+fn fleet_bytes_unchanged_and_cell_log_shard_invariant() {
+    let cfg = |telemetry: Telemetry| Config {
+        seed: 17,
+        threads: 2,
+        use_pjrt: false,
+        telemetry,
+        ..Config::default()
+    };
+    let opts = |shards: usize| FleetCliOptions {
+        names: Some(vec![
+            "paper-default".into(),
+            "bursty-arrivals".into(),
+            "deadline-tight".into(),
+        ]),
+        spec_file: None,
+        seeds: 1,
+        shards,
+        smoke: true,
+        jobs_override: Some(8),
+        merge_only: None,
+        online: Vec::new(),
+    };
+
+    // Telemetry on vs off at the same shard count: merged bytes identical.
+    let d_off = tmp_dir("dagcloud_tele_fleet_off");
+    run_fleet(&cfg(Telemetry::disabled()), &opts(2), &d_off).unwrap();
+    let t2 = tele();
+    let d_on = tmp_dir("dagcloud_tele_fleet_on");
+    run_fleet(&cfg(t2.clone()), &opts(2), &d_on).unwrap();
+    assert_eq!(
+        read(&d_off, "fleet.json"),
+        read(&d_on, "fleet.json"),
+        "telemetry perturbed fleet.json bytes"
+    );
+    assert!(t2.deterministic_json().pretty().contains("report_absorbed"));
+
+    // Per-cell event rows are invariant under the shard count.
+    let t1 = tele();
+    let d1 = tmp_dir("dagcloud_tele_fleet_k1");
+    run_fleet(&cfg(t1.clone()), &opts(1), &d1).unwrap();
+    let t4 = tele();
+    let d4 = tmp_dir("dagcloud_tele_fleet_k4");
+    run_fleet(&cfg(t4.clone()), &opts(4), &d4).unwrap();
+    let cells1 = cell_events(&t1);
+    assert_eq!(
+        cells1,
+        cell_events(&t4),
+        "per-cell event log differs between --shards 1 and --shards 4"
+    );
+    assert!(cells1.len() > 2, "no cell events recorded");
+}
+
+#[test]
+fn robustness_bytes_are_unchanged_by_telemetry() {
+    let cfg = |telemetry: Telemetry| Config {
+        seed: 31,
+        threads: 2,
+        use_pjrt: false,
+        telemetry,
+        ..Config::default()
+    };
+    let opts = RobustnessCliOptions {
+        bases: Some(vec!["paper-default".into()]),
+        derive: 4,
+        shards: 2,
+        smoke: true,
+        jobs_override: Some(8),
+        ..RobustnessCliOptions::default()
+    };
+    let d_off = tmp_dir("dagcloud_tele_rob_off");
+    run_robustness(&cfg(Telemetry::disabled()), &opts, &d_off).unwrap();
+    let t = tele();
+    let d_on = tmp_dir("dagcloud_tele_rob_on");
+    run_robustness(&cfg(t.clone()), &opts, &d_on).unwrap();
+    for f in ["fleet.json", "robustness.json"] {
+        assert_eq!(
+            read(&d_off, f),
+            read(&d_on, f),
+            "telemetry perturbed {f} bytes"
+        );
+    }
+    assert!(t.deterministic_json().pretty().contains("report_absorbed"));
+}
+
+#[test]
+fn feed_run_bytes_are_unchanged_by_telemetry() {
+    let dir = std::env::temp_dir().join("dagcloud_tele_feed_in");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("spot_sample.csv");
+    std::fs::write(
+        &trace_path,
+        include_str!("../../examples/traces/spot_sample.csv"),
+    )
+    .unwrap();
+
+    let cli = FeedCliOptions {
+        trace_path: trace_path.to_string_lossy().into_owned(),
+        format: None,
+        scenario: None,
+        time_scale: None,
+        price_scale: 1.0,
+        az: None,
+        instance_type: None,
+        snapshot_every: Some(8),
+        jobs_override: Some(64),
+    };
+    let cfg = |telemetry: Telemetry| Config {
+        jobs: 64,
+        seed: 5,
+        threads: 2,
+        use_pjrt: false,
+        telemetry,
+        ..Config::default()
+    };
+
+    let d_off = tmp_dir("dagcloud_tele_feed_off");
+    run_feed(&cfg(Telemetry::disabled()), &cli, &d_off).unwrap();
+    let t = tele();
+    let d_on = tmp_dir("dagcloud_tele_feed_on");
+    run_feed(&cfg(t.clone()), &cli, &d_on).unwrap();
+    assert_eq!(
+        read(&d_off, "feed_run.json"),
+        read(&d_on, "feed_run.json"),
+        "telemetry perturbed feed_run.json bytes"
+    );
+    let log = t.deterministic_json().pretty();
+    assert!(log.contains("frontier_advanced"), "no frontier events from the online loop");
+    assert!(log.contains("sweep_batch"));
+}
