@@ -1,0 +1,125 @@
+//! Online hot-loop benches: what a view refresh costs as the feed grows,
+//! how long an appended slot takes to become decision-ready, and what the
+//! append-incremental sweep tables save over a per-retirement rebuild.
+//!
+//! The headline numbers CI tracks (`BENCH_online.json`):
+//!
+//! * `online/view_refresh_*` — materializing a [`MarketView`] from the
+//!   mux at 1k / 10k / 100k ingested slots. Shared-suffix traces make
+//!   this O(new slots): the three numbers should sit flat (within
+//!   noise) instead of scaling with history length;
+//! * `online/append_to_decision` — one new slot pushed into a bounded
+//!   buffer, trace refreshed, frontier price read: the latency from
+//!   feed append to a decision-ready view;
+//! * `tables/append_120_incremental` vs `tables/rebuild_48k_slots` —
+//!   the contract of [`StreamingTables`]: extending the per-bid prefix
+//!   tables costs O(new slots · bids) no matter how long the window
+//!   already is, while a batch rebuild pays O(S · bids) per retirement.
+
+use dagcloud::feed::{FeedBinding, FeedBuffer, FeedMux, PriceEvent};
+use dagcloud::learning::sweep::StreamingTables;
+use dagcloud::market::SLOTS_PER_UNIT;
+use dagcloud::policy::grid_b;
+use dagcloud::util::bench::Bencher;
+
+const DT: f64 = 1.0 / SLOTS_PER_UNIT as f64;
+
+/// Deterministic synthetic price path (no RNG dependency in benches).
+fn price(i: usize) -> f64 {
+    0.14 + 0.7 * (((i * 2_654_435_761) >> 7) & 0xff) as f64 / 255.0
+}
+
+/// A single-feed mux with `slots` determined slots, frontier advanced.
+fn mux_with_slots(slots: usize) -> FeedMux {
+    let events: Vec<PriceEvent> = (0..slots + 1)
+        .map(|i| PriceEvent {
+            time: (i as f64 + 1.0) * DT,
+            price: price(i),
+        })
+        .collect();
+    let binding = FeedBinding {
+        region: "bench".into(),
+        instance_type: "spot".into(),
+        od_price: 1.0,
+        capacity: None,
+        events,
+    };
+    let mut mux = FeedMux::new(vec![binding], DT).expect("mux");
+    mux.advance_to_slot(slots).expect("advance");
+    mux
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_online ==\n");
+
+    // --- view refresh vs ingested history ---
+    // Contract: sealed chunks are referenced, not copied, so the refresh
+    // cost tracks the open tail (bounded), not the history length.
+    for &slots in &[1_000usize, 10_000, 100_000] {
+        let mux = mux_with_slots(slots);
+        let name = format!("online/view_refresh_{}k", slots / 1_000);
+        b.bench(&name, || {
+            let view = mux.view().expect("view");
+            view.offers()[0].trace.num_slots()
+        });
+    }
+
+    // --- append-to-decision latency ---
+    // Steady state: bounded retention keeps the buffer resident-size
+    // constant while each iteration appends one fresh slot, refreshes the
+    // shared-suffix trace, and reads the frontier price.
+    let long: Vec<f64> = (0..48_000).map(price).collect();
+    let mut live = FeedBuffer::new(DT).with_retention(8_192);
+    live.push_slots(&long).expect("seed live buffer");
+    let mut next = 48_000usize;
+    b.bench("online/append_to_decision", || {
+        live.push_slots(&[price(next)]).expect("append");
+        next += 1;
+        let trace = live.shared_trace().expect("trace");
+        trace.price_at(trace.horizon() - 0.5 * DT)
+    });
+
+    // --- incremental table append vs per-retirement rebuild ---
+    // Contract: appending k fresh slots to [`StreamingTables`] costs
+    // O(k·bids) regardless of how many slots the window already covers;
+    // rebuilding from scratch (what every retirement paid before the
+    // tables streamed) costs O(S·bids) again.
+    let bids = grid_b();
+    let fresh: Vec<f64> = (0..120).map(|i| price(i + 48_000)).collect();
+    b.bench("tables/append_120_incremental", || {
+        let mut st = StreamingTables::new(&bids, DT, fresh.len());
+        for &p in &fresh {
+            st.append(p);
+        }
+        st.filled()
+    });
+    b.bench("tables/rebuild_48k_slots", || {
+        let mut st = StreamingTables::new(&bids, DT, long.len());
+        for &p in &long {
+            st.append(p);
+        }
+        st.filled()
+    });
+
+    let incr = b.results.iter().find(|r| r.name.contains("incremental")).unwrap().mean_ns;
+    let rebuild = b.results.iter().find(|r| r.name.contains("48k")).unwrap().mean_ns;
+    println!(
+        "\nextend tables by 120 slots: incremental {:.1} µs vs 48k rebuild {:.1} µs ({:.0}x)",
+        incr / 1e3,
+        rebuild / 1e3,
+        rebuild / incr.max(1.0)
+    );
+    let r1 = b.results.iter().find(|r| r.name.ends_with("refresh_1k")).unwrap().mean_ns;
+    let r100 = b.results.iter().find(|r| r.name.ends_with("refresh_100k")).unwrap().mean_ns;
+    println!(
+        "view refresh: 1k {:.1} µs vs 100k {:.1} µs ({:.1}x — flat is the contract)",
+        r1 / 1e3,
+        r100 / 1e3,
+        r100 / r1.max(1.0)
+    );
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_online.json").expect("write bench json");
+    println!("\nwritten results/bench_online.json");
+}

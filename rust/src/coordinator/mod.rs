@@ -453,25 +453,32 @@ pub fn tola_run_view_traced(
                             let job = &jobs[ji];
                             let (home_prices, dt) =
                                 trace.resample_window(job.arrival, job.deadline, S_MAX);
-                            let navail: Vec<f64> = match &pool {
+                            // Offer-independent arrays are shared, not
+                            // cloned, across the per-offer marshalings:
+                            // one navail allocation per job, and offer 0
+                            // borrows the home resample.
+                            let home_prices: std::sync::Arc<[f64]> = home_prices.into();
+                            let navail: std::sync::Arc<[f64]> = match &pool {
                                 Some(pl) => (0..home_prices.len())
                                     .map(|k| {
                                         let t0 = job.arrival + k as f64 * dt;
                                         pl.available_at(t0.min(horizon)) as f64
                                     })
-                                    .collect(),
-                                None => vec![0.0; home_prices.len()],
+                                    .collect::<Vec<f64>>()
+                                    .into(),
+                                None => vec![0.0; home_prices.len()].into(),
                             };
                             sweep_offers
                                 .iter()
                                 .enumerate()
                                 .map(|(k, o)| {
-                                    let prices = if k == 0 {
+                                    let prices: std::sync::Arc<[f64]> = if k == 0 {
                                         home_prices.clone()
                                     } else {
                                         o.trace
                                             .resample_window(job.arrival, job.deadline, S_MAX)
                                             .0
+                                            .into()
                                     };
                                     CounterfactualJob::from_job(
                                         job,

@@ -23,6 +23,29 @@
 //! [`crate::learning::regret::RegretTracker::snapshot`], weight mass), so
 //! a long-running process can be observed without waiting for the stream
 //! to end.
+//!
+//! ## Bounded-memory streaming
+//!
+//! The hot loop is append-incremental end to end. View refreshes share the
+//! ingested history ([`crate::feed::FeedBuffer`]'s Arc'd chunks — see
+//! [`FeedMux::view`]), so a refresh costs O(new slots), not O(history).
+//! Each live job carries a [`JobStream`]: its counterfactual window's
+//! resampled prices and per-bid sweep prefix tables
+//! ([`sweep::StreamingTables`]), grown a slot at a time as the shared
+//! frontier advances past each sample midpoint. At retirement the
+//! marshaling consumes the streamed window instead of re-reading the whole
+//! trace, and the sweep adopts the streamed tables instead of rebuilding
+//! them — bit-identical either way (the streaming property tests in
+//! [`sweep`] pin exact equality under arbitrary append splits). Pool
+//! availability (`navail`) cannot stream: `available_at` reflects
+//! reservations made between arrival and retirement, so it is built at
+//! retirement — once per job, shared across offers.
+//!
+//! With [`FeedMux::with_retention`] the feed evicts slots behind the
+//! frontier and resident memory is O(retention). A window that reaches an
+//! evicted slot is a hard error naming the slot (mirroring the lookahead
+//! guard), never a silent clamp; when retention covers all live windows
+//! the bounded run is byte-identical to the unbounded one.
 
 use std::collections::BinaryHeap;
 
@@ -32,7 +55,7 @@ use crate::feed::FeedMux;
 use crate::learning::counterfactual::{CfSpec, CounterfactualJob, S_MAX};
 use crate::learning::regret::RegretTracker;
 use crate::learning::{sweep, Tola};
-use crate::market::{CapacityLedger, CostLedger, InstanceKind, MarketView, SelfOwnedPool, SLOTS_PER_UNIT};
+use crate::market::{CapacityLedger, CostLedger, InstanceKind, MarketOffer, MarketView, PriceTrace, SelfOwnedPool, SLOTS_PER_UNIT};
 use crate::policy::baselines::even_windows;
 use crate::policy::dealloc::{dealloc, windows_to_deadlines};
 use crate::policy::routing::RoutingPolicy;
@@ -106,11 +129,14 @@ struct LiveMarket {
 }
 
 impl LiveMarket {
-    fn new(mut mux: FeedMux) -> Result<LiveMarket> {
+    fn new(mut mux: FeedMux, tele: &Telemetry) -> Result<LiveMarket> {
         if !mux.advance_to_slot(1)? {
             bail!("feed delivered no price slots at all");
         }
-        let view = mux.view()?;
+        let view = {
+            let _span = tele.span("online/view_refresh");
+            mux.view()?
+        };
         let view_slots = mux.frontier_slot();
         Ok(LiveMarket {
             mux,
@@ -123,13 +149,13 @@ impl LiveMarket {
     /// lookahead guard lives here: an event that needs prices the feed has
     /// not delivered is a hard error.
     ///
-    /// Each view refresh clones the ingested history (traces are
-    /// immutable), so ingestion is opportunistically advanced to double
-    /// the current frontier whenever it must grow at all: refresh count is
-    /// O(log S) and total clone cost O(S log S) instead of O(events · S).
-    /// Ingesting *queued feed data* ahead of `need` is not lookahead —
+    /// A view refresh shares the ingested history (Arc'd chunks), so it
+    /// costs O(new slots); ingestion is still opportunistically advanced
+    /// to double the current frontier whenever it must grow at all, so
+    /// refresh count stays O(log S) on a pre-queued feed. Ingesting
+    /// *queued feed data* ahead of `need` is not lookahead —
     /// only resolving an event whose reads outrun the feed is.
-    fn ensure_slots(&mut self, need: usize, at: f64) -> Result<()> {
+    fn ensure_slots(&mut self, need: usize, at: f64, tele: &Telemetry) -> Result<()> {
         if need > self.mux.frontier_slot() {
             let target = need.max(self.mux.frontier_slot().saturating_mul(2));
             self.mux.advance_to_slot(target)?;
@@ -146,11 +172,30 @@ impl LiveMarket {
             }
         }
         if need > self.view_slots {
+            let _span = tele.span("online/view_refresh");
             self.view = self.mux.view()?;
             self.view_slots = self.mux.frontier_slot();
         }
         Ok(())
     }
+}
+
+/// Bounded-retention guard: every slot a window reads, starting at `slot`,
+/// must still be resident in each trace it touches. Mirrors the lookahead
+/// guard — reaching evicted history is a hard error naming the slot, never
+/// a silent clamp.
+fn ensure_resident(offers: &[MarketOffer], slot: usize, at: f64, what: &str) -> Result<()> {
+    for o in offers {
+        let first = o.trace.first_slot();
+        if slot < first {
+            bail!(
+                "at t={at:.4}: {what} reads feed slot {slot}, but feed slot {slot} is \
+                 evicted (retention starts at slot {first}); raise --retention so live \
+                 windows stay resident"
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Slots that must be ingested so every price read strictly before time
@@ -165,6 +210,141 @@ fn slots_through(t: f64, dt: f64) -> usize {
 #[inline]
 fn slots_covering(t: f64, dt: f64) -> usize {
     (t / dt).floor().max(0.0) as usize + 1
+}
+
+/// One offer's streamed counterfactual window: the resampled prices plus
+/// the per-bid sweep prefix tables, both grown one slot at a time.
+struct OfferStream {
+    prices: Vec<f64>,
+    tables: sweep::StreamingTables,
+}
+
+/// A live job's append-incremental counterfactual state: the window
+/// resampling that the retire-time `trace.resample_window` would perform,
+/// replayed sample-by-sample as the shared frontier advances. Geometry
+/// (`n`, `dt_out`, sample midpoints) replicates
+/// [`PriceTrace::resample_window`] expression-for-expression, and table
+/// appends replicate the batch table build, so a retirement that consumes
+/// a complete stream is bit-identical to one that rebuilds from scratch.
+struct JobStream {
+    t0: f64,
+    /// Resampled slot count before `+inf` padding (`native.clamp(1, S_MAX)`).
+    n: usize,
+    /// Resampled slot length `(t1 − t0) / n`.
+    dt_out: f64,
+    /// Sample midpoints streamed so far (`0..n`).
+    filled: usize,
+    /// Whether the out-of-window `+inf` table padding has been appended.
+    padded: bool,
+    /// One stream per sweep offer, in `MarketView::offers()` order.
+    offers: Vec<OfferStream>,
+}
+
+impl JobStream {
+    fn new(job: &ChainJob, slot_len: f64, n_offers: usize, bids: &[f64]) -> JobStream {
+        // Same geometry as `PriceTrace::resample_window(arrival, deadline)`.
+        let native = ((job.deadline - job.arrival) / slot_len).ceil() as usize;
+        let n = native.clamp(1, S_MAX);
+        let dt_out = (job.deadline - job.arrival) / n as f64;
+        // Same shape the retire-time `SweepContext::new` will compute over
+        // the S_MAX-padded price vector.
+        let num_slots = sweep::sweep_num_slots(job.window(), dt_out, S_MAX);
+        let offers = (0..n_offers)
+            .map(|_| OfferStream {
+                prices: Vec::with_capacity(n),
+                tables: sweep::StreamingTables::new(bids, dt_out, num_slots),
+            })
+            .collect();
+        JobStream { t0: job.arrival, n, dt_out, filled: 0, padded: false, offers }
+    }
+
+    /// Stream every sample midpoint the materialized view now covers.
+    /// O(new slots) total across all calls; a no-op when the frontier has
+    /// not passed the next midpoint. Errors when a midpoint's slot has
+    /// already been evicted (retention too small for this live window).
+    fn extend(&mut self, view: &MarketView, view_slots: usize, dt_feed: f64) -> Result<()> {
+        while self.filled < self.n {
+            // Same sample expression as `PriceTrace::resample_window`.
+            let mid = self.t0 + (self.filled as f64 + 0.5) * self.dt_out;
+            let slot = (mid / dt_feed).floor().max(0.0) as usize;
+            if slot + 1 > view_slots {
+                break;
+            }
+            ensure_resident(
+                &view.offers()[..self.offers.len()],
+                slot,
+                mid,
+                "this job's streamed counterfactual window",
+            )?;
+            for (k, os) in self.offers.iter_mut().enumerate() {
+                let p = view.offers()[k].trace.price_at(mid);
+                os.prices.push(p);
+                os.tables.append(p);
+            }
+            self.filled += 1;
+        }
+        if self.filled == self.n && !self.padded {
+            // Out-of-window padding slots carry +inf (never winning),
+            // matching the `resize(S_MAX, +inf)` the batch resample does.
+            for os in &mut self.offers {
+                for _ in self.n..os.tables.num_slots() {
+                    os.tables.append(f64::INFINITY);
+                }
+            }
+            self.padded = true;
+        }
+        Ok(())
+    }
+
+    fn is_complete(&self) -> bool {
+        self.padded
+    }
+}
+
+/// Per-slot pool availability over a job's resampled window — built at
+/// retirement (reservations between arrival and retirement change
+/// `available_at`, so this cannot stream) and shared across all of the
+/// job's per-offer marshalings as one allocation.
+fn navail_for(
+    pool: &Option<SelfOwnedPool>,
+    job: &ChainJob,
+    len: usize,
+    dt: f64,
+    horizon: f64,
+) -> std::sync::Arc<[f64]> {
+    match pool {
+        Some(pl) => (0..len)
+            .map(|k| {
+                let t0 = job.arrival + k as f64 * dt;
+                pl.available_at(t0.min(horizon)) as f64
+            })
+            .collect::<Vec<f64>>()
+            .into(),
+        None => vec![0.0; len].into(),
+    }
+}
+
+/// Marshal one retired job's home-offer window: consume the streamed
+/// prices/tables when complete, else fall back to the batch resample
+/// (bit-identical values either way).
+fn marshal_home(
+    job: &ChainJob,
+    stream: Option<JobStream>,
+    trace: &PriceTrace,
+) -> (Vec<f64>, f64, Option<sweep::StreamingTables>) {
+    match stream {
+        Some(js) if js.is_complete() => {
+            let JobStream { dt_out, mut offers, .. } = js;
+            let os = offers.swap_remove(0);
+            let mut prices = os.prices;
+            prices.resize(S_MAX, f64::INFINITY);
+            (prices, dt_out, Some(os.tables))
+        }
+        _ => {
+            let (prices, dt) = trace.resample_window(job.arrival, job.deadline, S_MAX);
+            (prices, dt, None)
+        }
+    }
 }
 
 #[derive(Debug, PartialEq)]
@@ -252,8 +432,19 @@ pub fn tola_run_online_traced(
     let capacities = feed.capacities();
     let n_offers = feed.len();
     let routing = opts.routing;
-    let mut market = LiveMarket::new(feed)?;
+    let mut market = LiveMarket::new(feed, tele)?;
     let od_price_home = market.view.home().od_price;
+
+    // Streaming counterfactual state: one tracker per live job, over the
+    // offers the retire-time sweep will marshal (home only for degenerate
+    // feeds and Home routing; every offer otherwise).
+    let track_offers = if degenerate || matches!(routing, RoutingPolicy::Home) {
+        1
+    } else {
+        n_offers
+    };
+    let distinct_bids: Vec<f64> = specs.iter().map(spec_bid).collect();
+    let mut streams: Vec<Option<JobStream>> = jobs.iter().map(|_| None).collect();
 
     // Identical sizing to the batch loop: lane/pool clamping near the
     // horizon must match for bit-identity.
@@ -321,6 +512,12 @@ pub fn tola_run_online_traced(
                         cost: 0.0,
                         done: false,
                     });
+                    let mut js = JobStream::new(job, dt, track_offers, &distinct_bids);
+                    {
+                        let _span = tele.span("online/stream_extend");
+                        js.extend(&market.view, market.view_slots, dt)?;
+                    }
+                    streams[ji] = Some(js);
                 }
                 if ti >= job.num_tasks() {
                     let st = states[ji].as_mut().expect("state set at arrival");
@@ -372,11 +569,27 @@ pub fn tola_run_online_traced(
                 };
                 if need > 0 {
                     let before = market.mux.frontier_slot();
-                    market.ensure_slots(need, time)?;
+                    let view_before = market.view_slots;
+                    market.ensure_slots(need, time, tele)?;
                     let after = market.mux.frontier_slot();
                     if after > before {
                         rec.emit(time, SimEventKind::FrontierAdvanced { slots: after });
                     }
+                    if market.view_slots > view_before {
+                        let _span = tele.span("online/stream_extend");
+                        for js in streams.iter_mut().flatten() {
+                            js.extend(&market.view, market.view_slots, dt)?;
+                        }
+                    }
+                    // The execution walk (and a routed placement) reads
+                    // slots from the one containing `start` onward.
+                    let read_offers = if degenerate {
+                        &market.view.offers()[..1]
+                    } else {
+                        market.view.offers()
+                    };
+                    let first_read = (start / dt).floor().max(0.0) as usize;
+                    ensure_resident(read_offers, first_read, time, "this task's window")?;
                 }
                 let (offer, out) = if degenerate {
                     (
@@ -454,10 +667,17 @@ pub fn tola_run_online_traced(
                 }
                 let latest = batch.iter().map(|&(t, _)| t).fold(time, f64::max);
                 let before = market.mux.frontier_slot();
-                market.ensure_slots(slots_through(latest, dt), time)?;
+                let view_before = market.view_slots;
+                market.ensure_slots(slots_through(latest, dt), time, tele)?;
                 let after = market.mux.frontier_slot();
                 if after > before {
                     rec.emit(time, SimEventKind::FrontierAdvanced { slots: after });
+                }
+                if market.view_slots > view_before {
+                    let _span = tele.span("online/stream_extend");
+                    for js in streams.iter_mut().flatten() {
+                        js.extend(&market.view, market.view_slots, dt)?;
+                    }
                 }
                 rec.emit(
                     time,
@@ -466,64 +686,113 @@ pub fn tola_run_online_traced(
                 let sweep_span = tele.span("coordinator/sweep_batch");
                 let trace = &market.view.home().trace;
                 let all_costs: Vec<Vec<f64>> = if degenerate {
+                    let marshal_span = tele.span("online/marshal");
+                    for &(_, ji) in &batch {
+                        let start_slot = (jobs[ji].arrival / dt).floor().max(0.0) as usize;
+                        ensure_resident(
+                            &market.view.offers()[..1],
+                            start_slot,
+                            time,
+                            "this job's counterfactual window",
+                        )?;
+                    }
+                    let mut tabs: Vec<Option<sweep::StreamingTables>> =
+                        Vec::with_capacity(batch.len());
                     let cfs: Vec<CounterfactualJob> = batch
                         .iter()
                         .map(|&(_, ji)| {
                             let job = &jobs[ji];
-                            let (prices, dt) =
-                                trace.resample_window(job.arrival, job.deadline, S_MAX);
-                            let navail: Vec<f64> = match &pool {
-                                Some(pl) => (0..prices.len())
-                                    .map(|k| {
-                                        let t0 = job.arrival + k as f64 * dt;
-                                        pl.available_at(t0.min(horizon)) as f64
-                                    })
-                                    .collect(),
-                                None => vec![0.0; prices.len()],
-                            };
+                            let (prices, dt, tab) =
+                                marshal_home(job, streams[ji].take(), trace);
+                            let navail = navail_for(&pool, job, prices.len(), dt, horizon);
+                            tabs.push(tab);
                             CounterfactualJob::from_job(job, prices, dt, navail, od_price_home)
                         })
                         .collect();
+                    drop(marshal_span);
                     match evaluator {
                         Evaluator::Native { threads } if cfs.len() > 1 => {
-                            sweep::sweep_batch_costs(&cfs, specs, has_pool, *threads)
+                            sweep::sweep_batch_costs_seeded(&cfs, &tabs, specs, has_pool, *threads)
                         }
+                        Evaluator::Native { .. } => cfs
+                            .iter()
+                            .zip(&tabs)
+                            .map(|(cf, tab)| {
+                                sweep::eval_spec_costs_seeded(cf, tab.as_ref(), specs, has_pool)
+                            })
+                            .collect(),
                         _ => cfs
                             .iter()
                             .map(|cf| evaluate_specs(cf, specs, has_pool, evaluator))
                             .collect(),
                     }
                 } else {
+                    let marshal_span = tele.span("online/marshal");
                     let sweep_offers = match routing {
                         RoutingPolicy::Home => &market.view.offers()[..1],
                         _ => market.view.offers(),
                     };
+                    for &(_, ji) in &batch {
+                        let start_slot = (jobs[ji].arrival / dt).floor().max(0.0) as usize;
+                        ensure_resident(
+                            sweep_offers,
+                            start_slot,
+                            time,
+                            "this job's counterfactual window",
+                        )?;
+                    }
+                    let mut tabs: Vec<Vec<Option<sweep::StreamingTables>>> =
+                        Vec::with_capacity(batch.len());
                     let cfs: Vec<Vec<CounterfactualJob>> = batch
                         .iter()
                         .map(|&(_, ji)| {
                             let job = &jobs[ji];
-                            let (home_prices, dt) =
-                                trace.resample_window(job.arrival, job.deadline, S_MAX);
-                            let navail: Vec<f64> = match &pool {
-                                Some(pl) => (0..home_prices.len())
-                                    .map(|k| {
-                                        let t0 = job.arrival + k as f64 * dt;
-                                        pl.available_at(t0.min(horizon)) as f64
-                                    })
-                                    .collect(),
-                                None => vec![0.0; home_prices.len()],
+                            let streamed = streams[ji]
+                                .take()
+                                .filter(|js| {
+                                    js.is_complete() && js.offers.len() == sweep_offers.len()
+                                });
+                            let (offer_data, dt): (
+                                Vec<(Vec<f64>, Option<sweep::StreamingTables>)>,
+                                f64,
+                            ) = match streamed {
+                                Some(js) => {
+                                    let JobStream { dt_out, offers, .. } = js;
+                                    let data = offers
+                                        .into_iter()
+                                        .map(|os| {
+                                            let mut p = os.prices;
+                                            p.resize(S_MAX, f64::INFINITY);
+                                            (p, Some(os.tables))
+                                        })
+                                        .collect();
+                                    (data, dt_out)
+                                }
+                                None => {
+                                    let (home_prices, dt) = trace.resample_window(
+                                        job.arrival,
+                                        job.deadline,
+                                        S_MAX,
+                                    );
+                                    let mut data = vec![(home_prices, None)];
+                                    for o in &sweep_offers[1..] {
+                                        data.push((
+                                            o.trace
+                                                .resample_window(job.arrival, job.deadline, S_MAX)
+                                                .0,
+                                            None,
+                                        ));
+                                    }
+                                    (data, dt)
+                                }
                             };
-                            sweep_offers
-                                .iter()
-                                .enumerate()
-                                .map(|(k, o)| {
-                                    let prices = if k == 0 {
-                                        home_prices.clone()
-                                    } else {
-                                        o.trace
-                                            .resample_window(job.arrival, job.deadline, S_MAX)
-                                            .0
-                                    };
+                            let navail = navail_for(&pool, job, S_MAX, dt, horizon);
+                            let mut row_tabs = Vec::with_capacity(offer_data.len());
+                            let row: Vec<CounterfactualJob> = offer_data
+                                .into_iter()
+                                .zip(sweep_offers)
+                                .map(|((prices, tab), o)| {
+                                    row_tabs.push(tab);
                                     CounterfactualJob::from_job(
                                         job,
                                         prices,
@@ -532,16 +801,19 @@ pub fn tola_run_online_traced(
                                         o.od_price,
                                     )
                                 })
-                                .collect()
+                                .collect();
+                            tabs.push(row_tabs);
+                            row
                         })
                         .collect();
+                    drop(marshal_span);
                     let threads = match evaluator {
                         Evaluator::Native { threads } => *threads,
                         Evaluator::Pjrt(_) => std::thread::available_parallelism()
                             .map(|n| n.get())
                             .unwrap_or(1),
                     };
-                    sweep::sweep_batch_costs_multi(&cfs, specs, has_pool, threads)
+                    sweep::sweep_batch_costs_multi_seeded(&cfs, &tabs, specs, has_pool, threads)
                 };
                 drop(sweep_span);
                 for (&(t, ji), costs) in batch.iter().zip(&all_costs) {
@@ -549,12 +821,16 @@ pub fn tola_run_online_traced(
                     tola.update(costs, t.max(d_max * 1.001));
                     regret.record(realized, costs);
                     retired_workload += jobs[ji].total_work();
-                    if regret.jobs() % weight_sample_every as u64 == 0 {
-                        let wmax = tola
-                            .weights()
-                            .iter()
-                            .cloned()
-                            .fold(0.0f64, f64::max);
+                    let sampled = regret.jobs() % weight_sample_every as u64 == 0;
+                    let snapshot_due = regret.jobs() >= next_snapshot;
+                    // One max-weight fold per batch item, shared by the
+                    // trajectory sample and the snapshot.
+                    let wmax = if sampled || snapshot_due {
+                        tola.weights().iter().cloned().fold(0.0f64, f64::max)
+                    } else {
+                        0.0
+                    };
+                    if sampled {
                         weight_trajectory.push(wmax);
                         if rec.is_on() {
                             rec.emit(
@@ -567,7 +843,7 @@ pub fn tola_run_online_traced(
                             );
                         }
                     }
-                    if regret.jobs() >= next_snapshot {
+                    if snapshot_due {
                         let snap = regret.snapshot(0.05);
                         snapshots.push(OnlineSnapshot {
                             jobs: snap.jobs,
@@ -580,11 +856,7 @@ pub fn tola_run_online_traced(
                             },
                             average_regret: snap.average_regret,
                             regret_bound: snap.bound,
-                            max_weight: tola
-                                .weights()
-                                .iter()
-                                .cloned()
-                                .fold(0.0f64, f64::max),
+                            max_weight: wmax,
                             best_policy: tola.best(),
                         });
                         next_snapshot =

@@ -35,6 +35,12 @@ pub struct FeedCliOptions {
     pub snapshot_every: Option<usize>,
     /// Explicit `--jobs` override of the scenario's job count.
     pub jobs_override: Option<usize>,
+    /// Bounded retention (`--retention SLOTS`): evict feed slots more than
+    /// this many behind the frontier, keeping resident memory O(retention).
+    /// `None` retains the full history. The report is byte-identical either
+    /// way as long as retention covers every live job window; a window
+    /// reaching an evicted slot is a hard error.
+    pub retention: Option<usize>,
 }
 
 pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()> {
@@ -131,7 +137,7 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
     }
 
     let specs = scenario::cf_specs(&spec);
-    let mux = FeedMux::new(
+    let mut mux = FeedMux::new(
         vec![FeedBinding {
             region: if load.series == "-" { "feed".into() } else { load.series.clone() },
             instance_type: "default".into(),
@@ -141,6 +147,11 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
         }],
         slot_len,
     )?;
+    if let Some(max_slots) = opts.retention {
+        ensure!(max_slots > 0, "--retention must be positive");
+        mux = mux.with_retention(max_slots);
+        log.info("feed", &format!("bounded retention: {max_slots} slots resident"));
+    }
     let snapshot_every = opts
         .snapshot_every
         .unwrap_or_else(|| (jobs.len() / 10).max(1));
@@ -246,6 +257,7 @@ mod tests {
             instance_type: None,
             snapshot_every: Some(8),
             jobs_override: Some(jobs),
+            retention: None,
         }
     }
 

@@ -101,6 +101,11 @@ FEED OPTIONS (`repro feed`)
   --az NAME       restrict a multi-series dump to one availability zone
   --instance-type NAME  restrict to one instance type
   --snapshot-every N    snapshot cadence in retired jobs (default ~10/run)
+  --retention SLOTS     bounded retention: evict feed slots more than SLOTS
+                  behind the frontier (resident memory O(SLOTS); report is
+                  byte-identical to unbounded while live windows stay
+                  resident, and a window reaching an evicted slot is a
+                  hard error). Default: retain the full history
 ";
 
 /// Comma-separated list option (`--key a,b,c`), `None` when absent.
@@ -187,6 +192,11 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
                 .is_some()
                 .then(|| args.get_u64("snapshot-every", 0).map(|v| v as usize))
                 .transpose()?;
+            let retention = args
+                .get("retention")
+                .is_some()
+                .then(|| args.get_u64("retention", 0).map(|v| v as usize))
+                .transpose()?;
             let opts = feed::FeedCliOptions {
                 trace_path,
                 format,
@@ -197,6 +207,7 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
                 instance_type: args.get("instance-type").map(String::from),
                 snapshot_every,
                 jobs_override: args.get("jobs").is_some().then_some(cfg.jobs),
+                retention,
             };
             feed::run_feed(&cfg, &opts, &out_dir)?
         }

@@ -7,13 +7,18 @@
 //! the naive O(N_POL·S) slot walk (the oracle), the structure-sharing
 //! closed-form engine, and the batched engine fanned across the worker
 //! pool — and writes `sweep_bench.json` with policy-evals/s for each.
+//!
+//! A fourth, streaming pass measures the online hot loop's
+//! append-incremental table path ([`sweep::StreamingTables`]): the cost of
+//! growing the per-bid prefix tables slot-by-slot, and the per-retirement
+//! sweep consuming them seeded vs rebuilding the tables from scratch.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::Config;
-use crate::learning::counterfactual::{eval_grid_naive, CounterfactualJob, S_MAX};
+use crate::learning::counterfactual::{eval_grid_naive, CfSpec, CounterfactualJob, S_MAX};
 use crate::learning::sweep;
 use crate::policy::policy_set_full;
 use crate::util::json::Json;
@@ -75,10 +80,44 @@ pub fn run_sweep_bench(cfg: &Config, out_dir: &str) -> Result<()> {
     }
     let batch_s = t0.elapsed().as_secs_f64() / reps as f64;
 
+    // Streaming mode: grow the per-bid tables append-incrementally (the
+    // online loop's path) and sweep seeded vs unseeded.
+    let specs: Vec<CfSpec> = grid.iter().cloned().map(CfSpec::Proposed).collect();
+    let grid_bids: Vec<f64> = grid.iter().map(|p| p.bid).collect();
+    let t0 = Instant::now();
+    let tables: Vec<sweep::StreamingTables> = cf_jobs
+        .iter()
+        .map(|cf| {
+            let ns = sweep::sweep_num_slots(cf.window, cf.dt, cf.prices.len());
+            let mut st = sweep::StreamingTables::new(&grid_bids, cf.dt, ns);
+            for k in 0..ns {
+                st.append(cf.prices[k]);
+            }
+            st
+        })
+        .collect();
+    let extend_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for cf in &cf_jobs {
+            std::hint::black_box(sweep::eval_spec_costs(cf, &specs, true));
+        }
+    }
+    let unseeded_s = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for (cf, st) in cf_jobs.iter().zip(&tables) {
+            std::hint::black_box(sweep::eval_spec_costs_seeded(cf, Some(st), &specs, true));
+        }
+    }
+    let seeded_s = t0.elapsed().as_secs_f64() / reps as f64;
+
     let report = [
         ("naive_walk", naive_s),
         ("sweep_engine", sweep_s),
         ("sweep_batch", batch_s),
+        ("sweep_unseeded", unseeded_s),
+        ("sweep_seeded", seeded_s),
     ];
     for (name, secs) in report {
         println!(
@@ -93,6 +132,12 @@ pub fn run_sweep_bench(cfg: &Config, out_dir: &str) -> Result<()> {
         naive_s / sweep_s,
         naive_s / batch_s
     );
+    println!(
+        "  streaming: {:.2} ms to grow tables incrementally ({take} jobs), \
+         seeded sweep {:.2}x over rebuild-per-retirement",
+        extend_s * 1e3,
+        unseeded_s / seeded_s
+    );
 
     let mut j = Json::obj();
     j.set("jobs", Json::Num(take as f64))
@@ -103,6 +148,10 @@ pub fn run_sweep_bench(cfg: &Config, out_dir: &str) -> Result<()> {
         .set("batch_evals_per_s", Json::Num(evals / batch_s))
         .set("speedup_sweep", Json::Num(naive_s / sweep_s))
         .set("speedup_batch", Json::Num(naive_s / batch_s))
+        .set("stream_extend_s", Json::Num(extend_s))
+        .set("unseeded_evals_per_s", Json::Num(evals / unseeded_s))
+        .set("seeded_evals_per_s", Json::Num(evals / seeded_s))
+        .set("table_seed_speedup", Json::Num(unseeded_s / seeded_s))
         .set("bids", Json::from_f64_slice(&bids))
         .set("availability", Json::from_f64_slice(&avail));
     std::fs::write(format!("{out_dir}/sweep_bench.json"), j.pretty())?;
@@ -131,6 +180,8 @@ mod tests {
         )
         .unwrap();
         assert!(j.get("speedup_sweep").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("table_seed_speedup").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("stream_extend_s").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(j.get("policies").unwrap().as_f64().unwrap(), 175.0);
     }
 }

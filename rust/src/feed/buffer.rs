@@ -16,11 +16,18 @@
 //! coordinator leans on this to prove it never peeks at prices the feed
 //! has not delivered yet.
 
+use std::sync::Arc;
+
 use anyhow::{bail, ensure, Result};
 
 use crate::market::PriceTrace;
 
 use super::index::IncrementalAvailabilityIndex;
+
+/// Chunk granularity for unbounded buffers: large enough that sealing and
+/// handle-cloning overheads vanish, small enough that the open tail copied
+/// on each materialization stays tiny.
+const DEFAULT_CHUNK_SLOTS: usize = 1024;
 
 /// One price observation: the price takes effect at `time` and holds until
 /// the next event.
@@ -35,10 +42,17 @@ pub struct PriceEvent {
 #[derive(Debug, Clone)]
 pub struct FeedBuffer {
     slot_len: f64,
-    /// Retained slot prices; absolute slot `base_slot + i` has price
-    /// `prices[i]`.
-    prices: Vec<f64>,
+    /// Sealed immutable chunks of exactly `chunk_len` slots each; absolute
+    /// slot `base_slot + i·chunk_len + j` has price `sealed[i][j]`. Sealed
+    /// chunks are shared (`Arc`) with every trace materialized from this
+    /// buffer, so a view refresh clones chunk *handles*, not history.
+    sealed: Vec<Arc<[f64]>>,
+    /// Open tail: the newest `< chunk_len` slots, sealed once full.
+    tail: Vec<f64>,
+    /// Absolute slot of `sealed[0]` (always a multiple of `chunk_len`:
+    /// eviction drops whole chunks).
     base_slot: usize,
+    chunk_len: usize,
     index: IncrementalAvailabilityIndex,
     /// Maximum retained slots; `None` = unbounded (required for trace
     /// materialization).
@@ -66,8 +80,10 @@ impl FeedBuffer {
         assert!(slot_len > 0.0);
         FeedBuffer {
             slot_len,
-            prices: Vec::new(),
+            sealed: Vec::new(),
+            tail: Vec::new(),
             base_slot: 0,
+            chunk_len: DEFAULT_CHUNK_SLOTS,
             index: IncrementalAvailabilityIndex::new(bids),
             retention: None,
             last_event: None,
@@ -77,10 +93,19 @@ impl FeedBuffer {
     }
 
     /// Bound retained slot history (the index is bounded alongside).
-    /// A bounded buffer cannot materialize a [`PriceTrace`].
+    /// A bounded buffer cannot materialize a full-history [`PriceTrace`]
+    /// prefix, but still materializes retention-bounded shared traces via
+    /// [`FeedBuffer::shared_trace`]. Must be configured before ingestion:
+    /// the chunk granularity is derived from the retention bound so
+    /// eviction (which drops whole chunks) can actually engage.
     pub fn with_retention(mut self, max_slots: usize) -> FeedBuffer {
         assert!(max_slots > 0, "retention of zero slots retains nothing");
+        assert!(
+            self.sealed.is_empty() && self.tail.is_empty(),
+            "set retention before ingesting slots"
+        );
         self.retention = Some(max_slots);
+        self.chunk_len = (max_slots / 2).clamp(1, DEFAULT_CHUNK_SLOTS);
         self.index = self.index.with_retention(max_slots);
         self
     }
@@ -102,9 +127,14 @@ impl FeedBuffer {
         self.slot_len
     }
 
+    /// Resident (non-evicted) slot count.
+    fn resident(&self) -> usize {
+        self.sealed.len() * self.chunk_len + self.tail.len()
+    }
+
     /// Total determined slots since the stream origin (absolute frontier).
     pub fn len_slots(&self) -> usize {
-        self.base_slot + self.prices.len()
+        self.base_slot + self.resident()
     }
 
     /// First retained absolute slot (0 until bounded retention evicts).
@@ -175,15 +205,26 @@ impl FeedBuffer {
             );
         }
         for &p in prices {
-            self.prices.push(p);
-            self.index.append_one(p);
+            self.append_one(p);
         }
         if let Some(&last) = prices.last() {
             self.cur_price = last;
         }
-        self.maybe_evict();
         self.last_event = Some(self.watermark_time().max(self.last_event.unwrap_or(0.0)));
         Ok(())
+    }
+
+    /// Append one determined slot: the tail grows, seals into an immutable
+    /// shared chunk when full, and bounded retention evicts whole leading
+    /// chunks — O(1) amortized, never an O(history) move.
+    fn append_one(&mut self, price: f64) {
+        self.tail.push(price);
+        self.index.append_one(price);
+        if self.tail.len() == self.chunk_len {
+            self.sealed.push(Arc::from(self.tail.as_slice()));
+            self.tail.clear();
+            self.maybe_evict();
+        }
     }
 
     /// Commit the final observation's own slot (the batch CSV loader's
@@ -210,19 +251,19 @@ impl FeedBuffer {
         }
         let add = target_slots - have;
         for _ in 0..add {
-            self.prices.push(fill);
-            self.index.append_one(fill);
+            self.append_one(fill);
         }
-        self.maybe_evict();
         add
     }
 
+    /// Drop whole leading chunks while at least `retention` slots stay
+    /// resident afterwards; sealed chunks are `Arc`s, so already-handed-out
+    /// traces keep their history alive independently.
     fn maybe_evict(&mut self) {
         let Some(max) = self.retention else { return };
-        if self.prices.len() > max + max / 2 {
-            let drop = self.prices.len() - max;
-            self.prices.drain(..drop);
-            self.base_slot += drop;
+        while !self.sealed.is_empty() && self.resident() - self.chunk_len >= max {
+            self.sealed.remove(0);
+            self.base_slot += self.chunk_len;
         }
     }
 
@@ -244,20 +285,41 @@ impl FeedBuffer {
                 self.watermark_time()
             );
         }
-        Ok(self.prices[slot - self.base_slot])
+        let rel = slot - self.base_slot;
+        let in_sealed = self.sealed.len() * self.chunk_len;
+        Ok(if rel < in_sealed {
+            self.sealed[rel / self.chunk_len][rel % self.chunk_len]
+        } else {
+            self.tail[rel - in_sealed]
+        })
     }
 
     /// Materialize the ingested prefix as an immutable [`PriceTrace`]
     /// (what executors and counterfactual sweeps consume). Only defined
-    /// for unbounded buffers with at least one slot.
+    /// for unbounded buffers with at least one slot; bounded buffers use
+    /// [`FeedBuffer::shared_trace`].
     pub fn trace_prefix(&self) -> Result<PriceTrace> {
         ensure!(
             self.base_slot == 0,
             "cannot materialize a trace: retention evicted slots [0, {})",
             self.base_slot
         );
-        ensure!(!self.prices.is_empty(), "cannot materialize an empty feed");
-        Ok(PriceTrace::from_prices(self.prices.clone(), self.slot_len))
+        self.shared_trace()
+    }
+
+    /// Materialize the retained history as a shared-suffix
+    /// [`PriceTrace`]: sealed chunks are shared by handle and only the
+    /// open tail is copied, so refreshing a consumer's view costs
+    /// O(chunk handles + tail), not O(ingested history). Under bounded
+    /// retention the trace starts at [`PriceTrace::first_slot`] > 0 and
+    /// reads below it are hard errors.
+    pub fn shared_trace(&self) -> Result<PriceTrace> {
+        ensure!(self.resident() > 0, "cannot materialize an empty feed");
+        let mut chunks = self.sealed.clone();
+        if !self.tail.is_empty() {
+            chunks.push(Arc::from(self.tail.as_slice()));
+        }
+        Ok(PriceTrace::from_chunks(chunks, self.base_slot, self.slot_len))
     }
 }
 
@@ -350,6 +412,40 @@ mod tests {
         assert!(feed.trace_prefix().is_err());
         // The index stays bounded too, and answers inside the window.
         assert!(feed.index().base_slot() > 0);
+    }
+
+    #[test]
+    fn shared_trace_matches_slot_reads_and_survives_eviction() {
+        let mut feed = FeedBuffer::new(DT).with_retention(60);
+        let prices: Vec<f64> = (0..400).map(|i| 0.15 + 0.002 * (i % 37) as f64).collect();
+        feed.push_slots(&prices).unwrap();
+        let t = feed.shared_trace().unwrap();
+        assert_eq!(t.num_slots(), feed.len_slots());
+        assert_eq!(t.first_slot(), feed.base_slot());
+        for s in feed.base_slot()..feed.len_slots() {
+            assert_eq!(t.price_of_slot(s), feed.price_of_slot(s).unwrap(), "slot {s}");
+        }
+        // Ingesting further evicts in the buffer, but the materialized
+        // trace owns its chunks: its history stays readable.
+        let base_before = feed.base_slot();
+        feed.push_slots(&prices).unwrap();
+        assert!(feed.base_slot() > base_before);
+        assert_eq!(t.price_of_slot(base_before), prices[base_before]);
+        assert!(feed.price_of_slot(base_before).is_err());
+    }
+
+    #[test]
+    fn unbounded_shared_trace_equals_trace_prefix() {
+        let mut feed = FeedBuffer::new(DT);
+        // Fewer slots than a chunk: everything lives in the open tail.
+        feed.push_slots(&[0.3; 30]).unwrap();
+        let shared = feed.shared_trace().unwrap();
+        let prefix = feed.trace_prefix().unwrap();
+        assert_eq!(shared.num_slots(), prefix.num_slots());
+        assert_eq!(shared.first_slot(), 0);
+        for s in 0..prefix.num_slots() {
+            assert_eq!(shared.price_of_slot(s), prefix.price_of_slot(s));
+        }
     }
 
     #[test]

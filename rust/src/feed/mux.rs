@@ -119,6 +119,23 @@ impl FeedMux {
         }
     }
 
+    /// Bound every feed's retained history to `max_slots` (resident memory
+    /// becomes O(retention) instead of O(ingested history)). Must be
+    /// applied before ingestion starts — i.e. on a [`FeedMux::new`] mux,
+    /// not a preloaded one — because the chunk granularity backing
+    /// eviction is derived from the bound. Views over a bounded mux carry
+    /// retention-bounded traces: a consumer whose window reaches an
+    /// evicted slot gets a hard error naming it, mirroring the lookahead
+    /// guard.
+    pub fn with_retention(mut self, max_slots: usize) -> FeedMux {
+        self.buffers = self
+            .buffers
+            .into_iter()
+            .map(|b| b.with_retention(max_slots))
+            .collect();
+        self
+    }
+
     pub fn len(&self) -> usize {
         self.meta.len()
     }
@@ -216,7 +233,10 @@ impl FeedMux {
     /// Materialize the ingested prefixes as a capacity-aware
     /// [`MarketView`]. Each offer's trace covers *its own* watermark (≥
     /// the shared frontier); consumers gated on the frontier never read
-    /// past any of them.
+    /// past any of them. Traces are shared-suffix: sealed feed chunks are
+    /// referenced, not copied, so a refresh costs O(new slots), and under
+    /// bounded retention each trace starts at its buffer's retention
+    /// boundary ([`crate::market::PriceTrace::first_slot`]).
     pub fn view(&self) -> Result<MarketView> {
         let offers = self
             .meta
@@ -227,7 +247,7 @@ impl FeedMux {
                     region: m.region.clone(),
                     instance_type: m.instance_type.clone(),
                     od_price: m.od_price,
-                    trace: b.trace_prefix().map_err(|e| {
+                    trace: b.shared_trace().map_err(|e| {
                         anyhow::anyhow!("feed '{}': {e}", m.label())
                     })?,
                     capacity: m.capacity,
@@ -296,6 +316,27 @@ mod tests {
         assert!(!mux.advance_to_time(2.1).unwrap());
         let v = mux.view().unwrap();
         assert_eq!(v.home().trace.num_slots(), 24);
+    }
+
+    #[test]
+    fn bounded_mux_views_carry_retention_boundaries() {
+        let events: Vec<PriceEvent> = (0..200)
+            .map(|i| ev(i as f64 * 0.25, 0.2 + 0.001 * (i % 7) as f64))
+            .collect();
+        let mut mux = FeedMux::new(vec![binding("a", 1.0, None, events)], DT)
+            .unwrap()
+            .with_retention(40);
+        assert!(mux.advance_to_slot(500).unwrap());
+        let v = mux.view().unwrap();
+        let trace = &v.home().trace;
+        assert!(trace.first_slot() > 0, "retention should have evicted");
+        assert_eq!(trace.num_slots(), mux.frontier_slot());
+        // Recent slots readable; evicted history is a buffer-level error.
+        assert!(mux.buffers()[0]
+            .price_of_slot(trace.first_slot().saturating_sub(1))
+            .unwrap_err()
+            .to_string()
+            .contains("evicted"));
     }
 
     #[test]

@@ -71,12 +71,16 @@ pub struct CounterfactualJob {
     /// Window length `D = d_j − a_j`.
     pub window: f64,
     /// Resampled spot prices, one per slot (`s` slots of length `dt`
-    /// covering `[0, D]`; padding slots carry `+inf`).
-    pub prices: Vec<f64>,
+    /// covering `[0, D]`; padding slots carry `+inf`). Shared: one retired
+    /// job marshalled for several market offers shares its per-job arrays
+    /// instead of cloning them per offer.
+    pub prices: std::sync::Arc<[f64]>,
     /// Slot length of the resampled window.
     pub dt: f64,
     /// Per-slot self-owned availability (0 everywhere when no pool).
-    pub navail: Vec<f64>,
+    /// Offer-independent, so the coordinators share one allocation per
+    /// job across all of its per-offer marshalings.
+    pub navail: std::sync::Arc<[f64]>,
     /// On-demand price `p`.
     pub od_price: f64,
 }
@@ -84,13 +88,16 @@ pub struct CounterfactualJob {
 impl CounterfactualJob {
     /// Marshal a chain job + realized trace segment into the fixed-shape
     /// form. `navail_of(t0, t1)` supplies pool availability per slot.
+    /// Prices/availability accept owned vectors, borrowed slices, or
+    /// already-shared `Arc<[f64]>` handles (zero-copy).
     pub fn from_job(
         job: &ChainJob,
-        prices: Vec<f64>,
+        prices: impl Into<std::sync::Arc<[f64]>>,
         dt: f64,
-        navail: Vec<f64>,
+        navail: impl Into<std::sync::Arc<[f64]>>,
         od_price: f64,
     ) -> CounterfactualJob {
+        let (prices, navail) = (prices.into(), navail.into());
         assert!(job.num_tasks() <= L_MAX, "chain too long: {}", job.num_tasks());
         assert_eq!(prices.len(), navail.len());
         let e: Vec<f64> = job.tasks.iter().map(|t| t.min_exec_time()).collect();

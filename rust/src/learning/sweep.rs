@@ -70,6 +70,119 @@ struct BidTables {
     cum_price: Vec<f64>,
 }
 
+/// The number of in-window slots a sweep over a job covers — the shape
+/// [`StreamingTables`] must be built with to be adopted by
+/// [`SweepContext::with_tables`]. Shared with [`SweepContext::new`] so the
+/// streaming and batch paths can never disagree on the slot count.
+pub fn sweep_num_slots(window: f64, dt: f64, prices_len: usize) -> usize {
+    let num_slots = (window / dt).ceil() as usize;
+    num_slots.min(prices_len).max(1)
+}
+
+/// Append-incremental per-bid prefix tables: the same `cum_win`/`cum_price`
+/// rows [`SweepContext`] builds per distinct bid, but grown one slot at a
+/// time as the feed ingests prices instead of rebuilt O(S) per retirement.
+///
+/// Each [`append`] executes the exact accumulation the batch build runs per
+/// slot (`if price <= bid { w += dt; pw += price·dt }` then push), so a
+/// table streamed under *any* split of appends is bitwise identical to the
+/// batch-built one — the property tests below pin this.
+///
+/// **Cache invalidation rule:** a streamed table set is only adopted by
+/// [`SweepContext::with_tables`] when its `dt` (exact bits) and `num_slots`
+/// match the context's and every slot has been appended ([`is_complete`]);
+/// on any mismatch the context silently falls back to the on-demand batch
+/// build, so seeding can change cost but never results.
+///
+/// [`append`]: StreamingTables::append
+/// [`is_complete`]: StreamingTables::is_complete
+#[derive(Debug, Clone)]
+pub struct StreamingTables {
+    dt: f64,
+    num_slots: usize,
+    filled: usize,
+    bids: Vec<(u64, BidTables)>,
+}
+
+impl StreamingTables {
+    /// Start empty tables for the given distinct bids (duplicates are
+    /// dropped, first occurrence wins) over a window of `num_slots` slots
+    /// of length `dt` (use [`sweep_num_slots`] for the shape).
+    pub fn new(bids: &[f64], dt: f64, num_slots: usize) -> StreamingTables {
+        let mut uniq: Vec<(u64, BidTables)> = Vec::new();
+        for b in bids {
+            let key = b.to_bits();
+            if uniq.iter().any(|(k, _)| *k == key) {
+                continue;
+            }
+            let mut cum_win = Vec::with_capacity(num_slots + 1);
+            let mut cum_price = Vec::with_capacity(num_slots + 1);
+            cum_win.push(0.0);
+            cum_price.push(0.0);
+            uniq.push((key, BidTables { cum_win, cum_price }));
+        }
+        StreamingTables { dt, num_slots, filled: 0, bids: uniq }
+    }
+
+    /// Extend every bid's prefix row by one slot. Appends past `num_slots`
+    /// are ignored: the window shape is fixed at construction, and trailing
+    /// feed slots are outside it.
+    pub fn append(&mut self, price: f64) {
+        if self.filled >= self.num_slots {
+            return;
+        }
+        let dt = self.dt;
+        for (key, tab) in &mut self.bids {
+            let bid = f64::from_bits(*key);
+            let mut w = *tab.cum_win.last().expect("cum_win starts at 0.0");
+            let mut pw = *tab.cum_price.last().expect("cum_price starts at 0.0");
+            if price <= bid {
+                w += dt;
+                pw += price * dt;
+            }
+            tab.cum_win.push(w);
+            tab.cum_price.push(pw);
+        }
+        self.filled += 1;
+    }
+
+    /// Slots appended so far.
+    pub fn filled(&self) -> usize {
+        self.filled
+    }
+
+    /// The window shape these tables were built for.
+    pub fn num_slots(&self) -> usize {
+        self.num_slots
+    }
+
+    /// True once every in-window slot has been appended — the only state
+    /// in which [`SweepContext::with_tables`] will adopt the tables.
+    pub fn is_complete(&self) -> bool {
+        self.filled == self.num_slots
+    }
+
+    fn lookup(&self, key: u64) -> Option<&BidTables> {
+        self.bids.iter().find(|(k, _)| *k == key).map(|(_, t)| t)
+    }
+}
+
+/// A bid's prefix tables inside a context: built on demand (owned) or
+/// borrowed from pre-streamed [`StreamingTables`].
+enum TabRef<'a> {
+    Own(BidTables),
+    Pre(&'a BidTables),
+}
+
+impl TabRef<'_> {
+    fn get(&self) -> &BidTables {
+        match self {
+            TabRef::Own(t) => t,
+            TabRef::Pre(t) => t,
+        }
+    }
+}
+
 /// Geometry shared by every policy with the same window layout.
 #[derive(Debug, Clone)]
 struct WindowPlan {
@@ -106,23 +219,46 @@ pub struct SweepContext<'a> {
     job: &'a CounterfactualJob,
     has_pool: bool,
     num_slots: usize,
-    bids: Vec<(u64, BidTables)>,
+    prebuilt: Option<&'a StreamingTables>,
+    bids: Vec<(u64, TabRef<'a>)>,
     windows: Vec<(WindowKey, WindowPlan)>,
     allocs: Vec<((usize, AllocRule), AllocPlan)>,
 }
 
 impl<'a> SweepContext<'a> {
     pub fn new(job: &'a CounterfactualJob, has_pool: bool) -> SweepContext<'a> {
-        let num_slots = (job.window / job.dt).ceil() as usize;
-        let num_slots = num_slots.min(job.prices.len()).max(1);
+        let num_slots = sweep_num_slots(job.window, job.dt, job.prices.len());
         SweepContext {
             job,
             has_pool,
             num_slots,
+            prebuilt: None,
             bids: Vec::new(),
             windows: Vec::new(),
             allocs: Vec::new(),
         }
+    }
+
+    /// Like [`new`], but seeded with pre-streamed per-bid tables. The seed
+    /// is adopted only when its shape matches exactly (same `dt` bits, same
+    /// `num_slots`, fully filled); otherwise the context behaves as if
+    /// unseeded — identical results either way, only the per-bid O(S) build
+    /// is skipped when adopted.
+    ///
+    /// [`new`]: SweepContext::new
+    pub fn with_tables(
+        job: &'a CounterfactualJob,
+        has_pool: bool,
+        tables: &'a StreamingTables,
+    ) -> SweepContext<'a> {
+        let mut ctx = SweepContext::new(job, has_pool);
+        if tables.num_slots == ctx.num_slots
+            && tables.is_complete()
+            && tables.dt.to_bits() == job.dt.to_bits()
+        {
+            ctx.prebuilt = Some(tables);
+        }
+        ctx
     }
 
     /// Evaluate one proposed policy: `(cost, spot_work, od_work, so_work)`,
@@ -152,7 +288,7 @@ impl<'a> SweepContext<'a> {
         let bi = self.bid_index(bid);
         let plan = &self.windows[wi].1;
         let alloc = &self.allocs[ai].1;
-        let tab = &self.bids[bi].1;
+        let tab = self.bids[bi].1.get();
         let (dt, prices) = (self.job.dt, &self.job.prices);
 
         let mut spot_work = 0.0;
@@ -246,6 +382,10 @@ impl<'a> SweepContext<'a> {
         if let Some(i) = self.bids.iter().position(|(k, _)| *k == key) {
             return i;
         }
+        if let Some(tab) = self.prebuilt.and_then(|t| t.lookup(key)) {
+            self.bids.push((key, TabRef::Pre(tab)));
+            return self.bids.len() - 1;
+        }
         let dt = self.job.dt;
         let mut cum_win = Vec::with_capacity(self.num_slots + 1);
         let mut cum_price = Vec::with_capacity(self.num_slots + 1);
@@ -261,7 +401,7 @@ impl<'a> SweepContext<'a> {
             cum_win.push(w);
             cum_price.push(pw);
         }
-        self.bids.push((key, BidTables { cum_win, cum_price }));
+        self.bids.push((key, TabRef::Own(BidTables { cum_win, cum_price })));
         self.bids.len() - 1
     }
 
@@ -399,6 +539,22 @@ pub fn eval_spec_costs(job: &CounterfactualJob, specs: &[CfSpec], has_pool: bool
     specs.iter().map(|s| ctx.eval_spec(s).0).collect()
 }
 
+/// [`eval_spec_costs`] seeded with pre-streamed per-bid tables (`None` or a
+/// shape mismatch falls back to the unseeded build — same results either
+/// way, pinned exactly by the streaming property tests).
+pub fn eval_spec_costs_seeded(
+    job: &CounterfactualJob,
+    tables: Option<&StreamingTables>,
+    specs: &[CfSpec],
+    has_pool: bool,
+) -> Vec<f64> {
+    let mut ctx = match tables {
+        Some(t) => SweepContext::with_tables(job, has_pool, t),
+        None => SweepContext::new(job, has_pool),
+    };
+    specs.iter().map(|s| ctx.eval_spec(s).0).collect()
+}
+
 /// Batched retirement sweep: evaluate every job of a batch against the full
 /// grid, fanning jobs across [`crate::coordinator::exec_pool::parallel_map`]
 /// workers. Results are in job order.
@@ -427,6 +583,21 @@ pub fn sweep_batch_costs(
     })
 }
 
+/// [`sweep_batch_costs`] with one optional pre-streamed table set per job
+/// (`tables.len() == jobs.len()`); `None` entries build tables on demand.
+pub fn sweep_batch_costs_seeded(
+    jobs: &[CounterfactualJob],
+    tables: &[Option<StreamingTables>],
+    specs: &[CfSpec],
+    has_pool: bool,
+    threads: usize,
+) -> Vec<Vec<f64>> {
+    assert_eq!(jobs.len(), tables.len(), "one table seed slot per job");
+    crate::coordinator::exec_pool::parallel_map(jobs.len(), threads, |i| {
+        eval_spec_costs_seeded(&jobs[i], tables[i].as_ref(), specs, has_pool)
+    })
+}
+
 /// The multi-offer sweep: one structure-sharing [`SweepContext`] per market
 /// offer, sharing nothing *across* offers (each offer has its own realized
 /// prices) but everything *within* one — per-offer bid prefix tables,
@@ -452,6 +623,30 @@ impl<'a> MultiSweepContext<'a> {
             ctxs: offers
                 .iter()
                 .map(|cf| SweepContext::new(cf, has_pool))
+                .collect(),
+        }
+    }
+
+    /// Like [`new`], but with one optional pre-streamed table set per offer
+    /// (`tables.len() == offers.len()`); `None` or shape-mismatched entries
+    /// build on demand, exactly as unseeded.
+    ///
+    /// [`new`]: MultiSweepContext::new
+    pub fn with_tables(
+        offers: &'a [CounterfactualJob],
+        tables: &'a [Option<StreamingTables>],
+        has_pool: bool,
+    ) -> MultiSweepContext<'a> {
+        assert!(!offers.is_empty(), "multi-sweep over zero offers");
+        assert_eq!(offers.len(), tables.len(), "one table seed slot per offer");
+        MultiSweepContext {
+            ctxs: offers
+                .iter()
+                .zip(tables)
+                .map(|(cf, t)| match t {
+                    Some(t) => SweepContext::with_tables(cf, has_pool, t),
+                    None => SweepContext::new(cf, has_pool),
+                })
                 .collect(),
         }
     }
@@ -486,6 +681,18 @@ pub fn eval_spec_costs_multi(
     specs.iter().map(|s| ctx.eval_spec(s).1 .0).collect()
 }
 
+/// [`eval_spec_costs_multi`] seeded with one optional pre-streamed table
+/// set per offer.
+pub fn eval_spec_costs_multi_seeded(
+    offers: &[CounterfactualJob],
+    tables: &[Option<StreamingTables>],
+    specs: &[CfSpec],
+    has_pool: bool,
+) -> Vec<f64> {
+    let mut ctx = MultiSweepContext::with_tables(offers, tables, has_pool);
+    specs.iter().map(|s| ctx.eval_spec(s).1 .0).collect()
+}
+
 /// Batched multi-offer retirement sweep: `jobs[i]` is one retired job
 /// marshalled once per offer. Results are in job order.
 pub fn sweep_batch_costs_multi(
@@ -496,6 +703,21 @@ pub fn sweep_batch_costs_multi(
 ) -> Vec<Vec<f64>> {
     crate::coordinator::exec_pool::parallel_map(jobs.len(), threads, |i| {
         eval_spec_costs_multi(&jobs[i], specs, has_pool)
+    })
+}
+
+/// [`sweep_batch_costs_multi`] with one optional pre-streamed table set
+/// per (job, offer) pair — `tables[i].len() == jobs[i].len()`.
+pub fn sweep_batch_costs_multi_seeded(
+    jobs: &[Vec<CounterfactualJob>],
+    tables: &[Vec<Option<StreamingTables>>],
+    specs: &[CfSpec],
+    has_pool: bool,
+    threads: usize,
+) -> Vec<Vec<f64>> {
+    assert_eq!(jobs.len(), tables.len(), "one table seed row per job");
+    crate::coordinator::exec_pool::parallel_map(jobs.len(), threads, |i| {
+        eval_spec_costs_multi_seeded(&jobs[i], &tables[i], specs, has_pool)
     })
 }
 
@@ -629,10 +851,128 @@ mod tests {
             })
             .collect();
         CounterfactualJob {
-            prices,
+            prices: prices.into(),
             od_price: od,
             ..cf.clone()
         }
+    }
+
+    /// The bid a spec sweeps at (mirrors the coordinator's marshaling).
+    fn spec_bid(spec: &CfSpec) -> f64 {
+        match spec {
+            CfSpec::Proposed(p) => p.bid,
+            CfSpec::EvenNaive { bid } => *bid,
+            CfSpec::DeallocNaive(p) => p.bid,
+        }
+    }
+
+    /// Stream `cf.prices[..num_slots]` into fresh tables using `rng`-sized
+    /// append chunks (including size-1 and all-at-once extremes by chance).
+    fn stream_tables(rng: &mut Pcg32, cf: &CounterfactualJob, specs: &[CfSpec]) -> StreamingTables {
+        let bids: Vec<f64> = specs.iter().map(spec_bid).collect();
+        let num_slots = sweep_num_slots(cf.window, cf.dt, cf.prices.len());
+        let mut st = StreamingTables::new(&bids, cf.dt, num_slots);
+        let mut k = 0usize;
+        while k < num_slots {
+            let step = if rng.chance(0.1) {
+                num_slots // all-remaining at once
+            } else {
+                rng.range_inclusive(1, 7) as usize
+            };
+            for _ in 0..step {
+                if k >= num_slots {
+                    break;
+                }
+                st.append(cf.prices[k]);
+                k += 1;
+            }
+        }
+        // Appends past the window shape must be ignored.
+        st.append(0.01);
+        assert!(st.is_complete(), "streamed {} of {num_slots}", st.filled());
+        st
+    }
+
+    #[test]
+    fn prop_streaming_tables_match_batch_under_arbitrary_splits() {
+        // The tentpole (b) equivalence: per-bid tables streamed under ANY
+        // split of appends give bit-identical sweep results to the batch
+        // O(S) rebuild — exact equality, not tolerance.
+        for_all(Config::cases(40).seed(2029), |rng| {
+            let cf = random_cf(rng, rng.chance(0.34));
+            let has_pool = cf.navail.iter().any(|&v| v > 0.0);
+            let mut specs: Vec<CfSpec> =
+                policy_set_full().into_iter().map(CfSpec::Proposed).collect();
+            specs.extend(benchmark_bids().into_iter().map(|bid| CfSpec::EvenNaive { bid }));
+            let st = stream_tables(rng, &cf, &specs);
+            let seeded = eval_spec_costs_seeded(&cf, Some(&st), &specs, has_pool);
+            let batch = eval_spec_costs(&cf, &specs, has_pool);
+            if seeded != batch {
+                return Err("seeded sweep diverged from batch build".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incomplete_or_mismatched_tables_fall_back_to_batch_build() {
+        let mut rng = Pcg32::new(81);
+        let cf = random_cf(&mut rng, false);
+        let has_pool = cf.navail.iter().any(|&v| v > 0.0);
+        let specs: Vec<CfSpec> = benchmark_bids()
+            .into_iter()
+            .map(|bid| CfSpec::EvenNaive { bid })
+            .collect();
+        let batch = eval_spec_costs(&cf, &specs, has_pool);
+        let bids: Vec<f64> = specs.iter().map(spec_bid).collect();
+        let num_slots = sweep_num_slots(cf.window, cf.dt, cf.prices.len());
+        // Incomplete tables (one slot short) must not be adopted.
+        let mut partial = StreamingTables::new(&bids, cf.dt, num_slots);
+        for k in 0..num_slots.saturating_sub(1) {
+            partial.append(cf.prices[k]);
+        }
+        assert!(!partial.is_complete() || num_slots == 1);
+        assert_eq!(eval_spec_costs_seeded(&cf, Some(&partial), &specs, has_pool), batch);
+        // Wrong shape (different num_slots) must not be adopted either.
+        let mut wrong = StreamingTables::new(&bids, cf.dt, num_slots + 3);
+        for k in 0..num_slots + 3 {
+            wrong.append(cf.prices[k % cf.prices.len()]);
+        }
+        assert!(wrong.is_complete());
+        assert_eq!(eval_spec_costs_seeded(&cf, Some(&wrong), &specs, has_pool), batch);
+    }
+
+    #[test]
+    fn prop_seeded_multi_sweep_is_bit_identical_to_unseeded() {
+        // Mixed seeding (some offers streamed, some not) must route and
+        // cost identically to the fully unseeded multi-offer sweep.
+        for_all(Config::cases(25).seed(2030), |rng| {
+            let base = random_cf(rng, rng.chance(0.3));
+            let n_offers = rng.range_inclusive(1, 4) as usize;
+            let offers: Vec<CounterfactualJob> = (0..n_offers)
+                .map(|k| {
+                    if k == 0 {
+                        base.clone()
+                    } else {
+                        offer_variant(rng, &base, rng.uniform(0.8, 1.4))
+                    }
+                })
+                .collect();
+            let has_pool = base.navail.iter().any(|&v| v > 0.0);
+            let mut specs: Vec<CfSpec> =
+                policy_set_full().into_iter().map(CfSpec::Proposed).collect();
+            specs.extend(benchmark_bids().into_iter().map(|bid| CfSpec::EvenNaive { bid }));
+            let tables: Vec<Option<StreamingTables>> = offers
+                .iter()
+                .map(|cf| rng.chance(0.75).then(|| stream_tables(rng, cf, &specs)))
+                .collect();
+            let seeded = eval_spec_costs_multi_seeded(&offers, &tables, &specs, has_pool);
+            let plain = eval_spec_costs_multi(&offers, &specs, has_pool);
+            if seeded != plain {
+                return Err("seeded multi sweep diverged from unseeded".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! (the kernel has a fixed AOT shape, so long windows are coarsened and the
 //! slot length `dt` travels alongside).
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use super::spot::{SpotModel, SpotPriceProcess};
 use super::SLOTS_PER_UNIT;
@@ -79,11 +79,37 @@ impl AvailabilityIndex {
     }
 }
 
+/// Slot-price storage behind a [`PriceTrace`].
+///
+/// `Flat` is the classic contiguous vector every batch path uses.
+/// `Chunked` is the streaming representation: immutable `Arc`'d chunks
+/// shared with the producing [`crate::feed::FeedBuffer`], so materializing
+/// a fresh trace from a live feed costs O(chunk handles + open tail)
+/// instead of cloning the whole ingested history. Under bounded retention
+/// the leading chunks may have been evicted (`base_slot > 0`): slot
+/// *indices* stay absolute, and reading an evicted slot is a hard error,
+/// mirroring the feed's own eviction guard.
+#[derive(Debug, Clone)]
+enum Repr {
+    Flat(Vec<f64>),
+    Chunked {
+        /// Resident chunks; chunk `i` holds absolute slots
+        /// `[base_slot + i·chunk_len, …)`. All but the last hold exactly
+        /// `chunk_len` prices; the last may be partial.
+        chunks: Vec<Arc<[f64]>>,
+        /// First resident absolute slot (a multiple of `chunk_len`).
+        base_slot: usize,
+        /// Absolute frontier: `base_slot` + resident slot count.
+        len_slots: usize,
+        chunk_len: usize,
+    },
+}
+
 /// Ground-truth spot prices for the horizon, one per slot.
 /// Slot `s` covers simulated time `[s·dt, (s+1)·dt)` with `dt = 1/SLOTS_PER_UNIT`.
 #[derive(Debug, Clone)]
 pub struct PriceTrace {
-    prices: Vec<f64>,
+    repr: Repr,
     slot_len: f64,
     /// Lazily-built bid-grid availability index (immutable trace, so the
     /// prefix sums are computed at most once).
@@ -97,7 +123,7 @@ impl PriceTrace {
         let n = (horizon / slot_len).ceil() as usize + 1;
         let mut proc = SpotPriceProcess::new(model, seed);
         PriceTrace {
-            prices: proc.generate(n),
+            repr: Repr::Flat(proc.generate(n)),
             slot_len,
             index: OnceLock::new(),
         }
@@ -107,7 +133,36 @@ impl PriceTrace {
     pub fn from_prices(prices: Vec<f64>, slot_len: f64) -> PriceTrace {
         assert!(slot_len > 0.0);
         PriceTrace {
-            prices,
+            repr: Repr::Flat(prices),
+            slot_len,
+            index: OnceLock::new(),
+        }
+    }
+
+    /// Build a shared-suffix trace over immutable chunks (the streaming
+    /// feed's materialization path). Every chunk but the last must hold
+    /// the same number of slots, and `base_slot` — the absolute slot of
+    /// the first chunk's first price — must be chunk-aligned (eviction
+    /// drops whole chunks).
+    pub fn from_chunks(chunks: Vec<Arc<[f64]>>, base_slot: usize, slot_len: f64) -> PriceTrace {
+        assert!(slot_len > 0.0);
+        assert!(!chunks.is_empty(), "chunked trace needs at least one chunk");
+        let chunk_len = chunks[0].len();
+        assert!(chunk_len > 0, "empty leading chunk");
+        for c in &chunks[..chunks.len() - 1] {
+            assert_eq!(c.len(), chunk_len, "only the last chunk may be partial");
+        }
+        let last = chunks.last().expect("non-empty").len();
+        assert!(last > 0 && last <= chunk_len, "trailing chunk of {last} slots");
+        assert_eq!(base_slot % chunk_len, 0, "base slot must be chunk-aligned");
+        let resident = (chunks.len() - 1) * chunk_len + last;
+        PriceTrace {
+            repr: Repr::Chunked {
+                chunks,
+                base_slot,
+                len_slots: base_slot + resident,
+                chunk_len,
+            },
             slot_len,
             index: OnceLock::new(),
         }
@@ -118,28 +173,76 @@ impl PriceTrace {
     }
 
     pub fn num_slots(&self) -> usize {
-        self.prices.len()
+        match &self.repr {
+            Repr::Flat(p) => p.len(),
+            Repr::Chunked { len_slots, .. } => *len_slots,
+        }
+    }
+
+    /// First readable absolute slot: 0 for flat traces, the retention
+    /// boundary for chunked ones. Consumers of bounded-retention views
+    /// gate window reads on this before touching prices.
+    pub fn first_slot(&self) -> usize {
+        match &self.repr {
+            Repr::Flat(_) => 0,
+            Repr::Chunked { base_slot, .. } => *base_slot,
+        }
     }
 
     pub fn horizon(&self) -> f64 {
-        self.prices.len() as f64 * self.slot_len
+        self.num_slots() as f64 * self.slot_len
     }
 
     /// Slot index containing time `t` (clamped to the last slot).
     #[inline]
     pub fn slot_of(&self, t: f64) -> usize {
-        ((t / self.slot_len).floor() as usize).min(self.prices.len().saturating_sub(1))
+        ((t / self.slot_len).floor() as usize).min(self.num_slots().saturating_sub(1))
     }
 
     /// Price during the slot containing time `t`.
     #[inline]
     pub fn price_at(&self, t: f64) -> f64 {
-        self.prices[self.slot_of(t)]
+        self.price_of_slot(self.slot_of(t))
     }
 
     #[inline]
     pub fn price_of_slot(&self, s: usize) -> f64 {
-        self.prices[s.min(self.prices.len() - 1)]
+        match &self.repr {
+            Repr::Flat(p) => p[s.min(p.len() - 1)],
+            Repr::Chunked { chunks, base_slot, len_slots, chunk_len } => {
+                let s = s.min(len_slots - 1);
+                // Defense in depth behind the coordinator's retention
+                // guard: reading an evicted slot is corruption, not a
+                // clamp.
+                assert!(
+                    s >= *base_slot,
+                    "feed slot {s} evicted (retention starts at slot {base_slot})"
+                );
+                let rel = s - base_slot;
+                chunks[rel / chunk_len][rel % chunk_len]
+            }
+        }
+    }
+
+    /// Full price history as one contiguous slice (copying chunked storage
+    /// on first use). Only defined from the stream origin: a
+    /// retention-bounded trace no longer has its full history.
+    fn full_prices(&self) -> std::borrow::Cow<'_, [f64]> {
+        match &self.repr {
+            Repr::Flat(p) => std::borrow::Cow::Borrowed(p),
+            Repr::Chunked { chunks, base_slot, .. } => {
+                assert_eq!(
+                    *base_slot, 0,
+                    "full-history access on a retention-bounded trace \
+                     (slots [0, {base_slot}) evicted)"
+                );
+                let mut flat = Vec::with_capacity(self.num_slots());
+                for c in chunks {
+                    flat.extend_from_slice(c);
+                }
+                std::borrow::Cow::Owned(flat)
+            }
+        }
     }
 
     /// Is a bid `b` winning during the slot containing `t`?
@@ -152,13 +255,13 @@ impl PriceTrace {
     /// §6.1 bid grid `B` (the bids the regret/figure paths actually query).
     pub fn availability_index(&self) -> &AvailabilityIndex {
         self.index
-            .get_or_init(|| AvailabilityIndex::build(&self.prices, crate::policy::grid_b()))
+            .get_or_init(|| AvailabilityIndex::build(&self.full_prices(), crate::policy::grid_b()))
     }
 
     /// A one-off index over a caller-chosen bid set (not cached) — for
     /// off-grid bid sweeps that would otherwise fall back to O(S) scans.
     pub fn index_for_bids(&self, bids: Vec<f64>) -> AvailabilityIndex {
-        AvailabilityIndex::build(&self.prices, bids)
+        AvailabilityIndex::build(&self.full_prices(), bids)
     }
 
     /// Empirical availability of bid `b` over a window (fraction of winning
@@ -322,5 +425,47 @@ mod tests {
         let trace = PriceTrace::generate(SpotModel::paper_default(), 10.0, 1);
         assert!(trace.horizon() >= 10.0);
         assert_eq!(trace.slot_len(), 1.0 / 12.0);
+    }
+
+    #[test]
+    fn chunked_trace_is_value_identical_to_flat() {
+        let prices: Vec<f64> = (0..100).map(|i| 0.1 + 0.001 * i as f64).collect();
+        let flat = PriceTrace::from_prices(prices.clone(), 0.5);
+        let chunks: Vec<Arc<[f64]>> = prices.chunks(16).map(Arc::from).collect();
+        let chunked = PriceTrace::from_chunks(chunks, 0, 0.5);
+        assert_eq!(chunked.num_slots(), flat.num_slots());
+        assert_eq!(chunked.first_slot(), 0);
+        for s in 0..flat.num_slots() {
+            assert_eq!(chunked.price_of_slot(s), flat.price_of_slot(s), "slot {s}");
+        }
+        // Derived views go through the same price reads: exact equality.
+        let (pa, da) = flat.resample_window(1.0, 40.0, 64);
+        let (pb, db) = chunked.resample_window(1.0, 40.0, 64);
+        assert_eq!(pa, pb);
+        assert_eq!(da, db);
+        assert_eq!(
+            chunked.availability(0.0, 49.0, 0.15),
+            flat.availability(0.0, 49.0, 0.15)
+        );
+        assert_eq!(chunked.price_at(chunked.horizon()), flat.price_at(flat.horizon()));
+    }
+
+    #[test]
+    fn retention_bounded_chunked_trace_guards_evicted_slots() {
+        let chunks: Vec<Arc<[f64]>> = (0..3)
+            .map(|c| {
+                let v: Vec<f64> = (0..16).map(|i| 0.2 + (c * 16 + i) as f64 * 1e-3).collect();
+                Arc::from(v)
+            })
+            .collect();
+        let t = PriceTrace::from_chunks(chunks, 32, 0.5);
+        assert_eq!(t.first_slot(), 32);
+        assert_eq!(t.num_slots(), 80);
+        assert_eq!(t.price_of_slot(32), 0.2);
+        assert_eq!(t.price_of_slot(79), 0.2 + 47.0 * 1e-3);
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.price_of_slot(31)));
+        let msg = *hit.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("evicted"), "{msg}");
+        assert!(msg.contains("slot 31"), "{msg}");
     }
 }

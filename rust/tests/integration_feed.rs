@@ -305,6 +305,101 @@ fn online_routed_multi_offer_matches_batch_view_run() {
 }
 
 #[test]
+fn bounded_retention_is_bit_identical_when_windows_stay_resident() {
+    // The streaming-memory contract: evicting sealed history that no live
+    // counterfactual window can reach anymore must not change a single
+    // report byte — bounded and unbounded runs over the same live event
+    // stream are compared field-for-field, bitwise.
+    let (jobs, trace) = setup(40, 71);
+    let specs = spot_specs();
+    let opts = OnlineOptions {
+        routing: RoutingPolicy::Home,
+        pool_capacity: 0,
+        seed: 71,
+        snapshot_every: 10,
+    };
+    let mk = || {
+        FeedMux::new(
+            vec![FeedBinding {
+                region: "default".into(),
+                instance_type: "default".into(),
+                od_price: 1.0,
+                capacity: None,
+                events: trace_as_events(&trace),
+            }],
+            DT,
+        )
+        .unwrap()
+    };
+    let run = |mux: FeedMux| {
+        tola_run_online(&jobs, &specs, mux, &opts, &Evaluator::Native { threads: 2 }).unwrap()
+    };
+    let unbounded = run(mk());
+    // Smallest provably-safe retention: while job j is live, the frontier
+    // can reach (with the mux's geometric ingestion, up to 2x overshoot)
+    // the deadline of any job that arrived before j retired, and j's
+    // retire-time marshal reads back to j's arrival slot.
+    let total = trace.num_slots();
+    let mut need = 0usize;
+    for j in &jobs {
+        let d = jobs
+            .iter()
+            .filter(|k| k.arrival <= j.deadline)
+            .map(|k| k.deadline)
+            .fold(j.deadline, f64::max);
+        let frontier_cap = (2 * ((d + 1.0) / DT).ceil() as usize).min(total);
+        let span = frontier_cap.saturating_sub((j.arrival / DT).floor() as usize);
+        need = need.max(span);
+    }
+    let bounded = run(mk().with_retention(need + 64));
+    assert_reports_identical(&bounded.report, &unbounded.report, "bounded retention");
+    assert_eq!(bounded.ingested_slots, unbounded.ingested_slots, "ingested slots");
+    assert_eq!(
+        format!("{:?}", bounded.snapshots),
+        format!("{:?}", unbounded.snapshots),
+        "snapshot trajectory"
+    );
+}
+
+#[test]
+fn retention_reaching_an_evicted_slot_fails_hard() {
+    // The should-fail contract, mirrored from the lookahead guard: a
+    // retention too small for a live window must be a hard error naming
+    // the evicted slot — never a silently clamped or imaginary price.
+    let (jobs, trace) = setup(30, 5);
+    let specs = spot_specs();
+    let mux = FeedMux::new(
+        vec![FeedBinding {
+            region: "default".into(),
+            instance_type: "default".into(),
+            od_price: 1.0,
+            capacity: None,
+            events: trace_as_events(&trace),
+        }],
+        DT,
+    )
+    .unwrap()
+    .with_retention(2);
+    let err = tola_run_online(
+        &jobs,
+        &specs,
+        mux,
+        &OnlineOptions {
+            routing: RoutingPolicy::Home,
+            pool_capacity: 0,
+            seed: 5,
+            snapshot_every: 0,
+        },
+        &Evaluator::Native { threads: 1 },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("evicted"), "{err}");
+    assert!(err.contains("retention"), "{err}");
+    assert!(err.contains("feed slot"), "{err}");
+}
+
+#[test]
 fn lookahead_guard_fails_hard_when_the_feed_ends_early() {
     // The should-fail contract: a feed covering only part of the job
     // horizon must error — never silently price jobs against clamped or
