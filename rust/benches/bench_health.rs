@@ -1,0 +1,101 @@
+//! Health-plane and forensics benches: folding a cap-sized (262k-event)
+//! deterministic log into `dagcloud.health/v1`, localizing the first
+//! divergence between two cap-sized logs, and the shard merge.
+
+use dagcloud::fleet::merge_health;
+use dagcloud::telemetry::diff::{bisect_events, diff_docs};
+use dagcloud::telemetry::event::EVENT_CAP;
+use dagcloud::telemetry::health::{fold_events, health_doc};
+use dagcloud::telemetry::{SimEvent, SimEventKind};
+use dagcloud::util::bench::Bencher;
+use dagcloud::util::json::Json;
+
+/// Serialized canonical rows: `sources` cells, `per_source` events each,
+/// with a realistic kind mix (decisions, frontier, routing, snapshots).
+fn synth_rows(sources: usize, per_source: usize) -> Vec<Json> {
+    let mut rows = Vec::with_capacity(sources * per_source);
+    for s in 0..sources {
+        let src = format!("world#{s}");
+        for i in 0..per_source {
+            let t = i as f64 * 0.25;
+            let kind = match i % 8 {
+                0 => SimEventKind::FrontierAdvanced { slots: i * 3 + 12 },
+                1 => SimEventKind::SpecChosen { job: i, spec: i % 175 },
+                2 => SimEventKind::WindowOpened {
+                    job: i,
+                    task: i % 4,
+                    start: t,
+                    deadline: t + 2.0,
+                },
+                3 => SimEventKind::OfferRouted { job: i, task: i % 4, offer: i % 3, spilled: i % 5 == 0 },
+                4 => SimEventKind::CapacityExhausted { job: i, task: i % 4, offer: i % 3 },
+                5 => SimEventKind::ResidencyProbe { slot: i * 3, first_resident: (i * 3) / 2 },
+                6 => SimEventKind::ParamSnapshot {
+                    jobs: i,
+                    max_weight: 0.02,
+                    best_policy: "p".to_string(),
+                    regret: 0.01,
+                    bound: 0.4,
+                },
+                _ => SimEventKind::SweepBatch { retired: 4, specs: 175 },
+            };
+            rows.push(SimEvent { sim_time: t, seq: i as u64, kind }.to_json(&src));
+        }
+    }
+    rows
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_health ==\n");
+
+    // --- fold throughput at the per-source event cap (one 262k source) ---
+    let cap_rows = synth_rows(1, EVENT_CAP);
+    b.bench_throughput("health/fold_262k_events", cap_rows.len() as f64, "events/s", || {
+        fold_events(&cap_rows)
+    });
+
+    // --- a realistic fleet: 16 cells x 4096 events, fold + doc assembly ---
+    let fleet_rows = synth_rows(16, 4096);
+    b.bench_throughput("health/doc_16x4096", fleet_rows.len() as f64, "events/s", || {
+        health_doc(&fold_events(&fleet_rows))
+    });
+
+    // --- shard merge of pre-folded sections ---
+    let sections = fold_events(&fleet_rows);
+    b.bench("health/merge_16_sections", || merge_health(&sections).unwrap());
+
+    // --- first-divergence localization on cap-sized logs ---
+    // Divergence seeded near the end: the scan pays for ~the whole log.
+    let left = cap_rows.clone();
+    let mut right = cap_rows.clone();
+    let div_at = EVENT_CAP - 1024;
+    right[div_at] = SimEvent {
+        sim_time: div_at as f64 * 0.25,
+        seq: div_at as u64,
+        kind: SimEventKind::SpecChosen { job: div_at, spec: 999 },
+    }
+    .to_json("world#0");
+    b.bench_throughput("health/diff_bisect_262k", left.len() as f64, "events/s", || {
+        bisect_events(&left, &right, 8).unwrap().index
+    });
+
+    // --- full-document structural diff path (what CI runs on cmp failure) ---
+    let mut doc_a = Json::obj();
+    doc_a.set("schema", Json::Str("dagcloud.telemetry/v1".into())).set("deterministic", {
+        let mut d = Json::obj();
+        d.set("events", Json::Arr(left.clone()));
+        d
+    });
+    let mut doc_b = Json::obj();
+    doc_b.set("schema", Json::Str("dagcloud.telemetry/v1".into())).set("deterministic", {
+        let mut d = Json::obj();
+        d.set("events", Json::Arr(right.clone()));
+        d
+    });
+    b.bench("health/diff_docs_262k", || diff_docs(&doc_a, &doc_b, 8).struct_count);
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_health.json").ok();
+    println!("\nresults written to results/bench_health.json");
+}

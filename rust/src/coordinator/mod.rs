@@ -521,6 +521,8 @@ pub fn tola_run_view_traced(
                                     jobs: regret.jobs() as usize,
                                     max_weight: wmax,
                                     best_policy: specs[tola.best()].label(),
+                                    regret: regret.average_regret(),
+                                    bound: regret.bound(0.05),
                                 },
                             );
                         }

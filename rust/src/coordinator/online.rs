@@ -590,6 +590,20 @@ pub fn tola_run_online_traced(
                     };
                     let first_read = (start / dt).floor().max(0.0) as usize;
                     ensure_resident(read_offers, first_read, time, "this task's window")?;
+                    if rec.is_on() {
+                        // Residency margin for the health plane: how far
+                        // this read sat above the tightest eviction floor
+                        // among the traces it touches.
+                        let first_resident = read_offers
+                            .iter()
+                            .map(|o| o.trace.first_slot())
+                            .max()
+                            .unwrap_or(0);
+                        rec.emit(
+                            time,
+                            SimEventKind::ResidencyProbe { slot: first_read, first_resident },
+                        );
+                    }
                 }
                 let (offer, out) = if degenerate {
                     (
@@ -687,14 +701,25 @@ pub fn tola_run_online_traced(
                 let trace = &market.view.home().trace;
                 let all_costs: Vec<Vec<f64>> = if degenerate {
                     let marshal_span = tele.span("online/marshal");
+                    let mut probe_slot = usize::MAX;
                     for &(_, ji) in &batch {
                         let start_slot = (jobs[ji].arrival / dt).floor().max(0.0) as usize;
+                        probe_slot = probe_slot.min(start_slot);
                         ensure_resident(
                             &market.view.offers()[..1],
                             start_slot,
                             time,
                             "this job's counterfactual window",
                         )?;
+                    }
+                    if rec.is_on() {
+                        // One probe per batch at the earliest slot the
+                        // marshal re-reads (the batch's tightest margin).
+                        let first_resident = market.view.home().trace.first_slot();
+                        rec.emit(
+                            time,
+                            SimEventKind::ResidencyProbe { slot: probe_slot, first_resident },
+                        );
                     }
                     let mut tabs: Vec<Option<sweep::StreamingTables>> =
                         Vec::with_capacity(batch.len());
@@ -732,14 +757,27 @@ pub fn tola_run_online_traced(
                         RoutingPolicy::Home => &market.view.offers()[..1],
                         _ => market.view.offers(),
                     };
+                    let mut probe_slot = usize::MAX;
                     for &(_, ji) in &batch {
                         let start_slot = (jobs[ji].arrival / dt).floor().max(0.0) as usize;
+                        probe_slot = probe_slot.min(start_slot);
                         ensure_resident(
                             sweep_offers,
                             start_slot,
                             time,
                             "this job's counterfactual window",
                         )?;
+                    }
+                    if rec.is_on() {
+                        let first_resident = sweep_offers
+                            .iter()
+                            .map(|o| o.trace.first_slot())
+                            .max()
+                            .unwrap_or(0);
+                        rec.emit(
+                            time,
+                            SimEventKind::ResidencyProbe { slot: probe_slot, first_resident },
+                        );
                     }
                     let mut tabs: Vec<Vec<Option<sweep::StreamingTables>>> =
                         Vec::with_capacity(batch.len());
@@ -839,6 +877,8 @@ pub fn tola_run_online_traced(
                                     jobs: regret.jobs() as usize,
                                     max_weight: wmax,
                                     best_policy: specs[tola.best()].label(),
+                                    regret: regret.average_regret(),
+                                    bound: regret.bound(0.05),
                                 },
                             );
                         }

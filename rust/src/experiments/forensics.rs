@@ -1,0 +1,180 @@
+//! CLI drivers for the health plane and determinism forensics:
+//! `repro health` (fold telemetry docs into `dagcloud.health/v1`) and
+//! `repro diff` (structural diff + first-divergence event bisection).
+//!
+//! Both are offline consumers of already-written documents — they never
+//! run a simulation, so they cannot perturb report bytes by construction.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::fleet::merge_health;
+use crate::telemetry::{diff, health, Logger};
+use crate::util::json::Json;
+
+fn load_doc(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("{path}: {e}"))?;
+    Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))
+}
+
+/// `repro health INPUT...` — fold each document's deterministic event log
+/// into per-cell health sections, merge them order-independently (the
+/// fleet-merge shape: duplicate sources are a hard error), and write
+/// `<out>/health.json`.
+pub fn run_health(inputs: &[String], out_dir: &str, log: &Logger) -> Result<()> {
+    ensure!(
+        !inputs.is_empty(),
+        "`repro health` needs at least one telemetry.json (run with --telemetry first, \
+         or pass --health to any run command to fold in-process)"
+    );
+    let mut sections = Vec::new();
+    for path in inputs {
+        let doc = load_doc(path)?;
+        let events = health::events_of_doc(&doc).ok_or_else(|| {
+            anyhow!(
+                "{path}: no deterministic event log (expected a dagcloud.telemetry/v1 \
+                 document or its bare deterministic section)"
+            )
+        })?;
+        let folded = health::fold_events(events);
+        log.info(
+            "health",
+            &format!(
+                "{path}: folded {} events into {} cell section(s)",
+                events.len(),
+                folded.len()
+            ),
+        );
+        sections.extend(folded);
+    }
+    let doc = merge_health(&sections)?;
+    let path = format!("{out_dir}/health.json");
+    std::fs::write(&path, doc.pretty()).map_err(|e| anyhow!("{path}: {e}"))?;
+    log.info("health", &format!("wrote {path}"));
+    println!(
+        "health: {} source(s), {} event(s), {} anomaly annotation(s) -> {}",
+        doc.opt_u64("sources", 0),
+        doc.opt_u64("events", 0),
+        doc.opt_u64("anomalies", 0),
+        path
+    );
+    for s in &sections {
+        println!("  {:<40} {:>8} events  {:>3} anomalies", s.source, s.events, s.anomalies);
+    }
+    Ok(())
+}
+
+/// `repro diff A B` — byte check, structural diff, and (for documents
+/// carrying deterministic event logs) the first diverging
+/// `(sim_time, source, seq)` triple with ±`context` events of context.
+/// Exits non-zero when the documents differ, so CI can chain it after a
+/// failed `cmp` and still fail the job.
+pub fn run_diff(a_path: &str, b_path: &str, context: usize, log: &Logger) -> Result<()> {
+    let ta = std::fs::read_to_string(a_path).map_err(|e| anyhow!("{a_path}: {e}"))?;
+    let tb = std::fs::read_to_string(b_path).map_err(|e| anyhow!("{b_path}: {e}"))?;
+    if ta == tb {
+        println!("{a_path} and {b_path}: byte-identical");
+        return Ok(());
+    }
+    let a = Json::parse(&ta).map_err(|e| anyhow!("{a_path}: {e}"))?;
+    let b = Json::parse(&tb).map_err(|e| anyhow!("{b_path}: {e}"))?;
+    let report = diff::diff_docs(&a, &b, context);
+    print!("{}", diff::render(a_path, b_path, &report));
+    log.info(
+        "diff",
+        &format!(
+            "{} structural difference(s), divergence {}",
+            report.struct_count,
+            if report.divergence.is_some() { "localized" } else { "n/a" }
+        ),
+    );
+    if report.identical {
+        anyhow::bail!(
+            "documents differ in bytes but are structurally identical \
+             (formatting/whitespace only)"
+        );
+    }
+    match &report.divergence {
+        Some(d) => {
+            let at = d
+                .left
+                .as_ref()
+                .or(d.right.as_ref())
+                .map(|r| format!("sim_time={} source={} seq={}", r.sim_time, r.source, r.seq))
+                .unwrap_or_else(|| "<empty logs>".to_string());
+            anyhow::bail!(
+                "documents diverge: first diverging event at index {} ({at})",
+                d.index
+            )
+        }
+        None => anyhow::bail!(
+            "documents differ: {} structural difference(s)",
+            report.struct_count
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{SimEvent, SimEventKind};
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("dagcloud_forensics_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.to_string_lossy().to_string()
+    }
+
+    fn telemetry_doc_with(spec: usize, path: &str) {
+        let rows: Vec<Json> = (0..64)
+            .map(|i| {
+                SimEvent {
+                    sim_time: i as f64,
+                    seq: i,
+                    kind: SimEventKind::SpecChosen {
+                        job: i as usize,
+                        spec: if i == 41 { spec } else { 1 },
+                    },
+                }
+                .to_json("w#0")
+            })
+            .collect();
+        let mut det = Json::obj();
+        det.set("events", Json::Arr(rows));
+        let mut doc = Json::obj();
+        doc.set("schema", Json::Str("dagcloud.telemetry/v1".into()))
+            .set("deterministic", det);
+        std::fs::write(path, doc.pretty()).unwrap();
+    }
+
+    #[test]
+    fn diff_cli_names_the_seeded_divergent_event() {
+        let dir = tmp_dir("diff");
+        let a = format!("{dir}/a.json");
+        let b = format!("{dir}/b.json");
+        telemetry_doc_with(1, &a); // identical everywhere...
+        telemetry_doc_with(9, &b); // ...except the seeded event at seq 41
+        let log = Logger::default();
+        let err = run_diff(&a, &b, 2, &log).unwrap_err().to_string();
+        assert!(err.contains("index 41"), "{err}");
+        assert!(err.contains("seq=41"), "{err}");
+        // Identical files succeed.
+        assert!(run_diff(&a, &a.clone(), 2, &log).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn health_cli_folds_and_writes_the_doc() {
+        let dir = tmp_dir("health");
+        let a = format!("{dir}/telemetry.json");
+        telemetry_doc_with(1, &a);
+        let log = Logger::default();
+        run_health(&[a.clone()], &dir, &log).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(format!("{dir}/health.json")).unwrap())
+            .unwrap();
+        assert_eq!(doc.opt_str("schema", ""), "dagcloud.health/v1");
+        assert_eq!(doc.opt_u64("events", 0), 64);
+        // Feeding the same file twice duplicates sources: hard error.
+        assert!(run_health(&[a.clone(), a], &dir, &log).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

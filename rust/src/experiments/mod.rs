@@ -7,6 +7,7 @@ pub mod perf;
 pub mod scenarios;
 pub mod feed;
 pub mod fleet;
+pub mod forensics;
 pub mod robustness;
 
 use crate::util::cli::Args;
@@ -41,15 +42,27 @@ COMMANDS
   run         One TOLA learning run with progress output
   trace       Like `run`, with the wall-clock span profiler forced on; the
               spans land in <out>/trace.json (Chrome trace-event JSON,
-              loadable in chrome://tracing or Perfetto)
+              loadable in chrome://tracing or Perfetto); add --events to
+              also dump the deterministic event plane as <out>/events.jsonl
+              (one canonical-order JSON event per line, grep-able)
+  health      Fold telemetry.json event logs into <out>/health.json
+              (dagcloud.health/v1: per-cell feed lag, eviction margins,
+              capacity headroom, regret-vs-bound; see EXPERIMENTS.md §Health)
+  diff        Structural diff of two dagcloud.* documents; when both carry
+              deterministic event logs, also prints the first diverging
+              (sim_time, source, seq) event with ±K context. Exits non-zero
+              when the documents differ
   all         Run every table (tables 2–6) and figures
 
 TELEMETRY OPTIONS (every command)
   --telemetry     record both telemetry planes and write <out>/telemetry.json
                   (dagcloud.telemetry/v1); never changes report bytes
-  --trace         record wall-clock spans and write <out>/trace.json
-                  (on `repro feed`, --trace keeps its meaning as the input
-                  price dump path; use `--telemetry` there instead)
+  --health        record the deterministic event plane and additionally fold
+                  it into <out>/health.json (dagcloud.health/v1); never
+                  changes report bytes
+  --chrome-trace  record wall-clock spans and write <out>/trace.json
+                  (--trace is kept as a deprecated alias everywhere except
+                  `repro feed`, where --trace names the input price dump)
   -v, --verbose   debug-level status lines on stderr
   -q, --quiet     silence status lines (machine-readable output only)
 
@@ -89,6 +102,13 @@ ROBUSTNESS OPTIONS (`repro robustness`; also honors --seeds/--smoke/--jobs)
   --gate-threshold X  per-regime mean regret/bound ceiling (default 0.25)
   --block-slots N bootstrap block length in slots (default 24)
 
+HEALTH / DIFF OPTIONS
+  health INPUT... one or more dagcloud.telemetry/v1 files (duplicate cell
+                  sources across inputs are a hard error; harness sources
+                  are excluded, so the doc is shard-invariant)
+  diff A B        the two documents to compare
+  --context K     events of context around the first divergence (default 8)
+
 FEED OPTIONS (`repro feed`)
   --trace PATH    price dump to stream (required)
   --format F      ec2-json | csv (default: inferred from the extension)
@@ -120,10 +140,22 @@ fn csv_list(args: &Args, key: &str) -> Option<Vec<String>> {
 
 /// CLI dispatch for `repro`.
 pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
-    // `repro feed` predates the boolean --trace and uses it as a valued
-    // option (the input price dump), so only register the flag elsewhere.
+    // The Chrome-export flag is --chrome-trace on every subcommand;
+    // `repro feed` predates it and uses --trace as a valued option (the
+    // input price dump), so the deprecated boolean alias --trace is only
+    // registered elsewhere.
     let is_feed = argv.first().is_some_and(|s| s == "feed");
-    let mut flag_names = vec!["no-pjrt", "verbose", "smoke", "list", "telemetry", "quiet"];
+    let mut flag_names = vec![
+        "no-pjrt",
+        "verbose",
+        "smoke",
+        "list",
+        "telemetry",
+        "quiet",
+        "health",
+        "chrome-trace",
+        "events",
+    ];
     if !is_feed {
         flag_names.push("trace");
     }
@@ -141,8 +173,11 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
     } else {
         crate::telemetry::LogLevel::Info
     };
-    let events_on = args.flag("telemetry");
-    let trace_on = cmd == "trace" || (!is_feed && args.flag("trace"));
+    let events_on = args.flag("telemetry")
+        || args.flag("health")
+        || (cmd == "trace" && args.flag("events"));
+    let trace_on =
+        cmd == "trace" || args.flag("chrome-trace") || (!is_feed && args.flag("trace"));
     let tele = crate::telemetry::Telemetry::new(crate::telemetry::TelemetryOptions {
         events: events_on,
         spans: events_on || trace_on,
@@ -312,6 +347,20 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
             };
             tables::run_single_tola(&run_cfg, &out_dir)?
         }
+        "health" => {
+            let inputs: Vec<String> = args.positional[1..].to_vec();
+            forensics::run_health(&inputs, &out_dir, tele.logger())?
+        }
+        "diff" => {
+            let rest = &args.positional[1..];
+            anyhow::ensure!(
+                rest.len() == 2,
+                "`repro diff` needs exactly two document paths; see `repro help`"
+            );
+            let context =
+                args.get_u64("context", crate::telemetry::diff::DEFAULT_CONTEXT as u64)? as usize;
+            forensics::run_diff(&rest[0], &rest[1], context, tele.logger())?
+        }
         "all" => {
             tables::run_table2(&cfg, &out_dir)?;
             tables::run_table3(&cfg, &out_dir)?;
@@ -329,6 +378,26 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
         let path = format!("{out_dir}/telemetry.json");
         std::fs::write(&path, tele.telemetry_json().pretty())?;
         tele.logger().info("telemetry", &format!("wrote {path}"));
+    }
+    // `repro health` writes its own folded doc from its inputs; the flag
+    // path folds this run's in-process event log instead.
+    if args.flag("health") && cmd != "health" {
+        let path = format!("{out_dir}/health.json");
+        std::fs::write(&path, tele.health_json().pretty())?;
+        tele.logger().info("health", &format!("wrote {path}"));
+    }
+    if cmd == "trace" && args.flag("events") {
+        let path = format!("{out_dir}/events.jsonl");
+        let det = tele.deterministic_json();
+        let events = crate::telemetry::health::events_of_doc(&det).unwrap_or(&[]);
+        let mut lines = String::new();
+        for e in events {
+            lines.push_str(&e.to_string());
+            lines.push('\n');
+        }
+        std::fs::write(&path, lines)?;
+        tele.logger()
+            .info("telemetry", &format!("wrote {path} ({} events)", events.len()));
     }
     if trace_on {
         let path = format!("{out_dir}/trace.json");

@@ -25,6 +25,11 @@
 //! `coordinator::online` runs (or their serialized `dagcloud.feed/v1`
 //! reports) into one fleet-wide convergence timeline, sorted on
 //! `(sim_time, source)` with a cumulative fleet job count.
+//!
+//! [`merge_health`] follows the same shape for `dagcloud.health/v1`
+//! sections: duplicate sources are a hard error, the document is
+//! recomputed from the sorted section set, so health bytes are
+//! independent of shard plan and merge order too.
 
 use std::collections::BTreeSet;
 
@@ -34,6 +39,7 @@ use crate::coordinator::OnlineSnapshot;
 use crate::scenario::{
     outcomes_from_report, scenario_sections_json, ReportMeta, ScenarioOutcome,
 };
+use crate::telemetry::health::{health_doc, HealthSection};
 use crate::util::json::Json;
 
 use super::robustness;
@@ -308,6 +314,26 @@ pub fn online_source_from_feed_report(doc: &Json, source: &str) -> Result<Online
     })
 }
 
+/// Merge folded health sections from many shards into one
+/// `dagcloud.health/v1` document — the health-plane analogue of
+/// [`merge_online`]. Each section is a pure function of one cell's event
+/// log, so the merge is a set union: duplicate sources are a hard error
+/// (a cell folds exactly once across the fleet) and the document is
+/// recomputed from the source-sorted set, making the bytes independent of
+/// partition and absorption order.
+pub fn merge_health(sections: &[HealthSection]) -> Result<Json> {
+    let mut sources: Vec<&str> = sections.iter().map(|s| s.source.as_str()).collect();
+    sources.sort_unstable();
+    for w in sources.windows(2) {
+        ensure!(
+            w[0] != w[1],
+            "health merge: duplicate source '{}' (a cell folds exactly once)",
+            w[0]
+        );
+    }
+    Ok(health_doc(sections))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -454,5 +480,29 @@ mod tests {
         // Wrong schema refused.
         doc.set("schema", Json::Str("dagcloud.scenarios/v1".into()));
         assert!(online_source_from_feed_report(&doc, "x").is_err());
+    }
+
+    #[test]
+    fn health_merge_is_order_independent_and_refuses_duplicates() {
+        use crate::telemetry::health::fold_events;
+        use crate::telemetry::{SimEvent, SimEventKind};
+        let row = |src: &str, t: f64, seq: u64| {
+            SimEvent { sim_time: t, seq, kind: SimEventKind::FrontierAdvanced { slots: 12 } }
+                .to_json(src)
+        };
+        let a = fold_events(&[row("a#0", 1.0, 0)]);
+        let b = fold_events(&[row("b#0", 2.0, 0)]);
+        let mut ab = a.clone();
+        ab.extend(b.clone());
+        let mut ba = b.clone();
+        ba.extend(a.clone());
+        assert_eq!(
+            merge_health(&ab).unwrap().pretty(),
+            merge_health(&ba).unwrap().pretty()
+        );
+        let mut dup = a.clone();
+        dup.extend(a);
+        let err = merge_health(&dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate source"), "{err}");
     }
 }

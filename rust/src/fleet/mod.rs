@@ -19,7 +19,10 @@
 //!   count, shard partition, and merge order (property-tested in
 //!   `rust/tests/integration_fleet.rs`). [`merge_online`] folds
 //!   [`crate::coordinator::OnlineSnapshot`] streams (or serialized
-//!   `dagcloud.feed/v1` reports) into a fleet-wide convergence timeline;
+//!   `dagcloud.feed/v1` reports) into a fleet-wide convergence timeline,
+//!   and [`merge_health`] does the same for folded `dagcloud.health/v1`
+//!   sections (duplicate sources are a hard error; the document is
+//!   re-derived from the source-sorted set);
 //! * [`robustness`] — cross-scenario policy-robustness scoring: per
 //!   fixed policy, the worst-case and difficulty-weighted mean regret
 //!   (normalized by the run-level Prop. B.1 bound) across all worlds,
@@ -38,7 +41,7 @@ pub mod robustness;
 
 pub use manifest::{ShardManifest, ShardPlan};
 pub use merge::{
-    merge_online, online_source_from_feed_report, FleetAccumulator, MergedOnline,
-    MergedOnlinePoint, OnlineSource,
+    merge_health, merge_online, online_source_from_feed_report, FleetAccumulator,
+    MergedOnline, MergedOnlinePoint, OnlineSource,
 };
 pub use robustness::{robustness_json, score, world_table, PolicyScore, Robustness, WorldStat};

@@ -48,9 +48,15 @@
 //! * a **telemetry layer** ([`telemetry`]): a deterministic sim-time event
 //!   log (byte-identical across threads/shards, property-tested), a
 //!   wall-clock span profiler with log-scale latency histograms exported
-//!   as `dagcloud.telemetry/v1` + Chrome trace JSON, and the leveled
-//!   status logger behind `-v`/`--quiet` — all threaded through handles,
-//!   never globals, so report bytes are provably telemetry-independent;
+//!   as `dagcloud.telemetry/v1` + Chrome trace JSON, a run-health plane
+//!   ([`telemetry::health`], `dagcloud.health/v1`) derived purely from
+//!   the event log — feed lag, retention pressure, capacity headroom,
+//!   regret-vs-bound trajectory, deterministic anomaly annotations — a
+//!   forensics differ ([`telemetry::diff`], `repro diff`) that localizes
+//!   determinism breaks to the first diverging `(sim_time, source, seq)`
+//!   event, and the leveled status logger behind `-v`/`--quiet` — all
+//!   threaded through handles, never globals, so report bytes are
+//!   provably telemetry-independent;
 //! * an **experiment harness** ([`experiments`]) regenerating every table and
 //!   figure of the paper's evaluation section.
 //!

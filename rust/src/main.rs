@@ -1,6 +1,7 @@
 //! `repro` — CLI entrypoint for the dagcloud reproduction.
 //!
-//! Subcommands map one-to-one onto the paper's evaluation section; see
+//! Subcommands map one-to-one onto the paper's evaluation section, plus
+//! the observability drivers (`trace`, `health`, `diff`); see
 //! `repro help`.
 
 fn main() {

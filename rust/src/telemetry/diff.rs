@@ -1,0 +1,276 @@
+//! Determinism forensics: structural diff over `dagcloud.*` documents
+//! plus first-divergence localization in deterministic event logs.
+//!
+//! The repo's correctness regime is byte-identity (`cmp` in CI smokes),
+//! but a failed `cmp` says nothing about *where* two runs forked. This
+//! module turns "bytes differ" into a diagnosis:
+//!
+//! - the **structural differ** walks two parsed JSON trees in canonical
+//!   key order and reports the first differing paths
+//!   (`$.cells[3].regret: 0.21 != 0.22`, missing keys, length
+//!   mismatches);
+//! - the **event-log bisector** aligns the two documents'
+//!   `deterministic.events` arrays — both in canonical
+//!   `(sim_time, source, seq)` order — and pinpoints the first index
+//!   where they disagree, printing that event's key triple and a ±K
+//!   context window from each side. Because per-source `seq` numbers the
+//!   coordinator loop's emission order, the first diverging triple names
+//!   the first *simulation decision* that differed, not merely the first
+//!   differing byte.
+
+use crate::util::json::Json;
+
+/// Cap on reported structural paths (the count is still exact).
+pub const MAX_STRUCT_DIFFS: usize = 20;
+
+/// Default ±context half-width around the first diverging event.
+pub const DEFAULT_CONTEXT: usize = 8;
+
+/// One side of the first diverging event row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DivergentRow {
+    pub sim_time: f64,
+    pub source: String,
+    pub seq: u64,
+    /// Compact serialization of the full row ("<absent>" past array end).
+    pub line: String,
+}
+
+/// First divergence between two canonical event logs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventDivergence {
+    /// Index into the canonical event arrays where they first disagree.
+    pub index: usize,
+    pub left_len: usize,
+    pub right_len: usize,
+    pub left: Option<DivergentRow>,
+    pub right: Option<DivergentRow>,
+    /// `(index, left_line, right_line)` for the ±K window (compact JSON,
+    /// "<absent>" past either array's end).
+    pub context: Vec<(usize, String, String)>,
+}
+
+/// Full diff report for two documents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffReport {
+    pub identical: bool,
+    /// Total structural differences found (may exceed `paths.len()`).
+    pub struct_count: usize,
+    /// First [`MAX_STRUCT_DIFFS`] differing paths, rendered.
+    pub paths: Vec<String>,
+    /// Present when both documents carry deterministic event arrays that
+    /// disagree.
+    pub divergence: Option<EventDivergence>,
+}
+
+fn describe(j: &Json) -> String {
+    match j {
+        Json::Obj(_) => "{…}".to_string(),
+        Json::Arr(a) => format!("[…{} items]", a.len()),
+        other => other.to_string(),
+    }
+}
+
+/// Recursive walk; appends rendered paths, counts every difference.
+fn walk(path: &str, a: &Json, b: &Json, count: &mut usize, out: &mut Vec<String>) {
+    let mut note = |line: String| {
+        *count += 1;
+        if out.len() < MAX_STRUCT_DIFFS {
+            out.push(line);
+        }
+    };
+    match (a, b) {
+        (Json::Obj(ma), Json::Obj(mb)) => {
+            let keys: std::collections::BTreeSet<&String> =
+                ma.keys().chain(mb.keys()).collect();
+            for k in keys {
+                let p = format!("{path}.{k}");
+                match (ma.get(k), mb.get(k)) {
+                    (Some(va), Some(vb)) => walk(&p, va, vb, count, out),
+                    (Some(va), None) => note(format!("{p}: {} != <absent>", describe(va))),
+                    (None, Some(vb)) => note(format!("{p}: <absent> != {}", describe(vb))),
+                    (None, None) => {}
+                }
+            }
+        }
+        (Json::Arr(xa), Json::Arr(xb)) => {
+            if xa.len() != xb.len() {
+                note(format!("{path}: array length {} != {}", xa.len(), xb.len()));
+            }
+            for (i, (va, vb)) in xa.iter().zip(xb.iter()).enumerate() {
+                walk(&format!("{path}[{i}]"), va, vb, count, out);
+            }
+        }
+        _ => {
+            if a != b {
+                note(format!("{path}: {} != {}", describe(a), describe(b)));
+            }
+        }
+    }
+}
+
+fn divergent_row(events: &[Json], i: usize) -> Option<DivergentRow> {
+    events.get(i).map(|e| DivergentRow {
+        sim_time: e.opt_f64("sim_time", f64::NAN),
+        source: e.opt_str("source", "?").to_string(),
+        seq: e.opt_u64("seq", 0),
+        line: e.to_string(),
+    })
+}
+
+/// Locate the first index where two canonical event arrays disagree and
+/// capture a ±`k` context window. `None` when the arrays are identical.
+pub fn bisect_events(a: &[Json], b: &[Json], k: usize) -> Option<EventDivergence> {
+    let common = a.len().min(b.len());
+    let index = match (0..common).find(|&i| a[i] != b[i]) {
+        Some(i) => i,
+        None if a.len() != b.len() => common,
+        None => return None,
+    };
+    let lo = index.saturating_sub(k);
+    let hi = (index + k + 1).min(a.len().max(b.len()));
+    let line = |events: &[Json], i: usize| {
+        events.get(i).map_or("<absent>".to_string(), |e| e.to_string())
+    };
+    let context =
+        (lo..hi).map(|i| (i, line(a, i), line(b, i))).collect();
+    Some(EventDivergence {
+        index,
+        left_len: a.len(),
+        right_len: b.len(),
+        left: divergent_row(a, index),
+        right: divergent_row(b, index),
+        context,
+    })
+}
+
+/// Diff two parsed documents: structural walk plus, when both carry
+/// deterministic event arrays, first-divergence localization.
+pub fn diff_docs(a: &Json, b: &Json, k: usize) -> DiffReport {
+    let mut count = 0usize;
+    let mut paths = Vec::new();
+    walk("$", a, b, &mut count, &mut paths);
+    let divergence = match (
+        super::health::events_of_doc(a),
+        super::health::events_of_doc(b),
+    ) {
+        (Some(ea), Some(eb)) => bisect_events(ea, eb, k),
+        _ => None,
+    };
+    DiffReport {
+        identical: count == 0 && divergence.is_none(),
+        struct_count: count,
+        paths,
+        divergence,
+    }
+}
+
+/// Human-readable rendering (what CI prints on a failed `cmp`).
+pub fn render(left_name: &str, right_name: &str, r: &DiffReport) -> String {
+    let mut out = String::new();
+    if r.identical {
+        out.push_str(&format!("{left_name} and {right_name}: documents are identical\n"));
+        return out;
+    }
+    out.push_str(&format!(
+        "{left_name} vs {right_name}: {} structural difference(s)\n",
+        r.struct_count
+    ));
+    for p in &r.paths {
+        out.push_str(&format!("  {p}\n"));
+    }
+    if r.struct_count > r.paths.len() {
+        out.push_str(&format!(
+            "  … and {} more\n",
+            r.struct_count - r.paths.len()
+        ));
+    }
+    if let Some(d) = &r.divergence {
+        out.push_str(&format!(
+            "first diverging event at index {} (left has {} events, right has {}):\n",
+            d.index, d.left_len, d.right_len
+        ));
+        for side in [("left", &d.left), ("right", &d.right)] {
+            match side.1 {
+                Some(row) => out.push_str(&format!(
+                    "  {}: sim_time={} source={} seq={}\n",
+                    side.0, row.sim_time, row.source, row.seq
+                )),
+                None => out.push_str(&format!("  {}: <absent — log ends earlier>\n", side.0)),
+            }
+        }
+        out.push_str("context (left | right):\n");
+        for (i, l, r_) in &d.context {
+            let marker = if *i == d.index { ">>>" } else { "   " };
+            if l == r_ {
+                out.push_str(&format!("{marker} [{i}] {l}\n"));
+            } else {
+                out.push_str(&format!("{marker} [{i}] {l}\n{marker}       | {r_}\n"));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::{SimEvent, SimEventKind};
+    use super::*;
+
+    fn row(source: &str, t: f64, seq: u64, spec: usize) -> Json {
+        SimEvent { sim_time: t, seq, kind: SimEventKind::SpecChosen { job: seq as usize, spec } }
+            .to_json(source)
+    }
+
+    #[test]
+    fn identical_docs_report_identical() {
+        let mut a = Json::obj();
+        a.set("schema", Json::Str("dagcloud.fleet/v1".into()))
+            .set("cells", Json::Arr(vec![Json::Num(1.0)]));
+        let r = diff_docs(&a, &a.clone(), DEFAULT_CONTEXT);
+        assert!(r.identical);
+        assert!(render("a", "b", &r).contains("identical"));
+    }
+
+    #[test]
+    fn structural_diff_names_the_path() {
+        let mut a = Json::obj();
+        a.set("x", Json::Num(1.0)).set("y", Json::Str("keep".into()));
+        let mut b = Json::obj();
+        b.set("x", Json::Num(2.0)).set("y", Json::Str("keep".into()));
+        let r = diff_docs(&a, &b, DEFAULT_CONTEXT);
+        assert!(!r.identical);
+        assert_eq!(r.struct_count, 1);
+        assert_eq!(r.paths, vec!["$.x: 1 != 2".to_string()]);
+    }
+
+    #[test]
+    fn bisector_names_the_first_diverging_triple() {
+        let a: Vec<Json> = (0..100).map(|i| row("w#0", i as f64, i, 3)).collect();
+        let mut b = a.clone();
+        b[57] = row("w#0", 57.0, 57, 4); // seeded divergence
+        let d = bisect_events(&a, &b, 2).unwrap();
+        assert_eq!(d.index, 57);
+        let left = d.left.unwrap();
+        assert_eq!((left.sim_time, left.source.as_str(), left.seq), (57.0, "w#0", 57));
+        // ±2 context: indices 55..=59.
+        assert_eq!(d.context.first().unwrap().0, 55);
+        assert_eq!(d.context.last().unwrap().0, 59);
+    }
+
+    #[test]
+    fn bisector_handles_truncated_logs() {
+        let a: Vec<Json> = (0..10).map(|i| row("w#0", i as f64, i, 3)).collect();
+        let b = a[..7].to_vec();
+        let d = bisect_events(&a, &b, 1).unwrap();
+        assert_eq!(d.index, 7);
+        assert!(d.right.is_none());
+        assert_eq!(d.left.unwrap().seq, 7);
+    }
+
+    #[test]
+    fn equal_logs_have_no_divergence() {
+        let a: Vec<Json> = (0..10).map(|i| row("w#0", i as f64, i, 3)).collect();
+        assert!(bisect_events(&a, &a.clone(), 3).is_none());
+    }
+}

@@ -33,9 +33,15 @@ pub enum SimEventKind {
     SweepBatch { retired: usize, specs: usize },
     /// The online feed frontier advanced to cover more slots.
     FrontierAdvanced { slots: usize },
-    /// Learned-parameter snapshot: max policy weight and current best
-    /// policy after `jobs` retirements.
-    ParamSnapshot { jobs: usize, max_weight: f64, best_policy: String },
+    /// A bounded-retention residency guard passed: a read at `slot` found
+    /// the earliest still-resident trace slot at `first_resident`
+    /// (0 = nothing evicted yet). The margin `slot - first_resident` is
+    /// the read's distance from an eviction near-miss.
+    ResidencyProbe { slot: usize, first_resident: usize },
+    /// Learned-parameter snapshot: max policy weight, current best
+    /// policy, and realized average regret vs. the Prop. B.1 bound after
+    /// `jobs` retirements.
+    ParamSnapshot { jobs: usize, max_weight: f64, best_policy: String, regret: f64, bound: f64 },
     /// The fleet accumulator absorbed a shard report with `rows` cells.
     ReportAbsorbed { rows: usize },
     /// The robustness gate demoted a policy for failing `regime`.
@@ -52,6 +58,7 @@ impl SimEventKind {
             SimEventKind::CapacityExhausted { .. } => "capacity_exhausted",
             SimEventKind::SweepBatch { .. } => "sweep_batch",
             SimEventKind::FrontierAdvanced { .. } => "frontier_advanced",
+            SimEventKind::ResidencyProbe { .. } => "residency_probe",
             SimEventKind::ParamSnapshot { .. } => "param_snapshot",
             SimEventKind::ReportAbsorbed { .. } => "report_absorbed",
             SimEventKind::GateDemotion { .. } => "gate_demotion",
@@ -88,10 +95,16 @@ impl SimEventKind {
             SimEventKind::FrontierAdvanced { slots } => {
                 j.set("slots", Json::Num(*slots as f64));
             }
-            SimEventKind::ParamSnapshot { jobs, max_weight, best_policy } => {
+            SimEventKind::ResidencyProbe { slot, first_resident } => {
+                j.set("slot", Json::Num(*slot as f64))
+                    .set("first_resident", Json::Num(*first_resident as f64));
+            }
+            SimEventKind::ParamSnapshot { jobs, max_weight, best_policy, regret, bound } => {
                 j.set("jobs", Json::Num(*jobs as f64))
                     .set("max_weight", Json::Num(*max_weight))
-                    .set("best_policy", Json::Str(best_policy.clone()));
+                    .set("best_policy", Json::Str(best_policy.clone()))
+                    .set("regret", Json::Num(*regret))
+                    .set("bound", Json::Num(*bound));
             }
             SimEventKind::ReportAbsorbed { rows } => {
                 j.set("rows", Json::Num(*rows as f64));

@@ -14,6 +14,19 @@ use crate::util::json::Json;
 use super::event::{canonical_rows, SourceLog};
 use super::span::SpanStats;
 
+/// Per-source overflow past [`super::event::EVENT_CAP`], non-zero entries
+/// only. Keys are source names, so the object is canonical (BTreeMap) and
+/// byte-stable across flush order.
+fn dropped_by_source(logs: &[SourceLog]) -> Json {
+    let mut by_src = Json::obj();
+    for l in logs {
+        if l.dropped > 0 {
+            by_src.set(&l.source, Json::Num(l.dropped as f64));
+        }
+    }
+    by_src
+}
+
 /// Assemble the `dagcloud.telemetry/v1` document.
 pub fn telemetry_doc(logs: &[SourceLog], spans: &SpanStats) -> Json {
     let rows = canonical_rows(logs);
@@ -23,6 +36,7 @@ pub fn telemetry_doc(logs: &[SourceLog], spans: &SpanStats) -> Json {
     let mut det = Json::obj();
     det.set("count", Json::Num(events.len() as f64))
         .set("dropped", Json::Num(dropped as f64))
+        .set("dropped_by_source", dropped_by_source(logs))
         .set("sources", Json::Num(logs.len() as f64))
         .set("events", Json::Arr(events));
 
@@ -48,6 +62,7 @@ pub fn deterministic_doc(logs: &[SourceLog]) -> Json {
     let mut det = Json::obj();
     det.set("count", Json::Num(events.len() as f64))
         .set("dropped", Json::Num(dropped as f64))
+        .set("dropped_by_source", dropped_by_source(logs))
         .set("sources", Json::Num(logs.len() as f64))
         .set("events", Json::Arr(events));
     det
@@ -126,6 +141,16 @@ mod tests {
         assert_eq!(det.get("count").unwrap().as_f64(), Some(2.0));
         assert_eq!(det.get("dropped").unwrap().as_f64(), Some(1.0));
         assert!(doc.get("wall_clock").unwrap().get("spans").is_some());
+    }
+
+    #[test]
+    fn dropped_counts_are_exported_per_source() {
+        // Only sources that actually overflowed appear; the exact count
+        // survives even though the overflowing events themselves do not.
+        let doc = deterministic_doc(&sample_logs());
+        let by_src = doc.get("dropped_by_source").unwrap();
+        assert_eq!(by_src.get("b#0").unwrap().as_f64(), Some(1.0));
+        assert!(by_src.get("a#0").is_none());
     }
 
     #[test]

@@ -1,0 +1,436 @@
+//! Run-health plane: `dagcloud.health/v1`.
+//!
+//! Health is **derived, not recorded**: every series here is a pure fold
+//! of the deterministic event log (the serialized rows of
+//! `dagcloud.telemetry/v1 → deterministic.events`), so the in-process
+//! path (`Telemetry::health_json`) and the offline path
+//! (`repro health telemetry.json`) produce byte-identical documents, and
+//! the coordinator loops carry zero health-specific state.
+//!
+//! Only per-cell sources (names containing `#`) are folded. Harness
+//! sources (`fleet/merge`, `robustness/gate`, names containing `/`) are
+//! functions of the CLI invocation — their row counts change with the
+//! shard plan — so excluding them is what makes `dagcloud.health/v1`
+//! byte-identical across `--threads` and `--shards` (property-tested in
+//! `tests/integration_health.rs`).
+//!
+//! Per source, the fold buckets events into [`HEALTH_WINDOWS`] equal
+//! sim-time windows spanning that source's own `[first, last]` event
+//! times and derives:
+//!
+//! - **decisions** — `window_opened` + `spec_chosen` counts (loop
+//!   activity);
+//! - **feed lag** — decision sim-time minus the frontier position
+//!   (`frontier_advanced.slots / SLOTS_PER_UNIT`); negative lag means the
+//!   feed frontier runs ahead of the coordinator clock (healthy);
+//! - **retention pressure** — minimum `slot - first_resident` over
+//!   `residency_probe` events whose trace had already begun evicting
+//!   (`first_resident > 0`): the closest any read came to the
+//!   `--retention` eviction floor;
+//! - **capacity headroom** — per-offer `offer_routed` vs
+//!   `capacity_exhausted` counts, `headroom = 1 - exhausted/routed`;
+//! - **regret trajectory** — realized average regret vs the Prop. B.1
+//!   bound from `param_snapshot` (`ratio → 0` as learning converges).
+//!
+//! Anomaly annotations use fixed deterministic thresholds — no
+//! wall-clock, no adaptive state — so the same log always yields the
+//! same annotations: a **spike** is a window with ≥ [`SPIKE_MIN_DECISIONS`]
+//! decisions exceeding [`SPIKE_FACTOR`]× the source mean, a **gap** is an
+//! empty window inside a log with ≥ [`GAP_MIN_EVENTS`] events, and an
+//! **eviction near-miss** is a residency margin ≤ [`NEAR_MISS_SLOTS`].
+
+use std::collections::BTreeMap;
+
+use crate::market::SLOTS_PER_UNIT;
+use crate::util::json::Json;
+
+/// Fixed per-source window count. Each source's span is divided into this
+/// many equal sim-time buckets regardless of run length, so health docs
+/// stay small and window geometry is a pure function of one source's log.
+pub const HEALTH_WINDOWS: usize = 16;
+
+/// A window is a decision spike when its count exceeds this multiple of
+/// the source's mean per-window decisions …
+pub const SPIKE_FACTOR: f64 = 4.0;
+
+/// … and is at least this large in absolute terms (suppresses spikes in
+/// near-empty logs where the mean is a fraction of one event).
+pub const SPIKE_MIN_DECISIONS: u64 = 8;
+
+/// Empty windows are only anomalous in logs with at least this many
+/// events (2× windows: sparse smoke runs legitimately skip buckets).
+pub const GAP_MIN_EVENTS: u64 = 2 * HEALTH_WINDOWS as u64;
+
+/// A residency margin at or below this many slots is an eviction
+/// near-miss: one retention-budget notch away from a hard error in
+/// `ensure_resident`.
+pub const NEAR_MISS_SLOTS: i64 = 64;
+
+/// One source's folded health series plus its derived JSON section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthSection {
+    pub source: String,
+    /// Events folded into this section.
+    pub events: u64,
+    /// Anomaly annotations derived for this section.
+    pub anomalies: u64,
+    /// The serialized per-source section (goes into `cells`).
+    pub json: Json,
+}
+
+/// Per-window accumulator (internal to the fold).
+#[derive(Debug, Clone, Default)]
+struct Win {
+    events: u64,
+    decisions: u64,
+    frontier_slots: Option<u64>,
+    feed_lag_last: Option<f64>,
+    feed_lag_min: Option<f64>,
+    residency_margin_min: Option<i64>,
+    /// offer id → (routed, exhausted) counts.
+    offers: BTreeMap<u64, (u64, u64)>,
+    regret_last: Option<f64>,
+    bound_last: Option<f64>,
+    max_weight_last: Option<f64>,
+    jobs_last: Option<u64>,
+}
+
+impl Win {
+    fn absorb(&mut self, row: &Json, t: f64) {
+        self.events += 1;
+        match row.opt_str("kind", "") {
+            "window_opened" | "spec_chosen" => self.decisions += 1,
+            "frontier_advanced" => {
+                let slots = row.opt_u64("slots", 0);
+                let lag = t - slots as f64 / SLOTS_PER_UNIT as f64;
+                self.frontier_slots = Some(slots);
+                self.feed_lag_last = Some(lag);
+                self.feed_lag_min =
+                    Some(self.feed_lag_min.map_or(lag, |m| m.min(lag)));
+            }
+            "residency_probe" => {
+                let first = row.opt_u64("first_resident", 0);
+                if first > 0 {
+                    let margin = row.opt_u64("slot", 0) as i64 - first as i64;
+                    self.residency_margin_min = Some(
+                        self.residency_margin_min.map_or(margin, |m| m.min(margin)),
+                    );
+                }
+            }
+            "offer_routed" => {
+                self.offers.entry(row.opt_u64("offer", 0)).or_default().0 += 1;
+            }
+            "capacity_exhausted" => {
+                self.offers.entry(row.opt_u64("offer", 0)).or_default().1 += 1;
+            }
+            "param_snapshot" => {
+                self.regret_last = Some(row.opt_f64("regret", 0.0));
+                self.bound_last = Some(row.opt_f64("bound", 0.0));
+                self.max_weight_last = Some(row.opt_f64("max_weight", 0.0));
+                self.jobs_last = Some(row.opt_u64("jobs", 0));
+            }
+            _ => {}
+        }
+    }
+
+    fn to_json(&self, window: usize, t0: f64, t1: f64) -> Json {
+        let mut j = Json::obj();
+        j.set("window", Json::Num(window as f64))
+            .set("t0", Json::Num(t0))
+            .set("t1", Json::Num(t1))
+            .set("events", Json::Num(self.events as f64))
+            .set("decisions", Json::Num(self.decisions as f64));
+        if let Some(s) = self.frontier_slots {
+            j.set("frontier_slots", Json::Num(s as f64));
+        }
+        if let Some(l) = self.feed_lag_last {
+            j.set("feed_lag_last", Json::Num(l));
+        }
+        if let Some(l) = self.feed_lag_min {
+            j.set("feed_lag_min", Json::Num(l));
+        }
+        if let Some(m) = self.residency_margin_min {
+            j.set("residency_margin_min", Json::Num(m as f64));
+        }
+        if !self.offers.is_empty() {
+            let offers: Vec<Json> = self
+                .offers
+                .iter()
+                .map(|(offer, (routed, exhausted))| {
+                    let headroom =
+                        (1.0 - *exhausted as f64 / (*routed).max(1) as f64).max(0.0);
+                    let mut o = Json::obj();
+                    o.set("offer", Json::Num(*offer as f64))
+                        .set("routed", Json::Num(*routed as f64))
+                        .set("exhausted", Json::Num(*exhausted as f64))
+                        .set("headroom", Json::Num(headroom));
+                    o
+                })
+                .collect();
+            j.set("offers", Json::Arr(offers));
+        }
+        if let Some(r) = self.regret_last {
+            j.set("regret_last", Json::Num(r));
+        }
+        if let Some(b) = self.bound_last {
+            j.set("regret_bound_last", Json::Num(b));
+            if b > 0.0 {
+                if let Some(r) = self.regret_last {
+                    j.set("regret_ratio_last", Json::Num(r / b));
+                }
+            }
+        }
+        if let Some(w) = self.max_weight_last {
+            j.set("max_weight_last", Json::Num(w));
+        }
+        if let Some(n) = self.jobs_last {
+            j.set("jobs_last", Json::Num(n as f64));
+        }
+        j
+    }
+}
+
+/// Fold one source's canonically-ordered event rows into a section.
+fn fold_source(source: &str, rows: &[&Json]) -> HealthSection {
+    let times: Vec<f64> = rows.iter().map(|r| r.opt_f64("sim_time", 0.0)).collect();
+    let first = times.iter().copied().fold(f64::INFINITY, f64::min);
+    let last = times.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = (last - first).max(0.0);
+    let window_len = if span > 0.0 { span / HEALTH_WINDOWS as f64 } else { 1.0 };
+
+    let mut wins = vec![Win::default(); HEALTH_WINDOWS];
+    for (row, &t) in rows.iter().zip(times.iter()) {
+        let wi = if span > 0.0 {
+            ((((t - first) / span) * HEALTH_WINDOWS as f64) as usize)
+                .min(HEALTH_WINDOWS - 1)
+        } else {
+            0
+        };
+        wins[wi].absorb(row, t);
+    }
+
+    let total_events: u64 = wins.iter().map(|w| w.events).sum();
+    let total_decisions: u64 = wins.iter().map(|w| w.decisions).sum();
+    let mean_decisions = total_decisions as f64 / HEALTH_WINDOWS as f64;
+
+    let mut anomalies: Vec<Json> = Vec::new();
+    for (wi, w) in wins.iter().enumerate() {
+        if w.decisions >= SPIKE_MIN_DECISIONS
+            && w.decisions as f64 > SPIKE_FACTOR * mean_decisions
+        {
+            let mut a = Json::obj();
+            a.set("kind", Json::Str("spike".to_string()))
+                .set("window", Json::Num(wi as f64))
+                .set("decisions", Json::Num(w.decisions as f64))
+                .set("mean_decisions", Json::Num(mean_decisions));
+            anomalies.push(a);
+        }
+        if w.events == 0 && total_events >= GAP_MIN_EVENTS {
+            let mut a = Json::obj();
+            a.set("kind", Json::Str("gap".to_string()))
+                .set("window", Json::Num(wi as f64));
+            anomalies.push(a);
+        }
+        if let Some(m) = w.residency_margin_min {
+            if m <= NEAR_MISS_SLOTS {
+                let mut a = Json::obj();
+                a.set("kind", Json::Str("eviction_near_miss".to_string()))
+                    .set("window", Json::Num(wi as f64))
+                    .set("margin_slots", Json::Num(m as f64));
+                anomalies.push(a);
+            }
+        }
+    }
+
+    let windows: Vec<Json> = wins
+        .iter()
+        .enumerate()
+        .map(|(wi, w)| {
+            let t0 = first + wi as f64 * window_len;
+            w.to_json(wi, t0, t0 + window_len)
+        })
+        .collect();
+
+    let n_anomalies = anomalies.len() as u64;
+    let mut j = Json::obj();
+    j.set("source", Json::Str(source.to_string()))
+        .set("events", Json::Num(total_events as f64))
+        .set("first_time", Json::Num(first))
+        .set("last_time", Json::Num(last))
+        .set("window_len", Json::Num(window_len))
+        .set("windows", Json::Arr(windows))
+        .set("anomalies", Json::Arr(anomalies));
+    HealthSection {
+        source: source.to_string(),
+        events: total_events,
+        anomalies: n_anomalies,
+        json: j,
+    }
+}
+
+/// Fold serialized event rows (the `deterministic.events` array) into
+/// per-source health sections. Rows must be in canonical
+/// `(sim_time, source, seq)` order — which both `deterministic_doc` and a
+/// parsed `telemetry.json` guarantee — so grouping preserves it. Harness
+/// sources (containing `/`, no `#`) are skipped; rows without a source
+/// are ignored.
+pub fn fold_events(events: &[Json]) -> Vec<HealthSection> {
+    let mut by_source: BTreeMap<&str, Vec<&Json>> = BTreeMap::new();
+    for row in events {
+        if let Some(src) = row.get("source").and_then(|s| s.as_str()) {
+            if src.contains('#') {
+                by_source.entry(src).or_default().push(row);
+            }
+        }
+    }
+    by_source
+        .iter()
+        .map(|(src, rows)| fold_source(src, rows))
+        .collect()
+}
+
+/// Assemble the `dagcloud.health/v1` document from folded sections.
+/// Sections are sorted by source, so the document is a pure function of
+/// the section *set* — independent of fold, merge, or shard order.
+pub fn health_doc(sections: &[HealthSection]) -> Json {
+    let mut sorted: Vec<&HealthSection> = sections.iter().collect();
+    sorted.sort_by(|a, b| a.source.cmp(&b.source));
+    let events: u64 = sorted.iter().map(|s| s.events).sum();
+    let anomalies: u64 = sorted.iter().map(|s| s.anomalies).sum();
+    let cells: Vec<Json> = sorted.iter().map(|s| s.json.clone()).collect();
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Str("dagcloud.health/v1".to_string()))
+        .set("sources", Json::Num(sorted.len() as f64))
+        .set("events", Json::Num(events as f64))
+        .set("anomalies", Json::Num(anomalies as f64))
+        .set("windows_per_source", Json::Num(HEALTH_WINDOWS as f64))
+        .set("cells", Json::Arr(cells));
+    doc
+}
+
+/// The event rows of any supported document: a full
+/// `dagcloud.telemetry/v1` doc (`deterministic.events`) or a bare
+/// deterministic section (`events`).
+pub fn events_of_doc(doc: &Json) -> Option<&[Json]> {
+    doc.get("deterministic")
+        .and_then(|d| d.get("events"))
+        .or_else(|| doc.get("events"))
+        .and_then(|e| e.as_arr())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::{SimEvent, SimEventKind};
+    use super::*;
+
+    fn row(source: &str, t: f64, seq: u64, kind: SimEventKind) -> Json {
+        SimEvent { sim_time: t, seq, kind }.to_json(source)
+    }
+
+    #[test]
+    fn fold_buckets_events_and_skips_harness_sources() {
+        let mut rows = Vec::new();
+        for i in 0..16 {
+            rows.push(row(
+                "w#0",
+                i as f64,
+                i,
+                SimEventKind::SpecChosen { job: i as usize, spec: 1 },
+            ));
+        }
+        rows.push(row("fleet/merge", 0.0, 0, SimEventKind::ReportAbsorbed { rows: 2 }));
+        let sections = fold_events(&rows);
+        assert_eq!(sections.len(), 1);
+        let s = &sections[0];
+        assert_eq!(s.source, "w#0");
+        assert_eq!(s.events, 16);
+        let wins = s.json.get("windows").unwrap().as_arr().unwrap();
+        assert_eq!(wins.len(), HEALTH_WINDOWS);
+        // 16 evenly spaced events over 16 windows: one decision each.
+        for w in wins {
+            assert_eq!(w.get("decisions").unwrap().as_f64(), Some(1.0));
+        }
+    }
+
+    #[test]
+    fn feed_lag_is_time_minus_frontier() {
+        let rows = vec![
+            row("w#0", 0.0, 0, SimEventKind::FrontierAdvanced { slots: 24 }),
+            row("w#0", 4.0, 1, SimEventKind::FrontierAdvanced { slots: 24 }),
+        ];
+        let sections = fold_events(&rows);
+        let wins = sections[0].json.get("windows").unwrap().as_arr().unwrap();
+        // slots=24 at SLOTS_PER_UNIT=12 covers sim-time 2.0: lag at t=0 is
+        // -2 (frontier ahead), at t=4 is +2 (coordinator starved).
+        assert_eq!(wins[0].get("feed_lag_last").unwrap().as_f64(), Some(-2.0));
+        assert_eq!(
+            wins[HEALTH_WINDOWS - 1].get("feed_lag_last").unwrap().as_f64(),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn near_miss_fires_only_after_eviction_began() {
+        // first_resident = 0: nothing evicted, margin undefined, no alarm
+        // even though slot - 0 would be tiny.
+        let quiet = fold_events(&[row(
+            "w#0",
+            1.0,
+            0,
+            SimEventKind::ResidencyProbe { slot: 3, first_resident: 0 },
+        )]);
+        assert_eq!(quiet[0].anomalies, 0);
+        // first_resident > 0 with a margin inside NEAR_MISS_SLOTS: alarm.
+        let close = fold_events(&[row(
+            "w#0",
+            1.0,
+            0,
+            SimEventKind::ResidencyProbe { slot: 100, first_resident: 90 },
+        )]);
+        assert_eq!(close[0].anomalies, 1);
+        let a = &close[0].json.get("anomalies").unwrap().as_arr().unwrap()[0];
+        assert_eq!(a.get("kind").unwrap().as_str(), Some("eviction_near_miss"));
+        assert_eq!(a.get("margin_slots").unwrap().as_f64(), Some(10.0));
+    }
+
+    #[test]
+    fn offer_headroom_counts_routed_vs_exhausted() {
+        let rows = vec![
+            row("w#0", 1.0, 0, SimEventKind::OfferRouted { job: 0, task: 0, offer: 2, spilled: false }),
+            row("w#0", 1.0, 1, SimEventKind::OfferRouted { job: 0, task: 1, offer: 2, spilled: false }),
+            row("w#0", 1.0, 2, SimEventKind::OfferRouted { job: 0, task: 2, offer: 2, spilled: false }),
+            row("w#0", 1.0, 3, SimEventKind::CapacityExhausted { job: 0, task: 2, offer: 2 }),
+        ];
+        let sections = fold_events(&rows);
+        let wins = sections[0].json.get("windows").unwrap().as_arr().unwrap();
+        let offers = wins[0].get("offers").unwrap().as_arr().unwrap();
+        assert_eq!(offers.len(), 1);
+        assert_eq!(offers[0].get("routed").unwrap().as_f64(), Some(3.0));
+        assert_eq!(offers[0].get("exhausted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(offers[0].get("headroom").unwrap().as_f64(), Some(1.0 - 1.0 / 3.0));
+    }
+
+    #[test]
+    fn health_doc_bytes_are_independent_of_section_order() {
+        let rows = vec![
+            row("b#0", 1.0, 0, SimEventKind::FrontierAdvanced { slots: 12 }),
+            row("a#0", 2.0, 0, SimEventKind::SpecChosen { job: 0, spec: 3 }),
+        ];
+        let mut sections = fold_events(&rows);
+        let forward = health_doc(&sections).pretty();
+        sections.reverse();
+        assert_eq!(health_doc(&sections).pretty(), forward);
+    }
+
+    #[test]
+    fn events_of_doc_handles_both_shapes() {
+        let rows = vec![row("w#0", 1.0, 0, SimEventKind::FrontierAdvanced { slots: 1 })];
+        let mut det = Json::obj();
+        det.set("events", Json::Arr(rows.clone()));
+        assert_eq!(events_of_doc(&det).unwrap().len(), 1);
+        let mut full = Json::obj();
+        full.set("deterministic", det);
+        assert_eq!(events_of_doc(&full).unwrap().len(), 1);
+        assert!(events_of_doc(&Json::obj()).is_none());
+    }
+}

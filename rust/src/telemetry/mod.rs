@@ -30,17 +30,21 @@
 //! flush, and `exec_pool` is untouched, so the worker-pool determinism
 //! argument is exactly what it was before this module existed.
 
+pub mod diff;
 pub mod event;
 pub mod export;
+pub mod health;
 pub mod hist;
 pub mod log;
 pub mod span;
 
 pub use event::{Recorder, SimEvent, SimEventKind, SourceLog};
+pub use health::HealthSection;
 pub use hist::Histogram;
 pub use log::{LogLevel, Logger};
 pub use span::SpanGuard;
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -67,6 +71,12 @@ struct Planes {
     epoch: Instant,
     sinks: Mutex<Vec<SourceLog>>,
     spans: Arc<Mutex<SpanStats>>,
+    /// One warning per run when a source overflows `EVENT_CAP` — the
+    /// per-source counts stay exact in `dropped_by_source`, but silent
+    /// truncation of the stored events would be a trap.
+    warned_event_drop: AtomicBool,
+    /// Same, for the wall-clock plane's `TRACE_CAP`.
+    warned_trace_drop: AtomicBool,
 }
 
 /// The telemetry handle threaded through `Config`/runner/fleet.
@@ -102,6 +112,8 @@ impl Telemetry {
                 epoch: Instant::now(),
                 sinks: Mutex::new(Vec::new()),
                 spans: Arc::new(Mutex::new(SpanStats::default())),
+                warned_event_drop: AtomicBool::new(false),
+                warned_trace_drop: AtomicBool::new(false),
             })
         });
         Telemetry { log: Logger::new(opts.level), planes }
@@ -137,14 +149,29 @@ impl Telemetry {
     }
 
     /// Flush a finished recorder into the shared sink. Empty recorders
-    /// from disabled runs are dropped silently.
+    /// from disabled runs are dropped silently; a recorder that overflowed
+    /// [`event::EVENT_CAP`] warns once per run (counts stay exact in the
+    /// exported `dropped_by_source`).
     pub fn absorb(&self, rec: Recorder) {
         if !rec.is_on() {
             return;
         }
         if let Some(p) = &self.planes {
+            let log = rec.into_log();
+            if log.dropped > 0 && !p.warned_event_drop.swap(true, Ordering::Relaxed) {
+                self.log.warn(
+                    "telemetry",
+                    &format!(
+                        "source '{}' overflowed the {}-event cap ({} dropped); \
+                         counts stay exact in dropped_by_source, stored events are truncated",
+                        log.source,
+                        event::EVENT_CAP,
+                        log.dropped
+                    ),
+                );
+            }
             if let Ok(mut sinks) = p.sinks.lock() {
-                sinks.push(rec.into_log());
+                sinks.push(log);
             }
         }
     }
@@ -165,9 +192,26 @@ impl Telemetry {
             Some(p) => {
                 let sinks = p.sinks.lock().map(|s| s.clone()).unwrap_or_default();
                 let spans = p.spans.lock().map(|s| s.clone()).unwrap_or_default();
+                self.warn_trace_drops(p, &spans);
                 export::telemetry_doc(&sinks, &spans)
             }
             None => export::telemetry_doc(&[], &SpanStats::default()),
+        }
+    }
+
+    /// Warn once per run when the wall-clock plane hit `TRACE_CAP`
+    /// (aggregate span stats stay exact; only trace events truncate).
+    fn warn_trace_drops(&self, p: &Planes, spans: &SpanStats) {
+        if spans.trace_dropped() > 0 && !p.warned_trace_drop.swap(true, Ordering::Relaxed) {
+            self.log.warn(
+                "telemetry",
+                &format!(
+                    "wall-clock trace overflowed the {}-occurrence cap ({} dropped); \
+                     span totals stay exact, the Chrome trace is truncated",
+                    span::TRACE_CAP,
+                    spans.trace_dropped()
+                ),
+            );
         }
     }
 
@@ -188,10 +232,24 @@ impl Telemetry {
         match &self.planes {
             Some(p) => {
                 let spans = p.spans.lock().map(|s| s.clone()).unwrap_or_default();
+                self.warn_trace_drops(p, &spans);
                 export::chrome_trace(&spans)
             }
             None => export::chrome_trace(&SpanStats::default()),
         }
+    }
+
+    /// The `dagcloud.health/v1` document: a pure fold of the current
+    /// deterministic event log (see [`health`]). Byte-identical across
+    /// `--threads` and shard counts because the fold only sees per-cell
+    /// (`#`) sources and the event log itself is canonical.
+    pub fn health_json(&self) -> Json {
+        let det = self.deterministic_json();
+        let sections = match health::events_of_doc(&det) {
+            Some(events) => health::fold_events(events),
+            None => Vec::new(),
+        };
+        health::health_doc(&sections)
     }
 }
 

@@ -1,0 +1,285 @@
+//! Health-plane and forensics headline properties, end to end:
+//!
+//! * `dagcloud.health/v1` bytes are identical across `--threads 1` vs `8`
+//!   and `--shards 1` vs `4`;
+//! * health sections merged from random source partitions in random
+//!   orders are byte-identical to the whole-log fold;
+//! * enabling `--health` changes **zero bytes** of the existing reports;
+//! * `repro diff` names the exact seeded divergent `(sim_time, source,
+//!   seq)` event and exits non-zero.
+
+use dagcloud::coordinator::Config;
+use dagcloud::experiments::dispatch;
+use dagcloud::experiments::fleet::{run_fleet, FleetCliOptions};
+use dagcloud::fleet::merge_health;
+use dagcloud::scenario::{self, BatchOptions, ScenarioSpec};
+use dagcloud::telemetry::health::fold_events;
+use dagcloud::telemetry::{LogLevel, Telemetry, TelemetryOptions};
+use dagcloud::util::json::Json;
+
+fn tele() -> Telemetry {
+    Telemetry::new(TelemetryOptions {
+        events: true,
+        spans: false,
+        level: LogLevel::Quiet,
+    })
+}
+
+fn smoke_specs(names: &[&str]) -> Vec<ScenarioSpec> {
+    names
+        .iter()
+        .map(|n| {
+            let mut s = scenario::find(n).expect(n);
+            s.workload.small_tasks = true;
+            s
+        })
+        .collect()
+}
+
+fn tmp_dir(name: &str) -> String {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+fn read(dir: &str, file: &str) -> String {
+    std::fs::read_to_string(format!("{dir}/{file}")).unwrap()
+}
+
+/// Deterministic splitmix-style generator: the partition/shuffle trials
+/// must not depend on ambient entropy.
+struct Rng(u64);
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[test]
+fn health_doc_bytes_identical_across_thread_counts() {
+    let specs = smoke_specs(&["paper-default", "bursty-arrivals"]);
+    let health_at = |threads: usize| {
+        let t = tele();
+        scenario::run_batch(
+            &specs,
+            &BatchOptions {
+                seeds: 2,
+                base_seed: 11,
+                threads,
+                jobs_override: Some(8),
+                telemetry: t.clone(),
+            },
+        )
+        .unwrap();
+        t.health_json().pretty()
+    };
+    let one = health_at(1);
+    let eight = health_at(8);
+    assert_eq!(one, eight, "health doc differs between --threads 1 and 8");
+    let doc = Json::parse(&one).unwrap();
+    assert_eq!(doc.opt_str("schema", ""), "dagcloud.health/v1");
+    assert_eq!(doc.opt_u64("sources", 0), 4, "2 worlds x 2 seeds = 4 cells");
+    // The fold actually derived series, not just counted events.
+    for key in ["decisions", "regret_last", "max_weight_last"] {
+        assert!(one.contains(key), "health doc missing '{key}'");
+    }
+}
+
+#[test]
+fn health_doc_bytes_identical_across_shard_counts() {
+    let cfg = |telemetry: Telemetry| Config {
+        seed: 17,
+        threads: 2,
+        use_pjrt: false,
+        telemetry,
+        ..Config::default()
+    };
+    let opts = |shards: usize| FleetCliOptions {
+        names: Some(vec![
+            "paper-default".into(),
+            "bursty-arrivals".into(),
+            "deadline-tight".into(),
+        ]),
+        spec_file: None,
+        seeds: 1,
+        shards,
+        smoke: true,
+        jobs_override: Some(8),
+        merge_only: None,
+        online: Vec::new(),
+    };
+    let t1 = tele();
+    let d1 = tmp_dir("dagcloud_health_fleet_k1");
+    run_fleet(&cfg(t1.clone()), &opts(1), &d1).unwrap();
+    let t4 = tele();
+    let d4 = tmp_dir("dagcloud_health_fleet_k4");
+    run_fleet(&cfg(t4.clone()), &opts(4), &d4).unwrap();
+    let h1 = t1.health_json().pretty();
+    assert_eq!(
+        h1,
+        t4.health_json().pretty(),
+        "health doc differs between --shards 1 and --shards 4"
+    );
+    // Harness sources were excluded (they differ per shard plan), the
+    // three cells were kept.
+    let doc = Json::parse(&h1).unwrap();
+    assert_eq!(doc.opt_u64("sources", 0), 3);
+    assert!(!h1.contains("fleet/merge"));
+}
+
+#[test]
+fn health_merge_is_partition_and_order_independent() {
+    let specs = smoke_specs(&["paper-default", "bursty-arrivals", "deadline-tight"]);
+    let t = tele();
+    scenario::run_batch(
+        &specs,
+        &BatchOptions {
+            seeds: 2,
+            base_seed: 7,
+            threads: 4,
+            jobs_override: Some(8),
+            telemetry: t.clone(),
+        },
+    )
+    .unwrap();
+    let det = t.deterministic_json();
+    let events = det.get("events").unwrap().as_arr().unwrap();
+    let baseline = merge_health(&fold_events(events)).unwrap().pretty();
+
+    let mut rng = Rng(0xDA6C_100D);
+    for trial in 0..6 {
+        // Deal whole sources to 1..=4 shards (a cell never splits across
+        // shards in a real fleet), fold each shard independently …
+        let k = 1 + (rng.next() as usize % 4);
+        let mut shard_of = std::collections::BTreeMap::new();
+        let mut shards: Vec<Vec<Json>> = vec![Vec::new(); k];
+        for e in events {
+            let src = e.get("source").unwrap().as_str().unwrap().to_string();
+            let s = *shard_of.entry(src).or_insert_with(|| rng.next() as usize % k);
+            shards[s].push(e.clone());
+        }
+        let mut sections = Vec::new();
+        for sh in &shards {
+            sections.extend(fold_events(sh));
+        }
+        // … then merge the sections in a random order.
+        for i in (1..sections.len()).rev() {
+            sections.swap(i, rng.next() as usize % (i + 1));
+        }
+        assert_eq!(
+            merge_health(&sections).unwrap().pretty(),
+            baseline,
+            "trial {trial}: merged health bytes depend on partition/order (k={k})"
+        );
+    }
+
+    // Duplicate sources (a cell folded twice) are a hard error.
+    let whole = fold_events(events);
+    let mut dup = whole.clone();
+    dup.extend(whole);
+    let err = merge_health(&dup).unwrap_err().to_string();
+    assert!(err.contains("duplicate source"), "{err}");
+}
+
+#[test]
+fn health_flag_changes_zero_report_bytes() {
+    let base = |out: &str, extra: &[&str]| {
+        let mut argv = vec![
+            "scenarios".to_string(),
+            "--smoke".to_string(),
+            "--scenario".to_string(),
+            "paper-default".to_string(),
+            "--seeds".to_string(),
+            "1".to_string(),
+            "--jobs".to_string(),
+            "8".to_string(),
+            "--quiet".to_string(),
+            "--out".to_string(),
+            out.to_string(),
+        ];
+        argv.extend(extra.iter().map(|s| s.to_string()));
+        dispatch(argv).unwrap();
+    };
+    let d_off = tmp_dir("dagcloud_health_flag_off");
+    base(&d_off, &[]);
+    let d_on = tmp_dir("dagcloud_health_flag_on");
+    base(&d_on, &["--health"]);
+    assert_eq!(
+        read(&d_off, "scenarios.json"),
+        read(&d_on, "scenarios.json"),
+        "--health perturbed scenarios.json bytes"
+    );
+    let health = Json::parse(&read(&d_on, "health.json")).unwrap();
+    assert_eq!(health.opt_str("schema", ""), "dagcloud.health/v1");
+    assert_eq!(health.opt_u64("sources", 0), 1);
+    assert!(!std::path::Path::new(&format!("{d_off}/health.json")).exists());
+}
+
+#[test]
+fn diff_subcommand_names_the_seeded_divergent_event() {
+    use dagcloud::telemetry::{SimEvent, SimEventKind};
+    let dir = tmp_dir("dagcloud_health_diff_cli");
+    let write_doc = |path: &str, spec_at_41: usize| {
+        let rows: Vec<Json> = (0..64u64)
+            .map(|i| {
+                SimEvent {
+                    sim_time: i as f64 * 0.5,
+                    seq: i,
+                    kind: SimEventKind::SpecChosen {
+                        job: i as usize,
+                        spec: if i == 41 { spec_at_41 } else { 1 },
+                    },
+                }
+                .to_json("w#0")
+            })
+            .collect();
+        let mut det = Json::obj();
+        det.set("events", Json::Arr(rows));
+        let mut doc = Json::obj();
+        doc.set("schema", Json::Str("dagcloud.telemetry/v1".into()))
+            .set("deterministic", det);
+        std::fs::write(path, doc.pretty()).unwrap();
+    };
+    let a = format!("{dir}/a.json");
+    let b = format!("{dir}/b.json");
+    write_doc(&a, 1);
+    write_doc(&b, 9);
+    let argv = |x: &str, y: &str| {
+        vec![
+            "diff".to_string(),
+            x.to_string(),
+            y.to_string(),
+            "--context".to_string(),
+            "2".to_string(),
+            "--quiet".to_string(),
+            "--out".to_string(),
+            dir.clone(),
+        ]
+    };
+    // Should-fail: the differing docs must exit non-zero AND the error
+    // must name the first diverging event's canonical key.
+    let err = dispatch(argv(&a, &b)).unwrap_err().to_string();
+    assert!(err.contains("index 41"), "{err}");
+    assert!(err.contains("sim_time=20.5"), "{err}");
+    assert!(err.contains("source=w#0"), "{err}");
+    assert!(err.contains("seq=41"), "{err}");
+    // Identical inputs succeed (exit zero).
+    dispatch(argv(&a, &a)).unwrap();
+
+    // `repro health` folds the same file into a health doc on disk.
+    dispatch(vec![
+        "health".to_string(),
+        a.clone(),
+        "--quiet".to_string(),
+        "--out".to_string(),
+        dir.clone(),
+    ])
+    .unwrap();
+    let health = Json::parse(&read(&dir, "health.json")).unwrap();
+    assert_eq!(health.opt_str("schema", ""), "dagcloud.health/v1");
+    assert_eq!(health.opt_u64("events", 0), 64);
+}

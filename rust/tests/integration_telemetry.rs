@@ -272,6 +272,7 @@ fn feed_run_bytes_are_unchanged_by_telemetry() {
         instance_type: None,
         snapshot_every: Some(8),
         jobs_override: Some(64),
+        retention: None,
     };
     let cfg = |telemetry: Telemetry| Config {
         jobs: 64,
