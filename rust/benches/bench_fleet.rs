@@ -40,6 +40,8 @@ fn synthetic_outcome(world: usize, rep: u64, labels: &[String], rng: &mut Pcg32)
         } else {
             vec!["calm".into(), "surge".into()]
         },
+        optimism_gap: Vec::new(),
+        migrations: 0,
     }
 }
 

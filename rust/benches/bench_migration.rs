@@ -1,0 +1,149 @@
+//! Migration-layer benches: the slot-granular migrating walk against the
+//! pinned-offer walk it generalizes (the overhead of checking the switch
+//! rule at every boundary), and the capacity replay that prices the
+//! sweep's optimism (marshal + purchase re-reservation across the full
+//! policy grid). See EXPERIMENTS.md §Migration.
+
+use dagcloud::learning::counterfactual::CfSpec;
+use dagcloud::learning::replay_specs;
+use dagcloud::market::{CapacityLedger, MarketOffer, MarketView, PriceTrace, SLOTS_PER_UNIT};
+use dagcloud::policy::routing::{MigrationPolicy, RoutingPolicy};
+use dagcloud::policy::policy_set_full;
+use dagcloud::sim::executor::{execute_task_routed_decide, execute_task_routed_migrating};
+use dagcloud::util::bench::Bencher;
+use dagcloud::util::rng::Pcg32;
+use dagcloud::workload::{ChainJob, ChainTask};
+
+/// Two-offer opposite-phase seesaw: the adversarial shape for the switch
+/// rule (a candidate flip at every epoch boundary).
+fn seesaw_view(horizon: f64, period_slots: usize, lo: f64, hi: f64) -> MarketView {
+    let dt = 1.0 / SLOTS_PER_UNIT as f64;
+    let n = (horizon / dt) as usize + 2;
+    let phase = |s: usize| (s / period_slots) % 2 == 0;
+    let offer = |name: &str, prices: Vec<f64>| MarketOffer {
+        region: name.into(),
+        instance_type: "default".into(),
+        od_price: 1.0,
+        trace: PriceTrace::from_prices(prices, dt),
+        capacity: None,
+    };
+    let east: Vec<f64> = (0..n).map(|s| if phase(s) { lo } else { hi }).collect();
+    let west: Vec<f64> = (0..n).map(|s| if phase(s) { hi } else { lo }).collect();
+    MarketView::new(vec![offer("east", east), offer("west", west)]).unwrap()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== bench_migration ==\n");
+
+    // 200 tasks of mixed geometry walked over a 40-unit seesaw, migration
+    // on vs the pinned decide path — the per-boundary switch check is the
+    // only difference between the two numbers.
+    let horizon = 40.0;
+    let view = seesaw_view(horizon, 4, 0.1, 0.6);
+    let mut rng = Pcg32::new(0x316);
+    let tasks: Vec<(f64, f64, f64, f64)> = (0..200)
+        .map(|_| {
+            let delta = rng.uniform(1.0, 12.0);
+            let e = rng.uniform(0.5, 2.5);
+            let start = rng.uniform(0.0, horizon - 8.0);
+            (e * delta, delta, start, start + e * rng.uniform(1.1, 2.0))
+        })
+        .collect();
+    let policy = MigrationPolicy { switch_cost: 0.01, hysteresis_slots: 2 };
+    b.bench_throughput("migration/migrating_walk_200_tasks_seesaw", 200.0, "tasks/s", || {
+        let mut cap = CapacityLedger::new(&view, horizon + 8.0);
+        let mut cost = 0.0;
+        for &(z, delta, start, deadline) in &tasks {
+            let (_, out, _) = execute_task_routed_migrating(
+                z,
+                delta,
+                start,
+                deadline,
+                0,
+                0.9,
+                &view,
+                &mut cap,
+                RoutingPolicy::CheapestFeasible,
+                policy,
+            );
+            cost += out.spot_cost + out.od_cost;
+        }
+        cost
+    });
+    b.bench_throughput("migration/pinned_walk_200_tasks_seesaw", 200.0, "tasks/s", || {
+        let mut cap = CapacityLedger::new(&view, horizon + 8.0);
+        let mut cost = 0.0;
+        for &(z, delta, start, deadline) in &tasks {
+            let (_, out) = execute_task_routed_decide(
+                z,
+                delta,
+                start,
+                deadline,
+                0,
+                0.9,
+                &view,
+                &mut cap,
+                RoutingPolicy::CheapestFeasible,
+            );
+            cost += out.spot_cost + out.od_cost;
+        }
+        cost
+    });
+
+    // Capacity replay over the full 175-policy grid: marshal 32 jobs once,
+    // then re-reserve every policy's purchase stream through its own
+    // ledger on a crunched 2-offer view.
+    let mut rng = Pcg32::new(0x316A);
+    let mut jobs: Vec<ChainJob> = (0..32)
+        .map(|i| {
+            let a = rng.uniform(0.0, 6.0);
+            let tasks = vec![ChainTask::new(rng.uniform(0.5, 4.0), rng.uniform(1.0, 8.0))];
+            let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
+            ChainJob::new(i as u64, a, a + makespan * rng.uniform(1.1, 2.5), tasks)
+        })
+        .collect();
+    jobs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let rh = jobs.iter().map(|j| j.deadline).fold(1.0, f64::max) + 1.0;
+    let n = (rh * SLOTS_PER_UNIT as f64) as usize + 2;
+    let dt = 1.0 / SLOTS_PER_UNIT as f64;
+    let mk_prices = |rng: &mut Pcg32| -> Vec<f64> {
+        (0..n)
+            .map(|_| {
+                if rng.chance(0.5) {
+                    rng.uniform(0.1, 0.3)
+                } else {
+                    rng.uniform(0.5, 1.2)
+                }
+            })
+            .collect()
+    };
+    let replay_view = MarketView::new(vec![
+        MarketOffer {
+            region: "primary".into(),
+            instance_type: "default".into(),
+            od_price: 1.0,
+            trace: PriceTrace::from_prices(mk_prices(&mut rng), dt),
+            capacity: Some(4),
+        },
+        MarketOffer {
+            region: "overflow".into(),
+            instance_type: "default".into(),
+            od_price: 1.2,
+            trace: PriceTrace::from_prices(mk_prices(&mut rng), dt),
+            capacity: Some(8),
+        },
+    ])
+    .unwrap();
+    let specs: Vec<CfSpec> = policy_set_full().into_iter().map(CfSpec::Proposed).collect();
+    b.bench_throughput(
+        "migration/capacity_replay_32jobs_175pol",
+        (jobs.len() * specs.len()) as f64,
+        "job*pol/s",
+        || replay_specs(&jobs, &specs, &replay_view, RoutingPolicy::CheapestFeasible, false),
+    );
+
+    std::fs::create_dir_all("results").ok();
+    b.write_json("results/bench_migration.json").ok();
+    println!("\nresults written to results/bench_migration.json");
+}

@@ -38,6 +38,8 @@ fn synthetic_outcome(world: usize, labels: &[String], rng: &mut Pcg32) -> Scenar
             1 => vec!["calm".into(), "surge".into()],
             _ => vec!["fault".into()],
         },
+        optimism_gap: Vec::new(),
+        migrations: 0,
     }
 }
 

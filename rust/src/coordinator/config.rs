@@ -10,7 +10,7 @@
 use anyhow::{ensure, Result};
 
 use crate::market::{MarketOffer, MarketView, PriceTrace, SpotModel};
-use crate::policy::routing::RoutingPolicy;
+use crate::policy::routing::{MigrationPolicy, RoutingPolicy};
 use crate::util::json::Json;
 use crate::workload::GeneratorConfig;
 
@@ -47,6 +47,9 @@ pub struct Config {
     pub extra_offers: Vec<OfferConfig>,
     /// How tasks are routed across offers (ignored for the single market).
     pub routing: RoutingPolicy,
+    /// Mid-window migration policy (disabled by default; only meaningful
+    /// for routed multi-offer markets).
+    pub migration: MigrationPolicy,
     /// Worker threads for policy sweeps (0 = all cores).
     pub threads: usize,
     /// Use the PJRT kernel for counterfactual sweeps when artifacts exist.
@@ -70,6 +73,7 @@ impl Default for Config {
             home_capacity: None,
             extra_offers: Vec::new(),
             routing: RoutingPolicy::Home,
+            migration: MigrationPolicy::disabled(),
             threads: 0,
             use_pjrt: true,
             telemetry: crate::telemetry::Telemetry::disabled(),
@@ -163,6 +167,13 @@ impl Config {
             "config: 'offers' requires routing cheapest|spillover (home routing \
              ignores every offer but the first)"
         );
+        let migration = migration_from_json(j, "config")?;
+        // Same dead-weight logic: a Home-pinned task can never migrate.
+        ensure!(
+            !migration.enabled() || routing != RoutingPolicy::Home,
+            "config: 'migration' requires routing cheapest|spillover (home \
+             routing pins every task to offer 0)"
+        );
         let home_capacity =
             crate::market::view::capacity_from_json(j, "home_capacity", "config")?;
         Ok(Config {
@@ -179,6 +190,7 @@ impl Config {
             home_capacity,
             extra_offers,
             routing,
+            migration,
             threads: j.opt_u64("threads", d.threads as u64) as usize,
             use_pjrt: j.opt_bool("use_pjrt", d.use_pjrt),
             telemetry: d.telemetry,
@@ -245,6 +257,7 @@ impl Config {
             home_capacity: home.and_then(|o| o.capacity),
             extra_offers,
             routing: spec.market.routing.runtime().unwrap_or(RoutingPolicy::Home),
+            migration: spec.migration,
             ..d
         })
     }
@@ -275,8 +288,46 @@ impl Config {
                 Json::Arr(self.extra_offers.iter().map(offer_to_json).collect()),
             );
         }
+        if self.migration.enabled() {
+            j.set("migration", migration_to_json(&self.migration));
+        }
         j
     }
+}
+
+/// Serialize an *enabled* migration policy. JSON has no `+inf`, so the
+/// disabled default is encoded as key absence — which is also what keeps
+/// pre-migration config files round-tripping byte-identically.
+pub(crate) fn migration_to_json(m: &MigrationPolicy) -> Json {
+    let mut j = Json::obj();
+    j.set("switch_cost", Json::Num(m.switch_cost))
+        .set("hysteresis_slots", Json::Num(m.hysteresis_slots as f64));
+    j
+}
+
+/// Parse an optional `"migration"` object; absence means disabled. A
+/// present object must carry a finite, non-negative `switch_cost` —
+/// presence means enabled, so an infinite or missing cost is an error,
+/// not a silent disable.
+pub(crate) fn migration_from_json(j: &Json, ctx: &str) -> Result<MigrationPolicy> {
+    let Some(mj) = j.get("migration") else {
+        return Ok(MigrationPolicy::disabled());
+    };
+    let switch_cost = mj
+        .get("switch_cost")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("{ctx}: migration: missing numeric 'switch_cost'"))?;
+    ensure!(
+        switch_cost.is_finite(),
+        "{ctx}: migration: switch_cost must be finite (omit the 'migration' key \
+         to disable migration)"
+    );
+    let m = MigrationPolicy {
+        switch_cost,
+        hysteresis_slots: mj.opt_u64("hysteresis_slots", 0) as u32,
+    };
+    m.validate().map_err(|e| anyhow::anyhow!("{ctx}: migration: {e}"))?;
+    Ok(m)
 }
 
 fn offer_to_json(o: &OfferConfig) -> Json {
@@ -351,6 +402,7 @@ mod tests {
             home_capacity: None,
             extra_offers: Vec::new(),
             routing: RoutingPolicy::Home,
+            migration: MigrationPolicy::disabled(),
             threads: 2,
             use_pjrt: false,
             telemetry: crate::telemetry::Telemetry::disabled(),
@@ -358,6 +410,7 @@ mod tests {
         let j = c.to_json();
         assert!(j.get("offers").is_none(), "degenerate config stays legacy-shaped");
         assert!(j.get("routing").is_none());
+        assert!(j.get("migration").is_none(), "disabled migration stays off disk");
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c2.jobs, 123);
         assert_eq!(c2.job_type, 3);
@@ -384,6 +437,41 @@ mod tests {
         assert_eq!(c2.extra_offers, c.extra_offers);
         assert_eq!(c2.routing, RoutingPolicy::CheapestFeasible);
         assert!(c2.is_multi_market());
+    }
+
+    #[test]
+    fn migration_json_roundtrip_and_guards() {
+        let c = Config {
+            extra_offers: vec![OfferConfig {
+                region: "eu-west".into(),
+                instance_type: "m5".into(),
+                od_price: 1.2,
+                spot_model: SpotModel::paper_default(),
+                capacity: Some(64),
+            }],
+            routing: RoutingPolicy::CheapestFeasible,
+            migration: MigrationPolicy { switch_cost: 0.05, hysteresis_slots: 3 },
+            ..Config::default()
+        };
+        let j = c.to_json();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.migration, c.migration);
+        // Home routing can never migrate: dead-weight guard.
+        let j = Json::parse(r#"{"migration": {"switch_cost": 0.1}}"#).unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("migration"), "{err}");
+        // A present migration object must be well-formed.
+        for bad in [
+            r#"{"routing": "cheapest", "migration": {}}"#,
+            r#"{"routing": "cheapest", "migration": {"switch_cost": -0.1}}"#,
+        ] {
+            assert!(Config::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+        let j = Json::parse(r#"{"routing": "cheapest", "migration": {"switch_cost": 0.0}}"#)
+            .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert!(c.migration.enabled());
+        assert_eq!(c.migration.hysteresis_slots, 0);
     }
 
     #[test]

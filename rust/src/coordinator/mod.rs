@@ -34,11 +34,13 @@ use crate::market::{
 };
 use crate::policy::baselines::even_windows;
 use crate::policy::dealloc::{dealloc, windows_to_deadlines};
-use crate::policy::routing::RoutingPolicy;
+use crate::policy::routing::{MigrationPolicy, RoutingPolicy};
 use crate::policy::selfowned::{naive_allocation, rule12};
 use crate::policy::Policy;
 use crate::runtime::ArtifactRuntime;
-use crate::sim::executor::{execute_task, execute_task_routed_decide};
+use crate::sim::executor::{
+    execute_task, execute_task_routed_decide, execute_task_routed_migrating,
+};
 use crate::telemetry::{Recorder, SimEventKind, Telemetry};
 use crate::util::rng::Pcg32;
 use crate::workload::ChainJob;
@@ -79,6 +81,9 @@ pub struct LearningReport {
     /// Cloud work (spot + on-demand) charged per market offer, in view
     /// order; a single element for legacy single-trace runs.
     pub offer_work: Vec<f64>,
+    /// Mid-window task migrations taken (0 whenever the run's
+    /// [`MigrationPolicy`] is disabled — the default).
+    pub migrations: u64,
 }
 
 #[derive(Debug, PartialEq)]
@@ -162,6 +167,7 @@ pub fn tola_run_traced(
         specs,
         &view,
         RoutingPolicy::Home,
+        MigrationPolicy::disabled(),
         pool_capacity,
         seed,
         evaluator,
@@ -202,6 +208,7 @@ pub fn tola_run_view(
         specs,
         view,
         routing,
+        MigrationPolicy::disabled(),
         pool_capacity,
         seed,
         evaluator,
@@ -222,6 +229,7 @@ pub fn tola_run_view_traced(
     specs: &[CfSpec],
     view: &MarketView,
     routing: RoutingPolicy,
+    migration: MigrationPolicy,
     pool_capacity: u32,
     seed: u64,
     evaluator: &Evaluator,
@@ -236,6 +244,7 @@ pub fn tola_run_view_traced(
     let d_max = jobs.iter().map(|j| j.window()).fold(1.0, f64::max);
     let mut capacity = CapacityLedger::new(view, horizon + d_max + 1.0);
     let mut offer_work = vec![0.0f64; view.len()];
+    let mut migrations = 0u64;
     let mut pool = (pool_capacity > 0)
         .then(|| SelfOwnedPool::new(pool_capacity, horizon, 1.0 / SLOTS_PER_UNIT as f64));
     let has_pool = pool.is_some();
@@ -338,7 +347,56 @@ pub fn tola_run_view_traced(
                             od_price,
                         ),
                     )
+                } else if migration.enabled() {
+                    // Migration-capable walk. Work is charged to the task's
+                    // FINAL offer: the view-order split only feeds the
+                    // offer-share report, and per-boundary attribution
+                    // would cost a per-move work ledger for no consumer.
+                    let (d, out, migs) = execute_task_routed_migrating(
+                        task.size,
+                        task.parallelism,
+                        start,
+                        deadline,
+                        r,
+                        bid,
+                        view,
+                        &mut capacity,
+                        routing,
+                        migration,
+                    );
+                    rec.emit(
+                        start,
+                        SimEventKind::OfferRouted {
+                            job: ji,
+                            task: ti,
+                            offer: d.offer,
+                            spilled: d.offer != 0,
+                        },
+                    );
+                    if !d.spot_capacity {
+                        rec.emit(
+                            start,
+                            SimEventKind::CapacityExhausted { job: ji, task: ti, offer: d.offer },
+                        );
+                    }
+                    for m in &migs {
+                        rec.emit(
+                            m.time,
+                            SimEventKind::TaskMigrated {
+                                job: ji,
+                                task: ti,
+                                from_offer: m.from_offer,
+                                to_offer: m.to_offer,
+                            },
+                        );
+                    }
+                    migrations += migs.len() as u64;
+                    let final_offer = migs.last().map(|m| m.to_offer).unwrap_or(d.offer);
+                    (final_offer, out)
                 } else {
+                    // Migration disabled: the EXACT pre-migration code path
+                    // (no new floating-point arithmetic executes), so
+                    // disabling migration is byte-identical by construction.
                     let (d, out) = execute_task_routed_decide(
                         task.size,
                         task.parallelism,
@@ -554,6 +612,7 @@ pub fn tola_run_view_traced(
         pool_utilization,
         weight_trajectory,
         offer_work,
+        migrations,
         ledger,
     }
 }

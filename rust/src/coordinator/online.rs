@@ -58,9 +58,11 @@ use crate::learning::{sweep, Tola};
 use crate::market::{CapacityLedger, CostLedger, InstanceKind, MarketOffer, MarketView, PriceTrace, SelfOwnedPool, SLOTS_PER_UNIT};
 use crate::policy::baselines::even_windows;
 use crate::policy::dealloc::{dealloc, windows_to_deadlines};
-use crate::policy::routing::RoutingPolicy;
+use crate::policy::routing::{MigrationPolicy, RoutingPolicy};
 use crate::policy::selfowned::{naive_allocation, rule12};
-use crate::sim::executor::{execute_task, execute_task_routed_decide};
+use crate::sim::executor::{
+    execute_task, execute_task_routed_decide, execute_task_routed_migrating,
+};
 use crate::telemetry::{Recorder, SimEventKind, Telemetry};
 use crate::util::rng::Pcg32;
 use crate::workload::ChainJob;
@@ -71,6 +73,9 @@ use super::{evaluate_specs, spec_bid, Evaluator, LearningReport};
 #[derive(Debug, Clone)]
 pub struct OnlineOptions {
     pub routing: RoutingPolicy,
+    /// Mid-window migration policy (disabled by default; enabling it only
+    /// changes routed, non-degenerate runs).
+    pub migration: MigrationPolicy,
     pub pool_capacity: u32,
     pub seed: u64,
     /// Emit an [`OnlineSnapshot`] every this many retired jobs
@@ -82,6 +87,7 @@ impl Default for OnlineOptions {
     fn default() -> Self {
         OnlineOptions {
             routing: RoutingPolicy::Home,
+            migration: MigrationPolicy::disabled(),
             pool_capacity: 0,
             seed: 7,
             snapshot_every: 0,
@@ -432,6 +438,7 @@ pub fn tola_run_online_traced(
     let capacities = feed.capacities();
     let n_offers = feed.len();
     let routing = opts.routing;
+    let migration = opts.migration;
     let mut market = LiveMarket::new(feed, tele)?;
     let od_price_home = market.view.home().od_price;
 
@@ -452,6 +459,7 @@ pub fn tola_run_online_traced(
     let d_max = jobs.iter().map(|j| j.window()).fold(1.0, f64::max);
     let mut capacity = CapacityLedger::from_capacities(&capacities, dt, horizon + d_max + 1.0);
     let mut offer_work = vec![0.0f64; n_offers];
+    let mut migrations = 0u64;
     let mut pool = (opts.pool_capacity > 0)
         .then(|| SelfOwnedPool::new(opts.pool_capacity, horizon, 1.0 / SLOTS_PER_UNIT as f64));
     let has_pool = pool.is_some();
@@ -619,7 +627,58 @@ pub fn tola_run_online_traced(
                             od_price_home,
                         ),
                     )
+                } else if migration.enabled() {
+                    // Migration-capable walk. No extra ingestion gating is
+                    // needed: `slots_covering(deadline, dt)` already covers
+                    // every price the walk can read on ANY offer, because
+                    // the FeedMux frontier is shared across all feeds.
+                    // Work is charged to the task's final offer (matching
+                    // the batch loop).
+                    let (d, out, migs) = execute_task_routed_migrating(
+                        task.size,
+                        task.parallelism,
+                        start,
+                        deadline,
+                        r,
+                        bid,
+                        &market.view,
+                        &mut capacity,
+                        routing,
+                        migration,
+                    );
+                    rec.emit(
+                        start,
+                        SimEventKind::OfferRouted {
+                            job: ji,
+                            task: ti,
+                            offer: d.offer,
+                            spilled: d.offer != 0,
+                        },
+                    );
+                    if !d.spot_capacity {
+                        rec.emit(
+                            start,
+                            SimEventKind::CapacityExhausted { job: ji, task: ti, offer: d.offer },
+                        );
+                    }
+                    for m in &migs {
+                        rec.emit(
+                            m.time,
+                            SimEventKind::TaskMigrated {
+                                job: ji,
+                                task: ti,
+                                from_offer: m.from_offer,
+                                to_offer: m.to_offer,
+                            },
+                        );
+                    }
+                    migrations += migs.len() as u64;
+                    let final_offer = migs.last().map(|m| m.to_offer).unwrap_or(d.offer);
+                    (final_offer, out)
                 } else {
+                    // Migration disabled: the EXACT pre-migration code path
+                    // (byte-identity by construction; see
+                    // `tests/integration_migration.rs`).
                     let (d, out) = execute_task_routed_decide(
                         task.size,
                         task.parallelism,
@@ -929,6 +988,7 @@ pub fn tola_run_online_traced(
         pool_utilization,
         weight_trajectory,
         offer_work,
+        migrations,
         ledger,
     };
     Ok(OnlineReport {

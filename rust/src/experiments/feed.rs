@@ -109,6 +109,7 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
             policy_set: PolicySetSpec::Auto,
             jobs: cfg.jobs,
             tags: Vec::new(),
+            migration: crate::policy::routing::MigrationPolicy::disabled(),
         },
     };
     let target_jobs = opts.jobs_override.unwrap_or(spec.jobs);
@@ -157,6 +158,7 @@ pub fn run_feed(cfg: &Config, opts: &FeedCliOptions, out_dir: &str) -> Result<()
         .unwrap_or_else(|| (jobs.len() / 10).max(1));
     let online = OnlineOptions {
         routing: RoutingPolicy::Home,
+        migration: crate::policy::routing::MigrationPolicy::disabled(),
         pool_capacity: spec.pool_capacity,
         seed: cfg.seed,
         snapshot_every,

@@ -75,6 +75,12 @@ OPTIONS
   --out DIR       output directory for JSON/CSV results (default results)
   --no-pjrt       disable the PJRT kernel (native counterfactuals only)
   --config FILE   load a JSON config (CLI flags override)
+  --switch-cost X enable slot-level mid-window migration for `run`/`trace`
+                  on routed multi-offer configs: an in-flight task moves to
+                  a cheaper feasible offer when the projected saving exceeds
+                  X (see EXPERIMENTS.md §Migration)
+  --hysteresis N  hold N slots after each migration before the next switch
+                  is considered (requires --switch-cost; default 0)
 
 SCENARIO OPTIONS (`repro scenarios`; `--scenario` also configures `run`)
   --list          print the registry worlds with regime tags and one-line
@@ -195,6 +201,18 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
     cfg.pool_sizes = args.get_u64_list("pool", &cfg.pool_sizes)?;
     if args.flag("no-pjrt") {
         cfg.use_pjrt = false;
+    }
+    // Migration is enabled by a finite switch cost; --hysteresis alone is
+    // dead weight (there is nothing to dampen) and refused loudly.
+    if args.get("switch-cost").is_some() {
+        let m = crate::policy::routing::MigrationPolicy {
+            switch_cost: args.get_f64("switch-cost", 0.0)?,
+            hysteresis_slots: args.get_u64("hysteresis", 0)? as u32,
+        };
+        m.validate()?;
+        cfg.migration = m;
+    } else if args.get("hysteresis").is_some() {
+        anyhow::bail!("--hysteresis requires --switch-cost (a finite switch cost enables migration)");
     }
     cfg.telemetry = tele.clone();
     let out_dir = args.get_str("out", "results");
@@ -340,6 +358,9 @@ pub fn dispatch(argv: Vec<String>) -> anyhow::Result<()> {
                     sc.seed = cfg.seed;
                     sc.threads = cfg.threads;
                     sc.use_pjrt = cfg.use_pjrt;
+                    if args.get("switch-cost").is_some() {
+                        sc.migration = cfg.migration;
+                    }
                     sc.telemetry = cfg.telemetry.clone();
                     sc
                 }

@@ -347,6 +347,12 @@ pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
     // one-offer case and stays on the bit-identical legacy path. The PJRT
     // kernel only serves single-market sweeps, so routed runs go native.
     let multi = cfg.is_multi_market() || cfg.home_capacity.is_some();
+    if cfg.migration.enabled() && !multi {
+        log.info(
+            "run",
+            "migration is inert on a single-market config (nothing to migrate to)",
+        );
+    }
     let (rt, pjrt_active) = if multi { (None, false) } else { make_evaluator(cfg) };
     log.info(
         "run",
@@ -382,6 +388,7 @@ pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
             &specs,
             v,
             cfg.routing,
+            cfg.migration,
             pool,
             cfg.seed,
             &evaluator,
@@ -445,6 +452,14 @@ pub fn run_single_tola(cfg: &Config, out_dir: &str) -> Result<()> {
         println!("  offer shares:");
         for (o, &w) in v.offers().iter().zip(&rep.offer_work) {
             println!("    {:<28} {:>5.1}%", o.label(), 100.0 * w / cloud);
+        }
+        // Migration-off runs keep the pre-migration byte shape.
+        if cfg.migration.enabled() {
+            j.set("migrations", Json::Num(rep.migrations as f64));
+            println!(
+                "  mid-window migrations: {} (switch cost {}, hysteresis {} slots)",
+                rep.migrations, cfg.migration.switch_cost, cfg.migration.hysteresis_slots
+            );
         }
     }
     std::fs::write(format!("{out_dir}/tola_run.json"), j.pretty())?;

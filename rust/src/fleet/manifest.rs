@@ -189,6 +189,7 @@ mod tests {
             policy_set: PolicySetSpec::Auto,
             jobs: 40,
             tags: Vec::new(),
+            migration: crate::policy::routing::MigrationPolicy::disabled(),
         }
     }
 

@@ -358,6 +358,8 @@ mod tests {
             offer_shares: Vec::new(),
             policy_costs: vec![("p1".into(), alpha), ("p2".into(), alpha + 0.1)],
             tags: Vec::new(),
+            optimism_gap: Vec::new(),
+            migrations: 0,
         }
     }
 

@@ -129,6 +129,11 @@ pub struct PolicyScore {
     pub cvar90: f64,
     /// The world realizing `worst_regret_ratio`.
     pub worst_world: String,
+    /// Mean capacity-replay optimism gap (`replayed − free` cost, ≥ 0)
+    /// across every row that replayed this policy — `None` when no covered
+    /// row carried a gap (capacity-free fleets), keeping legacy report
+    /// bytes unchanged.
+    pub optimism_gap_mean: Option<f64>,
     /// Worlds this policy was *not* scored in (empty when fully covered) —
     /// the cells a partial-coverage policy misses.
     pub missing_worlds: Vec<String>,
@@ -164,6 +169,18 @@ pub struct Robustness {
 pub fn score(outcomes: &[ScenarioOutcome]) -> Robustness {
     let table = world_table(outcomes);
     let total_worlds = table.len();
+
+    // Per-policy capacity-replay gap accumulation: outcomes arrive in
+    // canonical order, so the fold order (and the resulting bytes) are
+    // shard- and merge-order-independent like everything else here.
+    let mut gap_acc: BTreeMap<&str, (f64, u64)> = BTreeMap::new();
+    for o in outcomes {
+        for (label, gap) in &o.optimism_gap {
+            let e = gap_acc.entry(label.as_str()).or_insert((0.0, 0));
+            e.0 += gap;
+            e.1 += 1;
+        }
+    }
 
     // policy -> per-world (ratio, difficulty) pairs, worlds iterated in
     // sorted order so the cross-world folds are order-fixed.
@@ -217,6 +234,9 @@ pub fn score(outcomes: &[ScenarioOutcome]) -> Robustness {
                 ratio_p90: percentile(&ratios, 90.0),
                 cvar90,
                 worst_world: worst_world.to_string(),
+                optimism_gap_mean: gap_acc
+                    .get(label)
+                    .map(|(sum, runs)| sum / *runs as f64),
                 missing_worlds,
                 rank: None,
             }
@@ -278,6 +298,9 @@ pub fn robustness_json(r: &Robustness) -> Json {
                             .set("ratio_p90", Json::Num(s.ratio_p90))
                             .set("cvar90", Json::Num(s.cvar90))
                             .set("worst_world", Json::Str(s.worst_world.clone()));
+                        if let Some(g) = s.optimism_gap_mean {
+                            sj.set("optimism_gap_mean", Json::Num(g));
+                        }
                         if !s.missing_worlds.is_empty() {
                             sj.set(
                                 "missing_worlds",
@@ -323,7 +346,34 @@ mod tests {
             offer_shares: Vec::new(),
             policy_costs: costs.iter().map(|(l, c)| (l.to_string(), *c)).collect(),
             tags: Vec::new(),
+            optimism_gap: Vec::new(),
+            migrations: 0,
         }
+    }
+
+    #[test]
+    fn optimism_gap_mean_surfaces_per_policy_only_when_replayed() {
+        let mut a = outcome("w1", 0, &[("p1", 0.1), ("p2", 0.2)], 0.5);
+        let b = outcome("w2", 0, &[("p1", 0.2), ("p2", 0.2)], 0.5);
+        // Capacity-free rows: no gap anywhere, and the key stays off-disk.
+        let r = score(&[a.clone(), b.clone()]);
+        assert!(r.scores.iter().all(|s| s.optimism_gap_mean.is_none()));
+        let j = robustness_json(&r);
+        let pol = j.get("policies").unwrap().as_arr().unwrap();
+        assert!(pol.iter().all(|p| p.get("optimism_gap_mean").is_none()));
+        // One capped world replayed p1 twice and p2 once: means fold per
+        // policy over exactly the rows that replayed it.
+        a.optimism_gap = vec![("p1".into(), 0.02), ("p2".into(), 0.0)];
+        let mut a2 = outcome("w1", 1, &[("p1", 0.1), ("p2", 0.2)], 0.5);
+        a2.optimism_gap = vec![("p1".into(), 0.04)];
+        let r = score(&[a, a2, b]);
+        let p1 = r.scores.iter().find(|s| s.policy == "p1").unwrap();
+        assert!((p1.optimism_gap_mean.unwrap() - 0.03).abs() < 1e-15);
+        let p2 = r.scores.iter().find(|s| s.policy == "p2").unwrap();
+        assert_eq!(p2.optimism_gap_mean, Some(0.0));
+        let j = robustness_json(&r);
+        let pol = j.get("policies").unwrap().as_arr().unwrap();
+        assert!(pol.iter().any(|p| p.get("optimism_gap_mean").is_some()));
     }
 
     #[test]

@@ -153,6 +153,31 @@ impl CounterfactualJob {
 
     /// Evaluate under any strategy spec (proposed or benchmark).
     pub fn eval_spec(&self, spec: &CfSpec, has_pool: bool) -> (f64, f64, f64, f64) {
+        self.eval_spec_inner(spec, has_pool, None)
+    }
+
+    /// [`CounterfactualJob::eval_spec`] that also reports every spot
+    /// purchase the walk makes, in window-relative time — the allocation
+    /// stream the capacity replay ([`crate::learning::replay`]) re-reserves
+    /// against a real ledger. The recorded walk is the same code path as
+    /// the unrecorded one (the recorder only observes), so the returned
+    /// cost tuple is bitwise identical to [`CounterfactualJob::eval_spec`].
+    pub fn eval_spec_purchases(
+        &self,
+        spec: &CfSpec,
+        has_pool: bool,
+    ) -> ((f64, f64, f64, f64), Vec<SpotPurchase>) {
+        let mut purchases = Vec::new();
+        let out = self.eval_spec_inner(spec, has_pool, Some(&mut purchases));
+        (out, purchases)
+    }
+
+    fn eval_spec_inner(
+        &self,
+        spec: &CfSpec,
+        has_pool: bool,
+        mut rec: Option<&mut Vec<SpotPurchase>>,
+    ) -> (f64, f64, f64, f64) {
         let (sizes, so_rule, bid, beta0) = match spec {
             CfSpec::Proposed(policy) => (
                 self.windows(policy.dealloc_beta(has_pool)),
@@ -286,6 +311,17 @@ impl CounterfactualJob {
                 ztilde[i] -= dw;
                 spot_work += dw;
                 spot_cost += price * dw;
+                if dw > 0.0 {
+                    if let Some(r) = rec.as_deref_mut() {
+                        r.push(SpotPurchase {
+                            t0: t,
+                            t1: t + dw / delta_eff,
+                            units: delta_eff.ceil() as u32,
+                            work: dw,
+                            price,
+                        });
+                    }
+                }
             }
         }
         // Any remaining z̃ (window ran out of slots): on-demand.
@@ -299,6 +335,24 @@ impl CounterfactualJob {
         let cost = spot_cost + self.od_price * od_work;
         (cost, spot_work, od_work, so_work)
     }
+}
+
+/// One spot purchase the counterfactual walk makes, in window-relative
+/// time (`[t0, t1)` with 0 at the job's arrival). The capacity replay
+/// ([`crate::learning::replay`]) shifts these by the arrival and
+/// re-reserves them against a real [`crate::market::CapacityLedger`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpotPurchase {
+    pub t0: f64,
+    pub t1: f64,
+    /// Whole spot instances the slot's `δ − r` request rounds up to
+    /// (capacity is counted in whole instances, like
+    /// [`crate::sim::executor::spot_units`]).
+    pub units: u32,
+    /// Work processed in the purchase.
+    pub work: f64,
+    /// Realized spot price paid per unit of work.
+    pub price: f64,
 }
 
 /// A strategy evaluated counterfactually: the proposed framework or one of
@@ -535,5 +589,161 @@ mod tests {
             .collect();
         let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
         ChainJob::new(0, 0.0, makespan * rng.uniform(1.05, 2.5), tasks)
+    }
+
+    fn random_spec(rng: &mut Pcg32, has_pool: bool) -> CfSpec {
+        let pol = Policy::new(
+            rng.uniform(0.3, 1.0),
+            (has_pool && rng.chance(0.5)).then(|| rng.uniform(0.15, 0.7)),
+            rng.uniform(0.15, 0.35),
+        );
+        match rng.range_inclusive(0, 2) {
+            0 => CfSpec::Proposed(pol),
+            1 => CfSpec::EvenNaive { bid: pol.bid },
+            _ => CfSpec::DeallocNaive(pol),
+        }
+    }
+
+    #[test]
+    fn recorded_walk_is_bitwise_identical_and_accounts_spot_work() {
+        for_all(Config::cases(120).seed(37), |rng| {
+            let job = random_job(rng);
+            let dt = 1.0 / SLOTS_PER_UNIT as f64;
+            let n = (job.window() / dt).ceil() as usize + 1;
+            let prices: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.chance(0.5) {
+                        rng.uniform(0.12, 0.3)
+                    } else {
+                        rng.uniform(0.4, 1.0)
+                    }
+                })
+                .collect();
+            let navail = rng.range_inclusive(0, 50) as f64;
+            let c = CounterfactualJob::from_job(&job, prices, dt, vec![navail; n], 1.0);
+            let has_pool = navail > 0.0;
+            let spec = random_spec(rng, has_pool);
+            let plain = c.eval_spec(&spec, has_pool);
+            let (recorded, purchases) = c.eval_spec_purchases(&spec, has_pool);
+            if plain != recorded {
+                return Err(format!("recorder changed the walk: {plain:?} vs {recorded:?}"));
+            }
+            let bought: f64 = purchases.iter().map(|p| p.work).sum();
+            if (bought - recorded.1).abs() > 1e-9 * recorded.1.max(1.0) {
+                return Err(format!("purchases {bought} != spot work {}", recorded.1));
+            }
+            let paid: f64 = purchases.iter().map(|p| p.price * p.work).sum();
+            let spot_cost = recorded.0 - recorded.2; // od_price = 1
+            if (paid - spot_cost).abs() > 1e-9 * spot_cost.abs().max(1.0) {
+                return Err(format!("purchase cost {paid} != spot cost {spot_cost}"));
+            }
+            for p in &purchases {
+                if !(p.t1 > p.t0 && p.t0 >= 0.0 && p.t1 <= job.window() + dt) {
+                    return Err(format!("purchase outside window: {p:?}"));
+                }
+                if p.units == 0 || p.work <= 0.0 || !p.price.is_finite() {
+                    return Err(format!("degenerate purchase: {p:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Brute-force replay oracle: a plain per-slot counter array using the
+    /// exact [`crate::market::CapacityLedger`] slot-quantization convention
+    /// (floor start; a window ending exactly on a boundary does not occupy
+    /// the next slot; degenerate windows take their start slot).
+    struct NaiveLane {
+        avail: Vec<i64>,
+        slot_len: f64,
+    }
+
+    impl NaiveLane {
+        fn new(cap: u32, slot_len: f64, horizon: f64) -> NaiveLane {
+            let slots = (horizon / slot_len).ceil() as usize + 1;
+            NaiveLane {
+                avail: vec![cap as i64; slots],
+                slot_len,
+            }
+        }
+
+        fn range(&self, t1: f64, t2: f64) -> (usize, usize) {
+            let n = self.avail.len();
+            let lo = ((t1 / self.slot_len).floor() as usize).min(n - 1);
+            if t2 <= t1 {
+                return (lo, lo + 1);
+            }
+            let hi_f = t2 / self.slot_len;
+            let hi = if hi_f.fract() == 0.0 {
+                hi_f as usize
+            } else {
+                hi_f.ceil() as usize
+            }
+            .max(lo + 1);
+            (lo, hi.min(n))
+        }
+
+        fn replay(&mut self, arrival: f64, od: f64, purchases: &[SpotPurchase]) -> f64 {
+            let mut extra = 0.0;
+            for p in purchases {
+                if p.units == 0 || p.work <= 0.0 {
+                    continue;
+                }
+                let (lo, hi) = self.range(arrival + p.t0, arrival + p.t1);
+                let avail = self.avail[lo..hi].iter().min().copied().unwrap().max(0) as u32;
+                let granted = avail.min(p.units);
+                if granted > 0 {
+                    for s in lo..hi {
+                        self.avail[s] -= granted as i64;
+                    }
+                }
+                let displaced = (p.units - granted) as f64 / p.units as f64;
+                extra += (od - p.price).max(0.0) * p.work * displaced;
+            }
+            extra
+        }
+    }
+
+    #[test]
+    fn capacity_replay_matches_naive_slot_counter_oracle() {
+        use crate::learning::replay::surcharge;
+        use crate::market::CapacityLedger;
+        for_all(Config::cases(80).seed(43), |rng| {
+            let dt = 1.0 / SLOTS_PER_UNIT as f64;
+            let cap = rng.range_inclusive(1, 6) as u32;
+            let njobs = rng.range_inclusive(1, 6) as usize;
+            let mut streams = Vec::new();
+            let mut horizon: f64 = 1.0;
+            for _ in 0..njobs {
+                let job = random_job(rng);
+                let arrival = rng.uniform(0.0, 5.0);
+                horizon = horizon.max(arrival + job.window() + 1.0);
+                let n = (job.window() / dt).ceil() as usize + 1;
+                let prices: Vec<f64> =
+                    (0..n).map(|_| rng.uniform(0.1, 0.6)).collect();
+                let c = CounterfactualJob::from_job(&job, prices, dt, vec![0.0; n], 1.0);
+                let spec = random_spec(rng, false);
+                let (_, purchases) = c.eval_spec_purchases(&spec, false);
+                streams.push((arrival, purchases));
+            }
+            let mut ledger = CapacityLedger::from_capacities(&[Some(cap)], dt, horizon);
+            let mut oracle = NaiveLane::new(cap, dt, horizon);
+            for (arrival, purchases) in &streams {
+                let fast = surcharge(&mut ledger, 0, *arrival, 1.0, purchases);
+                let slow = oracle.replay(*arrival, 1.0, purchases);
+                if (fast - slow).abs() > 1e-12 {
+                    return Err(format!("surcharge diverged: {fast} vs {slow}"));
+                }
+            }
+            // Ledger state agrees slot-by-slot after all reservations.
+            for (s, &avail) in oracle.avail.iter().enumerate() {
+                let t = s as f64 * dt;
+                let got = ledger.remaining_over(0, t, t + dt).expect("finite lane");
+                if got != avail.max(0) as u32 {
+                    return Err(format!("slot {s}: ledger {got} vs oracle {avail}"));
+                }
+            }
+            Ok(())
+        });
     }
 }

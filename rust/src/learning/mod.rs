@@ -16,9 +16,11 @@
 
 pub mod counterfactual;
 pub mod regret;
+pub mod replay;
 pub mod sweep;
 
 pub use counterfactual::{CounterfactualJob, PolicyGridEval};
+pub use replay::{replay_specs, PolicyReplay};
 pub use sweep::{sweep_batch, SweepContext};
 
 use crate::util::rng::Pcg32;

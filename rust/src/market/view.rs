@@ -320,6 +320,24 @@ impl CapacityLedger {
         }
         true
     }
+
+    /// Release `units` previously reserved on `offer` over `[t1, t2)` —
+    /// the inverse of [`CapacityLedger::reserve`], used when a migrating
+    /// task abandons the unconsumed tail of its reservation. The caller
+    /// must only release ranges it reserved; the ledger does not police
+    /// over-release (it would require per-holder bookkeeping the hot path
+    /// cannot afford).
+    pub fn release(&mut self, offer: usize, units: u32, t1: f64, t2: f64) {
+        if units == 0 {
+            return;
+        }
+        let range = self.lanes[offer]
+            .as_ref()
+            .map(|tree| self.slot_range(tree.len(), t1, t2));
+        if let (Some(tree), Some((lo, hi))) = (&mut self.lanes[offer], range) {
+            tree.add(lo, hi, units as i64);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -435,6 +453,23 @@ mod tests {
         assert_eq!(cap.remaining_over(0, 5.0, 9.0), Some(5));
         // Offer b is never constrained.
         assert!(cap.reserve(1, 10_000, 0.0, 10.0));
+    }
+
+    #[test]
+    fn release_restores_reserved_capacity() {
+        let v = MarketView::new(vec![offer("a", "t", 1.0, vec![0.2; 20], Some(4))]).unwrap();
+        let mut cap = CapacityLedger::new(&v, 10.0);
+        assert!(cap.reserve(0, 3, 0.0, 6.0));
+        assert_eq!(cap.remaining_over(0, 0.0, 6.0), Some(1));
+        // Abandon the tail [2, 6): the consumed [0, 2) stays charged.
+        cap.release(0, 3, 2.0, 6.0);
+        assert_eq!(cap.remaining_over(0, 0.0, 2.0), Some(1));
+        assert_eq!(cap.remaining_over(0, 2.0, 6.0), Some(4));
+        // Infinite lanes ignore release, like reserve.
+        let vi = MarketView::new(vec![offer("b", "t", 1.0, vec![0.2; 20], None)]).unwrap();
+        let mut ci = CapacityLedger::new(&vi, 10.0);
+        ci.release(0, 100, 0.0, 5.0);
+        assert_eq!(ci.remaining_over(0, 0.0, 5.0), None);
     }
 
     #[test]

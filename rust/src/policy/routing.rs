@@ -16,7 +16,7 @@
 //! instead of stalling — deadlines are never sacrificed to a capacity
 //! wall.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::market::{CapacityLedger, MarketView};
 
@@ -52,6 +52,63 @@ impl RoutingPolicy {
             "spillover" => RoutingPolicy::Spillover,
             other => bail!("unknown routing policy '{other}' (home|cheapest|spillover)"),
         })
+    }
+}
+
+/// Mid-window migration policy: whether an in-flight task may be moved to
+/// a cheaper feasible offer at a slot boundary instead of staying pinned
+/// to the offer it was routed to at its start.
+///
+/// Migration is evaluated wherever the execution walk's cursor rests on a
+/// slot boundary (prices are slot-piecewise constant, so boundaries are
+/// the only moments the comparison can change). A move is taken when the
+/// projected saving over the remaining spot/on-demand workload exceeds
+/// `switch_cost`, and at most once every `hysteresis_slots` slots. The
+/// disabled policy (`switch_cost = +inf`) is the default; callers branch
+/// on [`MigrationPolicy::enabled`] and keep the exact pinned-offer code
+/// path when it is off, so disabling migration is byte-identical to the
+/// pre-migration executor by construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationPolicy {
+    /// Cost charged for one move (checkpoint + transfer). A switch is only
+    /// taken when the projected remaining-window saving exceeds it.
+    /// `+inf` disables migration entirely.
+    pub switch_cost: f64,
+    /// Minimum slots between consecutive switches of one task (0 = every
+    /// boundary is eligible).
+    pub hysteresis_slots: u32,
+}
+
+impl MigrationPolicy {
+    /// The no-migration policy: an infinite switch cost that no projected
+    /// saving can exceed.
+    pub fn disabled() -> MigrationPolicy {
+        MigrationPolicy {
+            switch_cost: f64::INFINITY,
+            hysteresis_slots: 0,
+        }
+    }
+
+    /// Whether any switch can ever be taken.
+    pub fn enabled(&self) -> bool {
+        self.switch_cost.is_finite()
+    }
+
+    /// Validate spec-provided parameters: a finite switch cost must be
+    /// non-negative (a negative cost would *pay* tasks to thrash).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.switch_cost.is_infinite() || self.switch_cost >= 0.0,
+            "migration switch_cost must be >= 0 (got {})",
+            self.switch_cost
+        );
+        Ok(())
+    }
+}
+
+impl Default for MigrationPolicy {
+    fn default() -> Self {
+        MigrationPolicy::disabled()
     }
 }
 
@@ -145,6 +202,28 @@ mod tests {
                 .collect(),
         )
         .unwrap()
+    }
+
+    #[test]
+    fn migration_policy_default_is_disabled() {
+        let m = MigrationPolicy::default();
+        assert!(!m.enabled());
+        assert_eq!(m.hysteresis_slots, 0);
+        assert!(m.validate().is_ok());
+        assert!(MigrationPolicy { switch_cost: 0.01, hysteresis_slots: 3 }.enabled());
+    }
+
+    #[test]
+    fn migration_policy_validation_rejects_bad_costs() {
+        assert!(MigrationPolicy { switch_cost: -0.1, hysteresis_slots: 0 }
+            .validate()
+            .is_err());
+        assert!(MigrationPolicy { switch_cost: f64::NAN, hysteresis_slots: 0 }
+            .validate()
+            .is_err());
+        assert!(MigrationPolicy { switch_cost: 0.0, hysteresis_slots: 9 }
+            .validate()
+            .is_ok());
     }
 
     #[test]

@@ -342,6 +342,8 @@ mod tests {
             offer_shares: Vec::new(),
             policy_costs: costs.iter().map(|(l, c)| (l.to_string(), *c)).collect(),
             tags: tags.iter().map(|t| t.to_string()).collect(),
+            optimism_gap: Vec::new(),
+            migrations: 0,
         }
     }
 

@@ -12,10 +12,11 @@
 //!   routing mode: home / arbitrage composite / capacity-aware routing),
 //!   a workload mix with arrival-rate schedules, a pool, and a policy
 //!   grid;
-//! * [`registry`] — twelve built-in named worlds, from `paper-default` to
-//!   `multi-region-arbitrage`, the capacity-aware `capacity-crunch` /
-//!   `multi-region-routed`, and the streamed-dump `ec2-feed-replay` /
-//!   `ec2-az-select` (per-series selection out of a multi-series dump);
+//! * [`registry`] — thirteen built-in named worlds, from `paper-default`
+//!   to `multi-region-arbitrage`, the capacity-aware `capacity-crunch` /
+//!   `multi-region-routed`, the migration seesaw `spot-spike-migration`,
+//!   and the streamed-dump `ec2-feed-replay` / `ec2-az-select` (per-series
+//!   selection out of a multi-series dump);
 //! * [`runner`] — fans `scenarios × seeds` cells across the worker pool
 //!   with per-run seed derivation, so a batch is bit-identical under any
 //!   `--threads`;

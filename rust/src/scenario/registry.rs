@@ -1,10 +1,13 @@
-//! The built-in scenario registry: twelve named worlds spanning the market
-//! and workload regimes the platform must handle, from the paper's §6.1
-//! default to replayed real-format EC2 dumps (single- and multi-series),
-//! multi-region arbitrage, and the capacity-aware routed markets.
-//! `repro scenarios --list` prints the same catalogue from the CLI.
+//! The built-in scenario registry: thirteen named worlds spanning the
+//! market and workload regimes the platform must handle, from the paper's
+//! §6.1 default to replayed real-format EC2 dumps (single- and
+//! multi-series), multi-region arbitrage, the capacity-aware routed
+//! markets, and a price-seesaw world where mid-window migration is
+//! strictly profitable. `repro scenarios --list` prints the same
+//! catalogue from the CLI.
 
 use crate::market::SpotModel;
+use crate::policy::routing::MigrationPolicy;
 use crate::workload::MixComponent;
 
 use super::spec::{
@@ -49,6 +52,7 @@ fn base(name: &str, description: &str, model: SpotModel) -> ScenarioSpec {
         // Every builtin is at least a calm-regime world; worlds whose
         // price process visits a surge regime add "surge" below.
         tags: tags(&["calm"]),
+        migration: MigrationPolicy::disabled(),
     }
 }
 
@@ -183,6 +187,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         policy_set: PolicySetSpec::Auto,
         jobs: 400,
         tags: tags(&["calm", "surge"]),
+        migration: MigrationPolicy::disabled(),
     };
 
     // A tightly-capped cheap primary region spilling into a pricier
@@ -223,6 +228,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         policy_set: PolicySetSpec::Auto,
         jobs: 400,
         tags: tags(&["calm"]),
+        migration: MigrationPolicy::disabled(),
     };
 
     // Non-arbitrage routing across regions *and* instance types: every
@@ -272,6 +278,61 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         policy_set: PolicySetSpec::Auto,
         jobs: 400,
         tags: tags(&["calm", "surge"]),
+        migration: MigrationPolicy::disabled(),
+    };
+
+    // A two-sided price seesaw built to make mid-window migration strictly
+    // profitable: the regions alternate tight cheap and spike epochs in
+    // opposite phase, so whichever offer a task starts on turns expensive
+    // (above every §6.1 grid bid) mid-window while the other side turns
+    // cheap. With migration on, in-flight tasks hop to the newly-cheap
+    // side; with it off, they ride out the spike or degrade to on-demand.
+    let cheap = SpotModel::BoundedExp {
+        mean: 0.13,
+        lo: 0.12,
+        hi: 0.16,
+    };
+    let spike = SpotModel::BoundedExp {
+        mean: 0.8,
+        lo: 0.7,
+        hi: 1.0,
+    };
+    let spot_spike_migration = ScenarioSpec {
+        name: "spot-spike-migration".into(),
+        description: "Opposite-phase price seesaw across two regions \
+                      (tight cheap band vs spike band flipping every 3 \
+                      units); mid-window migration to the newly-cheap side \
+                      is strictly profitable, so this world pins the \
+                      migration machinery end to end."
+            .into(),
+        market: MarketSpec {
+            regions: vec![
+                RegionSpec {
+                    name: "east".into(),
+                    od_price: 1.0,
+                    price: PriceSpec::Regimes(vec![(3.0, cheap.clone()), (3.0, spike.clone())]),
+                    capacity: None,
+                    instance_types: Vec::new(),
+                },
+                RegionSpec {
+                    name: "west".into(),
+                    od_price: 1.0,
+                    price: PriceSpec::Regimes(vec![(3.0, spike), (3.0, cheap)]),
+                    capacity: None,
+                    instance_types: Vec::new(),
+                },
+            ],
+            routing: RoutingSpec::Cheapest,
+        },
+        workload: WorkloadSpec::uniform(2),
+        pool_capacity: 0,
+        policy_set: PolicySetSpec::Auto,
+        jobs: 400,
+        tags: tags(&["calm", "surge"]),
+        migration: MigrationPolicy {
+            switch_cost: 0.01,
+            hysteresis_slots: 0,
+        },
     };
 
     let mut bursty = base(
@@ -328,6 +389,7 @@ pub fn builtins() -> Vec<ScenarioSpec> {
         multi_region,
         capacity_crunch,
         multi_region_routed,
+        spot_spike_migration,
         bursty,
         pool_heavy,
         deadline_tight,
@@ -351,7 +413,7 @@ mod tests {
     #[test]
     fn registry_has_expected_worlds() {
         let names = builtin_names();
-        assert_eq!(names.len(), 12);
+        assert_eq!(names.len(), 13);
         for want in [
             "paper-default",
             "calm-surge-markov",
@@ -362,6 +424,7 @@ mod tests {
             "multi-region-arbitrage",
             "capacity-crunch",
             "multi-region-routed",
+            "spot-spike-migration",
             "bursty-arrivals",
             "pool-heavy",
             "deadline-tight",
@@ -393,6 +456,35 @@ mod tests {
     }
 
     #[test]
+    fn migration_world_is_the_only_builtin_with_migration_on() {
+        for s in builtins() {
+            assert_eq!(
+                s.migration.enabled(),
+                s.name == "spot-spike-migration",
+                "'{}'",
+                s.name
+            );
+        }
+        let m = find("spot-spike-migration").unwrap();
+        assert_eq!(m.market.routing, RoutingSpec::Cheapest);
+        assert_eq!(m.migration.switch_cost, 0.01);
+        assert_eq!(m.migration.hysteresis_slots, 0);
+        // Both sides are uncapped: the seesaw tests pure price-driven
+        // migration, not capacity pressure.
+        assert!(m.market.flattened_offers().iter().all(|o| o.capacity.is_none()));
+        // The seesaw phases really oppose each other.
+        match (&m.market.regions[0].price, &m.market.regions[1].price) {
+            (PriceSpec::Regimes(a), PriceSpec::Regimes(b)) => {
+                assert_eq!(a.len(), 2);
+                assert_eq!(b.len(), 2);
+                assert_eq!(a[0].1, b[1].1, "east's cheap epoch is west's second");
+                assert_eq!(a[1].1, b[0].1, "east's spike epoch is west's first");
+            }
+            other => panic!("expected regime schedules, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn all_builtins_validate() {
         for s in builtins() {
             s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
@@ -413,6 +505,7 @@ mod tests {
             "ec2-az-select",
             "multi-region-arbitrage",
             "multi-region-routed",
+            "spot-spike-migration",
         ] {
             let s = find(name).unwrap();
             assert!(s.tags.contains(&"surge".to_string()), "'{name}'");

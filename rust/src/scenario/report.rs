@@ -32,6 +32,13 @@ pub struct ScenarioAggregate {
     pub od_share_mean: f64,
     pub availability_lo_mean: f64,
     pub availability_hi_mean: f64,
+    /// Mean capacity-replay optimism gap across every policy and run
+    /// (`None` for capacity-free worlds, where no replay ran — the key
+    /// stays off-disk so legacy sections are byte-identical).
+    pub optimism_gap_mean: Option<f64>,
+    /// Total mid-window migrations across the scenario's runs (omitted
+    /// from the serialized section when zero).
+    pub migrations_total: u64,
 }
 
 /// Aggregate outcomes per scenario, preserving first-seen scenario order.
@@ -67,6 +74,18 @@ pub fn aggregate(outcomes: &[ScenarioOutcome]) -> Vec<ScenarioAggregate> {
                 od_share_mean: fold(|o| o.od_share),
                 availability_lo_mean: fold(|o| o.availability_lo),
                 availability_hi_mean: fold(|o| o.availability_hi),
+                optimism_gap_mean: {
+                    let gaps: Vec<f64> = runs
+                        .iter()
+                        .flat_map(|o| o.optimism_gap.iter().map(|(_, g)| *g))
+                        .collect();
+                    if gaps.is_empty() {
+                        None
+                    } else {
+                        Some(gaps.iter().sum::<f64>() / gaps.len() as f64)
+                    }
+                },
+                migrations_total: runs.iter().map(|o| o.migrations).sum(),
             }
         })
         .collect()
@@ -113,6 +132,21 @@ fn run_to_json(o: &ScenarioOutcome) -> Json {
             "tags",
             Json::Arr(o.tags.iter().map(|t| Json::Str(t.clone())).collect()),
         );
+    }
+    // Capacity-replay optimism gap: only capped worlds run the replay, so
+    // only their rows carry the key (off-disk-when-empty, like the maps
+    // above — capacity-free rows keep the legacy byte shape).
+    if !o.optimism_gap.is_empty() {
+        let mut gaps = Json::obj();
+        for (label, gap) in &o.optimism_gap {
+            gaps.set(label, Json::Num(*gap));
+        }
+        j.set("optimism_gap", gaps);
+    }
+    // Migration count: off-disk when zero, so migration-off rows are
+    // byte-identical to the pre-migration schema.
+    if o.migrations > 0 {
+        j.set("migrations", Json::Num(o.migrations as f64));
     }
     j
 }
@@ -183,6 +217,8 @@ pub fn outcome_from_json(scenario: &str, j: &Json) -> Result<ScenarioOutcome> {
                 .collect::<Result<_>>()?,
             Some(_) => bail!("report row ('{scenario}'): 'tags' must be an array"),
         },
+        optimism_gap: pairs("optimism_gap")?,
+        migrations: j.opt_u64("migrations", 0),
     })
 }
 
@@ -264,8 +300,14 @@ pub fn scenario_sections_json(outcomes: &[ScenarioOutcome]) -> Json {
                     .set("spot_share_mean", Json::Num(a.spot_share_mean))
                     .set("od_share_mean", Json::Num(a.od_share_mean))
                     .set("availability_lo_mean", Json::Num(a.availability_lo_mean))
-                    .set("availability_hi_mean", Json::Num(a.availability_hi_mean))
-                    .set(
+                    .set("availability_hi_mean", Json::Num(a.availability_hi_mean));
+                if let Some(g) = a.optimism_gap_mean {
+                    sj.set("optimism_gap_mean", Json::Num(g));
+                }
+                if a.migrations_total > 0 {
+                    sj.set("migrations_total", Json::Num(a.migrations_total as f64));
+                }
+                sj.set(
                         "details",
                         Json::Arr(
                             outcomes
@@ -320,7 +362,46 @@ mod tests {
                 ("proposed(β=0.769,β₀=-,b=0.18)".into(), alpha + 0.05),
             ],
             tags: Vec::new(),
+            optimism_gap: Vec::new(),
+            migrations: 0,
         }
+    }
+
+    #[test]
+    fn optimism_gap_and_migrations_stay_off_disk_when_default() {
+        // Capacity-free, migration-off rows keep the legacy byte shape.
+        let plain = run_to_json(&outcome("a", 0, 0.2));
+        assert!(plain.get("optimism_gap").is_none());
+        assert!(plain.get("migrations").is_none());
+        // Capped/migrating rows round-trip losslessly and re-serialize
+        // byte-identically.
+        let mut capped = outcome("b", 0, 0.3);
+        capped.optimism_gap = vec![
+            ("proposed(β=1.000,β₀=-,b=0.24)".into(), 0.0125),
+            ("proposed(β=0.769,β₀=-,b=0.18)".into(), 0.0),
+        ];
+        capped.migrations = 3;
+        let j = run_to_json(&capped);
+        let back = outcome_from_json("b", &j).unwrap();
+        assert_eq!(back.optimism_gap, capped.optimism_gap);
+        assert_eq!(back.migrations, 3);
+        assert_eq!(run_to_json(&back).pretty(), j.pretty());
+        // Aggregates surface the mean gap / total migrations only when
+        // some row carries them.
+        let aggs = aggregate(&[outcome("a", 0, 0.2), capped.clone()]);
+        assert_eq!(aggs[0].optimism_gap_mean, None);
+        assert_eq!(aggs[0].migrations_total, 0);
+        assert!((aggs[1].optimism_gap_mean.unwrap() - 0.00625).abs() < 1e-15);
+        assert_eq!(aggs[1].migrations_total, 3);
+        let doc = report_json(&[outcome("a", 0, 0.2), capped], 1, 7, false);
+        let sections = doc.get("scenarios").unwrap().as_arr().unwrap();
+        assert!(sections[0].get("optimism_gap_mean").is_none());
+        assert!(sections[0].get("migrations_total").is_none());
+        assert!(sections[1].get("optimism_gap_mean").is_some());
+        assert_eq!(
+            sections[1].get("migrations_total").unwrap().as_f64().unwrap(),
+            3.0
+        );
     }
 
     #[test]

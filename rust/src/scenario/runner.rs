@@ -14,6 +14,7 @@ use crate::coordinator::{parallel_map, tola_run_view_traced, Evaluator};
 use crate::feed;
 use crate::telemetry::Telemetry;
 use crate::learning::counterfactual::CfSpec;
+use crate::learning::replay_specs;
 use crate::market::{
     replay, MarketOffer, MarketView, PriceTrace, SpotPriceProcess, SLOTS_PER_UNIT,
 };
@@ -79,6 +80,16 @@ pub struct ScenarioOutcome {
     /// ([`crate::robustness::gate`]). Empty for untagged worlds — and
     /// omitted from report rows, keeping legacy rows byte-identical.
     pub tags: Vec<String>,
+    /// Per-policy capacity-replay optimism gap (`replayed − free` mean
+    /// cost, always ≥ 0) as `(label, gap)` pairs in spec order — see
+    /// [`crate::learning::replay`]. Only computed for worlds with at least
+    /// one capacity-capped offer; empty (and omitted from report rows)
+    /// otherwise, so capacity-free rows keep the legacy byte shape.
+    pub optimism_gap: Vec<(String, f64)>,
+    /// Mid-window migrations the executed (learning) stream performed.
+    /// Always 0 when the spec's migration policy is disabled — the key is
+    /// omitted from report rows then, keeping legacy rows byte-identical.
+    pub migrations: u64,
 }
 
 /// Deterministic per-run seed: FNV-1a over the scenario name folded with
@@ -340,6 +351,7 @@ pub fn run_scenario_once_traced(
         &specs,
         &view,
         routing,
+        spec.migration,
         spec.pool_capacity,
         run_seed ^ 0x701A_2,
         &Evaluator::Native { threads: 1 },
@@ -348,6 +360,19 @@ pub fn run_scenario_once_traced(
     );
     drop(cell_span);
     tele.absorb(rec);
+
+    // Capacity replay: re-run every policy's capacity-free allocations
+    // through a real ledger and report the optimism gap. Only meaningful
+    // (and only computed) when some offer is capacity-capped; gating on
+    // that keeps capacity-free rows byte-identical to the legacy schema.
+    let optimism_gap: Vec<(String, f64)> = if view.has_finite_capacity() {
+        let replay_span = tele.span("runner/replay");
+        let rows = replay_specs(&jobs, &specs, &view, routing, spec.pool_capacity > 0);
+        drop(replay_span);
+        rows.into_iter().map(|r| { let gap = r.gap(); (r.label, gap) }).collect()
+    } else {
+        Vec::new()
+    };
 
     let grid = grid_b();
     let lo_bid = grid.first().copied().unwrap_or(0.18);
@@ -387,6 +412,8 @@ pub fn run_scenario_once_traced(
             .zip(rep.policy_mean_costs.iter().copied())
             .collect(),
         tags: spec.tags.clone(),
+        optimism_gap,
+        migrations: rep.migrations,
     })
 }
 
@@ -437,6 +464,7 @@ mod tests {
             policy_set: PolicySetSpec::Auto,
             jobs: 12,
             tags: Vec::new(),
+            migration: crate::policy::routing::MigrationPolicy::disabled(),
         }
     }
 

@@ -19,7 +19,9 @@
 
 use anyhow::{bail, ensure, Result};
 
+use crate::coordinator::config::{migration_from_json, migration_to_json};
 use crate::market::{spot_model_from_json, spot_model_to_json, SpotModel};
+use crate::policy::routing::MigrationPolicy;
 use crate::util::json::Json;
 use crate::workload::MixComponent;
 
@@ -334,6 +336,10 @@ pub struct ScenarioSpec {
     /// the empty default stays off-disk so pre-existing spec files
     /// round-trip byte-identically.
     pub tags: Vec<String>,
+    /// Mid-window migration policy. The disabled default stays off-disk
+    /// (like `tags`), so migration-free spec files round-trip
+    /// byte-identically and run the exact pinned-offer executor path.
+    pub migration: MigrationPolicy,
 }
 
 impl ScenarioSpec {
@@ -453,6 +459,20 @@ impl ScenarioSpec {
                 self.name
             );
         }
+        self.migration
+            .validate()
+            .map_err(|e| anyhow::anyhow!("scenario '{}': migration: {e}", self.name))?;
+        // Mirror the config dead-weight guard: a task pinned by Home
+        // routing (or placed on the arbitrage composite) can never migrate.
+        ensure!(
+            !self.migration.enabled()
+                || matches!(
+                    self.market.routing,
+                    RoutingSpec::Cheapest | RoutingSpec::Spillover
+                ),
+            "scenario '{}': migration requires cheapest|spillover routing",
+            self.name
+        );
         Ok(())
     }
 
@@ -494,6 +514,7 @@ impl ScenarioSpec {
                 tags.push(t.to_string());
             }
         }
+        let migration = migration_from_json(j, &format!("scenario '{name}'"))?;
         Ok(ScenarioSpec {
             description,
             market: market_from_json(market_j, &name)?,
@@ -502,6 +523,7 @@ impl ScenarioSpec {
             policy_set: PolicySetSpec::from_str(j.opt_str("policy_set", "auto"))?,
             jobs: j.opt_u64("jobs", 400) as usize,
             tags,
+            migration,
             name,
         })
     }
@@ -520,6 +542,10 @@ impl ScenarioSpec {
                 "tags",
                 Json::Arr(self.tags.iter().map(|t| Json::Str(t.clone())).collect()),
             );
+        }
+        // Disabled migration stays off-disk, like empty tags.
+        if self.migration.enabled() {
+            j.set("migration", migration_to_json(&self.migration));
         }
         j.set("market", market_to_json(&self.market))
             .set("workload", workload_to_json(&self.workload));
@@ -932,6 +958,7 @@ mod tests {
             policy_set: PolicySetSpec::Auto,
             jobs: 250,
             tags: Vec::new(),
+            migration: MigrationPolicy::disabled(),
         }
     }
 

@@ -22,7 +22,7 @@
 use crate::market::{CapacityLedger, CostLedger, InstanceKind, MarketView, PriceTrace, SelfOwnedPool};
 use crate::policy::baselines::greedy_must_switch;
 use crate::policy::dealloc::WindowAllocation;
-use crate::policy::routing::{route, RouteDecision, RoutingPolicy};
+use crate::policy::routing::{route, MigrationPolicy, RouteDecision, RoutingPolicy};
 use crate::policy::selfowned::{naive_allocation, rule12};
 use crate::workload::ChainJob;
 
@@ -253,6 +253,192 @@ pub fn execute_task_routed_decide(
             ),
         )
     }
+}
+
+/// One mid-window migration taken by [`execute_task_routed_migrating`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationRecord {
+    /// Simulation time of the switch (the walk start or a slot boundary).
+    pub time: f64,
+    pub from_offer: usize,
+    pub to_offer: usize,
+    /// Projected saving over the remaining spot/on-demand workload that
+    /// justified the switch (already net of nothing — the switch cost is
+    /// charged separately into the task's spot cost).
+    pub projected_saving: f64,
+}
+
+/// [`execute_task_routed_decide`] with slot-granular mid-window migration.
+///
+/// The task is routed and reserved exactly as in the pinned path; then the
+/// Def. 3.1/3.2 walk runs with one added rule evaluated wherever the
+/// cursor rests on a slot boundary (prices are slot-piecewise constant, so
+/// boundaries are the only moments the comparison changes): if another
+/// offer is winnable at the task's bid (`price <= bid`), can hold the
+/// task's spot units through the deadline, and the projected saving over
+/// the remaining workload `z̃` exceeds `migration.switch_cost`, the task
+/// releases the unconsumed tail of its reservation, reserves on the new
+/// offer, pays the switch cost (charged into `spot_cost`), and continues
+/// on the new offer's trace. The saving is projected against the current
+/// slot's price when this slot is winnable, else against the current
+/// offer's on-demand price (the rate the remaining work would otherwise
+/// degrade to). `hysteresis_slots` suppresses re-switching for that many
+/// slots after a move. The turning point still degrades to on-demand on
+/// the *current* offer — migration never trades away the deadline.
+///
+/// Callers must branch on [`MigrationPolicy::enabled`] and keep calling
+/// [`execute_task_routed_decide`] when migration is off: the disabled
+/// contract is structural (the legacy code path runs), not numerical.
+///
+/// Work attribution: `offer_work`-style callers should charge the *final*
+/// offer (`records.last().to_offer`, falling back to the route decision);
+/// a migrated task's per-offer work split is not tracked.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_task_routed_migrating(
+    z: f64,
+    delta: f64,
+    start: f64,
+    deadline: f64,
+    r: u32,
+    bid: f64,
+    view: &MarketView,
+    cap: &mut CapacityLedger,
+    routing: RoutingPolicy,
+    migration: MigrationPolicy,
+) -> (RouteDecision, TaskOutcome, Vec<MigrationRecord>) {
+    let units = spot_units(delta, r);
+    let d = route(routing, view, cap, units, start, deadline);
+    if !d.spot_capacity {
+        // Capacity exhausted everywhere at the start: the pinned path's
+        // all-on-demand fallback, no migration (spot stays exhausted for
+        // this window's units by the router's own check).
+        let offer = &view.offers()[d.offer];
+        let out = execute_task(
+            z,
+            delta,
+            start,
+            deadline,
+            r,
+            f64::NEG_INFINITY,
+            &offer.trace,
+            offer.od_price,
+        );
+        return (d, out, Vec::new());
+    }
+    let ok = cap.reserve(d.offer, units, start, deadline);
+    debug_assert!(ok, "router approved an offer the ledger refused");
+
+    debug_assert!(deadline > start - EPS);
+    let hat_s = (deadline - start).max(0.0);
+    let delta_eff = delta - r as f64;
+    let so_cap = r as f64 * hat_s;
+    let so_work = z.min(so_cap);
+    let mut zt = z - so_work;
+
+    let mut out = TaskOutcome {
+        start,
+        deadline,
+        finish: start,
+        r,
+        so_work,
+        spot_work: 0.0,
+        od_work: 0.0,
+        spot_cost: 0.0,
+        od_cost: 0.0,
+    };
+    let mut records: Vec<MigrationRecord> = Vec::new();
+
+    if zt <= EPS {
+        out.finish = if r > 0 { deadline } else { start };
+        return (d, out, records);
+    }
+    if delta_eff <= EPS {
+        out.finish = deadline + zt;
+        return (d, out, records);
+    }
+
+    let dt = view.slot_len();
+    let mut cur = d.offer;
+    let mut t = start;
+    // First boundary at which a switch may be taken (hysteresis cursor).
+    let mut next_eligible = start;
+    loop {
+        if zt <= EPS {
+            out.finish = if r > 0 { deadline } else { t };
+            break;
+        }
+        let time_left = deadline - t;
+        if zt >= delta_eff * time_left - EPS {
+            // Turning point: all on-demand on the current offer.
+            let od_price = view.offers()[cur].od_price;
+            out.od_work += zt;
+            out.od_cost += od_price * zt;
+            let od_finish = t + zt / delta_eff;
+            out.finish = if r > 0 { deadline.max(od_finish) } else { od_finish };
+            break;
+        }
+        if t + EPS >= next_eligible {
+            let p_cur = view.offers()[cur].trace.price_at(t + EPS);
+            // What the remaining work would pay here: this slot's spot
+            // price if winnable, else the eventual on-demand degrade.
+            let reference = if p_cur <= bid {
+                p_cur
+            } else {
+                view.offers()[cur].od_price
+            };
+            let mut best: Option<(usize, f64)> = None;
+            for (k, o) in view.offers().iter().enumerate() {
+                if k == cur {
+                    continue;
+                }
+                let p = o.trace.price_at(t + EPS);
+                if p > bid || !cap.can_place(k, units, t, deadline) {
+                    continue;
+                }
+                if best.map_or(true, |(_, bp)| p < bp) {
+                    best = Some((k, p));
+                }
+            }
+            if let Some((k, p_new)) = best {
+                let saving = (reference - p_new) * zt;
+                if saving > migration.switch_cost {
+                    cap.release(cur, units, t, deadline);
+                    let ok = cap.reserve(k, units, t, deadline);
+                    debug_assert!(ok, "migration target lost capacity between check and reserve");
+                    records.push(MigrationRecord {
+                        time: t,
+                        from_offer: cur,
+                        to_offer: k,
+                        projected_saving: saving,
+                    });
+                    out.spot_cost += migration.switch_cost;
+                    cur = k;
+                    next_eligible = t + migration.hysteresis_slots as f64 * dt;
+                }
+            }
+        }
+        // One slot step on the current offer — identical arithmetic to
+        // [`execute_task`]'s walk.
+        let mut slot_end = ((t / dt).floor() + 1.0) * dt;
+        while slot_end <= t {
+            slot_end += dt;
+        }
+        let seg_end = slot_end.min(deadline);
+        let price = view.offers()[cur].trace.price_at(t + EPS);
+        if price <= bid {
+            let t_fin = t + zt / delta_eff;
+            let upto = seg_end.min(t_fin);
+            let dw = delta_eff * (upto - t);
+            out.spot_work += dw;
+            out.spot_cost += price * dw;
+            zt -= dw;
+            t = upto;
+        } else {
+            let t_c = deadline - zt / delta_eff;
+            t = if t_c <= seg_end + EPS { t_c.max(t) } else { seg_end };
+        }
+    }
+    (d, out, records)
 }
 
 /// A routed chain execution: the legacy outcome plus where each task ran.
@@ -860,6 +1046,203 @@ mod tests {
         assert_eq!(offer, 1, "cheapest spot price wins");
         // Cost reflects the cheap offer's 0.2 spot price, not 0.8.
         assert!((out.spot_cost - 0.4).abs() < 1e-9, "cost {}", out.spot_cost);
+    }
+
+    /// Two-offer view with opposite-phase price epochs: offer 0 cheap in
+    /// even epochs, offer 1 cheap in odd epochs (`epoch` slots each).
+    fn seesaw_view(horizon: f64, epoch: usize, lo: f64, hi: f64) -> MarketView {
+        use crate::market::MarketOffer;
+        let n = (horizon * SLOTS_PER_UNIT as f64) as usize + 2;
+        let dt = 1.0 / SLOTS_PER_UNIT as f64;
+        let a: Vec<f64> = (0..n)
+            .map(|i| if (i / epoch) % 2 == 0 { lo } else { hi })
+            .collect();
+        let b: Vec<f64> = (0..n)
+            .map(|i| if (i / epoch) % 2 == 0 { hi } else { lo })
+            .collect();
+        MarketView::new(vec![
+            MarketOffer {
+                region: "even".into(),
+                instance_type: "default".into(),
+                od_price: 1.0,
+                trace: PriceTrace::from_prices(a, dt),
+                capacity: None,
+            },
+            MarketOffer {
+                region: "odd".into(),
+                instance_type: "default".into(),
+                od_price: 1.0,
+                trace: PriceTrace::from_prices(b, dt),
+                capacity: None,
+            },
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn migration_chases_the_cheap_side_of_a_seesaw() {
+        use crate::market::CapacityLedger;
+        use crate::policy::routing::{MigrationPolicy, RoutingPolicy};
+        // Both sides winnable at the bid; switch cost tiny: the walk should
+        // hop to the cheap side at every epoch flip and pay ~lo everywhere.
+        let view = seesaw_view(40.0, 4, 0.1, 0.6);
+        let mut cap = CapacityLedger::new(&view, 40.0);
+        let (d, out, migs) = execute_task_routed_migrating(
+            8.0,
+            1.0,
+            0.0,
+            10.0,
+            0,
+            0.9,
+            &view,
+            &mut cap,
+            RoutingPolicy::CheapestFeasible,
+            MigrationPolicy { switch_cost: 1e-6, hysteresis_slots: 0 },
+        );
+        assert_eq!(d.offer, 0, "even offer is cheap at t=0");
+        assert!(!migs.is_empty(), "seesaw never triggered a migration");
+        assert!((out.spot_work - 8.0).abs() < 1e-9);
+        assert_eq!(out.od_work, 0.0);
+        // All work at the cheap price, plus the tiny switch charges.
+        let switch_total = migs.len() as f64 * 1e-6;
+        assert!(
+            (out.spot_cost - (0.8 + switch_total)).abs() < 1e-9,
+            "cost {} with {} migrations",
+            out.spot_cost,
+            migs.len()
+        );
+        assert!(out.finish <= 10.0 + 1e-6);
+        for w in migs.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+        for m in &migs {
+            assert_ne!(m.from_offer, m.to_offer);
+            assert!(m.projected_saving > 0.0);
+        }
+    }
+
+    #[test]
+    fn migration_walk_never_misses_deadlines_or_loses_work() {
+        use crate::market::CapacityLedger;
+        use crate::policy::routing::{MigrationPolicy, RoutingPolicy};
+        for_all(Config::cases(200).seed(29), |rng| {
+            let delta = rng.uniform(1.0, 16.0);
+            let e = rng.uniform(0.1, 3.0);
+            let z = e * delta;
+            let hat_s = e * rng.uniform(1.01, 3.0);
+            let bid = rng.uniform(0.1, 0.5);
+            let epoch = rng.range_inclusive(1, 6) as usize;
+            let lo = rng.uniform(0.05, 0.3);
+            let hi = rng.uniform(0.31, 1.2);
+            let view = seesaw_view(hat_s + 2.0, epoch, lo, hi);
+            let mut cap = CapacityLedger::new(&view, hat_s + 2.0);
+            let (_, out, _) = execute_task_routed_migrating(
+                z,
+                delta,
+                0.0,
+                hat_s,
+                0,
+                bid,
+                &view,
+                &mut cap,
+                RoutingPolicy::CheapestFeasible,
+                MigrationPolicy {
+                    switch_cost: rng.uniform(0.0, 0.05),
+                    hysteresis_slots: rng.range_inclusive(0, 4) as u32,
+                },
+            );
+            if out.finish > hat_s + 1e-6 {
+                return Err(format!("deadline missed: {} > {hat_s}", out.finish));
+            }
+            let processed = out.spot_work + out.od_work + out.so_work;
+            if (processed - z).abs() > 1e-6 * z.max(1.0) {
+                return Err(format!("workload not conserved: {processed} vs {z}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn migration_disabled_matches_pinned_path_bitwise() {
+        use crate::market::CapacityLedger;
+        use crate::policy::routing::{MigrationPolicy, RoutingPolicy};
+        // With switch_cost = +inf no switch can fire and the walk arithmetic
+        // is expression-for-expression the pinned executor's, so outcomes
+        // must be bitwise equal.
+        for_all(Config::cases(150).seed(31), |rng| {
+            let delta = rng.uniform(1.0, 16.0);
+            let e = rng.uniform(0.1, 3.0);
+            let z = e * delta;
+            let hat_s = e * rng.uniform(1.01, 3.0);
+            let bid = rng.uniform(0.1, 0.5);
+            let view = seesaw_view(hat_s + 2.0, 3, 0.1, 0.8);
+            for routing in [RoutingPolicy::CheapestFeasible, RoutingPolicy::Spillover] {
+                let mut cap_a = CapacityLedger::new(&view, hat_s + 2.0);
+                let (da, pinned) = execute_task_routed_decide(
+                    z, delta, 0.0, hat_s, 0, bid, &view, &mut cap_a, routing,
+                );
+                let mut cap_b = CapacityLedger::new(&view, hat_s + 2.0);
+                let (db, migr, recs) = execute_task_routed_migrating(
+                    z,
+                    delta,
+                    0.0,
+                    hat_s,
+                    0,
+                    bid,
+                    &view,
+                    &mut cap_b,
+                    routing,
+                    MigrationPolicy::disabled(),
+                );
+                if !recs.is_empty() {
+                    return Err("disabled migration recorded a switch".into());
+                }
+                if da != db || pinned != migr {
+                    return Err(format!(
+                        "{routing:?}: disabled-migration walk diverged: {migr:?} vs {pinned:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hysteresis_is_monotone_in_migration_count() {
+        use crate::market::CapacityLedger;
+        use crate::policy::routing::{MigrationPolicy, RoutingPolicy};
+        // Seesaw with both sides winnable and a negligible switch cost:
+        // progress runs at full rate on either offer, so the remaining-work
+        // trajectory is hysteresis-independent and switch times under a
+        // larger hysteresis dominate those under a smaller one pointwise —
+        // the migration count is non-increasing in `hysteresis_slots`.
+        let view = seesaw_view(60.0, 3, 0.1, 0.5);
+        let mut last = usize::MAX;
+        for h in [0u32, 1, 2, 4, 8, 16, 64, 10_000] {
+            let mut cap = CapacityLedger::new(&view, 60.0);
+            let (_, out, migs) = execute_task_routed_migrating(
+                20.0,
+                1.0,
+                0.0,
+                30.0,
+                0,
+                0.9,
+                &view,
+                &mut cap,
+                RoutingPolicy::CheapestFeasible,
+                MigrationPolicy { switch_cost: 1e-9, hysteresis_slots: h },
+            );
+            assert!(out.finish <= 30.0 + 1e-6);
+            assert!(
+                migs.len() <= last,
+                "hysteresis {h}: {} migrations > previous {last}",
+                migs.len()
+            );
+            last = migs.len();
+        }
+        // The first switch is never hysteresis-gated, so the floor is one
+        // move (off the expensive side at the first flip), not zero.
+        assert!(last <= 1, "effectively-infinite hysteresis took {last} moves");
     }
 
     fn random_job(rng: &mut Pcg32) -> ChainJob {

@@ -29,6 +29,10 @@ pub enum SimEventKind {
     /// Spot capacity was exhausted on every feasible offer; the window
     /// ran all-on-demand.
     CapacityExhausted { job: usize, task: usize, offer: usize },
+    /// Mid-window migration: an in-flight task moved to a cheaper feasible
+    /// offer at a slot boundary (only emitted when the run's
+    /// [`crate::policy::routing::MigrationPolicy`] is enabled).
+    TaskMigrated { job: usize, task: usize, from_offer: usize, to_offer: usize },
     /// A retirement burst entered the counterfactual sweep engine.
     SweepBatch { retired: usize, specs: usize },
     /// The online feed frontier advanced to cover more slots.
@@ -56,6 +60,7 @@ impl SimEventKind {
             SimEventKind::SpecChosen { .. } => "spec_chosen",
             SimEventKind::OfferRouted { .. } => "offer_routed",
             SimEventKind::CapacityExhausted { .. } => "capacity_exhausted",
+            SimEventKind::TaskMigrated { .. } => "task_migrated",
             SimEventKind::SweepBatch { .. } => "sweep_batch",
             SimEventKind::FrontierAdvanced { .. } => "frontier_advanced",
             SimEventKind::ResidencyProbe { .. } => "residency_probe",
@@ -87,6 +92,12 @@ impl SimEventKind {
                 j.set("job", Json::Num(*job as f64))
                     .set("task", Json::Num(*task as f64))
                     .set("offer", Json::Num(*offer as f64));
+            }
+            SimEventKind::TaskMigrated { job, task, from_offer, to_offer } => {
+                j.set("job", Json::Num(*job as f64))
+                    .set("task", Json::Num(*task as f64))
+                    .set("from_offer", Json::Num(*from_offer as f64))
+                    .set("to_offer", Json::Num(*to_offer as f64));
             }
             SimEventKind::SweepBatch { retired, specs } => {
                 j.set("retired", Json::Num(*retired as f64))

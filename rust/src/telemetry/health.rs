@@ -89,6 +89,10 @@ struct Win {
     residency_margin_min: Option<i64>,
     /// offer id → (routed, exhausted) counts.
     offers: BTreeMap<u64, (u64, u64)>,
+    /// `task_migrated` count (only ever non-zero when the run enabled
+    /// mid-window migration, so it is emitted off-disk-when-zero and
+    /// migration-off health docs stay byte-identical).
+    migrations: u64,
     regret_last: Option<f64>,
     bound_last: Option<f64>,
     max_weight_last: Option<f64>,
@@ -123,6 +127,7 @@ impl Win {
             "capacity_exhausted" => {
                 self.offers.entry(row.opt_u64("offer", 0)).or_default().1 += 1;
             }
+            "task_migrated" => self.migrations += 1,
             "param_snapshot" => {
                 self.regret_last = Some(row.opt_f64("regret", 0.0));
                 self.bound_last = Some(row.opt_f64("bound", 0.0));
@@ -168,6 +173,9 @@ impl Win {
                 })
                 .collect();
             j.set("offers", Json::Arr(offers));
+        }
+        if self.migrations > 0 {
+            j.set("migrations", Json::Num(self.migrations as f64));
         }
         if let Some(r) = self.regret_last {
             j.set("regret_last", Json::Num(r));
@@ -408,6 +416,25 @@ mod tests {
         assert_eq!(offers[0].get("routed").unwrap().as_f64(), Some(3.0));
         assert_eq!(offers[0].get("exhausted").unwrap().as_f64(), Some(1.0));
         assert_eq!(offers[0].get("headroom").unwrap().as_f64(), Some(1.0 - 1.0 / 3.0));
+    }
+
+    #[test]
+    fn migrations_fold_into_windows_and_stay_off_disk_when_zero() {
+        let quiet = fold_events(&[row(
+            "w#0",
+            1.0,
+            0,
+            SimEventKind::OfferRouted { job: 0, task: 0, offer: 0, spilled: false },
+        )]);
+        let wins = quiet[0].json.get("windows").unwrap().as_arr().unwrap();
+        assert!(wins[0].get("migrations").is_none(), "zero count must stay off disk");
+        let rows = vec![
+            row("w#0", 1.0, 0, SimEventKind::TaskMigrated { job: 0, task: 0, from_offer: 0, to_offer: 1 }),
+            row("w#0", 1.0, 1, SimEventKind::TaskMigrated { job: 0, task: 0, from_offer: 1, to_offer: 0 }),
+        ];
+        let sections = fold_events(&rows);
+        let wins = sections[0].json.get("windows").unwrap().as_arr().unwrap();
+        assert_eq!(wins[0].get("migrations").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

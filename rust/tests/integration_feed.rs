@@ -141,6 +141,7 @@ fn online_over_preloaded_feed_is_bit_identical_to_batch() {
                 pool_capacity: pool,
                 seed,
                 snapshot_every: 16,
+                ..OnlineOptions::default()
             },
             &Evaluator::Native { threads: 2 },
         )
@@ -195,6 +196,7 @@ fn online_over_live_event_stream_is_bit_identical_to_batch() {
             pool_capacity: 0,
             seed: 71,
             snapshot_every: 10,
+            ..OnlineOptions::default()
         },
         &Evaluator::Native { threads: 2 },
     )
@@ -259,6 +261,7 @@ fn online_routed_multi_offer_matches_batch_view_run() {
                 pool_capacity: 0,
                 seed: 29,
                 snapshot_every: 0,
+                ..OnlineOptions::default()
             },
             &Evaluator::Native { threads: 2 },
         )
@@ -296,6 +299,7 @@ fn online_routed_multi_offer_matches_batch_view_run() {
                 pool_capacity: 0,
                 seed: 29,
                 snapshot_every: 0,
+                ..OnlineOptions::default()
             },
             &Evaluator::Native { threads: 2 },
         )
@@ -317,6 +321,7 @@ fn bounded_retention_is_bit_identical_when_windows_stay_resident() {
         pool_capacity: 0,
         seed: 71,
         snapshot_every: 10,
+        ..OnlineOptions::default()
     };
     let mk = || {
         FeedMux::new(
@@ -389,6 +394,7 @@ fn retention_reaching_an_evicted_slot_fails_hard() {
             pool_capacity: 0,
             seed: 5,
             snapshot_every: 0,
+            ..OnlineOptions::default()
         },
         &Evaluator::Native { threads: 1 },
     )
@@ -421,6 +427,7 @@ fn lookahead_guard_fails_hard_when_the_feed_ends_early() {
             pool_capacity: 0,
             seed: 5,
             snapshot_every: 0,
+            ..OnlineOptions::default()
         },
         &Evaluator::Native { threads: 1 },
     )
@@ -475,6 +482,7 @@ fn online_handles_a_feed_with_margin_past_the_horizon() {
             pool_capacity: 0,
             seed: 83,
             snapshot_every: 5,
+            ..OnlineOptions::default()
         },
         &Evaluator::Native { threads: 1 },
     )

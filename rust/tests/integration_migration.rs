@@ -1,0 +1,237 @@
+//! Migration differential layer (ISSUE-10): the migration-off path is
+//! byte-identical to the legacy pinned-offer routed path (spec-level:
+//! an absent `migration` key and an explicit disabled policy produce the
+//! same report bytes, across thread counts and fleet shardings), widening
+//! hysteresis never increases the migration count, and the capacity-replay
+//! optimism gap surfaces exactly on finite-capacity worlds and is ≥ 0.
+
+use dagcloud::fleet::FleetAccumulator;
+use dagcloud::market::{CapacityLedger, MarketOffer, MarketView, PriceTrace, SLOTS_PER_UNIT};
+use dagcloud::policy::routing::{MigrationPolicy, RoutingPolicy};
+use dagcloud::scenario::{self, BatchOptions, ScenarioOutcome, ScenarioSpec};
+use dagcloud::sim::executor::execute_task_routed_migrating;
+use dagcloud::util::prop::{for_all, Config as PropConfig};
+
+/// The migration flagship world at smoke size.
+fn spike_spec() -> ScenarioSpec {
+    let mut s = scenario::find("spot-spike-migration").unwrap();
+    s.workload.small_tasks = true;
+    s
+}
+
+fn run(specs: &[ScenarioSpec], threads: usize, seeds: u64) -> Vec<ScenarioOutcome> {
+    scenario::run_batch(
+        specs,
+        &BatchOptions {
+            seeds,
+            base_seed: 23,
+            threads,
+            jobs_override: Some(10),
+            telemetry: Default::default(),
+        },
+    )
+    .unwrap()
+}
+
+fn report_bytes(outcomes: &[ScenarioOutcome], seeds: u64) -> String {
+    scenario::report_json(outcomes, seeds, 23, true).pretty()
+}
+
+/// A spec that never had a `migration` key parses as disabled, and a
+/// disabled policy stays off disk — and both run to byte-identical
+/// reports (the spec-level face of the structural "disabled means the
+/// legacy pinned-offer code path" contract).
+#[test]
+fn absent_migration_key_equals_disabled_and_runs_byte_identical() {
+    let enabled = spike_spec();
+    assert!(enabled.migration.enabled());
+    let enabled_json = enabled.to_json();
+    assert!(enabled_json.pretty().contains("\"migration\""));
+    let round = ScenarioSpec::from_json(&enabled_json).unwrap();
+    assert_eq!(round.migration, enabled.migration, "enabled policy must round-trip");
+
+    let mut disabled = enabled.clone();
+    disabled.migration = MigrationPolicy::disabled();
+    let dj = disabled.to_json();
+    assert!(
+        !dj.pretty().contains("\"migration\""),
+        "disabled migration must stay off disk"
+    );
+    let absent = ScenarioSpec::from_json(&dj).unwrap();
+    assert!(!absent.migration.enabled(), "absent key must parse as disabled");
+
+    let a = report_bytes(&run(&[disabled], 4, 2), 2);
+    let b = report_bytes(&run(&[absent], 4, 2), 2);
+    assert_eq!(a, b, "absent-key and disabled-policy runs must be byte-identical");
+    // Off-disk row contract: no migration/replay keys on an uncapped,
+    // migration-off world.
+    assert!(!a.contains("\"migrations\""));
+    assert!(!a.contains("\"optimism_gap\""));
+}
+
+/// Thread-count invariance of the report bytes on a batch that exercises
+/// both new report surfaces: the migration world (task_migrated counts)
+/// and the capped crunch world (optimism-gap rows).
+#[test]
+fn migration_and_replay_report_is_thread_invariant() {
+    let mut crunch = scenario::find("capacity-crunch").unwrap();
+    crunch.workload.small_tasks = true;
+    let specs = vec![spike_spec(), crunch];
+    let one = report_bytes(&run(&specs, 1, 2), 2);
+    let eight = report_bytes(&run(&specs, 8, 2), 2);
+    assert_eq!(one, eight, "threads must not change report bytes");
+    assert!(
+        one.contains("\"optimism_gap\""),
+        "capped world rows must carry per-policy optimism gaps"
+    );
+    assert!(
+        one.contains("\"optimism_gap_mean\""),
+        "capped world section must aggregate the gap"
+    );
+}
+
+/// Fleet sharding invariance: merging shard reports that carry the new
+/// `optimism_gap`/`migrations` row keys reproduces the one-shard report
+/// byte-for-byte for any partition and merge order.
+#[test]
+fn fleet_merge_with_migration_rows_is_shard_invariant() {
+    let mut crunch = scenario::find("capacity-crunch").unwrap();
+    crunch.workload.small_tasks = true;
+    let all = run(&[spike_spec(), crunch], 4, 2);
+    assert_eq!(all.len(), 4);
+    let bytes_of = |shards: &[Vec<ScenarioOutcome>]| {
+        let mut acc = FleetAccumulator::new();
+        for shard in shards {
+            acc.absorb(&scenario::report_json(shard, 2, 23, true)).unwrap();
+        }
+        acc.fleet_json(None).unwrap().pretty()
+    };
+    let reference = bytes_of(&[all.clone()]);
+    for_all(PropConfig::cases(8).seed(0x316A), |rng| {
+        let k = rng.range_inclusive(1, 4) as usize;
+        let mut shards: Vec<Vec<ScenarioOutcome>> = vec![Vec::new(); k];
+        for o in &all {
+            shards[rng.below(k as u64) as usize].push(o.clone());
+        }
+        let mut shards: Vec<Vec<ScenarioOutcome>> =
+            shards.into_iter().filter(|s| !s.is_empty()).collect();
+        for s in &mut shards {
+            rng.shuffle(s);
+        }
+        rng.shuffle(&mut shards);
+        if bytes_of(&shards) != reference {
+            return Err(format!("fleet bytes differ for a {}-shard partition", shards.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Scenario-level hysteresis bound. The first switch of a task is never
+/// hysteresis-gated and the walk before any switch is hysteresis-free, so
+/// every task's first switch time is identical for all `hysteresis_slots`;
+/// with the hold longer than the horizon each switching task moves exactly
+/// once. Hence `migrations(huge) == #switching tasks <= migrations(0)`,
+/// regardless of price regime. The flagship world must actually migrate.
+#[test]
+fn hysteresis_beyond_horizon_never_beats_zero_hysteresis() {
+    let migrations_at = |hysteresis: u32| -> u64 {
+        let mut s = spike_spec();
+        s.migration.hysteresis_slots = hysteresis;
+        run(&[s], 4, 3).iter().map(|o| o.migrations).sum()
+    };
+    let eager = migrations_at(0);
+    let held = migrations_at(1_000_000);
+    assert!(eager > 0, "the spike world is built to make migration profitable");
+    assert!(
+        held <= eager,
+        "hysteresis past the horizon took {held} moves, zero hysteresis {eager}"
+    );
+}
+
+/// Randomized executor-level monotonicity: on opposite-phase seesaws where
+/// both sides are winnable at the bid (progress is then rate-identical on
+/// either offer, so the remaining-work trajectory does not depend on which
+/// offer the walk sits on), widening the hysteresis chain never increases
+/// the migration count, deadlines hold, and work is conserved.
+#[test]
+fn prop_wider_hysteresis_never_migrates_more_on_winnable_seesaws() {
+    let dt = 1.0 / SLOTS_PER_UNIT as f64;
+    let offer = |name: &str, prices: Vec<f64>| MarketOffer {
+        region: name.into(),
+        instance_type: "default".into(),
+        od_price: 1.0,
+        trace: PriceTrace::from_prices(prices, dt),
+        capacity: None,
+    };
+    for_all(PropConfig::cases(120).seed(0x3161), |rng| {
+        let period = rng.range_inclusive(1, 6) as usize;
+        let lo = rng.uniform(0.05, 0.2);
+        let hi = rng.uniform(lo + 0.1, 0.8);
+        let delta = rng.uniform(1.0, 12.0);
+        let e = rng.uniform(0.3, 3.0);
+        let z = e * delta;
+        let deadline = e * rng.uniform(1.05, 2.5);
+        let n = (deadline / dt) as usize + 2;
+        let phase = |s: usize| (s / period) % 2 == 0;
+        let east: Vec<f64> = (0..n).map(|s| if phase(s) { lo } else { hi }).collect();
+        let west: Vec<f64> = (0..n).map(|s| if phase(s) { hi } else { lo }).collect();
+        let view = MarketView::new(vec![offer("east", east), offer("west", west)])
+            .map_err(|e| e.to_string())?;
+        let bid = hi + 0.05; // both sides always winnable
+        let mut last = usize::MAX;
+        for h in [0u32, 1, 2, 4, 8, 32, 10_000] {
+            let mut cap = CapacityLedger::new(&view, deadline + 1.0);
+            let (_, out, migs) = execute_task_routed_migrating(
+                z,
+                delta,
+                0.0,
+                deadline,
+                0,
+                bid,
+                &view,
+                &mut cap,
+                RoutingPolicy::CheapestFeasible,
+                MigrationPolicy { switch_cost: 1e-9, hysteresis_slots: h },
+            );
+            if out.finish > deadline + 1e-6 {
+                return Err(format!("h={h}: finish {} past deadline {deadline}", out.finish));
+            }
+            let w = out.so_work + out.spot_work + out.od_work;
+            if (w - z).abs() > 1e-6 * z.max(1.0) {
+                return Err(format!("h={h}: work {w} != {z}"));
+            }
+            if migs.len() > last {
+                return Err(format!("h={h}: {} migrations > previous {last}", migs.len()));
+            }
+            last = migs.len();
+        }
+        Ok(())
+    });
+}
+
+/// The capacity-replay columns surface exactly on finite-capacity worlds:
+/// capped worlds report a per-policy gap, every gap is ≥ 0 (the replayed
+/// cost can only add displacement surcharges), and capacity-free worlds
+/// stay gap-free with zero migrations.
+#[test]
+fn optimism_gap_surfaces_only_on_capped_worlds_and_is_nonnegative() {
+    let mut crunch = scenario::find("capacity-crunch").unwrap();
+    crunch.workload.small_tasks = true;
+    let out = scenario::run_scenario_once(&crunch, 23, Some(8)).unwrap();
+    assert!(!out.optimism_gap.is_empty(), "capped world must carry per-policy gaps");
+    for (label, gap) in &out.optimism_gap {
+        assert!(!label.is_empty());
+        assert!(gap.is_finite() && *gap >= 0.0, "negative optimism gap for {label}: {gap}");
+    }
+    let row = scenario::report_json(&[out], 1, 23, true).pretty();
+    assert!(row.contains("\"optimism_gap\""));
+
+    let mut free = scenario::find("paper-default").unwrap();
+    free.workload.small_tasks = true;
+    let out = scenario::run_scenario_once(&free, 23, Some(8)).unwrap();
+    assert!(out.optimism_gap.is_empty(), "capacity-free world must not replay");
+    assert_eq!(out.migrations, 0);
+    let row = scenario::report_json(&[out], 1, 23, true).pretty();
+    assert!(!row.contains("\"optimism_gap\""));
+    assert!(!row.contains("\"migrations\""));
+}

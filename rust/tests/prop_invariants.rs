@@ -320,6 +320,78 @@ fn prop_arbitrage_composite_is_slotwise_lower_bound() {
     });
 }
 
+/// ISSUE-10 satellite: the capacity replay is never optimistic about
+/// itself — `replayed_mean ≥ free_mean` (gap ≥ 0) on randomized capped
+/// worlds, because displaced units are surcharged `max(0, od − spot)`
+/// term-by-term; and on fully uncapped worlds nothing displaces, so the
+/// gap is exactly zero.
+#[test]
+fn prop_capacity_replay_gap_nonnegative_and_zero_when_uncapped() {
+    use dagcloud::learning::replay_specs;
+    use dagcloud::market::MarketOffer;
+    use dagcloud::policy::routing::RoutingPolicy;
+    for_all(Config::cases(80).seed(1011), |rng| {
+        let mut jobs = Vec::new();
+        for i in 0..rng.range_inclusive(2, 8) {
+            let a = rng.uniform(0.0, 3.0);
+            let tasks = vec![ChainTask::new(rng.uniform(0.5, 4.0), rng.uniform(1.0, 8.0))];
+            let makespan: f64 = tasks.iter().map(|t| t.min_exec_time()).sum();
+            jobs.push(ChainJob::new(i as u64, a, a + makespan * rng.uniform(1.05, 2.5), tasks));
+        }
+        jobs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let horizon = jobs.iter().map(|j| j.deadline).fold(1.0, f64::max) + 1.0;
+        let n = (horizon * SLOTS_PER_UNIT as f64) as usize + 2;
+        let dt = 1.0 / SLOTS_PER_UNIT as f64;
+        let capped = rng.chance(0.5);
+        let mk_offer = |rng: &mut Pcg32, name: &str, od: f64| MarketOffer {
+            region: name.into(),
+            instance_type: "default".into(),
+            od_price: od,
+            trace: PriceTrace::from_prices(
+                (0..n)
+                    .map(|_| {
+                        if rng.chance(0.5) {
+                            rng.uniform(0.1, 0.3)
+                        } else {
+                            rng.uniform(0.4, 1.2)
+                        }
+                    })
+                    .collect(),
+                dt,
+            ),
+            capacity: if capped { Some(rng.range_inclusive(1, 5) as u32) } else { None },
+        };
+        let offer_a = mk_offer(rng, "a", 1.0);
+        let od_b = rng.uniform(1.0, 1.4);
+        let offers = vec![offer_a, mk_offer(rng, "b", od_b)];
+        let view = dagcloud::market::MarketView::new(offers).map_err(|e| e.to_string())?;
+        let specs = vec![
+            CfSpec::Proposed(dagcloud::policy::Policy::new(
+                rng.uniform(0.3, 1.0),
+                None,
+                rng.uniform(0.15, 0.5),
+            )),
+            CfSpec::EvenNaive { bid: rng.uniform(0.15, 0.5) },
+        ];
+        let reps = replay_specs(&jobs, &specs, &view, RoutingPolicy::CheapestFeasible, false);
+        if reps.len() != specs.len() {
+            return Err(format!("{} replays for {} specs", reps.len(), specs.len()));
+        }
+        for r in &reps {
+            if !r.free_mean.is_finite() || !r.replayed_mean.is_finite() {
+                return Err(format!("non-finite replay: {r:?}"));
+            }
+            if r.gap() < 0.0 {
+                return Err(format!("negative optimism gap: {r:?}"));
+            }
+            if !capped && r.gap() != 0.0 {
+                return Err(format!("uncapped world displaced work: {r:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// ISSUE-3 satellite: a one-offer `MarketView` reproduces the legacy
 /// single-trace executor cost exactly (1e-12) on randomized traces — the
 /// degenerate case of the capacity-aware refactor is the old code path.
